@@ -1,0 +1,20 @@
+//! `cargo bench --bench fig6a` — regenerates Figure 6(a): accuracy vs
+//! clip threshold for the four OverQ configurations.
+
+use overq::harness::fig6a::{run, Fig6aConfig};
+use overq::models::Artifacts;
+
+fn main() {
+    let Ok(arts) = Artifacts::locate() else {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return;
+    };
+    let cfg = Fig6aConfig {
+        eval_images: 384,
+        thresholds: vec![1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 5.0, 6.0, 8.0],
+        ..Default::default()
+    };
+    let t = run(&arts, &cfg).expect("fig6a");
+    t.print();
+    t.write_csv("results/fig6a.csv").ok();
+}

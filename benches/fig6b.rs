@@ -1,0 +1,33 @@
+//! `cargo bench --bench fig6b` — regenerates Figure 6(b): quantization
+//! error split between small and large values, and times the
+//! encode+decode pipeline it relies on.
+
+use overq::harness::fig6b::{run, Fig6bConfig};
+use overq::models::Artifacts;
+use overq::overq::{decode_rows, encode_tensor, OverQConfig};
+use overq::tensor::TensorF;
+use overq::util::bench::bench;
+use overq::util::rng::Rng;
+
+fn main() {
+    match Artifacts::locate() {
+        Ok(arts) => {
+            let t = run(&arts, &Fig6bConfig::default()).expect("fig6b");
+            t.print();
+            t.write_csv("results/fig6b.csv").ok();
+        }
+        Err(e) => eprintln!("skipping figure regeneration ({e})"),
+    }
+
+    let mut rng = Rng::new(2);
+    let mut x = TensorF::zeros(&[1024, 32]);
+    for v in x.data.iter_mut() {
+        *v = if rng.bool(0.5) { 0.0 } else { rng.normal().abs() };
+    }
+    let cfg = OverQConfig::full(4, 4);
+    bench("encode+decode 1024x32 full c=4", || {
+        let e = encode_tensor(&x, 0.2, &cfg);
+        let d = decode_rows(&e.codes, &e.state, 0.2, &cfg);
+        std::hint::black_box(d.data[0]);
+    });
+}

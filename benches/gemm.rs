@@ -1,0 +1,67 @@
+//! `cargo bench --bench gemm` — the L3 hot-path microbenches driving the
+//! §Perf optimization loop: OverQ encode, OverQ integer GEMM, f32 GEMM,
+//! and im2col, with GOPS numbers.
+
+use overq::nn::conv::im2col;
+use overq::nn::gemm::gemm_f32;
+use overq::overq::dotprod::{gemm_overq, roll_weights};
+use overq::overq::{encode_tensor, OverQConfig};
+use overq::tensor::{TensorF, TensorI};
+use overq::util::bench::bench;
+use overq::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    // representative layer: stage-2 conv of the mini-ResNet (per batch-64)
+    let (m, k, n) = (4096usize, 144usize, 16usize);
+    let mut x = TensorF::zeros(&[m, k]);
+    for v in x.data.iter_mut() {
+        *v = if rng.bool(0.5) { 0.0 } else { rng.normal().abs() };
+    }
+    let cfg = OverQConfig::full(4, 4);
+    let r = bench("encode 4096x144 full c=4", || {
+        let e = encode_tensor(&x, 0.25, &cfg);
+        std::hint::black_box(e.codes.data[0]);
+    });
+    println!(
+        "  -> {:.1} Melem/s",
+        (m * k) as f64 / (r.mean_ns / 1e9) / 1e6
+    );
+
+    let enc = encode_tensor(&x, 0.25, &cfg);
+    let mut w = TensorI::zeros(&[k, n]);
+    for v in w.data.iter_mut() {
+        *v = rng.range(-127, 128) as i32;
+    }
+    let wroll = roll_weights(&w);
+    let mut out = TensorI::zeros(&[m, n]);
+    let r = bench("gemm_overq 4096x144x16", || {
+        gemm_overq(&enc.codes, &enc.state, &w, &wroll, &cfg, &mut out);
+        std::hint::black_box(out.data[0]);
+    });
+    println!(
+        "  -> {:.2} GOPS (2*M*K*N)",
+        2.0 * (m * k * n) as f64 / r.mean_ns
+    );
+
+    let mut wf = TensorF::zeros(&[k, n]);
+    for v in wf.data.iter_mut() {
+        *v = rng.normal();
+    }
+    let mut outf = TensorF::zeros(&[m, n]);
+    let r = bench("gemm_f32 4096x144x16", || {
+        outf.data.fill(0.0);
+        gemm_f32(&x, &wf, &mut outf);
+        std::hint::black_box(outf.data[0]);
+    });
+    println!(
+        "  -> {:.2} GFLOP/s (2*M*K*N)",
+        2.0 * (m * k * n) as f64 / r.mean_ns
+    );
+
+    let img = TensorF::zeros(&[8, 16, 16, 16]);
+    bench("im2col 8x16x16x16 k3 s1", || {
+        let (c, _, _) = im2col(&img, 3, 3, 1);
+        std::hint::black_box(c.data[0]);
+    });
+}

@@ -1,0 +1,84 @@
+//! `cargo bench --bench runtime` — PJRT executable latency (kernel +
+//! model artifacts) and the native engine's layer pipeline, i.e. the
+//! end-to-end hot path L3 drives.
+
+use overq::harness::calibrate::{scales_from_stats, subset};
+use overq::models::Artifacts;
+use overq::nn::engine::QuantConfig;
+use overq::overq::OverQConfig;
+use overq::runtime::artifacts::ExecutableCache;
+use overq::runtime::pjrt::Input;
+use overq::tensor::{TensorF, TensorI};
+use overq::util::bench::bench;
+use overq::util::rng::Rng;
+
+fn main() {
+    let Ok(arts) = Artifacts::locate() else {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return;
+    };
+    let mut cache = ExecutableCache::new(&arts).unwrap();
+    let ev = arts.load_dataset("evalset").unwrap();
+    let (x8, _) = subset(&ev, 8);
+    let model = arts.load_model("resnet18m").unwrap();
+    let scales = scales_from_stats(&model.enc_stats, 6.0, 4);
+    let scales_t = TensorF::from_vec(&[scales.len()], scales.clone());
+
+    // PJRT: fp32 model
+    {
+        let exe = cache.get("resnet18m", "fp32", 8).unwrap();
+        bench("pjrt resnet18m fp32 b8", || {
+            let out = exe.run_f32(&[Input::F32(x8.clone())]).unwrap();
+            std::hint::black_box(out.data[0]);
+        });
+    }
+    // PJRT: quantized OverQ model
+    {
+        let exe = cache.get("resnet18m", "full_c4", 8).unwrap();
+        bench("pjrt resnet18m full_c4 b8", || {
+            let out = exe
+                .run_f32(&[Input::F32(x8.clone()), Input::F32(scales_t.clone())])
+                .unwrap();
+            std::hint::black_box(out.data[0]);
+        });
+    }
+    // PJRT: standalone OverQ-matmul kernel (the L1 artifact)
+    {
+        let mut rng = Rng::new(9);
+        let codes = TensorI::from_vec(
+            &[256, 72],
+            (0..256 * 72).map(|_| rng.range(0, 16) as i32).collect(),
+        );
+        let state = TensorI::zeros(&[256, 72]);
+        let mut w = TensorI::zeros(&[72, 16]);
+        for v in w.data.iter_mut() {
+            *v = rng.range(-127, 128) as i32;
+        }
+        let exe = cache.get("kernel", "overq_matmul", 256).unwrap();
+        bench("pjrt kernel overq_matmul 256x72x16", || {
+            let out = exe
+                .run_i32(&[
+                    Input::I32(codes.clone()),
+                    Input::I32(state.clone()),
+                    Input::I32(w.clone()),
+                ])
+                .unwrap();
+            std::hint::black_box(out.data[0]);
+        });
+    }
+    // native engine quant forward on the same batch
+    {
+        let qc = QuantConfig {
+            overq: OverQConfig::full(4, 4),
+            act_scales: scales,
+        };
+        bench("native resnet18m full-overq b8", || {
+            let out = model.engine.forward_quant(&x8, &qc).unwrap();
+            std::hint::black_box(out.data[0]);
+        });
+        bench("native resnet18m fp32 b8", || {
+            let (out, _) = model.engine.forward_f32(&x8, &[]).unwrap();
+            std::hint::black_box(out.data[0]);
+        });
+    }
+}

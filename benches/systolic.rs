@@ -1,0 +1,58 @@
+//! `cargo bench --bench systolic` — systolic-array simulator study
+//! (paper §4/§5.3 context): cycles + utilization for baseline vs OverQ
+//! PEs across array sizes, plus simulator throughput in PE-ops/s.
+
+use std::time::Instant;
+
+use overq::overq::{encode_tensor, OverQConfig};
+use overq::sim::SystolicArray;
+use overq::tensor::{TensorF, TensorI};
+use overq::util::bench::Table;
+use overq::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(5);
+    let (m, c, blocks, n) = (256usize, 32usize, 9usize, 64usize);
+    let k = c * blocks;
+    let mut x = TensorF::zeros(&[m * blocks, c]);
+    for v in x.data.iter_mut() {
+        *v = if rng.bool(0.5) {
+            0.0
+        } else {
+            rng.normal().abs() * (if rng.bool(0.05) { 8.0 } else { 1.0 })
+        };
+    }
+    let cfg = OverQConfig::full(4, 4);
+    let enc = encode_tensor(&x, 0.25, &cfg);
+    let codes = enc.codes.reshape(&[m, k]);
+    let state = enc.state.reshape(&[m, k]);
+    let mut w = TensorI::zeros(&[k, n]);
+    for v in w.data.iter_mut() {
+        *v = rng.range(-127, 128) as i32;
+    }
+
+    let mut t = Table::new(
+        &format!("Systolic study — M={m} K={k} N={n} (A4, full OverQ c=4)"),
+        &["array", "PEs", "mode", "cycles", "util", "zero-slots", "sim Mops/s"],
+    );
+    for &(rows, cols) in &[(16usize, 8usize), (32, 16), (64, 32)] {
+        for overq_pes in [false, true] {
+            let arr = SystolicArray::new(rows, cols, overq_pes);
+            let t0 = Instant::now();
+            let (_, s) = arr.run(&codes, &state, &w, &cfg, c).unwrap();
+            let dt = t0.elapsed().as_secs_f64();
+            let ops = (s.useful_macs + s.zero_macs) as f64;
+            t.row(vec![
+                format!("{rows}x{cols}"),
+                (rows * cols).to_string(),
+                if overq_pes { "OverQ" } else { "baseline" }.into(),
+                s.cycles.to_string(),
+                format!("{:.3}", s.utilization()),
+                format!("{:.3}", s.zero_frac()),
+                format!("{:.1}", ops / dt / 1e6),
+            ]);
+        }
+    }
+    t.print();
+    t.write_csv("results/systolic.csv").ok();
+}

@@ -1,0 +1,32 @@
+//! `cargo bench --bench table1` — regenerates Table 1 (cascading outlier
+//! coverage) and times the coverage analysis.
+
+use overq::harness::table1::{run, Table1Config};
+use overq::models::Artifacts;
+use overq::overq::{coverage_stats, OverQConfig};
+use overq::tensor::TensorF;
+use overq::util::bench::bench;
+use overq::util::rng::Rng;
+
+fn main() {
+    match Artifacts::locate() {
+        Ok(arts) => {
+            let table = run(&arts, &Table1Config::default()).expect("table1");
+            table.print();
+            table.write_csv("results/table1.csv").ok();
+        }
+        Err(e) => eprintln!("skipping table regeneration ({e})"),
+    }
+
+    // micro: coverage analysis throughput on a synthetic activation plane
+    let mut rng = Rng::new(1);
+    let mut x = TensorF::zeros(&[512, 64]);
+    for v in x.data.iter_mut() {
+        *v = if rng.bool(0.5) { 0.0 } else { rng.normal().abs() };
+    }
+    let cfg = OverQConfig::ro(4, 4);
+    bench("coverage_stats 512x64 c=4", || {
+        let s = coverage_stats(&x, 0.2, &cfg);
+        std::hint::black_box(s.covered);
+    });
+}

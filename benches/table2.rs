@@ -1,0 +1,38 @@
+//! `cargo bench --bench table2` — regenerates a compact Table 2 slice
+//! (two models; run `overq table2` for the full grid) and times one
+//! accuracy cell.
+
+use overq::harness::calibrate::{profile_acts, quant_config, subset};
+use overq::harness::table2::{run, Table2Config};
+use overq::models::Artifacts;
+use overq::overq::OverQConfig;
+use overq::quant::clip::ClipMethod;
+use overq::util::bench::bench;
+
+fn main() {
+    let Ok(arts) = Artifacts::locate() else {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return;
+    };
+    let cfg = Table2Config {
+        models: vec!["resnet18m".into(), "vgg11m".into()],
+        eval_images: 256,
+        ..Default::default()
+    };
+    let table = run(&arts, &cfg).expect("table2");
+    table.print();
+    table.write_csv("results/table2_bench.csv").ok();
+
+    // micro: one A4 full-OverQ accuracy evaluation (the grid's unit cost)
+    let model = arts.load_model("resnet18m").unwrap();
+    let ev = arts.load_dataset("evalset").unwrap();
+    let pf = arts.load_dataset("profileset").unwrap();
+    let (pimg, _) = subset(&pf, 128);
+    let profile = profile_acts(&model, &pimg, 4096).unwrap();
+    let (eimg, elab) = subset(&ev, 128);
+    let qc = quant_config(&profile, ClipMethod::StdMul(4.0), OverQConfig::full(4, 4));
+    bench("accuracy cell 128img A4 full-overq", || {
+        let acc = model.engine.accuracy_quant(&eimg, &elab, 64, &qc).unwrap();
+        std::hint::black_box(acc);
+    });
+}

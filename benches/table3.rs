@@ -1,0 +1,19 @@
+//! `cargo bench --bench table3` — regenerates Table 3 (PE area
+//! breakdown) for A4 and A5, plus the area-model microbench.
+
+use overq::area::{pe_breakdown, PeVariant};
+use overq::harness::table3::{run, Table3Config};
+use overq::util::bench::bench;
+
+fn main() {
+    for bits in [4u32, 5] {
+        let t = run(&Table3Config { act_bits: bits }).unwrap();
+        t.print();
+        t.write_csv(&format!("results/table3_a{bits}.csv")).ok();
+    }
+    bench("pe_breakdown all variants", || {
+        for v in [PeVariant::Baseline, PeVariant::OverQRo, PeVariant::OverQFull] {
+            std::hint::black_box(pe_breakdown(v, 4).total());
+        }
+    });
+}

@@ -1,0 +1,6 @@
+"""Root conftest: make `python/` importable so `pytest python/tests/`
+works from the repo root (the compile package lives under python/)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,50 @@
+//! Coverage study (extended Table 1): outlier coverage across EVERY enc
+//! point of every model, vs the Eq. (1) prediction from each layer's own
+//! zero fraction — the ablation DESIGN.md calls out for the cascading
+//! design choice.
+//!
+//!     make artifacts && cargo run --release --example coverage_study
+
+use overq::harness::calibrate::{profile_acts, subset};
+use overq::models::Artifacts;
+use overq::overq::{coverage_stats, theory_coverage, OverQConfig};
+
+fn main() -> anyhow::Result<()> {
+    let arts = Artifacts::locate()?;
+    let pf = arts.load_dataset("profileset")?;
+    let (images, _) = subset(&pf, 64);
+    let bits = 4u32;
+    let std_t = 4.0f32;
+    let qmax = ((1u32 << bits) - 1) as f32;
+
+    for name in arts.model_names() {
+        let model = arts.load_model(&name)?;
+        let srcs = model.engine.graph.enc_point_sources();
+        let (_, taps) = model.engine.forward_f32(&images, &srcs)?;
+        let prof = profile_acts(&model, &images, 4096)?;
+        println!("\n== {name} (clip = {std_t} std, A{bits}) ==");
+        println!(
+            "{:<6} {:>5} {:>7} {:>9} {:>8} {:>8} {:>8} {:>9}",
+            "enc", "C", "zero%", "outlier%", "c=1", "c=4", "eq1(c=4)", "pr-slots"
+        );
+        for (e, tap) in taps.iter().enumerate() {
+            let st = prof.stats[e];
+            let scale = ((st.mean + std_t * st.std) / qmax).max(1e-6);
+            let c1 = coverage_stats(tap, scale, &OverQConfig::ro(bits, 1));
+            let c4 = coverage_stats(tap, scale, &OverQConfig::full(bits, 4));
+            let p0 = c4.zero_frac();
+            println!(
+                "{:<6} {:>5} {:>6.1}% {:>8.2}% {:>7.1}% {:>7.1}% {:>7.1}% {:>9}",
+                e,
+                tap.dims()[3],
+                p0 * 100.0,
+                100.0 * c4.outliers as f64 / c4.total as f64,
+                c1.coverage() * 100.0,
+                c4.coverage() * 100.0,
+                theory_coverage(p0, 4) * 100.0,
+                c4.pr_slots,
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Quickstart: encode a tensor with OverQ, inspect coverage, decode, and
+//! run the overwrite dot product — the library's core API in 60 lines.
+//!
+//!     cargo run --release --example quickstart
+
+use overq::overq::{
+    coverage_stats, decode_rows, dotprod, encode_tensor, theory_coverage, OverQConfig,
+};
+use overq::tensor::{TensorF, TensorI};
+use overq::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // A synthetic post-ReLU activation matrix: ~50 % zeros, a long tail.
+    let mut rng = Rng::new(7);
+    let (rows, channels) = (64, 32);
+    let mut x = TensorF::zeros(&[rows, channels]);
+    for v in x.data.iter_mut() {
+        *v = if rng.bool(0.5) {
+            0.0
+        } else if rng.bool(0.06) {
+            rng.normal().abs() * 4.0 + 3.0 // outliers
+        } else {
+            rng.normal().abs() * 0.6
+        };
+    }
+
+    // 4-bit quantization with a deliberately tight clip → many outliers.
+    let bits = 4;
+    let scale = 0.18f32;
+
+    println!("OverQ quickstart — {rows}x{channels} activations, A{bits}, scale {scale}\n");
+    println!("{:<18} {:>9} {:>10} {:>12}", "config", "coverage", "zeros", "mean |err|");
+    for (name, cfg) in [
+        ("baseline", OverQConfig::baseline(bits)),
+        ("RO c=1", OverQConfig::ro(bits, 1)),
+        ("RO c=4", OverQConfig::ro(bits, 4)),
+        ("full c=4", OverQConfig::full(bits, 4)),
+    ] {
+        let stats = coverage_stats(&x, scale, &cfg);
+        let enc = encode_tensor(&x, scale, &cfg);
+        let dec = decode_rows(&enc.codes, &enc.state, scale, &cfg);
+        let err: f64 = x
+            .data
+            .iter()
+            .zip(&dec.data)
+            .map(|(&a, &b)| ((a - b) as f64).abs())
+            .sum::<f64>()
+            / x.numel() as f64;
+        println!(
+            "{name:<18} {:>8.1}% {:>9.1}% {:>12.5}",
+            stats.coverage() * 100.0,
+            stats.zero_frac() * 100.0,
+            err
+        );
+    }
+    println!(
+        "\nEq.(1) theory at p0=0.5: c=1 → {:.1}%, c=4 → {:.1}%",
+        theory_coverage(0.5, 1) * 100.0,
+        theory_coverage(0.5, 4) * 100.0
+    );
+
+    // The hardware dot product: identical to the decoded fake-quant dot.
+    let cfg = OverQConfig::full(bits, 4);
+    let enc = encode_tensor(&x, scale, &cfg);
+    let mut w = TensorI::zeros(&[channels, 8]);
+    for v in w.data.iter_mut() {
+        *v = rng.range(-127, 128) as i32;
+    }
+    let wroll = dotprod::roll_weights(&w);
+    let mut out = TensorI::zeros(&[rows, 8]);
+    dotprod::gemm_overq(&enc.codes, &enc.state, &w, &wroll, &cfg, &mut out);
+    let dec = decode_rows(&enc.codes, &enc.state, scale, &cfg);
+    // check column 0 of row 0 against the fake-quant view
+    let want: f32 = (0..channels)
+        .map(|k| dec.data[k] * w.data[k * 8] as f32)
+        .sum();
+    let got = out.data[0] as f32 * scale / (1 << bits) as f32;
+    println!("\ndot-product identity: hardware {got:.4} == fakequant {want:.4}");
+    assert!((got - want).abs() < 1e-3);
+    println!("OK");
+    Ok(())
+}

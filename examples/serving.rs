@@ -1,0 +1,98 @@
+//! End-to-end serving driver (the validation example from DESIGN.md E7):
+//! load the AOT-compiled quantized model, serve batched requests through
+//! the coordinator, and report latency/throughput + accuracy parity
+//! between the PJRT path and the native rust engine.
+//!
+//!     make artifacts && cargo run --release --example serving
+
+use std::time::Instant;
+
+use overq::coordinator::batcher::BatchPolicy;
+use overq::coordinator::{Server, ServerConfig};
+use overq::harness::calibrate::{scales_from_stats, subset};
+use overq::models::Artifacts;
+use overq::nn::engine::QuantConfig;
+use overq::overq::OverQConfig;
+use overq::tensor::TensorF;
+
+fn main() -> anyhow::Result<()> {
+    let arts = Artifacts::locate()?;
+    let model_name = "resnet18m";
+    let variant = "full_c4";
+    let n_requests = 96usize;
+
+    let model = arts.load_model(model_name)?;
+    let scales = scales_from_stats(&model.enc_stats, 6.0, 4);
+    let ev = arts.load_dataset("evalset")?;
+    let (images, labels) = subset(&ev, n_requests);
+    let img_sz = 16 * 16 * 3;
+
+    println!("== OverQ serving example: {model_name}/{variant} ==");
+    let server = Server::start(ServerConfig {
+        model: model_name.into(),
+        policy: BatchPolicy::default(),
+        act_scales: scales.clone(),
+    })?;
+
+    // Warmup compiles the b1 and b8 executables (one-time cost,
+    // reported separately from steady-state latency).
+    let compile = server.warmup(variant, &[16, 16, 3], 8)?;
+    println!("warmup/compile: {:.1} ms", compile.as_secs_f64() * 1e3);
+
+    // Open-loop: submit everything, then collect.
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..n_requests {
+        let img = TensorF::from_vec(
+            &[16, 16, 3],
+            images.data[i * img_sz..(i + 1) * img_sz].to_vec(),
+        );
+        pending.push(server.submit(img, variant)?);
+    }
+    let mut preds = Vec::new();
+    for rx in pending {
+        let resp = rx.recv()?;
+        let pred = resp
+            .logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as i32;
+        preds.push(pred);
+    }
+    let wall = t0.elapsed();
+    let served_acc = preds
+        .iter()
+        .zip(&labels)
+        .filter(|(p, l)| p == l)
+        .count() as f64
+        / n_requests as f64;
+
+    let m = server.metrics();
+    println!(
+        "served {n_requests} requests in {:.1} ms — {:.1} req/s, accuracy {:.4}",
+        wall.as_secs_f64() * 1e3,
+        n_requests as f64 / wall.as_secs_f64(),
+        served_acc
+    );
+    println!(
+        "  batches {} (mean size {:.2}, padded slots {}) exec {:.2} ms/batch queue {:.2} ms mean",
+        m.batches, m.mean_batch, m.padded_slots, m.mean_exec_us / 1e3, m.mean_queue_us / 1e3
+    );
+
+    // Accuracy parity: the native engine must agree with the PJRT path.
+    let qc = QuantConfig {
+        overq: OverQConfig::full(4, 4),
+        act_scales: scales,
+    };
+    let native_acc = model.engine.accuracy_quant(&images, &labels, 48, &qc)?;
+    println!("  native-engine accuracy on same inputs: {native_acc:.4}");
+    assert!(
+        (native_acc - served_acc).abs() < 0.03,
+        "PJRT and native paths disagree"
+    );
+    println!("parity OK");
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,311 @@
+"""AOT pipeline: train → fold → quantize → lower to HLO text → dump artifacts.
+
+Runs once via `make artifacts`. Produces, under artifacts/:
+
+  manifest.json                 — index of everything below (read by rust)
+  graphs/<model>.json           — graph IR (rust/src/nn/graph.rs input)
+  weights/<model>.tensors       — folded fp32 weights + int8 codes/scales
+                                  + per-enc-point profile stats
+  data/evalset.tensors          — eval images (normalized) + labels
+  data/profileset.tensors       — profiling split
+  hlo/<model>__<variant>__b<N>.hlo.txt — AOT HLO text (PJRT-loadable)
+  testvectors/*.tensors         — cross-language test vectors
+
+HLO text (not serialized protos) is the interchange format — jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, model, overq, tensorfile, train
+
+ABITS_DEFAULT = 4
+CASCADE_DEFAULT = 4
+STD_T_DEFAULT = 6.0
+
+# OverQ variants lowered per model: (name, enable_ro, enable_pr, cascade)
+VARIANTS = [
+    ("base", False, False, 1),
+    ("ro_c1", True, False, 1),
+    ("ro_c4", True, False, 4),
+    ("full_c4", True, True, 4),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: default printing elides big constants as literal "{...}",
+    # which the rust-side HLO text parser reads as ZEROS — the baked
+    # weights would silently vanish. Print them in full.
+    po = xc._xla.HloPrintOptions()
+    po.print_large_constants = True
+    # xla_extension 0.5.1's text parser predates newer metadata fields
+    # (e.g. source_end_line) — strip metadata entirely.
+    po.print_metadata = False
+    return comp.get_hlo_module().to_string(po)
+
+
+def profile_stats(graph, folded, n=data.PROFILE_SIZE, batch=128):
+    """Per-enc-point (mean, std, max) over the profile split."""
+    srcs = model.enc_point_sources(graph)
+    imgs, _ = data.profile_set(n)
+    imgs = data.normalize(imgs)
+    fwd = jax.jit(lambda f, x: model.forward_fp32(graph, f, x, taps=srcs)[1])
+    sums = np.zeros(len(srcs))
+    sqs = np.zeros(len(srcs))
+    mx = np.zeros(len(srcs))
+    cnt = np.zeros(len(srcs))
+    for i in range(0, n, batch):
+        taps = fwd(folded, imgs[i : i + batch])
+        for e, t in enumerate(taps):
+            t = np.asarray(t)
+            sums[e] += t.sum()
+            sqs[e] += (t.astype(np.float64) ** 2).sum()
+            mx[e] = max(mx[e], float(t.max()))
+            cnt[e] += t.size
+    mean = sums / cnt
+    std = np.sqrt(np.maximum(sqs / cnt - mean**2, 0))
+    return np.stack([mean, std, mx], axis=1).astype(np.float32)  # (E, 3)
+
+
+def scales_from_stats(stats, bits, t=STD_T_DEFAULT):
+    """clip = mean + t*std (capped at max); scale = clip / qmax."""
+    qmax = (1 << bits) - 1
+    clip = np.minimum(stats[:, 0] + t * stats[:, 1], np.maximum(stats[:, 2], 1e-6))
+    clip = np.maximum(clip, 1e-6)
+    return (clip / qmax).astype(np.float32)
+
+
+def lower_model_variant(graph, folded, qweights, variant, bits, batch):
+    name, ro, pr, cascade = variant
+    E = graph.num_enc_points()
+
+    def fn(x, act_scales):
+        return (
+            model.forward_quant(
+                graph, folded, qweights, x, act_scales, bits, cascade, ro, pr
+            ),
+        )
+
+    x_spec = jax.ShapeDtypeStruct((batch, *model.IN_SHAPE), jnp.float32)
+    s_spec = jax.ShapeDtypeStruct((E,), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(x_spec, s_spec))
+
+
+def lower_model_fp32(graph, folded, batch):
+    def fn(x):
+        return (model.forward_fp32(graph, folded, x),)
+
+    x_spec = jax.ShapeDtypeStruct((batch, *model.IN_SHAPE), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(x_spec))
+
+
+def lower_kernel_only(M=256, K=72, N=16, bits=ABITS_DEFAULT):
+    """Standalone OverQ matmul (runtime microbench + smoke test)."""
+    from .kernels.overq_matmul import overq_matmul
+
+    def fn(codes, state, w):
+        return (overq_matmul(codes, state, w, bits),)
+
+    ispec = jax.ShapeDtypeStruct((M, K), jnp.int32)
+    wspec = jax.ShapeDtypeStruct((K, N), jnp.int32)
+    return to_hlo_text(jax.jit(fn).lower(ispec, ispec, wspec)), (M, K, N)
+
+
+def dump_testvectors(outdir, graph, folded, qweights, stats):
+    """Cross-language vectors: encoder cases + full-forward logits."""
+    rng = np.random.default_rng(42)
+    tv = {}
+    # 1) Raw encoder cases over several regimes.
+    bits, cascade = ABITS_DEFAULT, CASCADE_DEFAULT
+    for i, (zfrac, ofrac) in enumerate([(0.5, 0.05), (0.7, 0.1), (0.3, 0.02)]):
+        R, C = 16, 32
+        x = np.abs(rng.normal(0.5, 0.8, (R, C))).astype(np.float32)
+        x[rng.random((R, C)) < zfrac] = 0.0
+        x[rng.random((R, C)) < ofrac] *= 8.0  # inject outliers
+        scale = np.float32(0.25)
+        v, vf = overq.int_codes_np(x, scale, bits)
+        tv[f"enc{i}.x"] = x
+        tv[f"enc{i}.scale"] = np.array([scale], np.float32)
+        for ro, pr, tag in [(True, True, "full"), (True, False, "ro"), (False, True, "pr")]:
+            codes, state = overq.encode_rows_ref(v, vf, bits, cascade, ro, pr)
+            tv[f"enc{i}.{tag}.codes"] = codes
+            tv[f"enc{i}.{tag}.state"] = state
+    # 2) Full quant forward on 4 eval images (full_c4, A4, STD t=6).
+    imgs, labels = data.eval_set(4)
+    xin = data.normalize(imgs)
+    scales = scales_from_stats(stats, ABITS_DEFAULT)
+    logits_q = np.asarray(
+        model.forward_quant(
+            graph, folded, qweights, jnp.asarray(xin), jnp.asarray(scales),
+            ABITS_DEFAULT, CASCADE_DEFAULT, True, True,
+        )
+    )
+    logits_f = np.asarray(model.forward_fp32(graph, folded, jnp.asarray(xin)))
+    tv["fw.x"] = xin
+    tv["fw.labels"] = labels.astype(np.int32)
+    tv["fw.act_scales"] = scales
+    tv["fw.logits_quant"] = logits_q
+    tv["fw.logits_fp32"] = logits_f
+    tv["fw.meta"] = np.array([ABITS_DEFAULT, CASCADE_DEFAULT, 1, 1], np.int32)
+    tensorfile.write(os.path.join(outdir, "testvectors", "cross.tensors"), tv)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=train.STEPS)
+    ap.add_argument("--models", default="resnet18m,resnet50m,vgg11m,densenet21m")
+    ap.add_argument("--hlo-model", default="resnet18m", help="model getting quant-variant HLO artifacts")
+    ap.add_argument("--retrain", action="store_true", help="retrain even if weights exist")
+    args = ap.parse_args()
+    out = args.out
+    for sub in ["graphs", "weights", "data", "hlo", "testvectors"]:
+        os.makedirs(os.path.join(out, sub), exist_ok=True)
+
+    manifest = {"models": {}, "hlo": [], "data": {}, "abits_default": ABITS_DEFAULT}
+    t0 = time.time()
+
+    # ---- datasets --------------------------------------------------------
+    ev_imgs, ev_labels = data.eval_set()
+    tensorfile.write(
+        os.path.join(out, "data", "evalset.tensors"),
+        {"images": data.normalize(ev_imgs), "labels": ev_labels.astype(np.int32)},
+    )
+    pf_imgs, pf_labels = data.profile_set()
+    tensorfile.write(
+        os.path.join(out, "data", "profileset.tensors"),
+        {"images": data.normalize(pf_imgs), "labels": pf_labels.astype(np.int32)},
+    )
+    manifest["data"] = {
+        "evalset": "data/evalset.tensors",
+        "profileset": "data/profileset.tensors",
+        "eval_size": int(ev_imgs.shape[0]),
+        "profile_size": int(pf_imgs.shape[0]),
+        "img_shape": list(model.IN_SHAPE),
+        "num_classes": model.NUM_CLASSES,
+    }
+    print(f"[aot] datasets dumped ({time.time()-t0:.1f}s)")
+
+    # ---- models ----------------------------------------------------------
+    flagship = None
+    for name in args.models.split(","):
+        wpath = os.path.join(out, "weights", f"{name}.tensors")
+        if os.path.exists(wpath) and not args.retrain:
+            # reuse previously trained weights (HLO-only rebuild)
+            graph = model.MODELS[name]()
+            saved = tensorfile.read(wpath)
+            folded = {
+                k: saved[k] for k in saved if k.endswith((".w", ".b"))
+            }
+            qw = {k: saved[k] for k in saved if k.endswith((".wq", ".ws"))}
+            stats = saved["enc.stats"]
+            facc = train.evaluate_folded(graph, folded)
+            print(f"[aot] {name}: reusing cached weights")
+        else:
+            graph, params, state, acc = train.train_model(name, steps=args.steps)
+            folded = model.fold(graph, params, state)
+            facc = train.evaluate_folded(graph, folded)
+            qw = model.quantize_weights(graph, folded)
+            stats = profile_stats(graph, folded)
+        tensors = {}
+        for k, v in folded.items():
+            tensors[k] = np.asarray(v, np.float32)
+        for k, v in qw.items():
+            tensors[k] = np.asarray(v)
+        tensors["enc.stats"] = stats
+        with open(os.path.join(out, "graphs", f"{name}.json"), "w") as f:
+            f.write(graph.to_json())
+        tensorfile.write(os.path.join(out, "weights", f"{name}.tensors"), tensors)
+        manifest["models"][name] = {
+            "graph": f"graphs/{name}.json",
+            "weights": f"weights/{name}.tensors",
+            "fp32_acc": float(facc),
+            "enc_points": graph.num_enc_points(),
+        }
+        print(f"[aot] {name}: fp32 acc {facc:.4f} ({time.time()-t0:.1f}s)")
+        if name == args.hlo_model:
+            flagship = (graph, folded, qw, stats)
+
+    # ---- HLO artifacts ---------------------------------------------------
+    def emit(fname, text, meta):
+        path = os.path.join(out, "hlo", fname)
+        with open(path, "w") as f:
+            f.write(text)
+        meta["path"] = f"hlo/{fname}"
+        manifest["hlo"].append(meta)
+        print(f"[aot] HLO {fname}: {len(text)/1e6:.2f} MB ({time.time()-t0:.1f}s)")
+
+    # fp32 graphs for every model, batch 8
+    for name in args.models.split(","):
+        graph_j = model.MODELS[name]()
+        w = tensorfile.read(os.path.join(out, "weights", f"{name}.tensors"))
+        folded = {k: jnp.asarray(v) for k, v in w.items() if k.endswith((".w", ".b"))}
+        for batch in [8] if name != args.hlo_model else [1, 8]:
+            text = lower_model_fp32(graph_j, folded, batch)
+            emit(
+                f"{name}__fp32__b{batch}.hlo.txt",
+                text,
+                {"model": name, "variant": "fp32", "batch": batch, "inputs": ["images"]},
+            )
+
+    # quant variants for the flagship model
+    graph, folded, qw, stats = flagship
+    foldedj = {k: jnp.asarray(v) for k, v in folded.items()}
+    qwj = {k: jnp.asarray(v) for k, v in qw.items()}
+    for variant in VARIANTS:
+        for batch in [1, 8] if variant[0] == "full_c4" else [8]:
+            text = lower_model_variant(
+                graph, foldedj, qwj, variant, ABITS_DEFAULT, batch
+            )
+            emit(
+                f"{args.hlo_model}__{variant[0]}__b{batch}.hlo.txt",
+                text,
+                {
+                    "model": args.hlo_model,
+                    "variant": variant[0],
+                    "batch": batch,
+                    "bits": ABITS_DEFAULT,
+                    "cascade": variant[3],
+                    "ro": variant[1],
+                    "pr": variant[2],
+                    "enc_points": graph.num_enc_points(),
+                    "inputs": ["images", "act_scales"],
+                },
+            )
+
+    # standalone kernel
+    ktext, (M, K, N) = lower_kernel_only()
+    emit(
+        "kernel__overq_matmul.hlo.txt",
+        ktext,
+        {"model": "kernel", "variant": "overq_matmul", "batch": M,
+         "shape": [M, K, N], "bits": ABITS_DEFAULT,
+         "inputs": ["codes", "state", "weights"]},
+    )
+
+    # ---- test vectors ----------------------------------------------------
+    dump_testvectors(out, graph, foldedj, qwj, stats)
+    manifest["testvectors"] = "testvectors/cross.tensors"
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] DONE in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Synthetic "shapes" classification dataset.
+
+Stand-in for ImageNet (see DESIGN.md §2): a deterministic, procedurally
+generated 10-class dataset of 16x16x3 images. Each class is a geometric
+pattern (circle, square, triangle, cross, stripes, ...) rendered with a
+random foreground colour, random position/scale jitter, and additive
+Gaussian noise over a dark textured background.
+
+The generator is pure numpy and fully determined by (seed, index), so the
+python training pipeline and the rust serving/eval pipeline can agree on
+the exact same images (rust re-implements `gen_image` bit-compatibly for
+the serving load generator; the eval/profile splits are additionally
+dumped verbatim into artifacts/ so accuracy comparisons never depend on
+float reproducibility across languages).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMG = 16  # image side
+CH = 3  # channels
+NUM_CLASSES = 10
+
+# Channel-wise normalization applied before the first conv (the first
+# layer is unquantized, per the paper's convention).
+MEAN = np.array([0.28, 0.28, 0.28], dtype=np.float32)
+STD = np.array([0.27, 0.27, 0.27], dtype=np.float32)
+
+_PALETTE = np.array(
+    [
+        [0.95, 0.25, 0.20],
+        [0.20, 0.90, 0.30],
+        [0.25, 0.35, 0.95],
+        [0.95, 0.85, 0.20],
+        [0.85, 0.25, 0.90],
+        [0.20, 0.90, 0.90],
+        [0.95, 0.60, 0.20],
+    ],
+    dtype=np.float32,
+)
+
+
+def _rng(seed: int, index: int) -> np.random.Generator:
+    # Stable per-image stream: philox keyed by (seed, index).
+    return np.random.Generator(np.random.Philox(key=seed, counter=[0, 0, 0, index]))
+
+
+def _mask_for_class(cls: int, rng: np.random.Generator) -> np.ndarray:
+    """Boolean IMGxIMG mask of the class pattern with jitter."""
+    yy, xx = np.mgrid[0:IMG, 0:IMG].astype(np.float32)
+    cy = IMG / 2 + rng.uniform(-2.0, 2.0)
+    cx = IMG / 2 + rng.uniform(-2.0, 2.0)
+    r = rng.uniform(3.5, 5.5)
+    dy, dx = yy - cy, xx - cx
+    ady, adx = np.abs(dy), np.abs(dx)
+    if cls == 0:  # circle (disk)
+        return dy * dy + dx * dx <= r * r
+    if cls == 1:  # square
+        return np.maximum(ady, adx) <= r * 0.85
+    if cls == 2:  # triangle (upward)
+        return (dy >= -r) & (dy <= r * 0.8) & (adx <= (dy + r) * 0.6)
+    if cls == 3:  # cross
+        w = max(1.0, r * 0.35)
+        return ((ady <= w) | (adx <= w)) & (np.maximum(ady, adx) <= r)
+    if cls == 4:  # horizontal stripes
+        period = int(rng.integers(3, 5))
+        return ((yy.astype(np.int64) + int(rng.integers(0, period))) % period) < max(1, period // 2)
+    if cls == 5:  # vertical stripes
+        period = int(rng.integers(3, 5))
+        return ((xx.astype(np.int64) + int(rng.integers(0, period))) % period) < max(1, period // 2)
+    if cls == 6:  # checkerboard
+        period = int(rng.integers(3, 5))
+        return (((yy // period).astype(np.int64) + (xx // period).astype(np.int64)) % 2) == 0
+    if cls == 7:  # ring (annulus)
+        d2 = dy * dy + dx * dx
+        return (d2 <= r * r) & (d2 >= (r * 0.55) ** 2)
+    if cls == 8:  # diamond (L1 ball)
+        return ady + adx <= r
+    if cls == 9:  # dot grid
+        period = int(rng.integers(4, 6))
+        return ((yy.astype(np.int64) % period) < 2) & ((xx.astype(np.int64) % period) < 2)
+    raise ValueError(f"bad class {cls}")
+
+
+def gen_image(seed: int, index: int) -> tuple[np.ndarray, int]:
+    """Generate one (IMG, IMG, CH) float32 image in [0,1] and its label.
+
+    Deliberately hard: low-contrast foregrounds, a semi-transparent
+    distractor shape from another class, colour jitter and heavy noise —
+    so low-bit activation quantization produces the visible accuracy
+    degradation the paper's Table 2 is about (fp32 accuracy ~0.9).
+    """
+    rng = _rng(seed, index)
+    cls = int(rng.integers(0, NUM_CLASSES))
+    mask = _mask_for_class(cls, rng)
+    fg = _PALETTE[int(rng.integers(0, len(_PALETTE)))].copy()
+    fg += rng.uniform(-0.15, 0.15, size=3).astype(np.float32)
+    bg_level = rng.uniform(0.05, 0.35)
+    img = np.empty((IMG, IMG, CH), dtype=np.float32)
+    img[:] = bg_level
+    # Background texture so the zero/outlier statistics aren't degenerate.
+    img += rng.normal(0.0, 0.05, size=(IMG, IMG, CH)).astype(np.float32)
+    # Distractor: a faint shape from a DIFFERENT class half the time.
+    if rng.random() < 0.5:
+        dcls = int((cls + 1 + rng.integers(0, NUM_CLASSES - 1)) % NUM_CLASSES)
+        dmask = _mask_for_class(dcls, rng)
+        dfg = _PALETTE[int(rng.integers(0, len(_PALETTE)))]
+        alpha = rng.uniform(0.3, 0.5)
+        img[dmask] = (1 - alpha) * img[dmask] + alpha * dfg
+    contrast = rng.uniform(0.45, 1.0)
+    img[mask] = fg * contrast
+    img += rng.normal(0.0, 0.12, size=(IMG, IMG, CH)).astype(np.float32)
+    np.clip(img, 0.0, 1.0, out=img)
+    return img, cls
+
+
+def gen_batch(seed: int, start: int, count: int) -> tuple[np.ndarray, np.ndarray]:
+    imgs = np.empty((count, IMG, IMG, CH), dtype=np.float32)
+    labels = np.empty((count,), dtype=np.int32)
+    for i in range(count):
+        imgs[i], labels[i] = gen_image(seed, start + i)
+    return imgs, labels
+
+
+def normalize(imgs: np.ndarray) -> np.ndarray:
+    """Apply channelwise (x - mean) / std; models consume normalized input."""
+    return ((imgs - MEAN) / STD).astype(np.float32)
+
+
+# Canonical split seeds — mirrored in rust/src/data/shapes.rs.
+TRAIN_SEED = 1001
+EVAL_SEED = 2002
+PROFILE_SEED = 3003
+
+TRAIN_SIZE = 8192
+EVAL_SIZE = 2048
+PROFILE_SIZE = 512
+
+
+def train_set() -> tuple[np.ndarray, np.ndarray]:
+    return gen_batch(TRAIN_SEED, 0, TRAIN_SIZE)
+
+
+def eval_set(n: int = EVAL_SIZE) -> tuple[np.ndarray, np.ndarray]:
+    return gen_batch(EVAL_SEED, 0, n)
+
+
+def profile_set(n: int = PROFILE_SIZE) -> tuple[np.ndarray, np.ndarray]:
+    return gen_batch(PROFILE_SEED, 0, n)

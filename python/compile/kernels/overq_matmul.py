@@ -1,0 +1,105 @@
+"""Pallas kernel: fused OverQ decode + integer matmul (the systolic array).
+
+This is the paper's PE array as one TPU kernel. The OverQ PE semantics —
+state-muxed weight copy from the adjacent PE plus a left/right shift of
+the product — become, in MXU terms, TWO matmuls per tile:
+
+    out = A0 @ W + A1 @ Wroll
+
+where A0 holds the factor-scaled codes of NORM slots, A1 the factor-scaled
+codes of non-NORM slots (MSB / SHIFT / LSB all read the previous weight),
+and Wroll is W shifted down one row along K. The per-slot factor
+(B for NORM/SHIFT, B*B for MSB — the paper's left shift, 1 for LSB — the
+right shift, in B-fixed-point) is a VPU select applied ahead of the MXU.
+
+Grid/tiling: blocks of (BM, BN) over the output with the full K dimension
+resident per block — for this repo's models K = kh*kw*C ≤ 1152, which at
+int32 keeps the three VMEM operands comfortably under the ~16 MiB VMEM
+budget (see DESIGN.md §9 for the footprint table). interpret=True is
+mandatory on CPU-PJRT (Mosaic custom-calls cannot run there).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..overq import LSB, MSB, NORM
+
+DEFAULT_BM = 64
+DEFAULT_BN = 64
+
+
+def _kernel(codes_ref, state_ref, w_ref, wroll_ref, out_ref, *, bits: int):
+    B = 1 << bits
+    codes = codes_ref[...]
+    state = state_ref[...]
+    # VPU work: per-slot fixed-point factor + NORM/non-NORM split.
+    f = jnp.where(state == MSB, B * B, jnp.where(state == LSB, 1, B)).astype(
+        jnp.int32
+    )
+    a = codes * f
+    sh = state != NORM
+    a0 = jnp.where(sh, 0, a)
+    a1 = jnp.where(sh, a, 0)
+    # MXU work: two int matmuls against the weight tile and its 1-roll.
+    acc = jnp.dot(a0, w_ref[...], preferred_element_type=jnp.int32)
+    acc += jnp.dot(a1, wroll_ref[...], preferred_element_type=jnp.int32)
+    out_ref[...] = acc
+
+
+def _pad_to(x, m, axis):
+    rem = (-x.shape[axis]) % m
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "interpret"))
+def overq_matmul(
+    codes,
+    state,
+    w,
+    bits: int,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool = True,
+):
+    """Fixed-point OverQ matmul: (M,K) codes/state × (K,N) int weights.
+
+    Returns int32 (M, N) accumulators equal to B * Σ_k x̂[m,k] · w[k,n].
+    Worst-case magnitude: (B-1)·B² · 127 · K — for b≤5, K≤1152 this stays
+    within int32 (see python/tests/test_kernel.py::test_acc_bounds).
+    """
+    M, K = codes.shape
+    N = w.shape[1]
+    wroll = jnp.concatenate([jnp.zeros_like(w[:1]), w[:-1]], axis=0)
+
+    bm_ = min(bm, M) if M % min(bm, M) == 0 else bm
+    bn_ = min(bn, N) if N % min(bn, N) == 0 else bn
+    codes_p = _pad_to(codes.astype(jnp.int32), bm_, 0)
+    state_p = _pad_to(state.astype(jnp.int32), bm_, 0)
+    w_p = _pad_to(w.astype(jnp.int32), bn_, 1)
+    wroll_p = _pad_to(wroll.astype(jnp.int32), bn_, 1)
+    Mp, Np = codes_p.shape[0], w_p.shape[1]
+
+    grid = (Mp // bm_, Np // bn_)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm_, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, bn_), lambda i, j: (0, j)),
+            pl.BlockSpec((K, bn_), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.int32),
+        interpret=interpret,
+    )(codes_p, state_p, w_p, wroll_p)
+    return out[:M, :N]

@@ -1,0 +1,50 @@
+"""Pallas kernel: uniform fake-quantization (the rescale unit's quantizer).
+
+Elementwise: v = clip(floor(x * inv_scale + 0.5), 0, 2^bits - 1) * scale.
+Used by the fake-quant model variant (the functional view used to validate
+the hardware-path identity inside JAX) and by the activation-profiling
+artifact. Tiled along the flattened leading axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 1024
+
+
+def _kernel(x_ref, inv_ref, scale_ref, out_ref, *, bits: int):
+    qmax = (1 << bits) - 1
+    x = x_ref[...]
+    v = jnp.clip(jnp.floor(x * inv_ref[0] + 0.5), 0.0, float(qmax))
+    out_ref[...] = v * scale_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+def fakequant(x, scale, bits: int, block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """Fake-quantize a tensor of any shape with a scalar scale."""
+    shp = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    scale = jnp.asarray(scale, jnp.float32).reshape(1)
+    inv = (jnp.float32(1.0) / scale).reshape(1)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits),
+        grid=(flat.shape[0] // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+        interpret=interpret,
+    )(flat, inv, scale)
+    return out[:n].reshape(shp)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: small, obviously-correct jnp code
+with no tiling or fusion tricks. pytest/hypothesis compare every Pallas
+kernel against these on swept shapes/dtypes/bitwidths.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..overq import LSB, MSB, NORM
+
+
+def overq_matmul_ref(codes, state, w):
+    """OverQ integer matmul, fixed-point (result is B * sum x̂·w).
+
+    codes, state: (M, K) int32 slot codes and OverQ states, with the
+    per-slot factor already applied to codes (caller pre-scales).
+    w: (K, N) int32 weights. Non-NORM slots read w[k-1]; slot 0 of each
+    channel block can never be non-NORM, so row 0 of wprev is dead.
+    """
+    wprev = jnp.concatenate([jnp.zeros_like(w[:1]), w[:-1]], axis=0)
+    sh = state != NORM
+    a0 = jnp.where(sh, 0, codes)
+    a1 = jnp.where(sh, codes, 0)
+    return a0 @ w + a1 @ wprev
+
+
+def overq_matmul_scaled_ref(codes, state, w, bits: int):
+    """Same but applying the per-slot fixed-point factor internally."""
+    B = 1 << bits
+    f = jnp.where(state == MSB, B * B, jnp.where(state == LSB, 1, B)).astype(
+        jnp.int32
+    )
+    return overq_matmul_ref(codes * f, state, w)
+
+
+def fakequant_ref(x, scale, bits: int):
+    """Plain uniform fake-quant for unsigned activations.
+
+    v = floor(x/scale + 0.5) clamped to [0, 2^bits - 1], dequantized.
+    Matches rust/src/quant/uniform.rs::fake_quant (multiply-by-reciprocal
+    rounding convention).
+    """
+    qmax = (1 << bits) - 1
+    inv = jnp.float32(1.0) / jnp.asarray(scale, jnp.float32)
+    v = jnp.clip(jnp.floor(x * inv + 0.5), 0, qmax)
+    return v * scale
+
+
+def quantize_weights_ref(w, scale):
+    """Symmetric per-output-channel weight quantization to int8 codes.
+
+    w: (K, N), scale: (N,). Returns int32 codes in [-127, 127].
+    """
+    inv = 1.0 / np.asarray(scale, np.float32)
+    q = np.floor(np.asarray(w) * inv[None, :] + 0.5).astype(np.int32)
+    return np.clip(q, -127, 127)

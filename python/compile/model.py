@@ -1,0 +1,542 @@
+"""L2 — model zoo on a tiny graph IR, with fp32 / quantized / OverQ forwards.
+
+Four architecture-faithful mini CNNs stand in for the paper's ImageNet
+models (DESIGN.md §2): basic-block ResNet ("resnet18m"), bottleneck ResNet
+("resnet50m"), plain VGG ("vgg11m") and dense-concat DenseNet
+("densenet21m"), all on 16x16x3 inputs, 10 classes.
+
+Models are built as a small SSA graph IR (list of node dicts). The same
+IR is exported as JSON into artifacts/ and interpreted by the rust native
+engine (rust/src/nn/graph.rs), so both sides run the *identical* network.
+
+Three interpreters:
+  * forward_train — fp32 with BatchNorm (batch stats + running stats).
+  * forward_fp32  — folded conv+bias graph (export form), optional taps.
+  * forward_quant — the hardware path: per-channel int8 weights, OverQ
+    activation encoding (overq.encode_tensor) at each "enc point", im2col,
+    and the Pallas OverQ matmul kernel (kernels/overq_matmul.py).
+
+Node schema (folded/export form):
+  {"id": int, "op": "input|conv|add|concat|maxpool|avgpool|gap|dense",
+   "in": [ids], ...}
+  conv: kh kw stride cin cout quant relu, "enc": enc-point index of its
+        input tensor (only when quant), weights f"n{id}.w" (kh,kw,cin,cout)
+        and f"n{id}.b" (cout,)
+  add/concat: elementwise/channel concat, optional fused relu
+  dense: weights (cin,cout), bias; never quantized (last layer).
+Quantized convs follow the paper: all convs except the first; the final
+dense classifier stays fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import overq
+from .kernels.overq_matmul import overq_matmul
+
+NUM_CLASSES = 10
+IN_SHAPE = (16, 16, 3)
+WBITS = 8
+
+
+@dataclasses.dataclass
+class Graph:
+    name: str
+    nodes: list  # list of dicts, SSA ids == list index
+
+    def conv_nodes(self):
+        return [n for n in self.nodes if n["op"] == "conv"]
+
+    def num_enc_points(self) -> int:
+        encs = [n["enc"] for n in self.nodes if n.get("quant")]
+        return (max(encs) + 1) if encs else 0
+
+    def to_json(self) -> str:
+        return json.dumps({"name": self.name, "nodes": self.nodes}, indent=1)
+
+
+class _Builder:
+    """Helper for constructing graphs; assigns enc points for quant convs."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.nodes = []
+        self._enc_of_node: dict[int, int] = {}
+
+    def _add(self, node):
+        node["id"] = len(self.nodes)
+        self.nodes.append(node)
+        return node["id"]
+
+    def input(self):
+        return self._add({"op": "input", "in": []})
+
+    def _enc_index(self, src: int) -> int:
+        if src not in self._enc_of_node:
+            self._enc_of_node[src] = len(self._enc_of_node)
+        return self._enc_of_node[src]
+
+    def conv(self, src, cin, cout, k=3, stride=1, relu=True, quant=True, bn=True):
+        node = {
+            "op": "conv",
+            "in": [src],
+            "kh": k,
+            "kw": k,
+            "stride": stride,
+            "cin": cin,
+            "cout": cout,
+            "relu": relu,
+            "quant": quant,
+            "bn": bn,
+        }
+        if quant:
+            node["enc"] = self._enc_index(src)
+        return self._add(node)
+
+    def add(self, a, b, relu=True):
+        return self._add({"op": "add", "in": [a, b], "relu": relu})
+
+    def concat(self, srcs):
+        return self._add({"op": "concat", "in": list(srcs), "relu": False})
+
+    def maxpool(self, src):
+        return self._add({"op": "maxpool", "in": [src]})
+
+    def avgpool(self, src):
+        return self._add({"op": "avgpool", "in": [src]})
+
+    def gap(self, src):
+        return self._add({"op": "gap", "in": [src]})
+
+    def dense(self, src, cin, cout):
+        return self._add({"op": "dense", "in": [src], "cin": cin, "cout": cout})
+
+    def build(self) -> Graph:
+        return Graph(self.name, self.nodes)
+
+
+# ---------------------------------------------------------------------------
+# Architectures
+# ---------------------------------------------------------------------------
+
+
+def build_resnet18m(base: int = 8) -> Graph:
+    """Basic-block ResNet (ResNet-18 topology, scaled to 16x16)."""
+    b = _Builder("resnet18m")
+    x = b.input()
+    x = b.conv(x, 3, base, quant=False)  # first layer unquantized
+    cin = base
+    for stage, ch in enumerate([base, base * 2, base * 4]):
+        for blk in range(2):
+            stride = 2 if (stage > 0 and blk == 0) else 1
+            y = b.conv(x, cin, ch, stride=stride, relu=True)
+            y = b.conv(y, ch, ch, relu=False)
+            if stride != 1 or cin != ch:
+                sc = b.conv(x, cin, ch, k=1, stride=stride, relu=False)
+            else:
+                sc = x
+            x = b.add(y, sc, relu=True)
+            cin = ch
+    x = b.gap(x)
+    b.dense(x, cin, NUM_CLASSES)
+    return b.build()
+
+
+def build_resnet50m(base: int = 8, expansion: int = 2) -> Graph:
+    """Bottleneck ResNet (ResNet-50 topology, scaled)."""
+    b = _Builder("resnet50m")
+    x = b.input()
+    x = b.conv(x, 3, base, quant=False)
+    cin = base
+    for stage, ch in enumerate([base, base * 2, base * 4]):
+        out = ch * expansion
+        for blk in range(2):
+            stride = 2 if (stage > 0 and blk == 0) else 1
+            y = b.conv(x, cin, ch, k=1, relu=True)
+            y = b.conv(y, ch, ch, stride=stride, relu=True)
+            y = b.conv(y, ch, out, k=1, relu=False)
+            if stride != 1 or cin != out:
+                sc = b.conv(x, cin, out, k=1, stride=stride, relu=False)
+            else:
+                sc = x
+            x = b.add(y, sc, relu=True)
+            cin = out
+    x = b.gap(x)
+    b.dense(x, cin, NUM_CLASSES)
+    return b.build()
+
+
+def build_vgg11m(base: int = 8) -> Graph:
+    """Plain VGG-style stack (VGG-19 topology family, scaled)."""
+    b = _Builder("vgg11m")
+    x = b.input()
+    x = b.conv(x, 3, base, quant=False)
+    x = b.conv(x, base, base)
+    x = b.maxpool(x)  # 8x8
+    x = b.conv(x, base, base * 2)
+    x = b.conv(x, base * 2, base * 2)
+    x = b.maxpool(x)  # 4x4
+    x = b.conv(x, base * 2, base * 4)
+    x = b.conv(x, base * 4, base * 4)
+    x = b.maxpool(x)  # 2x2
+    x = b.gap(x)
+    b.dense(x, base * 4, NUM_CLASSES)
+    return b.build()
+
+
+def build_densenet21m(growth: int = 8, layers_per_block: int = 3) -> Graph:
+    """Dense-concat DenseNet (DenseNet-121 topology family, scaled)."""
+    b = _Builder("densenet21m")
+    x = b.input()
+    ch = growth * 2
+    x = b.conv(x, 3, ch, quant=False)
+    for block in range(3):
+        for _ in range(layers_per_block):
+            y = b.conv(x, ch, growth)
+            x = b.concat([x, y])
+            ch += growth
+        if block < 2:
+            x = b.conv(x, ch, ch // 2, k=1)
+            ch = ch // 2
+            x = b.avgpool(x)
+    x = b.gap(x)
+    b.dense(x, ch, NUM_CLASSES)
+    return b.build()
+
+
+MODELS: dict[str, Callable[[], Graph]] = {
+    "resnet18m": build_resnet18m,
+    "resnet50m": build_resnet50m,
+    "vgg11m": build_vgg11m,
+    "densenet21m": build_densenet21m,
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(graph: Graph, seed: int = 0):
+    """He-init conv/dense weights + BN params; returns (params, bn_state)."""
+    key = jax.random.PRNGKey(seed)
+    params, state = {}, {}
+    for n in graph.nodes:
+        if n["op"] == "conv":
+            key, k1 = jax.random.split(key)
+            fan_in = n["kh"] * n["kw"] * n["cin"]
+            w = jax.random.normal(
+                k1, (n["kh"], n["kw"], n["cin"], n["cout"]), jnp.float32
+            ) * jnp.sqrt(2.0 / fan_in)
+            params[f"n{n['id']}.w"] = w
+            if n.get("bn", True):
+                params[f"n{n['id']}.gamma"] = jnp.ones(n["cout"], jnp.float32)
+                params[f"n{n['id']}.beta"] = jnp.zeros(n["cout"], jnp.float32)
+                state[f"n{n['id']}.rmean"] = jnp.zeros(n["cout"], jnp.float32)
+                state[f"n{n['id']}.rvar"] = jnp.ones(n["cout"], jnp.float32)
+            else:
+                params[f"n{n['id']}.b"] = jnp.zeros(n["cout"], jnp.float32)
+        elif n["op"] == "dense":
+            key, k1 = jax.random.split(key)
+            params[f"n{n['id']}.w"] = jax.random.normal(
+                k1, (n["cin"], n["cout"]), jnp.float32
+            ) * jnp.sqrt(2.0 / n["cin"])
+            params[f"n{n['id']}.b"] = jnp.zeros(n["cout"], jnp.float32)
+    return params, state
+
+
+# ---------------------------------------------------------------------------
+# Interpreters
+# ---------------------------------------------------------------------------
+
+
+def _conv_f32(x, w, stride):
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _pool(x, kind):
+    if kind == "max":
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+    return (
+        jax.lax.reduce_window(
+            x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+        / 4.0
+    )
+
+
+def forward_train(graph: Graph, params, state, x, momentum=0.9, train=True):
+    """fp32 forward with BN. Returns (logits, new_state)."""
+    vals = {}
+    new_state = dict(state)
+    for n in graph.nodes:
+        nid, op = n["id"], n["op"]
+        if op == "input":
+            vals[nid] = x
+        elif op == "conv":
+            y = _conv_f32(vals[n["in"][0]], params[f"n{nid}.w"], n["stride"])
+            if n.get("bn", True):
+                if train:
+                    mean = y.mean(axis=(0, 1, 2))
+                    var = y.var(axis=(0, 1, 2))
+                    new_state[f"n{nid}.rmean"] = (
+                        momentum * state[f"n{nid}.rmean"] + (1 - momentum) * mean
+                    )
+                    new_state[f"n{nid}.rvar"] = (
+                        momentum * state[f"n{nid}.rvar"] + (1 - momentum) * var
+                    )
+                else:
+                    mean = state[f"n{nid}.rmean"]
+                    var = state[f"n{nid}.rvar"]
+                y = (y - mean) * jax.lax.rsqrt(var + 1e-5)
+                y = y * params[f"n{nid}.gamma"] + params[f"n{nid}.beta"]
+            else:
+                y = y + params[f"n{nid}.b"]
+            vals[nid] = jax.nn.relu(y) if n["relu"] else y
+        elif op == "add":
+            y = vals[n["in"][0]] + vals[n["in"][1]]
+            vals[nid] = jax.nn.relu(y) if n["relu"] else y
+        elif op == "concat":
+            vals[nid] = jnp.concatenate([vals[i] for i in n["in"]], axis=-1)
+        elif op == "maxpool":
+            vals[nid] = _pool(vals[n["in"][0]], "max")
+        elif op == "avgpool":
+            vals[nid] = _pool(vals[n["in"][0]], "avg")
+        elif op == "gap":
+            vals[nid] = vals[n["in"][0]].mean(axis=(1, 2))
+        elif op == "dense":
+            vals[nid] = vals[n["in"][0]] @ params[f"n{nid}.w"] + params[f"n{nid}.b"]
+        else:
+            raise ValueError(op)
+    return vals[len(graph.nodes) - 1], new_state
+
+
+def fold(graph: Graph, params, state):
+    """Fold BN into conv weight+bias. Returns folded params {n.w, n.b}."""
+    folded = {}
+    for n in graph.nodes:
+        nid, op = n["id"], n["op"]
+        if op == "conv":
+            w = np.asarray(params[f"n{nid}.w"], np.float32)
+            if n.get("bn", True):
+                gamma = np.asarray(params[f"n{nid}.gamma"], np.float32)
+                beta = np.asarray(params[f"n{nid}.beta"], np.float32)
+                mean = np.asarray(state[f"n{nid}.rmean"], np.float32)
+                var = np.asarray(state[f"n{nid}.rvar"], np.float32)
+                sc = gamma / np.sqrt(var + 1e-5)
+                folded[f"n{nid}.w"] = (w * sc).astype(np.float32)
+                folded[f"n{nid}.b"] = (beta - mean * sc).astype(np.float32)
+            else:
+                folded[f"n{nid}.w"] = w
+                folded[f"n{nid}.b"] = np.asarray(params[f"n{nid}.b"], np.float32)
+        elif op == "dense":
+            folded[f"n{nid}.w"] = np.asarray(params[f"n{nid}.w"], np.float32)
+            folded[f"n{nid}.b"] = np.asarray(params[f"n{nid}.b"], np.float32)
+    return folded
+
+
+def forward_fp32(graph: Graph, folded, x, taps: list[int] | None = None):
+    """Folded fp32 forward. If taps given, also return those node outputs."""
+    vals = {}
+    for n in graph.nodes:
+        nid, op = n["id"], n["op"]
+        if op == "input":
+            vals[nid] = x
+        elif op == "conv":
+            y = _conv_f32(vals[n["in"][0]], folded[f"n{nid}.w"], n["stride"])
+            y = y + folded[f"n{nid}.b"]
+            vals[nid] = jax.nn.relu(y) if n["relu"] else y
+        elif op == "add":
+            y = vals[n["in"][0]] + vals[n["in"][1]]
+            vals[nid] = jax.nn.relu(y) if n["relu"] else y
+        elif op == "concat":
+            vals[nid] = jnp.concatenate([vals[i] for i in n["in"]], axis=-1)
+        elif op == "maxpool":
+            vals[nid] = _pool(vals[n["in"][0]], "max")
+        elif op == "avgpool":
+            vals[nid] = _pool(vals[n["in"][0]], "avg")
+        elif op == "gap":
+            vals[nid] = vals[n["in"][0]].mean(axis=(1, 2))
+        elif op == "dense":
+            vals[nid] = vals[n["in"][0]] @ folded[f"n{nid}.w"] + folded[f"n{nid}.b"]
+    out = vals[len(graph.nodes) - 1]
+    if taps is not None:
+        return out, [vals[t] for t in taps]
+    return out
+
+
+def enc_point_sources(graph: Graph) -> list[int]:
+    """Node id producing each enc-point tensor, indexed by enc index."""
+    srcs = {}
+    for n in graph.nodes:
+        if n.get("quant"):
+            srcs[n["enc"]] = n["in"][0]
+    return [srcs[i] for i in range(len(srcs))]
+
+
+# ---------------------------------------------------------------------------
+# Quantization (weights) + hardware-path forward
+# ---------------------------------------------------------------------------
+
+
+def quantize_weights(graph: Graph, folded, wbits: int = WBITS):
+    """Per-output-channel symmetric MMSE weight quantization.
+
+    Returns {f"n{id}.wq": int32 (kh*kw*cin, cout), f"n{id}.ws": f32 (cout,)}.
+    Matches rust/src/quant/uniform.rs::quantize_weights_mmse.
+    """
+    qmax = (1 << (wbits - 1)) - 1
+    out = {}
+    for n in graph.conv_nodes():
+        if not n.get("quant"):
+            continue
+        nid = n["id"]
+        w = np.asarray(folded[f"n{nid}.w"], np.float32)  # (kh,kw,cin,cout)
+        k2 = w.reshape(-1, w.shape[-1])  # (K, cout), K ordered (kh,kw,cin)
+        scales = np.empty(w.shape[-1], np.float32)
+        codes = np.empty_like(k2, dtype=np.int32)
+        for oc in range(w.shape[-1]):
+            col = k2[:, oc]
+            amax = float(np.abs(col).max())
+            amax = amax if amax > 0 else 1e-8
+            best, best_err = np.float32(amax / qmax), np.inf
+            for frac in np.linspace(0.4, 1.0, 31):
+                s = np.float32(amax * frac / qmax)
+                q = np.clip(np.floor(col * (np.float32(1.0) / s) + 0.5), -qmax - 1, qmax)
+                err = float(((q * s - col) ** 2).sum())
+                if err < best_err:
+                    best_err, best = err, s
+            s = np.float32(best)
+            scales[oc] = s
+            codes[:, oc] = np.clip(
+                np.floor(col * (np.float32(1.0) / s) + 0.5), -qmax - 1, qmax
+            ).astype(np.int32)
+        out[f"n{nid}.wq"] = codes
+        out[f"n{nid}.ws"] = scales
+    return out
+
+
+def _im2col(x, kh, kw, stride):
+    """Extract SAME patches: (N, OH, OW, kh*kw*C) with C innermost per tap.
+
+    Padding follows the XLA/TF SAME convention (pad_lo = total // 2),
+    which differs from naive symmetric padding for stride 2 on even sizes.
+    Mirrored by rust/src/nn/conv.rs.
+    """
+    n, h, w, c = x.shape
+    oh, ow = -(-h // stride), -(-w // stride)
+    pth = max((oh - 1) * stride + kh - h, 0)
+    ptw = max((ow - 1) * stride + kw - w, 0)
+    ph, pw = pth // 2, ptw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, pth - ph), (pw, ptw - pw), (0, 0)))
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(
+                xp[
+                    :,
+                    dy : dy + (oh - 1) * stride + 1 : stride,
+                    dx : dx + (ow - 1) * stride + 1 : stride,
+                    :,
+                ]
+            )
+    return jnp.concatenate(cols, axis=-1), oh, ow
+
+
+def forward_quant(
+    graph: Graph,
+    folded,
+    qweights,
+    x,
+    act_scales,
+    bits: int,
+    cascade: int,
+    enable_ro: bool,
+    enable_pr: bool,
+    use_pallas: bool = True,
+    interpret: bool = True,
+):
+    """Hardware-path quantized forward (the AOT model).
+
+    act_scales: f32 vector, one *scale* (clip/qmax) per enc point.
+    Quantized convs run as: encode input once per enc point -> im2col of
+    (codes, state) -> Pallas OverQ matmul -> dequant + bias (+ relu).
+    """
+    B = 1 << bits
+    vals = {}
+    encoded = {}  # enc index -> (codes NHWC, state NHWC)
+
+    def get_encoded(n):
+        e = n["enc"]
+        if e not in encoded:
+            src = vals[n["in"][0]]
+            scale = act_scales[e]
+            encoded[e] = overq.encode_tensor(
+                src, scale, bits, cascade, enable_ro, enable_pr
+            )
+        return encoded[e]
+
+    for n in graph.nodes:
+        nid, op = n["id"], n["op"]
+        if op == "input":
+            vals[nid] = x
+        elif op == "conv" and n.get("quant"):
+            codes, state = get_encoded(n)
+            ccols, oh, ow = _im2col(codes, n["kh"], n["kw"], n["stride"])
+            scols, _, _ = _im2col(state, n["kh"], n["kw"], n["stride"])
+            M = x.shape[0] * oh * ow
+            K = n["kh"] * n["kw"] * n["cin"]
+            wq = jnp.asarray(qweights[f"n{nid}.wq"])
+            if use_pallas:
+                acc = overq_matmul(
+                    ccols.reshape(M, K),
+                    scols.reshape(M, K),
+                    wq,
+                    bits,
+                    interpret=interpret,
+                )
+            else:
+                from .kernels.ref import overq_matmul_scaled_ref
+
+                acc = overq_matmul_scaled_ref(
+                    ccols.reshape(M, K), scols.reshape(M, K), wq, bits
+                )
+            ws = jnp.asarray(qweights[f"n{nid}.ws"])
+            deq = acc.astype(jnp.float32) * (
+                act_scales[n["enc"]] * ws[None, :] / np.float32(B)
+            )
+            y = deq.reshape(x.shape[0], oh, ow, n["cout"]) + folded[f"n{nid}.b"]
+            vals[nid] = jax.nn.relu(y) if n["relu"] else y
+        elif op == "conv":
+            y = _conv_f32(vals[n["in"][0]], folded[f"n{nid}.w"], n["stride"])
+            y = y + folded[f"n{nid}.b"]
+            vals[nid] = jax.nn.relu(y) if n["relu"] else y
+        elif op == "add":
+            y = vals[n["in"][0]] + vals[n["in"][1]]
+            vals[nid] = jax.nn.relu(y) if n["relu"] else y
+        elif op == "concat":
+            vals[nid] = jnp.concatenate([vals[i] for i in n["in"]], axis=-1)
+        elif op == "maxpool":
+            vals[nid] = _pool(vals[n["in"][0]], "max")
+        elif op == "avgpool":
+            vals[nid] = _pool(vals[n["in"][0]], "avg")
+        elif op == "gap":
+            vals[nid] = vals[n["in"][0]].mean(axis=(1, 2))
+        elif op == "dense":
+            vals[nid] = vals[n["in"][0]] @ folded[f"n{nid}.w"] + folded[f"n{nid}.b"]
+    return vals[len(graph.nodes) - 1]

@@ -1,0 +1,302 @@
+"""OverQ encoding/decoding — normative reference + JAX implementation.
+
+Implements DESIGN.md §7. Two implementations of the same spec:
+
+* ``encode_rows_ref`` — sequential numpy greedy state machine. This is the
+  NORMATIVE reference; the rust encoder (rust/src/overq/encode.rs), the
+  jnp scan below, and the systolic simulator are all tested against it.
+* ``encode_rows`` — ``lax.scan`` along the channel axis, vmapped over
+  rows; this is what lowers into the AOT model (the paper's rescale-unit
+  logic, kept outside the MAC kernel exactly as the hardware does).
+
+Slot states (2-bit lane, matching the paper's "one or two bits" of OverQ
+state):
+
+  NORM  (0): slot holds its own value's low bits; weight w_k, factor B.
+  MSB   (1): slot holds the out-of-range MSBs of the previous slot's
+             outlier; weight w_{k-1}, factor B*B (left shift by b).
+  SHIFT (2): cascade: slot holds the previous original value; weight
+             w_{k-1}, factor B (no bit shift).
+  LSB   (3): precision overwrite: slot holds b extra fraction bits of the
+             previous value; weight w_{k-1}, factor 1 (right shift by b).
+
+All non-NORM states read the *previous* weight — in hardware a single mux
+on the weight register chain; on TPU a second matmul against the 1-rolled
+weight matrix (see kernels/overq_matmul.py).
+
+Fixed-point convention: the integer dot product accumulates
+``sum_k codes_k * factor_k * w_k`` which equals ``B * sum_i xhat_i * w_i``
+with xhat the effective dequantized code; the epilogue folds the extra B
+into the dequant scale.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+NORM, MSB, SHIFT, LSB = 0, 1, 2, 3
+
+
+# ---------------------------------------------------------------------------
+# Shared integerization (must match rust/src/quant/uniform.rs exactly):
+# v = floor(x * inv_s + 0.5) with inv_s = 1/s computed once in f32.
+# ---------------------------------------------------------------------------
+
+
+def int_codes_np(x: np.ndarray, scale: float, bits: int):
+    """Unclamped integer codes v and fine codes vfine (B*v resolution)."""
+    b_factor = float(1 << bits)
+    inv = np.float32(1.0) / np.float32(scale)
+    v = np.floor(x * inv + np.float32(0.5)).astype(np.int32)
+    vfine = np.floor(x * inv * np.float32(b_factor) + np.float32(0.5)).astype(np.int32)
+    return v, vfine
+
+
+def int_codes_jnp(x, scale, bits: int):
+    b_factor = np.float32(1 << bits)
+    inv = jnp.float32(1.0) / scale.astype(jnp.float32)
+    v = jnp.floor(x * inv + 0.5).astype(jnp.int32)
+    vfine = jnp.floor(x * inv * b_factor + 0.5).astype(jnp.int32)
+    return v, vfine
+
+
+# ---------------------------------------------------------------------------
+# Normative numpy reference (sequential greedy, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+def encode_channels_ref(
+    v: np.ndarray,
+    vfine: np.ndarray,
+    bits: int,
+    cascade: int,
+    enable_ro: bool,
+    enable_pr: bool,
+):
+    """Encode one channel vector. Returns (codes, state) int32 arrays."""
+    C = v.shape[0]
+    B = 1 << bits
+    qmax = B - 1
+    codes = np.zeros(C, dtype=np.int32)
+    state = np.zeros(C, dtype=np.int32)
+    i = 0
+    while i < C:
+        vi = int(v[i])
+        if vi > qmax:
+            j = 0
+            if enable_ro:
+                for d in range(1, cascade + 1):
+                    if i + d < C and v[i + d] == 0:
+                        j = i + d
+                        break
+            if j:
+                full = min(vi, B * B - 1)
+                codes[i] = full & qmax
+                state[i] = NORM
+                codes[i + 1] = full >> bits
+                state[i + 1] = MSB
+                for k in range(i + 2, j + 1):
+                    codes[k] = min(int(v[k - 1]), qmax)
+                    state[k] = SHIFT
+                i = j + 1
+            else:
+                codes[i] = qmax  # uncovered outlier: clamp
+                i += 1
+        elif vi > 0:
+            codes[i] = vi
+            if enable_pr and i + 1 < C and v[i + 1] == 0:
+                # PR re-derives (hi, lo) from the 2b-bit fine code so the
+                # pair hi + lo/B is the best 2b-bit representation of x.
+                vf = int(vfine[i])
+                hi = min(vf >> bits, qmax)
+                lo = vf & qmax
+                if lo > 0:
+                    codes[i] = hi
+                    codes[i + 1] = lo
+                    state[i + 1] = LSB
+                    i += 2
+                    continue
+            i += 1
+        else:
+            i += 1  # zero (possibly later claimed — handled by jumps above)
+    return codes, state
+
+
+def encode_rows_ref(v, vfine, bits, cascade, enable_ro, enable_pr):
+    """Apply encode_channels_ref over the last axis of (R, C) arrays."""
+    R, C = v.shape
+    codes = np.zeros((R, C), dtype=np.int32)
+    state = np.zeros((R, C), dtype=np.int32)
+    for r in range(R):
+        codes[r], state[r] = encode_channels_ref(
+            v[r], vfine[r], bits, cascade, enable_ro, enable_pr
+        )
+    return codes, state
+
+
+# ---------------------------------------------------------------------------
+# Decode helpers (shared identity, vectorized)
+# ---------------------------------------------------------------------------
+
+
+def factors(state, bits: int):
+    """Per-slot fixed-point factor: NORM/SHIFT -> B, MSB -> B*B, LSB -> 1."""
+    B = 1 << bits
+    xp = jnp if isinstance(state, jnp.ndarray) else np
+    return xp.where(state == MSB, B * B, xp.where(state == LSB, 1, B)).astype(
+        state.dtype if hasattr(state, "dtype") else np.int32
+    )
+
+
+def fakequant_from_codes(codes, state, scale, bits: int):
+    """Effective dequantized tensor x̂ at ORIGINAL indices from slot codes.
+
+    x̂_k = codes[k+1]                    if state[k+1] == SHIFT (value moved)
+        = 0                             if state[k]  != NORM (consumed zero)
+        = codes[k] + codes[k+1] * B     if state[k+1] == MSB (chain start)
+        = codes[k] + codes[k+1] / B     if state[k+1] == LSB (PR)
+        = codes[k]                      otherwise
+    all times the activation scale.
+    """
+    xp = jnp if isinstance(codes, jnp.ndarray) else np
+    B = float(1 << bits)
+    nxt_state = xp.concatenate([state[..., 1:], xp.zeros_like(state[..., :1])], axis=-1)
+    nxt_codes = xp.concatenate([codes[..., 1:], xp.zeros_like(codes[..., :1])], axis=-1)
+    c = codes.astype(xp.float32)
+    nc = nxt_codes.astype(xp.float32)
+    xhat = xp.where(
+        nxt_state == SHIFT,
+        nc,
+        xp.where(
+            state != NORM,
+            0.0,
+            xp.where(
+                nxt_state == MSB,
+                c + nc * B,
+                xp.where(nxt_state == LSB, c + nc / B, c),
+            ),
+        ),
+    )
+    return xhat * scale
+
+
+def dot_ref(codes, state, w, bits: int):
+    """Hardware-view dot product over the last axis (fixed-point, x B).
+
+    codes/state: (..., K) int32; w: (K,) float or int. All non-NORM slots
+    read w[k-1]. Returns sum(codes * factor * w_sel) — equals
+    B * sum(x̂ * w).
+    """
+    f = factors(np.asarray(state), bits).astype(np.int64)
+    w = np.asarray(w)
+    wprev = np.concatenate([np.zeros_like(w[:1]), w[:-1]], axis=0)
+    wsel = np.where(np.asarray(state) != NORM, wprev, w)
+    return (np.asarray(codes).astype(np.int64) * f * wsel).sum(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# JAX scan encoder (lowered into the AOT model)
+# ---------------------------------------------------------------------------
+
+
+def _zdist(v, cascade: int):
+    """Distance (1..cascade) to nearest zero strictly ahead, else 0."""
+    iszero = (v == 0).astype(jnp.int32)
+    C = v.shape[-1]
+    zd = jnp.zeros_like(v)
+    for d in range(1, cascade + 1):
+        if d >= C:
+            break
+        ahead = jnp.concatenate(
+            [iszero[..., d:], jnp.zeros_like(iszero[..., :d])], axis=-1
+        )
+        zd = jnp.where((zd == 0) & (ahead == 1), d, zd)
+    return zd
+
+
+def encode_rows(v, vfine, bits: int, cascade: int, enable_ro: bool, enable_pr: bool):
+    """jnp implementation of encode_rows_ref. v, vfine: (R, C) int32.
+
+    Static config (bits, cascade, enable_*) selects the lowered graph —
+    one AOT artifact per OverQ mode, as in hardware where the mode is a
+    configuration strap.
+    """
+    B = 1 << bits
+    qmax = B - 1
+    zd = _zdist(v, cascade if enable_ro else 0) if enable_ro else jnp.zeros_like(v)
+    vprevc = jnp.minimum(
+        jnp.concatenate([jnp.zeros_like(v[..., :1]), v[..., :-1]], axis=-1), qmax
+    )
+    iszero_next = jnp.concatenate(
+        [(v[..., 1:] == 0), jnp.zeros_like(v[..., :1], dtype=bool)], axis=-1
+    )
+    pr_hi = jnp.minimum(vfine >> bits, qmax)
+    pr_lo = vfine & qmax
+
+    def step(carry, xs):
+        remaining, msb_next, msbval, pr_pend = carry
+        vk, vprevck, zdk, iznext, hik, lok = xs
+        in_chain = remaining > 0
+        is_outlier = vk > qmax
+        start = (~in_chain) & (pr_pend == 0) & is_outlier & (zd_ok := zdk > 0)
+        del zd_ok
+        full = jnp.minimum(vk, B * B - 1)
+
+        # PR eligibility for the *next* slot (only on plain non-outlier slots).
+        plain = (~in_chain) & (pr_pend == 0) & (~is_outlier)
+        pr_fire = jnp.bool_(enable_pr) & plain & (vk > 0) & iznext & (lok > 0)
+
+        # Slot outputs by priority: chain role > pending LSB > start/clamp/PR/plain.
+        code = jnp.where(
+            in_chain & msb_next,
+            msbval,
+            jnp.where(
+                in_chain,
+                vprevck,
+                jnp.where(
+                    pr_pend > 0,
+                    pr_pend,
+                    jnp.where(
+                        start & is_outlier,
+                        full & qmax,
+                        jnp.where(
+                            is_outlier,
+                            qmax,
+                            jnp.where(pr_fire, hik, jnp.minimum(vk, qmax)),
+                        ),
+                    ),
+                ),
+            ),
+        )
+        st = jnp.where(
+            in_chain & msb_next,
+            MSB,
+            jnp.where(in_chain, SHIFT, jnp.where(pr_pend > 0, LSB, NORM)),
+        )
+
+        new_remaining = jnp.where(start, zdk, jnp.maximum(remaining - 1, 0))
+        new_msb_next = start  # true only for the slot right after a start
+        new_msbval = jnp.where(start, full >> bits, msbval)
+        new_pr_pend = jnp.where(
+            in_chain, jnp.int32(0), jnp.where(pr_fire, lok, jnp.int32(0))
+        )
+        return (new_remaining, new_msb_next, new_msbval, new_pr_pend), (code, st)
+
+    def encode_one(v_r, vprevc_r, zd_r, iznext_r, hi_r, lo_r):
+        init = (jnp.int32(0), jnp.bool_(False), jnp.int32(0), jnp.int32(0))
+        _, (codes, state) = jax.lax.scan(
+            step, init, (v_r, vprevc_r, zd_r, iznext_r, hi_r, lo_r)
+        )
+        return codes.astype(jnp.int32), state.astype(jnp.int32)
+
+    return jax.vmap(encode_one)(v, vprevc, zd, iszero_next, pr_hi, pr_lo)
+
+
+def encode_tensor(x, scale, bits: int, cascade: int, enable_ro: bool, enable_pr: bool):
+    """Encode an activation tensor (..., C) along its channel axis."""
+    shp = x.shape
+    v, vfine = int_codes_jnp(x.reshape(-1, shp[-1]), scale, bits)
+    codes, state = encode_rows(v, vfine, bits, cascade, enable_ro, enable_pr)
+    return codes.reshape(shp), state.reshape(shp)

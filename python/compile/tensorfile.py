@@ -1,0 +1,69 @@
+""".tensors — minimal named-tensor binary format shared with rust.
+
+Layout (little endian), mirrored by rust/src/io/tensorfile.rs:
+
+  magic   b"OVQT"
+  u32     version (1)
+  u32     tensor count
+  repeat count times:
+    u16   name length, then name bytes (utf-8)
+    u8    dtype: 0 = f32, 1 = i32, 2 = u8, 3 = i8
+    u8    ndim
+    u32   dims[ndim]
+    raw   C-order data (prod(dims) * itemsize bytes)
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"OVQT"
+VERSION = 1
+
+_DTYPES = {
+    np.dtype(np.float32): 0,
+    np.dtype(np.int32): 1,
+    np.dtype(np.uint8): 2,
+    np.dtype(np.int8): 3,
+}
+_BY_CODE = {v: k for k, v in _DTYPES.items()}
+
+
+def write(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.asarray(arr)
+            if not arr.flags["C_CONTIGUOUS"]:
+                # note: ascontiguousarray would promote 0-d to 1-d, so
+                # only call it when actually needed
+                arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPES:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPES[arr.dtype], arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())
+
+
+def read(path: str) -> dict[str, np.ndarray]:
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == VERSION
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dt = _BY_CODE[code]
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(n * dt.itemsize), dtype=dt)
+            out[name] = data.reshape(dims).copy()
+    return out

@@ -1,0 +1,114 @@
+"""Build-time training of the mini model zoo on the synthetic dataset.
+
+SGD + momentum with cosine learning-rate decay and cross-entropy loss.
+Runs once inside `make artifacts` (results cached in artifacts/); never on
+the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model
+
+BATCH = 64
+STEPS = 500
+LR = 0.08
+MOMENTUM = 0.9
+WEIGHT_DECAY = 1e-4
+
+
+def _loss_fn(graph, params, state, x, y):
+    logits, new_state = model.forward_train(graph, params, state, x)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+    wd = sum(
+        (p**2).sum() for k, p in params.items() if k.endswith(".w")
+    )
+    return loss + WEIGHT_DECAY * wd, (new_state, logits)
+
+
+@functools.partial(jax.jit, static_argnames=("graph",))
+def _step(graph, params, state, vel, x, y, lr):
+    (loss, (new_state, logits)), grads = jax.value_and_grad(
+        lambda p: _loss_fn(graph, p, state, x, y), has_aux=True
+    )(params)
+    new_vel = jax.tree.map(lambda v, g: MOMENTUM * v - lr * g, vel, grads)
+    new_params = jax.tree.map(lambda p, v: p + v, params, new_vel)
+    acc = (logits.argmax(-1) == y).mean()
+    return new_params, new_state, new_vel, loss, acc
+
+
+def _freeze(graph: model.Graph):
+    """Graph wrapper hashable for jit static args."""
+
+    class _G:
+        def __init__(self, g):
+            self.g = g
+
+        def __hash__(self):
+            return hash(self.g.name)
+
+        def __eq__(self, other):
+            return self.g.name == other.g.name
+
+        def __getattr__(self, k):
+            return getattr(self.g, k)
+
+    return _G(graph)
+
+
+def train_model(
+    name: str, steps: int = STEPS, batch: int = BATCH, seed: int = 0, verbose=True
+):
+    """Train one model; returns (graph, params, bn_state, final_eval_acc)."""
+    graph = model.MODELS[name]()
+    fgraph = _freeze(graph)
+    params, state = model.init_params(graph, seed)
+    vel = jax.tree.map(jnp.zeros_like, params)
+    imgs, labels = data.train_set()
+    imgs = data.normalize(imgs)
+    rng = np.random.default_rng(seed + 77)
+    t0 = time.time()
+    for step in range(steps):
+        idx = rng.integers(0, imgs.shape[0], batch)
+        lr = LR * 0.5 * (1 + np.cos(np.pi * step / steps))
+        params, state, vel, loss, acc = _step(
+            fgraph, params, state, vel, imgs[idx], jnp.asarray(labels[idx]), lr
+        )
+        if verbose and (step % 100 == 0 or step == steps - 1):
+            print(
+                f"[{name}] step {step:4d} loss {float(loss):.4f} "
+                f"acc {float(acc):.3f} ({time.time()-t0:.1f}s)"
+            )
+    eval_acc = evaluate(graph, params, state)
+    if verbose:
+        print(f"[{name}] fp32 train-mode eval acc {eval_acc:.4f}")
+    return graph, params, state, eval_acc
+
+
+def evaluate(graph, params, state, n: int = 1024, batch: int = 256) -> float:
+    imgs, labels = data.eval_set(n)
+    imgs = data.normalize(imgs)
+    fwd = jax.jit(lambda p, s, x: model.forward_train(graph, p, s, x, train=False))
+    correct = 0
+    for i in range(0, n, batch):
+        logits, _ = fwd(params, state, imgs[i : i + batch])
+        correct += int((np.asarray(logits).argmax(-1) == labels[i : i + batch]).sum())
+    return correct / n
+
+
+def evaluate_folded(graph, folded, n: int = 1024, batch: int = 256) -> float:
+    imgs, labels = data.eval_set(n)
+    imgs = data.normalize(imgs)
+    correct = 0
+    fwd = jax.jit(lambda f, x: model.forward_fp32(graph, f, x))
+    for i in range(0, n, batch):
+        logits = fwd(folded, imgs[i : i + batch])
+        correct += int((np.asarray(logits).argmax(-1) == labels[i : i + batch]).sum())
+    return correct / n

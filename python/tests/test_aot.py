@@ -1,0 +1,73 @@
+"""AOT artifact integrity (skipped until `make artifacts` has run)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import overq, tensorfile
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_complete(manifest):
+    assert set(manifest["models"]) == {"resnet18m", "resnet50m", "vgg11m", "densenet21m"}
+    for name, m in manifest["models"].items():
+        assert os.path.exists(os.path.join(ART, m["graph"]))
+        assert os.path.exists(os.path.join(ART, m["weights"]))
+        assert m["fp32_acc"] > 0.7, f"{name} undertrained: {m['fp32_acc']}"
+    assert len(manifest["hlo"]) >= 8
+
+
+def test_hlo_text_parseable(manifest):
+    for h in manifest["hlo"]:
+        path = os.path.join(ART, h["path"])
+        assert os.path.exists(path)
+        with open(path) as f:
+            text = f.read()
+        assert "HloModule" in text[:4096]
+        assert "ENTRY" in text
+        # large constants must be printed in full — "{...}" elision would
+        # silently zero the baked weights on the rust side
+        assert "{...}" not in text, f"{path} has elided constants"
+
+
+def test_weights_files(manifest):
+    for name, m in manifest["models"].items():
+        t = tensorfile.read(os.path.join(ART, m["weights"]))
+        assert "enc.stats" in t
+        assert t["enc.stats"].shape == (m["enc_points"], 3)
+        assert any(k.endswith(".wq") for k in t)
+
+
+def test_testvector_encoding_reproducible(manifest):
+    tv = tensorfile.read(os.path.join(ART, manifest["testvectors"]))
+    bits, cascade = 4, 4
+    for i in range(3):
+        x = tv[f"enc{i}.x"]
+        scale = float(tv[f"enc{i}.scale"][0])
+        v, vf = overq.int_codes_np(x, scale, bits)
+        codes, state = overq.encode_rows_ref(v, vf, bits, cascade, True, True)
+        assert np.array_equal(codes, tv[f"enc{i}.full.codes"])
+        assert np.array_equal(state, tv[f"enc{i}.full.state"])
+
+
+def test_testvector_quant_vs_fp32_sane(manifest):
+    tv = tensorfile.read(os.path.join(ART, manifest["testvectors"]))
+    lq, lf = tv["fw.logits_quant"], tv["fw.logits_fp32"]
+    assert lq.shape == lf.shape
+    # top-1 agreement on at least half of the 4 probe images
+    agree = (lq.argmax(-1) == lf.argmax(-1)).mean()
+    assert agree >= 0.5

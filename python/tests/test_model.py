@@ -1,0 +1,132 @@
+"""Model zoo: graph construction, BN folding, quantized forward sanity."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import data, model
+
+
+@pytest.fixture(scope="module")
+def batch():
+    imgs, labels = data.gen_batch(123, 0, 4)
+    return jnp.asarray(data.normalize(imgs)), labels
+
+
+@pytest.mark.parametrize("name", list(model.MODELS))
+def test_graph_wellformed(name):
+    g = model.MODELS[name]()
+    for i, n in enumerate(g.nodes):
+        assert n["id"] == i
+        for src in n["in"]:
+            assert src < i, "SSA order violated"
+    assert g.nodes[0]["op"] == "input"
+    assert g.nodes[-1]["op"] == "dense"
+    # first conv unquantized, all other convs quantized
+    convs = g.conv_nodes()
+    assert not convs[0]["quant"]
+    assert all(c["quant"] for c in convs[1:])
+    # enc indices are dense 0..E-1
+    encs = sorted({c["enc"] for c in convs if c.get("quant")})
+    assert encs == list(range(len(encs)))
+
+
+@pytest.mark.parametrize("name", list(model.MODELS))
+def test_forward_shapes(name, batch):
+    x, _ = batch
+    g = model.MODELS[name]()
+    params, state = model.init_params(g)
+    logits, new_state = model.forward_train(g, params, state, x)
+    assert logits.shape == (4, model.NUM_CLASSES)
+    assert np.isfinite(np.asarray(logits)).all()
+    # running stats updated
+    changed = [
+        k for k in state if not np.allclose(np.asarray(state[k]), np.asarray(new_state[k]))
+    ]
+    assert changed
+
+
+@pytest.mark.parametrize("name", list(model.MODELS))
+def test_fold_matches_eval_mode(name, batch):
+    """Folded conv+bias forward == BN eval-mode forward."""
+    x, _ = batch
+    g = model.MODELS[name]()
+    params, state = model.init_params(g)
+    # make running stats non-trivial
+    _, state = model.forward_train(g, params, state, x, momentum=0.0)
+    ref, _ = model.forward_train(g, params, state, x, train=False)
+    folded = model.fold(g, params, state)
+    got = model.forward_fp32(g, {k: jnp.asarray(v) for k, v in folded.items()}, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_quant_forward_converges_to_fp32_as_bits_grow(batch):
+    """Quant logits approach fp32 logits as activation bits increase.
+
+    b is capped at 6: the int32 accumulator bound (B-1)·B·127·K < 2^31
+    only holds for b ≤ 6 (see test_kernel.py::test_acc_bounds) — 4/5 bits
+    is the paper's operating range anyway.
+    """
+    x, _ = batch
+    g = model.build_vgg11m()
+    params, state = model.init_params(g)
+    _, state = model.forward_train(g, params, state, x, momentum=0.0)
+    foldedn = model.fold(g, params, state)
+    folded = {k: jnp.asarray(v) for k, v in foldedn.items()}
+    qw = {k: jnp.asarray(v) for k, v in model.quantize_weights(g, foldedn).items()}
+    fp = np.asarray(model.forward_fp32(g, folded, x))
+    srcs = model.enc_point_sources(g)
+    _, taps = model.forward_fp32(g, folded, x, taps=srcs)
+    corrs = {}
+    for bits in (3, 6):
+        qmax = (1 << bits) - 1
+        scales = jnp.asarray(
+            [float(np.asarray(t).max()) / qmax + 1e-8 for t in taps], jnp.float32
+        )
+        q = np.asarray(
+            model.forward_quant(
+                g, folded, qw, x, scales, bits, 1, False, False, use_pallas=False
+            )
+        )
+        corrs[bits] = np.corrcoef(fp.ravel(), q.ravel())[0, 1]
+    assert corrs[6] > corrs[3]
+    assert corrs[6] > 0.95, corrs
+
+
+def test_quant_forward_pallas_matches_jnp_ref(batch):
+    """use_pallas=True and the jnp reference path give identical logits."""
+    x, _ = batch
+    g = model.build_vgg11m()
+    params, state = model.init_params(g)
+    _, state = model.forward_train(g, params, state, x, momentum=0.0)
+    foldedn = model.fold(g, params, state)
+    folded = {k: jnp.asarray(v) for k, v in foldedn.items()}
+    qw = {k: jnp.asarray(v) for k, v in model.quantize_weights(g, foldedn).items()}
+    E = g.num_enc_points()
+    scales = jnp.full((E,), 0.02, jnp.float32)
+    a = np.asarray(model.forward_quant(g, folded, qw, x, scales, 4, 4, True, True, use_pallas=True))
+    b = np.asarray(model.forward_quant(g, folded, qw, x, scales, 4, 4, True, True, use_pallas=False))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_im2col_matches_conv():
+    """im2col + matmul == lax conv for stride 1 and 2."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 5)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, 5, 7)).astype(np.float32))
+    for stride in (1, 2):
+        want = model._conv_f32(x, w, stride)
+        cols, oh, ow = model._im2col(x, 3, 3, stride)
+        got = (cols.reshape(-1, 45) @ w.reshape(45, 7)).reshape(2, oh, ow, 7)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_enc_point_sources():
+    g = model.build_resnet18m()
+    srcs = model.enc_point_sources(g)
+    assert len(srcs) == g.num_enc_points()
+    # every source id is a real node producing the conv input
+    for n in g.nodes:
+        if n.get("quant"):
+            assert srcs[n["enc"]] == n["in"][0]

@@ -1,0 +1,160 @@
+"""OverQ encoder: scan-vs-reference equivalence + invariants (hypothesis)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import overq
+from compile.kernels import ref as kref
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+def synth_acts(rng, R, C, zfrac, ofrac, scale=0.25):
+    """Activation matrix with controlled zero/outlier fractions."""
+    x = np.abs(rng.normal(0.4, 0.7, (R, C))).astype(np.float32)
+    x[rng.random((R, C)) < zfrac] = 0.0
+    out_mask = rng.random((R, C)) < ofrac
+    x[out_mask] = x[out_mask] * 6.0 + 4.0 * scale * 15
+    return x
+
+
+acts_params = st.tuples(
+    st.integers(1, 12),          # rows
+    st.integers(1, 40),          # channels
+    st.floats(0.0, 0.9),         # zero fraction
+    st.floats(0.0, 0.3),         # outlier fraction
+    st.integers(0, 2**31 - 1),   # seed
+)
+
+
+@given(acts_params, st.integers(3, 6), st.integers(1, 6),
+       st.booleans(), st.booleans())
+def test_scan_matches_reference(p, bits, cascade, ro, pr):
+    R, C, zf, of, seed = p
+    rng = np.random.default_rng(seed)
+    x = synth_acts(rng, R, C, zf, of)
+    v, vf = overq.int_codes_np(x, 0.25, bits)
+    cr, sr = overq.encode_rows_ref(v, vf, bits, cascade, ro, pr)
+    cj, sj = overq.encode_rows(jnp.asarray(v), jnp.asarray(vf), bits, cascade, ro, pr)
+    assert np.array_equal(cr, np.asarray(cj))
+    assert np.array_equal(sr, np.asarray(sj))
+
+
+@given(acts_params, st.integers(3, 5), st.integers(1, 6))
+def test_invariants(p, bits, cascade):
+    R, C, zf, of, seed = p
+    rng = np.random.default_rng(seed)
+    x = synth_acts(rng, R, C, zf, of)
+    scale = 0.25
+    v, vf = overq.int_codes_np(x, scale, bits)
+    codes, state = overq.encode_rows_ref(v, vf, bits, cascade, True, True)
+    B = 1 << bits
+    qmax = B - 1
+    # slot 0 is never a continuation slot
+    assert (state[:, 0] == overq.NORM).all()
+    # only zero slots are overwritten (non-NORM implies original v == 0 OR
+    # SHIFT slots which hold displaced values inside a chain)
+    msb_or_lsb = (state == overq.MSB) | (state == overq.LSB)
+    # MSB slots: original value was zero only for cascade-1 chains; LSB
+    # slots always were zeros.
+    assert (v[state == overq.LSB] == 0).all()
+    # codes fit in b bits everywhere
+    assert (codes >= 0).all() and (codes <= qmax).all()
+    # chain terminators: every chain consumed exactly one zero — count
+    # claims: each MSB begins a chain; the chain's last slot original v==0.
+    # decode never increases pointwise error vs plain clip
+    xq_base = np.clip(np.floor(x * (np.float32(1.0) / np.float32(scale)) + 0.5), 0, qmax) * scale
+    xq_ovq = overq.fakequant_from_codes(codes, state, scale, bits)
+    err_b = np.abs(x - xq_base)
+    err_o = np.abs(x - xq_ovq)
+    assert (err_o <= err_b + 1e-5).all()
+
+
+@given(acts_params, st.integers(3, 5))
+def test_coverage_monotone_in_cascade(p, bits):
+    R, C, zf, of, seed = p
+    rng = np.random.default_rng(seed)
+    x = synth_acts(rng, R, C, zf, of)
+    v, vf = overq.int_codes_np(x, 0.25, bits)
+    qmax = (1 << bits) - 1
+    n_out = int((v > qmax).sum())
+    covered_prev = -1
+    for c in range(1, 7):
+        codes, state = overq.encode_rows_ref(v, vf, bits, c, True, False)
+        covered = int((state == overq.MSB).sum())
+        assert covered >= covered_prev
+        assert covered <= n_out
+        covered_prev = covered
+
+
+@given(acts_params, st.integers(3, 5), st.integers(1, 5), st.integers(0, 2**31 - 1))
+def test_dot_product_identity(p, bits, cascade, wseed):
+    """Hardware dot == B * sum(xhat * w) exactly (integer domain)."""
+    R, C, zf, of, seed = p
+    rng = np.random.default_rng(seed)
+    x = synth_acts(rng, R, C, zf, of)
+    scale = 0.25
+    v, vf = overq.int_codes_np(x, scale, bits)
+    codes, state = overq.encode_rows_ref(v, vf, bits, cascade, True, True)
+    w = np.random.default_rng(wseed).integers(-127, 128, (C,)).astype(np.int64)
+    hw = overq.dot_ref(codes, state, w, bits)
+    xhat_codes = overq.fakequant_from_codes(codes, state, 1.0, bits)  # scale 1 → raw
+    B = 1 << bits
+    expect = np.round(xhat_codes * B).astype(np.int64) @ w
+    assert np.array_equal(hw, expect)
+
+
+def test_zdist_simple():
+    # zdist is defined for every slot (chains only consult it at outliers)
+    v = jnp.asarray([[5, 3, 0, 7, 0, 0, 9, 1]])
+    zd = np.asarray(overq._zdist(v, 4))
+    assert list(zd[0]) == [2, 1, 2, 1, 1, 0, 0, 0]
+
+
+def test_known_chain():
+    """Worked example: outlier cascades over two values to a zero."""
+    bits, B = 4, 16
+    v = np.array([[20, 3, 5, 0, 2]], dtype=np.int32)
+    vf = v * B
+    codes, state = overq.encode_rows_ref(v, vf, bits, 3, True, False)
+    assert list(state[0]) == [overq.NORM, overq.MSB, overq.SHIFT, overq.SHIFT, overq.NORM]
+    assert list(codes[0]) == [20 & 15, 20 >> 4, 3, 5, 2]
+    w = np.array([3, -2, 7, 1, 4], dtype=np.int64)
+    got = overq.dot_ref(codes, state, w, bits)
+    # exact: 20*w0 + 3*w1 + 5*w2 + 0 + 2*w4, times B
+    assert got[0] == B * (20 * 3 + 3 * -2 + 5 * 7 + 2 * 4)
+
+
+def test_known_pr():
+    bits, B = 4, 16
+    x = np.array([[0.37, 0.0, 0.2]], dtype=np.float32)
+    scale = np.float32(0.1)
+    v, vf = overq.int_codes_np(x, scale, bits)
+    codes, state = overq.encode_rows_ref(v, vf, bits, 1, False, True)
+    assert state[0, 1] == overq.LSB
+    xq = overq.fakequant_from_codes(codes, state, scale, bits)
+    # PR error strictly smaller than plain rounding error
+    assert abs(xq[0, 0] - 0.37) < abs(round(0.37 / 0.1) * 0.1 - 0.37)
+
+
+def test_eq1_theory_on_bernoulli():
+    """Eq.(1): coverage on iid Bernoulli zero pattern ≈ 1-(1-p0)^c."""
+    rng = np.random.default_rng(7)
+    bits, qmax = 4, 15
+    R, C = 400, 64
+    p0 = 0.5
+    v = rng.integers(1, 10, (R, C)).astype(np.int32)
+    v[rng.random((R, C)) < p0] = 0
+    # sparse outliers so chains rarely interact
+    omask = rng.random((R, C)) < 0.01
+    v[omask & (v > 0)] += 40
+    vf = v * 16
+    n_out = int((v > qmax).sum())
+    for c in [1, 2, 3, 4]:
+        codes, state = overq.encode_rows_ref(v, vf, bits, c, True, False)
+        cov = (state == overq.MSB).sum() / max(n_out, 1)
+        theory = 1 - (1 - p0) ** c
+        assert abs(cov - theory) < 0.12, (c, cov, theory)

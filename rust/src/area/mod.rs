@@ -1,0 +1,19 @@
+//! Parametric ASIC area model (paper §5.3, Table 3).
+//!
+//! The paper synthesized a Verilog PE with Synopsys DC; without that
+//! toolchain we use a calibrated gate-level model (DESIGN.md §2): each PE
+//! component's area is a linear/bilinear function of bitwidths whose
+//! coefficients are fit to the paper's baseline column, so the *relative*
+//! overheads — the actual claim of Table 3 — are reproduced structurally:
+//!
+//! * multiplier: unchanged by OverQ (0 %);
+//! * adder: +1 bit of partial-sum width (the shifted product's extra
+//!   range bit) — small, bitwidth-amortized increase;
+//! * "other datapath": state register, weight-copy mux, and the
+//!   range/precision shifter — the dominant overhead, shrinking
+//!   relatively as the baseline bitwidth grows (+1b/+2b rows).
+
+pub mod components;
+pub mod pe_area;
+
+pub use pe_area::{pe_breakdown, PeAreas, PeVariant};

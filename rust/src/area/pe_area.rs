@@ -1,0 +1,110 @@
+//! PE-level area breakdown: baseline vs OverQ-RO vs OverQ-Full (Table 3).
+
+use super::components as c;
+
+/// PE flavours modelled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeVariant {
+    /// Plain weight-stationary MAC PE.
+    Baseline,
+    /// OverQ with range overwrite only (1 state bit, left shift).
+    OverQRo,
+    /// Full OverQ: range + precision overwrite (2 state bits, both
+    /// shift directions).
+    OverQFull,
+}
+
+/// Area breakdown in µm² (Table 3 columns).
+#[derive(Clone, Copy, Debug)]
+pub struct PeAreas {
+    pub multiply: f64,
+    pub add: f64,
+    pub other: f64,
+}
+
+impl PeAreas {
+    pub fn total(&self) -> f64 {
+        self.multiply + self.add + self.other
+    }
+}
+
+const WEIGHT_BITS: u32 = 8;
+const GUARD_BITS: u32 = 8; // 256-deep accumulation columns
+
+/// Compute the area breakdown for one PE variant at `act_bits`.
+pub fn pe_breakdown(variant: PeVariant, act_bits: u32) -> PeAreas {
+    let psum = act_bits + WEIGHT_BITS + GUARD_BITS;
+    // baseline "other": activation pipe reg + weight reg + control
+    let other_base =
+        c::register(act_bits) + c::register(WEIGHT_BITS) + c::CTRL + c::mux2(act_bits);
+    match variant {
+        PeVariant::Baseline => PeAreas {
+            multiply: c::multiplier(act_bits),
+            add: c::adder(psum),
+            other: other_base,
+        },
+        PeVariant::OverQRo => PeAreas {
+            multiply: c::multiplier(act_bits), // multiplier untouched
+            add: c::adder(psum + 1),           // +1 bit for the shifted range
+            other: other_base
+                + c::register(1)                        // state bit pipe
+                + c::mux2(WEIGHT_BITS)                  // weight-copy mux
+                + c::shifter(act_bits + WEIGHT_BITS, 1) // left shift (MSB)
+                + c::mux2(psum),                        // product-path select
+        },
+        PeVariant::OverQFull => PeAreas {
+            multiply: c::multiplier(act_bits),
+            add: c::adder(psum + 1),
+            other: other_base
+                + c::register(2)                        // 2-bit state pipe
+                + c::mux2(WEIGHT_BITS)
+                + c::shifter(act_bits + WEIGHT_BITS, 2) // both directions
+                + c::mux2(psum),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_matches_paper_column() {
+        let b = pe_breakdown(PeVariant::Baseline, 4);
+        assert!((b.multiply - 128.74).abs() < 0.05, "{}", b.multiply);
+        assert!((b.add - 135.13).abs() < 0.05, "{}", b.add);
+        assert!((b.other - 41.23).abs() < 2.0, "{}", b.other);
+    }
+
+    #[test]
+    fn overq_structure_matches_paper() {
+        let base = pe_breakdown(PeVariant::Baseline, 4);
+        let ro = pe_breakdown(PeVariant::OverQRo, 4);
+        let full = pe_breakdown(PeVariant::OverQFull, 4);
+        // multiplier untouched
+        assert_eq!(ro.multiply, base.multiply);
+        assert_eq!(full.multiply, base.multiply);
+        // adder: small increase (~1 bit of 21)
+        let add_oh = (ro.add - base.add) / base.add;
+        assert!(add_oh > 0.0 && add_oh < 0.08, "{add_oh}");
+        // other datapath: dominant overhead, full > ro
+        assert!(ro.other > base.other * 1.5);
+        assert!(full.other > ro.other);
+        // total overhead in the paper's ballpark (≈15 % of PE)
+        let tot_oh = (full.total() - base.total()) / base.total();
+        assert!(tot_oh > 0.05 && tot_oh < 0.25, "{tot_oh}");
+    }
+
+    #[test]
+    fn overhead_shrinks_with_baseline_bits() {
+        // the paper's "+1b/+2b" rows: OverQ@4b vs baseline@5b/6b
+        let ovq4 = pe_breakdown(PeVariant::OverQFull, 4).total();
+        let b4 = pe_breakdown(PeVariant::Baseline, 4).total();
+        let b5 = pe_breakdown(PeVariant::Baseline, 5).total();
+        let b6 = pe_breakdown(PeVariant::Baseline, 6).total();
+        let oh0 = ovq4 / b4 - 1.0;
+        let oh1 = ovq4 / b5 - 1.0;
+        let oh2 = ovq4 / b6 - 1.0;
+        assert!(oh1 < oh0 && oh2 < oh1, "{oh0} {oh1} {oh2}");
+    }
+}

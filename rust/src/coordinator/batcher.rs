@@ -1,0 +1,116 @@
+//! Dynamic batcher: greedy size/deadline batching over an mpsc queue.
+//!
+//! Policy: block until the first request arrives, then keep draining
+//! until either `max_batch` requests are in hand or `max_wait` has
+//! elapsed since the first one. FIFO order is preserved.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Collect one batch. Returns `None` when the channel has disconnected
+/// and no requests remain.
+pub fn collect<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = channel();
+        for i in 0..20 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        };
+        let b1 = collect(&rx, &policy).unwrap();
+        assert_eq!(b1, (0..8).collect::<Vec<_>>());
+        let b2 = collect(&rx, &policy).unwrap();
+        assert_eq!(b2, (8..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn none_after_disconnect() {
+        let (tx, rx) = channel::<u32>();
+        tx.send(1).unwrap();
+        drop(tx);
+        assert_eq!(collect(&rx, &BatchPolicy::default()), Some(vec![1]));
+        assert_eq!(collect(&rx, &BatchPolicy::default()), None);
+    }
+
+    #[test]
+    fn respects_deadline() {
+        let (tx, rx) = channel();
+        tx.send(0u32).unwrap();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            let _ = tx.send(1);
+        });
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+        };
+        let b = collect(&rx, &policy).unwrap();
+        assert_eq!(b, vec![0]); // did not wait for the late request
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn prop_no_loss_no_dup_fifo() {
+        use crate::util::prop::check;
+        check("batcher preserves the stream", 30, |rng| {
+            let n = 1 + rng.index(100);
+            let max_batch = 1 + rng.index(16);
+            let (tx, rx) = channel();
+            for i in 0..n {
+                tx.send(i).unwrap();
+            }
+            drop(tx);
+            let policy = BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(1),
+            };
+            let mut seen = Vec::new();
+            while let Some(batch) = collect(&rx, &policy) {
+                assert!(batch.len() <= max_batch);
+                seen.extend(batch);
+            }
+            assert_eq!(seen, (0..n).collect::<Vec<_>>());
+        });
+    }
+}

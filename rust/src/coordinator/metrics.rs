@@ -1,0 +1,88 @@
+//! Serving metrics: counters + latency summaries, shared via a mutex.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::stats::Summary;
+
+/// Live metrics (behind [`SharedMetrics`]).
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    pub queue_us: Summary,
+    pub e2e_us: Summary,
+    pub exec_us: Summary,
+    pub batch_size: Summary,
+}
+
+pub type SharedMetrics = Arc<Mutex<Metrics>>;
+
+pub fn shared() -> SharedMetrics {
+    Arc::new(Mutex::new(Metrics::default()))
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    pub mean_queue_us: f64,
+    pub mean_e2e_us: f64,
+    pub p_max_e2e_us: f64,
+    pub mean_exec_us: f64,
+    pub mean_batch: f64,
+}
+
+impl Metrics {
+    pub fn record_batch(&mut self, batch: usize, padded: usize, exec: Duration) {
+        self.batches += 1;
+        self.requests += batch as u64;
+        self.padded_slots += padded as u64;
+        self.exec_us.add(exec.as_micros() as f64);
+        self.batch_size.add(batch as f64);
+    }
+
+    pub fn record_request(&mut self, queue: Duration, e2e: Duration) {
+        self.queue_us.add(queue.as_micros() as f64);
+        self.e2e_us.add(e2e.as_micros() as f64);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests,
+            batches: self.batches,
+            padded_slots: self.padded_slots,
+            mean_queue_us: self.queue_us.mean(),
+            mean_e2e_us: self.e2e_us.mean(),
+            p_max_e2e_us: self.e2e_us.max,
+            mean_exec_us: self.exec_us.mean(),
+            mean_batch: self.batch_size.mean(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_accumulate() {
+        let m = shared();
+        {
+            let mut g = m.lock().unwrap();
+            g.record_batch(4, 4, Duration::from_micros(100));
+            g.record_batch(8, 0, Duration::from_micros(300));
+            g.record_request(Duration::from_micros(10), Duration::from_micros(500));
+        }
+        let s = m.lock().unwrap().snapshot();
+        assert_eq!(s.requests, 12);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.padded_slots, 4);
+        assert!((s.mean_exec_us - 200.0).abs() < 1e-9);
+        assert!((s.mean_batch - 6.0).abs() < 1e-9);
+        assert_eq!(s.mean_e2e_us, 500.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Serving coordinator — the L3 request path.
+//!
+//! Architecture: clients submit [`InferRequest`]s over a channel; a
+//! single worker thread (an actor owning the non-`Send` PJRT state)
+//! drains the queue through the [`batcher`], routes each group to the
+//! best-fitting compiled executable ([`router`]), executes, and replies
+//! per-request. Python never appears on this path — the executables were
+//! AOT-compiled by `make artifacts`.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use metrics::MetricsSnapshot;
+pub use server::{InferRequest, InferResponse, Server, ServerConfig};

@@ -1,0 +1,63 @@
+//! Routing: pick the executable batch size for a pending group.
+
+/// Choose the compiled batch size for `pending` requests from the
+/// `available` (ascending) sizes: the smallest size that fits them all,
+/// else the largest available (the group is split across launches).
+pub fn pick_batch(pending: usize, available: &[usize]) -> Option<usize> {
+    if available.is_empty() || pending == 0 {
+        return None;
+    }
+    for &b in available {
+        if b >= pending {
+            return Some(b);
+        }
+    }
+    available.last().copied()
+}
+
+/// Split a group into execution chunks of at most `exe_batch`.
+pub fn chunks(pending: usize, exe_batch: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut left = pending;
+    while left > 0 {
+        let take = left.min(exe_batch);
+        out.push(take);
+        left -= take;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn picks_tight_fit() {
+        assert_eq!(pick_batch(1, &[1, 8]), Some(1));
+        assert_eq!(pick_batch(2, &[1, 8]), Some(8));
+        assert_eq!(pick_batch(8, &[1, 8]), Some(8));
+        assert_eq!(pick_batch(12, &[1, 8]), Some(8));
+        assert_eq!(pick_batch(3, &[8]), Some(8));
+        assert_eq!(pick_batch(0, &[8]), None);
+        assert_eq!(pick_batch(3, &[]), None);
+    }
+
+    #[test]
+    fn chunking_covers_everything() {
+        assert_eq!(chunks(12, 8), vec![8, 4]);
+        assert_eq!(chunks(8, 8), vec![8]);
+        assert_eq!(chunks(3, 8), vec![3]);
+    }
+
+    #[test]
+    fn prop_chunks_sum() {
+        check("chunks sum to pending", 100, |rng| {
+            let pending = 1 + rng.index(100);
+            let exe = 1 + rng.index(16);
+            let cs = chunks(pending, exe);
+            assert_eq!(cs.iter().sum::<usize>(), pending);
+            assert!(cs.iter().all(|&c| c > 0 && c <= exe));
+        });
+    }
+}

@@ -1,0 +1,218 @@
+//! The inference server: request channel → batcher → PJRT executables.
+//!
+//! One worker thread owns the (non-`Send`) PJRT client and executables —
+//! the actor pattern. Clients hold a cheap cloneable [`Server`] handle.
+
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::models::Artifacts;
+use crate::runtime::artifacts::ExecutableCache;
+use crate::runtime::pjrt::Input;
+use crate::tensor::TensorF;
+
+use super::batcher::{collect, BatchPolicy};
+use super::metrics::{shared, MetricsSnapshot, SharedMetrics};
+use super::router::pick_batch;
+
+/// A single inference request (one image).
+pub struct InferRequest {
+    /// (H, W, C) normalized image.
+    pub image: TensorF,
+    /// Which compiled variant to run ("fp32", "base", "full_c4", ...).
+    pub variant: String,
+    pub submitted: Instant,
+    pub resp: SyncSender<InferResponse>,
+}
+
+/// Reply for one request.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub logits: Vec<f32>,
+    pub batch_size: usize,
+    pub queue: Duration,
+    pub e2e: Duration,
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub model: String,
+    pub policy: BatchPolicy,
+    /// Activation scales per enc point, for quantized variants.
+    pub act_scales: Vec<f32>,
+}
+
+/// Handle to a running server.
+pub struct Server {
+    tx: Option<Sender<InferRequest>>,
+    metrics: SharedMetrics,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the worker; compiles executables lazily on first use.
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let arts = Artifacts::locate()?;
+        let (tx, rx) = std::sync::mpsc::channel::<InferRequest>();
+        let metrics = shared();
+        let m2 = metrics.clone();
+        let worker = std::thread::Builder::new()
+            .name("overq-worker".into())
+            .spawn(move || {
+                if let Err(e) = worker_loop(arts, cfg, rx, m2) {
+                    eprintln!("[server] worker exited with error: {e:#}");
+                }
+            })
+            .context("spawn worker")?;
+        Ok(Server {
+            tx: Some(tx),
+            metrics,
+            worker: Some(worker),
+        })
+    }
+
+    /// Submit one request and block for its response.
+    pub fn infer(&self, image: TensorF, variant: &str) -> Result<InferResponse> {
+        let rx = self.submit(image, variant)?;
+        rx.recv().context("worker dropped the response")
+    }
+
+    /// Warm a variant: trigger compilation of every batch size by
+    /// pushing enough dummy requests to hit the largest executable.
+    /// Returns the wall time spent (the one-time compile cost).
+    pub fn warmup(&self, variant: &str, dims: &[usize], max_batch: usize) -> Result<Duration> {
+        let t0 = Instant::now();
+        // single request exercises the b1 executable (if present)
+        let _ = self.infer(TensorF::zeros(dims), variant)?;
+        // a burst exercises the batched executable
+        let burst: Vec<_> = (0..max_batch)
+            .map(|_| self.submit(TensorF::zeros(dims), variant))
+            .collect::<Result<_>>()?;
+        for rx in burst {
+            rx.recv().context("warmup response lost")?;
+        }
+        Ok(t0.elapsed())
+    }
+
+    /// Submit without blocking; returns the response channel.
+    pub fn submit(&self, image: TensorF, variant: &str) -> Result<Receiver<InferResponse>> {
+        let (rtx, rrx) = sync_channel(1);
+        self.tx
+            .as_ref()
+            .context("server stopped")?
+            .send(InferRequest {
+                image,
+                variant: variant.to_string(),
+                submitted: Instant::now(),
+                resp: rtx,
+            })
+            .ok()
+            .context("worker gone")?;
+        Ok(rrx)
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.lock().unwrap().snapshot()
+    }
+
+    /// Graceful shutdown: close the queue and join the worker.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    arts: Artifacts,
+    cfg: ServerConfig,
+    rx: std::sync::mpsc::Receiver<InferRequest>,
+    metrics: SharedMetrics,
+) -> Result<()> {
+    let mut cache = ExecutableCache::new(&arts)?;
+    let scales = TensorF::from_vec(&[cfg.act_scales.len()], cfg.act_scales.clone());
+    while let Some(mut batch) = collect(&rx, &cfg.policy) {
+        // group by variant, preserving FIFO within groups
+        batch.sort_by(|a, b| a.variant.cmp(&b.variant));
+        let mut i = 0;
+        while i < batch.len() {
+            let mut j = i + 1;
+            while j < batch.len() && batch[j].variant == batch[i].variant {
+                j += 1;
+            }
+            let group = &batch[i..j];
+            run_group(&cfg, &mut cache, group, &scales, &metrics)?;
+            i = j;
+        }
+    }
+    Ok(())
+}
+
+fn run_group(
+    cfg: &ServerConfig,
+    cache: &mut ExecutableCache,
+    group: &[InferRequest],
+    scales: &TensorF,
+    metrics: &SharedMetrics,
+) -> Result<()> {
+    let variant = &group[0].variant;
+    let available = cache.batch_sizes(&cfg.model, variant);
+    let Some(exe_batch) = pick_batch(group.len(), &available) else {
+        anyhow::bail!("no executable for {}/{}", cfg.model, variant);
+    };
+    let dims = group[0].image.dims().to_vec(); // (H, W, C)
+    let img_sz: usize = dims.iter().product();
+    let needs_scales = variant != "fp32";
+
+    let mut done = 0;
+    while done < group.len() {
+        let take = exe_batch.min(group.len() - done);
+        // build padded batch tensor
+        let mut xb = TensorF::zeros(&[exe_batch, dims[0], dims[1], dims[2]]);
+        for (slot, req) in group[done..done + take].iter().enumerate() {
+            xb.data[slot * img_sz..(slot + 1) * img_sz].copy_from_slice(&req.image.data);
+        }
+        let queue_start = Instant::now();
+        let exe = cache.get(&cfg.model, variant, exe_batch)?;
+        let inputs: Vec<Input> = if needs_scales {
+            vec![Input::F32(xb), Input::F32(scales.clone())]
+        } else {
+            vec![Input::F32(xb)]
+        };
+        let t0 = Instant::now();
+        let logits = exe.run_f32(&inputs)?;
+        let exec = t0.elapsed();
+        let classes = logits.dims()[1];
+        {
+            let mut m = metrics.lock().unwrap();
+            m.record_batch(take, exe_batch - take, exec);
+            for req in &group[done..done + take] {
+                m.record_request(queue_start - req.submitted, req.submitted.elapsed());
+            }
+        }
+        for (slot, req) in group[done..done + take].iter().enumerate() {
+            let resp = InferResponse {
+                logits: logits.data[slot * classes..(slot + 1) * classes].to_vec(),
+                batch_size: take,
+                queue: queue_start - req.submitted,
+                e2e: req.submitted.elapsed(),
+            };
+            let _ = req.resp.send(resp); // client may have gone away
+        }
+        done += take;
+    }
+    Ok(())
+}

@@ -1,0 +1,4 @@
+//! Datasets: artifact-backed eval/profile splits (see [`crate::models`])
+//! and a native synthetic load generator for serving benchmarks.
+
+pub mod shapes;

@@ -1,0 +1,169 @@
+//! Native synthetic "shapes" image generator — the serving-path load
+//! generator.
+//!
+//! This mirrors the *distribution* of `python/compile/data.py` (same
+//! classes, palette, jitter ranges) but uses the crate's xoshiro RNG, so
+//! images are NOT bit-identical to the python splits. Accuracy
+//! experiments therefore always use the dumped artifact datasets; this
+//! generator exists to drive the coordinator with unbounded, cheap,
+//! realistic traffic (latency/throughput benches, soak tests).
+
+use crate::tensor::TensorF;
+use crate::util::rng::Rng;
+
+pub const IMG: usize = 16;
+pub const CH: usize = 3;
+pub const NUM_CLASSES: usize = 10;
+
+pub const MEAN: [f32; 3] = [0.28, 0.28, 0.28];
+pub const STD: [f32; 3] = [0.27, 0.27, 0.27];
+
+const PALETTE: [[f32; 3]; 7] = [
+    [0.95, 0.25, 0.20],
+    [0.20, 0.90, 0.30],
+    [0.25, 0.35, 0.95],
+    [0.95, 0.85, 0.20],
+    [0.85, 0.25, 0.90],
+    [0.20, 0.90, 0.90],
+    [0.95, 0.60, 0.20],
+];
+
+/// Shape mask predicate shared by the main and distractor shapes.
+#[allow(clippy::too_many_arguments)]
+fn inside_mask(
+    cls: usize,
+    y: usize,
+    x: usize,
+    cy: f32,
+    cx: f32,
+    r: f32,
+    period: i64,
+    phase: i64,
+) -> bool {
+    let (dy, dx) = (y as f32 - cy, x as f32 - cx);
+    let (ady, adx) = (dy.abs(), dx.abs());
+    match cls {
+        0 => dy * dy + dx * dx <= r * r,
+        1 => ady.max(adx) <= r * 0.85,
+        2 => dy >= -r && dy <= r * 0.8 && adx <= (dy + r) * 0.6,
+        3 => {
+            let w = (r * 0.35).max(1.0);
+            (ady <= w || adx <= w) && ady.max(adx) <= r
+        }
+        4 => (y as i64 + phase).rem_euclid(period) < (period / 2).max(1),
+        5 => (x as i64 + phase).rem_euclid(period) < (period / 2).max(1),
+        6 => ((y as i64 / period) + (x as i64 / period)) % 2 == 0,
+        7 => {
+            let d2 = dy * dy + dx * dx;
+            d2 <= r * r && d2 >= (r * 0.55) * (r * 0.55)
+        }
+        8 => ady + adx <= r,
+        _ => (y % (period as usize + 1)) < 2 && (x % (period as usize + 1)) < 2,
+    }
+}
+
+/// Generate one normalized image + label, keyed by (seed, index).
+/// Difficulty knobs mirror the hardened python generator: low-contrast
+/// foregrounds, a faint distractor shape of another class, heavy noise.
+pub fn gen_image(seed: u64, index: u64) -> (TensorF, i32) {
+    let mut rng = Rng::new(seed).fork(index);
+    let cls = rng.index(NUM_CLASSES);
+    let cy = IMG as f32 / 2.0 + (rng.f32() * 4.0 - 2.0);
+    let cx = IMG as f32 / 2.0 + (rng.f32() * 4.0 - 2.0);
+    let r = 3.5 + rng.f32() * 2.0;
+    let mut fg = PALETTE[rng.index(PALETTE.len())];
+    for c in fg.iter_mut() {
+        *c += rng.f32() * 0.3 - 0.15;
+    }
+    let contrast = 0.45 + rng.f32() * 0.55;
+    let bg = 0.05 + rng.f32() * 0.30;
+    let period = 3 + rng.index(2) as i64;
+    let phase = rng.range(0, period);
+
+    // optional distractor from a different class
+    let distract = rng.bool(0.5);
+    let dcls = (cls + 1 + rng.index(NUM_CLASSES - 1)) % NUM_CLASSES;
+    let dcy = IMG as f32 / 2.0 + (rng.f32() * 4.0 - 2.0);
+    let dcx = IMG as f32 / 2.0 + (rng.f32() * 4.0 - 2.0);
+    let dr = 3.5 + rng.f32() * 2.0;
+    let dfg = PALETTE[rng.index(PALETTE.len())];
+    let dalpha = 0.3 + rng.f32() * 0.2;
+    let dperiod = 3 + rng.index(2) as i64;
+    let dphase = rng.range(0, dperiod);
+
+    let mut img = TensorF::zeros(&[IMG, IMG, CH]);
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let inside = inside_mask(cls, y, x, cy, cx, r, period, phase);
+            let dinside =
+                distract && inside_mask(dcls, y, x, dcy, dcx, dr, dperiod, dphase);
+            for c in 0..CH {
+                let mut v = bg + rng.normal() * 0.05;
+                if dinside {
+                    v = (1.0 - dalpha) * v + dalpha * dfg[c];
+                }
+                if inside {
+                    v = fg[c] * contrast;
+                }
+                v += rng.normal() * 0.12;
+                let v = v.clamp(0.0, 1.0);
+                *img.at_mut(&[y, x, c]) = (v - MEAN[c]) / STD[c];
+            }
+        }
+    }
+    (img, cls as i32)
+}
+
+/// Generate a normalized batch (N, IMG, IMG, CH) with labels.
+pub fn gen_batch(seed: u64, start: u64, count: usize) -> (TensorF, Vec<i32>) {
+    let mut images = TensorF::zeros(&[count, IMG, IMG, CH]);
+    let mut labels = Vec::with_capacity(count);
+    let stride = IMG * IMG * CH;
+    for i in 0..count {
+        let (img, l) = gen_image(seed, start + i as u64);
+        images.data[i * stride..(i + 1) * stride].copy_from_slice(&img.data);
+        labels.push(l);
+    }
+    (images, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let (a, la) = gen_batch(5, 0, 4);
+        let (b, lb) = gen_batch(5, 0, 4);
+        assert_eq!(a.data, b.data);
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn index_addressable() {
+        let (batch, labels) = gen_batch(7, 10, 5);
+        let (img, l) = gen_image(7, 12);
+        let stride = IMG * IMG * CH;
+        assert_eq!(&batch.data[2 * stride..3 * stride], &img.data[..]);
+        assert_eq!(labels[2], l);
+    }
+
+    #[test]
+    fn labels_cover_classes() {
+        let (_, labels) = gen_batch(1, 0, 500);
+        let mut seen = [0usize; NUM_CLASSES];
+        for &l in &labels {
+            seen[l as usize] += 1;
+        }
+        assert!(seen.iter().all(|&c| c > 10), "{seen:?}");
+    }
+
+    #[test]
+    fn normalized_range() {
+        let (batch, _) = gen_batch(2, 0, 8);
+        // normalized values live in roughly [-1.1, 3.6]
+        for &v in &batch.data {
+            assert!(v > -1.5 && v < 4.0, "{v}");
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Shared calibration: profile activations, derive clips per method.
+
+use anyhow::Result;
+
+use crate::models::zoo::{Dataset, LoadedModel};
+use crate::nn::QuantConfig;
+use crate::overq::OverQConfig;
+use crate::quant::clip::{ActStats, ClipMethod};
+use crate::quant::zeroq;
+use crate::tensor::TensorF;
+
+/// Profiled activation samples per enc point (subsampled).
+pub struct Profile {
+    pub samples: Vec<Vec<f32>>,
+    pub stats: Vec<ActStats>,
+}
+
+/// Forward a batch of images through the fp32 path collecting enc-point
+/// tensors, subsampled to at most `max_samples` values per point.
+pub fn profile_acts(model: &LoadedModel, images: &TensorF, max_samples: usize) -> Result<Profile> {
+    let srcs = model.engine.graph.enc_point_sources();
+    let (_, taps) = model.engine.forward_f32(images, &srcs)?;
+    let mut samples = Vec::with_capacity(taps.len());
+    let mut stats = Vec::with_capacity(taps.len());
+    for t in &taps {
+        let stride = (t.numel() / max_samples).max(1);
+        let s: Vec<f32> = t.data.iter().step_by(stride).copied().collect();
+        samples.push(s);
+        stats.push(ActStats {
+            mean: t.mean(),
+            std: t.std(),
+            max: t.data.iter().fold(0f32, |m, &x| m.max(x)),
+        });
+    }
+    Ok(Profile { samples, stats })
+}
+
+/// Derive per-enc-point activation scales from a profile + clip method.
+pub fn scales_for(profile: &Profile, method: ClipMethod, bits: u32) -> Vec<f32> {
+    let qmax = ((1u32 << bits) - 1) as f32;
+    profile
+        .samples
+        .iter()
+        .zip(&profile.stats)
+        .map(|(s, &st)| method.clip(s, st, bits).max(1e-6) / qmax)
+        .collect()
+}
+
+/// Scales from the exported enc stats (mean + t·std), no live profiling.
+pub fn scales_from_stats(stats: &[ActStats], t: f64, bits: u32) -> Vec<f32> {
+    let qmax = ((1u32 << bits) - 1) as f32;
+    stats
+        .iter()
+        .map(|s| {
+            (s.mean + t as f32 * s.std)
+                .clamp(1e-6, s.max.max(1e-6))
+                / qmax
+        })
+        .collect()
+}
+
+/// Build a QuantConfig for a clip method on a live profile.
+pub fn quant_config(
+    profile: &Profile,
+    method: ClipMethod,
+    overq: OverQConfig,
+) -> QuantConfig {
+    QuantConfig {
+        act_scales: scales_for(profile, method, overq.bits),
+        overq,
+    }
+}
+
+/// Subset the first `n` images of a dataset.
+pub fn subset(ds: &Dataset, n: usize) -> (TensorF, Vec<i32>) {
+    let n = n.min(ds.images.dims()[0]);
+    let img_sz: usize = ds.images.dims()[1..].iter().product();
+    let mut dims = vec![n];
+    dims.extend_from_slice(&ds.images.dims()[1..]);
+    (
+        TensorF::from_vec(&dims, ds.images.data[..n * img_sz].to_vec()),
+        ds.labels[..n].to_vec(),
+    )
+}
+
+/// ZeroQ-style data-free profile: synthetic calibration inputs forwarded
+/// through the model (no real data touched).
+pub fn zeroq_profile(model: &LoadedModel, n: usize, seed: u64) -> Result<Profile> {
+    let x = zeroq::synthetic_calibration_batch(n, 16, 16, 3, seed);
+    profile_acts(model, &x, 4096)
+}
+
+/// The paper's STD method: sweep t over a grid, pick the best accuracy
+/// on the profiling (not eval!) split.
+pub fn std_sweep_best(
+    model: &LoadedModel,
+    profile: &Profile,
+    overq: OverQConfig,
+    probe_images: &TensorF,
+    probe_labels: &[i32],
+    grid: &[f64],
+    batch: usize,
+) -> Result<(f64, QuantConfig)> {
+    let mut best_t = grid[0];
+    let mut best_acc = -1.0;
+    for &t in grid {
+        let qc = quant_config(profile, ClipMethod::StdMul(t), overq);
+        let acc = model
+            .engine
+            .accuracy_quant(probe_images, probe_labels, batch, &qc)?;
+        if acc > best_acc {
+            best_acc = acc;
+            best_t = t;
+        }
+    }
+    Ok((
+        best_t,
+        quant_config(profile, ClipMethod::StdMul(best_t), overq),
+    ))
+}

@@ -1,0 +1,71 @@
+//! Figure 6(a) — accuracy vs clipping threshold for baseline, range
+//! overwrite, RO+cascading, and full OverQ (W8A4 mini-ResNet-18).
+//!
+//! Reproduces the paper's core tradeoff plot: each method peaks at some
+//! threshold; OverQ peaks EARLIER (smaller threshold) and HIGHER because
+//! covered outliers stop pushing the optimum outward.
+
+use anyhow::Result;
+
+use crate::harness::calibrate::{profile_acts, quant_config, subset};
+use crate::models::Artifacts;
+use crate::overq::OverQConfig;
+use crate::quant::clip::ClipMethod;
+use crate::util::bench::Table;
+
+pub struct Fig6aConfig {
+    pub model: String,
+    pub bits: u32,
+    pub cascade: usize,
+    pub thresholds: Vec<f64>,
+    pub eval_images: usize,
+    pub profile_images: usize,
+}
+
+impl Default for Fig6aConfig {
+    fn default() -> Self {
+        Fig6aConfig {
+            model: "resnet18m".into(),
+            bits: 4,
+            cascade: 4,
+            thresholds: vec![1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 5.0, 6.0, 7.0, 8.0, 10.0],
+            eval_images: 512,
+            profile_images: 256,
+        }
+    }
+}
+
+pub fn run(arts: &Artifacts, cfg: &Fig6aConfig) -> Result<Table> {
+    let model = arts.load_model(&cfg.model)?;
+    let ev = arts.load_dataset("evalset")?;
+    let pf = arts.load_dataset("profileset")?;
+    let (pimg, _) = subset(&pf, cfg.profile_images);
+    let profile = profile_acts(&model, &pimg, 4096)?;
+    let (eimg, elab) = subset(&ev, cfg.eval_images);
+
+    let variants: Vec<(&str, OverQConfig)> = vec![
+        ("baseline", OverQConfig::baseline(cfg.bits)),
+        ("RO (c=1)", OverQConfig::ro(cfg.bits, 1)),
+        ("RO+cascade", OverQConfig::ro(cfg.bits, cfg.cascade)),
+        ("full OverQ", OverQConfig::full(cfg.bits, cfg.cascade)),
+    ];
+    let mut headers = vec!["clip (std)".to_string()];
+    headers.extend(variants.iter().map(|(n, _)| n.to_string()));
+    let mut table = Table::new(
+        &format!(
+            "Figure 6(a) — top-1 accuracy vs clip threshold ({} W8A{})",
+            cfg.model, cfg.bits
+        ),
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for &t in &cfg.thresholds {
+        let mut row = vec![format!("{t:.1}")];
+        for (_, ovq) in &variants {
+            let qc = quant_config(&profile, ClipMethod::StdMul(t), *ovq);
+            let acc = model.engine.accuracy_quant(&eimg, &elab, 64, &qc)?;
+            row.push(format!("{:.4}", acc));
+        }
+        table.row(row);
+    }
+    Ok(table)
+}

@@ -1,0 +1,109 @@
+//! Figure 6(b) — quantization-error breakdown between small and large
+//! values vs clipping threshold, on one mini-ResNet-18 layer.
+//!
+//! Error = Σ |x - Q(x)| split at the paper's small/large boundary. Shows
+//! the opposing trends (clipping error on large values falls with the
+//! threshold; rounding error on small values rises) and how range
+//! overwrite + cascading collapse the large-value error.
+
+use anyhow::Result;
+
+use crate::harness::calibrate::{profile_acts, subset};
+use crate::models::Artifacts;
+use crate::overq::{decode_rows, encode_tensor, OverQConfig};
+use crate::quant::fake_quant_tensor;
+use crate::tensor::TensorF;
+use crate::util::bench::Table;
+
+pub struct Fig6bConfig {
+    pub model: String,
+    /// Enc point standing in for the paper's "arbitrary layer".
+    pub layer: usize,
+    pub bits: u32,
+    pub cascade: usize,
+    /// Small/large split, as a multiple of the layer std (the paper's
+    /// figure splits at 4 on its axis units).
+    pub split_std: f64,
+    pub thresholds: Vec<f64>,
+    pub images: usize,
+}
+
+impl Default for Fig6bConfig {
+    fn default() -> Self {
+        Fig6bConfig {
+            model: "resnet18m".into(),
+            layer: 4,
+            bits: 4,
+            cascade: 4,
+            split_std: 4.0,
+            thresholds: vec![1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 5.0, 6.0, 8.0],
+            images: 128,
+        }
+    }
+}
+
+fn abs_err_split(x: &TensorF, q: &TensorF, boundary: f32) -> (f64, f64) {
+    let mut small = 0f64;
+    let mut large = 0f64;
+    for (&a, &b) in x.data.iter().zip(&q.data) {
+        let e = (a - b).abs() as f64;
+        if a.abs() <= boundary {
+            small += e;
+        } else {
+            large += e;
+        }
+    }
+    (small, large)
+}
+
+pub fn run(arts: &Artifacts, cfg: &Fig6bConfig) -> Result<Table> {
+    let model = arts.load_model(&cfg.model)?;
+    let pf = arts.load_dataset("profileset")?;
+    let (images, _) = subset(&pf, cfg.images);
+    let srcs = model.engine.graph.enc_point_sources();
+    let layer = cfg.layer.min(srcs.len() - 1);
+    let (_, taps) = model.engine.forward_f32(&images, &[srcs[layer]])?;
+    let x = &taps[0];
+    let prof = profile_acts(&model, &images, 4096)?;
+    let st = prof.stats[layer];
+    let boundary = cfg.split_std as f32 * st.std;
+    let qmax = ((1u32 << cfg.bits) - 1) as f32;
+
+    let mut table = Table::new(
+        &format!(
+            "Figure 6(b) — abs quant error, {} enc{} (split at {:.1} std)",
+            cfg.model, layer, cfg.split_std
+        ),
+        &[
+            "clip (std)",
+            "small:base",
+            "large:base",
+            "large:RO c=1",
+            "large:RO+casc",
+            "small:full OverQ",
+        ],
+    );
+    for &t in &cfg.thresholds {
+        let clip = (st.mean + t as f32 * st.std).clamp(1e-6, st.max.max(1e-6));
+        let scale = clip / qmax;
+        let base = fake_quant_tensor(x, scale, cfg.bits);
+        let (s_b, l_b) = abs_err_split(x, &base, boundary);
+        let dec = |ovq: OverQConfig| -> (f64, f64) {
+            let enc = encode_tensor(x, scale, &ovq);
+            let d = decode_rows(&enc.codes, &enc.state, scale, &ovq);
+            abs_err_split(x, &d, boundary)
+        };
+        let (_, l_ro1) = dec(OverQConfig::ro(cfg.bits, 1));
+        let (_, l_roc) = dec(OverQConfig::ro(cfg.bits, cfg.cascade));
+        let (s_full, _) = dec(OverQConfig::full(cfg.bits, cfg.cascade));
+        table.row(vec![
+            format!("{t:.1}"),
+            format!("{s_b:.1}"),
+            format!("{l_b:.1}"),
+            format!("{l_ro1:.1}"),
+            format!("{l_roc:.1}"),
+            format!("{s_full:.1}"),
+        ]);
+    }
+    Ok(table)
+}

@@ -1,0 +1,9 @@
+//! Experiment harnesses — one per paper table/figure (DESIGN.md §5).
+
+pub mod calibrate;
+pub mod fig6a;
+pub mod fig6b;
+pub mod hwcmp;
+pub mod table1;
+pub mod table2;
+pub mod table3;

@@ -1,0 +1,83 @@
+//! Table 1 — cascading outlier coverage vs Eq. (1) theory.
+//!
+//! Paper: three layers of ResNet-50 quantized to A4; rows are cascade
+//! factors 1..6, columns 'Theory' (Eq. 1 at p0 = 0.5) and per-layer
+//! empirical coverage, plus a final zero-percentage row. We reproduce it
+//! on three enc-point activations of the bottleneck mini-ResNet-50.
+
+use anyhow::Result;
+
+use crate::harness::calibrate::{profile_acts, subset};
+use crate::models::Artifacts;
+use crate::overq::{coverage_stats, theory_coverage, OverQConfig};
+use crate::util::bench::Table;
+
+pub struct Table1Config {
+    pub model: String,
+    /// Enc points standing in for the paper's three layers.
+    pub layers: Vec<usize>,
+    pub bits: u32,
+    /// Clip threshold in stds (controls the outlier rate like the
+    /// paper's A4 setting).
+    pub std_t: f64,
+    pub images: usize,
+}
+
+impl Default for Table1Config {
+    fn default() -> Self {
+        Table1Config {
+            model: "resnet50m".into(),
+            layers: vec![9, 13, 15],
+            bits: 4,
+            std_t: 4.0,
+            images: 128,
+        }
+    }
+}
+
+pub fn run(arts: &Artifacts, cfg: &Table1Config) -> Result<Table> {
+    let model = arts.load_model(&cfg.model)?;
+    let pf = arts.load_dataset("profileset")?;
+    let (images, _) = subset(&pf, cfg.images);
+    let srcs = model.engine.graph.enc_point_sources();
+    let layers: Vec<usize> = cfg
+        .layers
+        .iter()
+        .map(|&l| l.min(srcs.len() - 1))
+        .collect();
+    let (_, taps) = model.engine.forward_f32(
+        &images,
+        &layers.iter().map(|&l| srcs[l]).collect::<Vec<_>>(),
+    )?;
+    let prof = profile_acts(&model, &images, 4096)?;
+    let qmax = ((1u32 << cfg.bits) - 1) as f32;
+
+    let mut headers = vec!["Cascade Factor".to_string(), "Theory".to_string()];
+    for (i, &l) in layers.iter().enumerate() {
+        headers.push(format!("Layer{} (enc{})", i + 1, l));
+    }
+    let mut table = Table::new(
+        "Table 1 — Cascading Outlier Coverage (%)",
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for c in 1..=6 {
+        let mut row = vec![
+            c.to_string(),
+            format!("{:.1}", theory_coverage(0.5, c) * 100.0),
+        ];
+        for (i, t) in taps.iter().enumerate() {
+            let scale =
+                (prof.stats[layers[i]].mean + cfg.std_t as f32 * prof.stats[layers[i]].std) / qmax;
+            let s = coverage_stats(t, scale.max(1e-6), &OverQConfig::ro(cfg.bits, c));
+            row.push(format!("{:.1}", s.coverage() * 100.0));
+        }
+        table.row(row);
+    }
+    // zero-percentage footer row
+    let mut zrow = vec!["Zero Perc.".to_string(), "50.0".to_string()];
+    for t in &taps {
+        zrow.push(format!("{:.1}", t.zero_frac() * 100.0));
+    }
+    table.row(zrow);
+    Ok(table)
+}

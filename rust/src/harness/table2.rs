@@ -1,0 +1,138 @@
+//! Table 2 — the full accuracy grid: 4 models × {MMSE, ZeroQ, OCS, STD}
+//! × {A4, A5} × {±OverQ}, all at W8 with per-channel weight quantization.
+//!
+//! Matches the paper's protocol: OverQ = range + precision overwrite with
+//! cascade factor 4; OCS and ZeroQ are combined with MMSE clipping; STD
+//! sweeps the threshold on the PROFILING split and keeps the best.
+
+use anyhow::Result;
+
+use crate::harness::calibrate::{
+    profile_acts, quant_config, std_sweep_best, subset, zeroq_profile,
+};
+use crate::models::Artifacts;
+use crate::overq::OverQConfig;
+use crate::quant::clip::ClipMethod;
+use crate::util::bench::Table;
+
+pub struct Table2Config {
+    pub models: Vec<String>,
+    pub bits: Vec<u32>,
+    pub cascade: usize,
+    pub eval_images: usize,
+    pub profile_images: usize,
+    pub ocs_ratio: f64,
+    pub std_grid: Vec<f64>,
+    pub batch: usize,
+}
+
+impl Default for Table2Config {
+    fn default() -> Self {
+        Table2Config {
+            models: vec![
+                "resnet18m".into(),
+                "resnet50m".into(),
+                "densenet21m".into(),
+                "vgg11m".into(),
+            ],
+            bits: vec![4, 5],
+            cascade: 4,
+            eval_images: 512,
+            profile_images: 256,
+            ocs_ratio: 0.05,
+            std_grid: vec![2.0, 3.0, 4.0, 5.0, 6.0, 8.0],
+            batch: 64,
+        }
+    }
+}
+
+pub fn run(arts: &Artifacts, cfg: &Table2Config) -> Result<Table> {
+    let ev = arts.load_dataset("evalset")?;
+    let pf = arts.load_dataset("profileset")?;
+    let (eimg, elab) = subset(&ev, cfg.eval_images);
+    let (pimg, plab) = subset(&pf, cfg.profile_images);
+
+    let mut headers = vec!["Clipping Method".to_string()];
+    for m in &cfg.models {
+        for &b in &cfg.bits {
+            headers.push(format!("{m} A{b}"));
+        }
+    }
+    let mut table = Table::new(
+        "Table 2 — OverQ ImageNet-protocol evaluation (top-1, W8)",
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+
+    let methods = ["MMSE", "ZeroQ", "OCS", "STD"];
+    let mut rows: Vec<Vec<String>> = methods
+        .iter()
+        .flat_map(|m| {
+            vec![
+                vec![m.to_string()],
+                vec![format!("{m} + OverQ")],
+            ]
+        })
+        .collect();
+    let mut float_row = vec!["Float".to_string()];
+
+    for mname in &cfg.models {
+        let model = arts.load_model(mname)?;
+        let profile = profile_acts(&model, &pimg, 4096)?;
+        let zprofile = zeroq_profile(&model, cfg.profile_images.min(128), 99)?;
+        let mut ocs_model = arts.load_model(mname)?;
+        ocs_model.engine.apply_ocs(cfg.ocs_ratio);
+        let facc = model.engine.accuracy_f32(&eimg, &elab, cfg.batch)?;
+
+        for &bits in &cfg.bits {
+            let base = OverQConfig::baseline(bits);
+            let full = OverQConfig::full(bits, cfg.cascade);
+            let mut col = Vec::new();
+            for (mi, method) in methods.iter().enumerate() {
+                for (vi, ovq) in [base, full].into_iter().enumerate() {
+                    let acc = match *method {
+                        "MMSE" => {
+                            let qc = quant_config(&profile, ClipMethod::Mmse, ovq);
+                            model.engine.accuracy_quant(&eimg, &elab, cfg.batch, &qc)?
+                        }
+                        "ZeroQ" => {
+                            // data-free calibration + MMSE clipping
+                            let qc = quant_config(&zprofile, ClipMethod::Mmse, ovq);
+                            model.engine.accuracy_quant(&eimg, &elab, cfg.batch, &qc)?
+                        }
+                        "OCS" => {
+                            let qc = quant_config(&profile, ClipMethod::Mmse, ovq);
+                            ocs_model
+                                .engine
+                                .accuracy_quant(&eimg, &elab, cfg.batch, &qc)?
+                        }
+                        "STD" => {
+                            let (_, qc) = std_sweep_best(
+                                &model,
+                                &profile,
+                                ovq,
+                                &pimg,
+                                &plab,
+                                &cfg.std_grid,
+                                cfg.batch,
+                            )?;
+                            model.engine.accuracy_quant(&eimg, &elab, cfg.batch, &qc)?
+                        }
+                        _ => unreachable!(),
+                    };
+                    let _ = (mi, vi);
+                    col.push(acc);
+                }
+            }
+            for (ri, acc) in col.into_iter().enumerate() {
+                rows[ri].push(format!("{:.2}", acc * 100.0));
+            }
+            float_row.push(format!("{:.2}", facc * 100.0));
+        }
+        eprintln!("[table2] {mname} done");
+    }
+    for r in rows {
+        table.row(r);
+    }
+    table.row(float_row);
+    Ok(table)
+}

@@ -1,0 +1,73 @@
+//! Table 3 — PE area breakdown from the calibrated gate-level model.
+//!
+//! Columns: multiply / add / other-datapath areas (µm²). Rows: baseline,
+//! OverQ-RO (+ overheads vs same-bit and +1b baselines), OverQ-Full
+//! (+ overheads vs same-bit, +1b, +2b baselines) — the structure of the
+//! paper's Table 3.
+
+use anyhow::Result;
+
+use crate::area::{pe_breakdown, PeAreas, PeVariant};
+use crate::util::bench::Table;
+
+pub struct Table3Config {
+    pub act_bits: u32,
+}
+
+impl Default for Table3Config {
+    fn default() -> Self {
+        Table3Config { act_bits: 4 }
+    }
+}
+
+fn fmt(a: &PeAreas) -> Vec<String> {
+    vec![
+        format!("{:.2}", a.multiply),
+        format!("{:.2}", a.add),
+        format!("{:.2}", a.other),
+    ]
+}
+
+fn overhead_row(label: &str, ovq: &PeAreas, base: &PeAreas) -> Vec<String> {
+    vec![
+        label.to_string(),
+        format!("{:+.2}%", (ovq.multiply / base.multiply - 1.0) * 100.0),
+        format!("{:+.2}%", (ovq.add / base.add - 1.0) * 100.0),
+        format!("{:+.2}%", (ovq.other / base.other - 1.0) * 100.0),
+    ]
+}
+
+pub fn run(cfg: &Table3Config) -> Result<Table> {
+    let b = cfg.act_bits;
+    let base = pe_breakdown(PeVariant::Baseline, b);
+    let base1 = pe_breakdown(PeVariant::Baseline, b + 1);
+    let base2 = pe_breakdown(PeVariant::Baseline, b + 2);
+    let ro = pe_breakdown(PeVariant::OverQRo, b);
+    let full = pe_breakdown(PeVariant::OverQFull, b);
+
+    let mut t = Table::new(
+        &format!("Table 3 — PE area breakdown (µm², A{b} W8)"),
+        &["Area (um^2)", "Multiply", "Add", "Other Datapath"],
+    );
+    fn named(t: &mut Table, label: &str, a: &PeAreas) {
+        let mut row = vec![label.to_string()];
+        row.extend(fmt(a));
+        t.row(row);
+    }
+    named(&mut t, "Baseline", &base);
+    named(&mut t, "OverQ RO", &ro);
+    t.row(overhead_row("Overhead", &ro, &base));
+    t.row(overhead_row("Overhead +1b", &ro, &base1));
+    named(&mut t, "OverQ Full", &full);
+    t.row(overhead_row("Overhead", &full, &base));
+    t.row(overhead_row("Overhead +1b", &full, &base1));
+    t.row(overhead_row("Overhead +2b", &full, &base2));
+    // totals footer (the paper's ≈0.5 % whole-PE claim context)
+    t.row(vec![
+        "Total overhead (Full)".into(),
+        format!("{:.2}", base.total()),
+        format!("{:.2}", full.total()),
+        format!("{:+.2}%", (full.total() / base.total() - 1.0) * 100.0),
+    ]);
+    Ok(t)
+}

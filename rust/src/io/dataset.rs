@@ -1,0 +1,1 @@
+//! Dataset loading re-exports (see models::zoo::Dataset).

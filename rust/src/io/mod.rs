@@ -1,0 +1,4 @@
+//! Artifact I/O: the `.tensors` binary format and dataset loading.
+
+pub mod dataset;
+pub mod tensorfile;

@@ -1,0 +1,223 @@
+//! `.tensors` reader/writer — mirrors python/compile/tensorfile.py.
+//!
+//! Layout (little endian):
+//!   magic  b"OVQT" | u32 version (1) | u32 count
+//!   per tensor: u16 name_len, name, u8 dtype, u8 ndim, u32 dims[ndim], raw data
+//! dtype: 0 = f32, 1 = i32, 2 = u8, 3 = i8.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"OVQT";
+const VERSION: u32 = 1;
+
+/// A tensor of any supported dtype.
+#[derive(Clone, Debug)]
+pub enum AnyTensor {
+    F32(Tensor<f32>),
+    I32(Tensor<i32>),
+    U8(Tensor<u8>),
+    I8(Tensor<i8>),
+}
+
+impl AnyTensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            AnyTensor::F32(t) => t.dims(),
+            AnyTensor::I32(t) => t.dims(),
+            AnyTensor::U8(t) => t.dims(),
+            AnyTensor::I8(t) => t.dims(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor<f32>> {
+        match self {
+            AnyTensor::F32(t) => Ok(t),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&Tensor<i32>> {
+        match self {
+            AnyTensor::I32(t) => Ok(t),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+}
+
+/// Named tensor collection.
+pub type TensorMap = BTreeMap<String, AnyTensor>;
+
+/// Read a `.tensors` file.
+pub fn read(path: &Path) -> Result<TensorMap> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: bad magic", path.display());
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        bail!("{}: unsupported version {version}", path.display());
+    }
+    let count = read_u32(&mut f)?;
+    let mut out = TensorMap::new();
+    for _ in 0..count {
+        let name_len = read_u16(&mut f)? as usize;
+        let mut name_buf = vec![0u8; name_len];
+        f.read_exact(&mut name_buf)?;
+        let name = String::from_utf8(name_buf)?;
+        let mut hdr = [0u8; 2];
+        f.read_exact(&mut hdr)?;
+        let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut f)? as usize);
+        }
+        let numel: usize = dims.iter().product::<usize>().max(1);
+        let tensor = match dtype {
+            0 => {
+                let mut raw = vec![0u8; numel * 4];
+                f.read_exact(&mut raw)?;
+                let data = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                AnyTensor::F32(Tensor::from_vec(&dims, data))
+            }
+            1 => {
+                let mut raw = vec![0u8; numel * 4];
+                f.read_exact(&mut raw)?;
+                let data = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                AnyTensor::I32(Tensor::from_vec(&dims, data))
+            }
+            2 => {
+                let mut raw = vec![0u8; numel];
+                f.read_exact(&mut raw)?;
+                AnyTensor::U8(Tensor::from_vec(&dims, raw))
+            }
+            3 => {
+                let mut raw = vec![0u8; numel];
+                f.read_exact(&mut raw)?;
+                AnyTensor::I8(Tensor::from_vec(
+                    &dims,
+                    raw.into_iter().map(|b| b as i8).collect(),
+                ))
+            }
+            d => bail!("{}: unknown dtype {d}", path.display()),
+        };
+        out.insert(name, tensor);
+    }
+    Ok(out)
+}
+
+/// Write a `.tensors` file.
+pub fn write(path: &Path, tensors: &TensorMap) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        let (code, dims): (u8, &[usize]) = match t {
+            AnyTensor::F32(t) => (0, t.dims()),
+            AnyTensor::I32(t) => (1, t.dims()),
+            AnyTensor::U8(t) => (2, t.dims()),
+            AnyTensor::I8(t) => (3, t.dims()),
+        };
+        f.write_all(&[code, dims.len() as u8])?;
+        for &d in dims {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match t {
+            AnyTensor::F32(t) => {
+                for &x in &t.data {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            AnyTensor::I32(t) => {
+                for &x in &t.data {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            AnyTensor::U8(t) => f.write_all(&t.data)?,
+            AnyTensor::I8(t) => {
+                let raw: Vec<u8> = t.data.iter().map(|&b| b as u8).collect();
+                f.write_all(&raw)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16<R: Read>(r: &mut R) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ovqt_test_{}", std::process::id()));
+        let path = dir.join("t.tensors");
+        let mut m = TensorMap::new();
+        m.insert(
+            "a".into(),
+            AnyTensor::F32(Tensor::from_vec(&[2, 2], vec![1.0, -2.5, 3.0, 0.0])),
+        );
+        m.insert(
+            "b".into(),
+            AnyTensor::I32(Tensor::from_vec(&[3], vec![-7, 0, 9])),
+        );
+        m.insert("c".into(), AnyTensor::U8(Tensor::from_vec(&[2], vec![1, 255])));
+        m.insert(
+            "d".into(),
+            AnyTensor::I8(Tensor::from_vec(&[2], vec![-128, 127])),
+        );
+        write(&path, &m).unwrap();
+        let back = read(&path).unwrap();
+        assert_eq!(back.len(), 4);
+        assert_eq!(back["a"].as_f32().unwrap().data, vec![1.0, -2.5, 3.0, 0.0]);
+        assert_eq!(back["b"].as_i32().unwrap().data, vec![-7, 0, 9]);
+        match &back["d"] {
+            AnyTensor::I8(t) => assert_eq!(t.data, vec![-128, 127]),
+            _ => panic!(),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join(format!("ovqt_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.tensors");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(read(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

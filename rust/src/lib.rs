@@ -1,0 +1,48 @@
+//! # OverQ — Opportunistic Outlier Quantization for Neural Network Accelerators
+//!
+//! Production reproduction of Zhao et al., *"OverQ: Opportunistic Outlier
+//! Quantization for Neural Network Accelerators"*. This crate is the L3
+//! (rust) layer of a three-layer Rust + JAX + Pallas stack:
+//!
+//! * [`overq`] — the paper's contribution: range/precision overwrite
+//!   encoding with cascading, coverage analysis, and the overwrite dot
+//!   product (DESIGN.md §7 is the normative spec).
+//! * [`quant`] — post-training quantization substrate: uniform affine
+//!   quantizers, MMSE / percentile / KL / STD-sweep clipping, OCS weight
+//!   splitting and a ZeroQ-style data-free calibrator.
+//! * [`nn`] + [`models`] — a native int8/fp32 inference engine that
+//!   executes the graph IR exported by `python/compile/model.py`,
+//!   bit-exact with the JAX/Pallas path on codes and states.
+//! * [`sim`] — cycle-level weight-stationary systolic-array simulator
+//!   with baseline and OverQ processing elements.
+//! * [`area`] — parametric ASIC area model reproducing Table 3.
+//! * [`olaccel`] — OLAccel-style outlier-accelerator comparator.
+//! * [`runtime`] — PJRT client (via the `xla` crate) that loads the AOT
+//!   HLO artifacts produced by `python/compile/aot.py`.
+//! * [`coordinator`] — the serving layer: request router, dynamic
+//!   batcher and worker pool over compiled executables.
+//! * [`harness`] — experiment drivers regenerating every table/figure of
+//!   the paper (Table 1-3, Figure 6a/6b) plus the hardware comparison.
+//! * [`util`] — offline-registry substitutes: deterministic RNG, JSON,
+//!   CLI parsing, property-testing and benchmarking helpers.
+//!
+//! Python never runs on the request path: `make artifacts` AOT-compiles
+//! the models once; the rust binary is self-contained afterwards.
+
+pub mod area;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod io;
+pub mod models;
+pub mod nn;
+pub mod olaccel;
+pub mod overq;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,219 @@
+//! `overq` CLI — experiment harnesses and the serving coordinator.
+//!
+//! Subcommands regenerate each paper artifact (see DESIGN.md §5) and run
+//! the end-to-end serving path. All of them need `make artifacts` first
+//! (except `table3`, which is pure modelling).
+
+use anyhow::Result;
+
+use overq::coordinator::batcher::BatchPolicy;
+use overq::coordinator::{Server, ServerConfig};
+use overq::data::shapes;
+use overq::harness::{calibrate, fig6a, fig6b, hwcmp, table1, table2, table3};
+use overq::models::Artifacts;
+use overq::util::cli::Args;
+
+const USAGE: &str = "\
+overq — OverQ paper reproduction CLI
+
+USAGE: overq <command> [--options]
+
+COMMANDS (paper artifacts):
+  table1     cascading outlier coverage vs Eq.(1)      [--model resnet50m --std-t 3.0]
+  table2     full accuracy grid (4 models x 4 methods) [--eval 512 --profile 256]
+  table3     PE area breakdown                          [--bits 4]
+  fig6a      accuracy vs clip threshold                 [--model resnet18m --eval 512]
+  fig6b      quant error small/large breakdown          [--layer 4]
+  hwcmp      systolic + OLAccel hardware comparison     [--rows 32 --cols 16]
+
+COMMANDS (system):
+  serve      run the serving coordinator on synthetic traffic
+             [--variant full_c4 --requests 64 --model resnet18m]
+  eval       native-engine accuracy for one config
+             [--model resnet18m --bits 4 --cascade 4 --std-t 6 --mode full|ro|base]
+  info       artifact manifest summary
+  help       this text
+
+Options: --csv <path> writes the table as CSV too.";
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "table1" => {
+            let arts = Artifacts::locate()?;
+            let mut cfg = table1::Table1Config::default();
+            cfg.model = args.get_or("model", &cfg.model).to_string();
+            cfg.std_t = args.get_f64("std-t", cfg.std_t);
+            cfg.bits = args.get_usize("bits", cfg.bits as usize) as u32;
+            emit(table1::run(&arts, &cfg)?, args)
+        }
+        "table2" => {
+            let arts = Artifacts::locate()?;
+            let mut cfg = table2::Table2Config::default();
+            cfg.eval_images = args.get_usize("eval", cfg.eval_images);
+            cfg.profile_images = args.get_usize("profile", cfg.profile_images);
+            if let Some(m) = args.get("models") {
+                cfg.models = m.split(',').map(|s| s.to_string()).collect();
+            }
+            emit(table2::run(&arts, &cfg)?, args)
+        }
+        "table3" => {
+            let mut cfg = table3::Table3Config::default();
+            cfg.act_bits = args.get_usize("bits", cfg.act_bits as usize) as u32;
+            emit(table3::run(&cfg)?, args)
+        }
+        "fig6a" => {
+            let arts = Artifacts::locate()?;
+            let mut cfg = fig6a::Fig6aConfig::default();
+            cfg.model = args.get_or("model", &cfg.model).to_string();
+            cfg.eval_images = args.get_usize("eval", cfg.eval_images);
+            cfg.bits = args.get_usize("bits", cfg.bits as usize) as u32;
+            emit(fig6a::run(&arts, &cfg)?, args)
+        }
+        "fig6b" => {
+            let arts = Artifacts::locate()?;
+            let mut cfg = fig6b::Fig6bConfig::default();
+            cfg.model = args.get_or("model", &cfg.model).to_string();
+            cfg.layer = args.get_usize("layer", cfg.layer);
+            emit(fig6b::run(&arts, &cfg)?, args)
+        }
+        "hwcmp" => {
+            let arts = Artifacts::locate()?;
+            let mut cfg = hwcmp::HwcmpConfig::default();
+            cfg.rows = args.get_usize("rows", cfg.rows);
+            cfg.cols = args.get_usize("cols", cfg.cols);
+            cfg.layer = args.get_usize("layer", cfg.layer);
+            emit(hwcmp::run(&arts, &cfg)?, args)
+        }
+        "serve" => serve(args),
+        "eval" => eval_cmd(args),
+        "info" => info(),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn emit(table: overq::util::bench::Table, args: &Args) -> Result<()> {
+    table.print();
+    if let Some(path) = args.get("csv") {
+        table.write_csv(path)?;
+        println!("(csv written to {path})");
+    }
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    let arts = Artifacts::locate()?;
+    println!("artifacts at {}", arts.root.display());
+    for name in arts.model_names() {
+        let m = arts.load_model(&name)?;
+        println!(
+            "  {name:<12} fp32_acc {:.4}  enc_points {}",
+            m.fp32_acc,
+            m.enc_stats.len()
+        );
+    }
+    for (model, variant, batch, path) in arts.hlo_entries() {
+        println!(
+            "  hlo {model}/{variant}/b{batch}  ({:.2} MB)",
+            std::fs::metadata(&path).map(|m| m.len() as f64 / 1e6).unwrap_or(0.0)
+        );
+    }
+    Ok(())
+}
+
+fn eval_cmd(args: &Args) -> Result<()> {
+    use overq::overq::OverQConfig;
+    use overq::quant::clip::ClipMethod;
+    let arts = Artifacts::locate()?;
+    let name = args.get_or("model", "resnet18m");
+    let bits = args.get_usize("bits", 4) as u32;
+    let cascade = args.get_usize("cascade", 4);
+    let t = args.get_f64("std-t", 6.0);
+    let n = args.get_usize("eval", 512);
+    let mode = args.get_or("mode", "full");
+    let ovq = match mode {
+        "base" => OverQConfig::baseline(bits),
+        "ro" => OverQConfig::ro(bits, cascade),
+        _ => OverQConfig::full(bits, cascade),
+    };
+    let model = arts.load_model(name)?;
+    let ev = arts.load_dataset("evalset")?;
+    let pf = arts.load_dataset("profileset")?;
+    let (pimg, _) = calibrate::subset(&pf, 256);
+    let profile = calibrate::profile_acts(&model, &pimg, 4096)?;
+    let (eimg, elab) = calibrate::subset(&ev, n);
+    let qc = calibrate::quant_config(&profile, ClipMethod::StdMul(t), ovq);
+    let accq = model.engine.accuracy_quant(&eimg, &elab, 64, &qc)?;
+    let accf = model.engine.accuracy_f32(&eimg, &elab, 64)?;
+    println!(
+        "{name} A{bits} {mode} c={cascade} t={t}: quant {:.4}  fp32 {:.4}  (n={n})",
+        accq, accf
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let arts = Artifacts::locate()?;
+    let model = args.get_or("model", "resnet18m").to_string();
+    let variant = args.get_or("variant", "full_c4").to_string();
+    let requests = args.get_usize("requests", 64);
+    let m = arts.load_model(&model)?;
+    let scales = calibrate::scales_from_stats(&m.enc_stats, args.get_f64("std-t", 6.0), 4);
+    let server = Server::start(ServerConfig {
+        model: model.clone(),
+        policy: BatchPolicy::default(),
+        act_scales: scales,
+    })?;
+    let compile = server.warmup(&variant, &[16, 16, 3], 8)?;
+    println!("warmup/compile: {:.1} ms", compile.as_secs_f64() * 1e3);
+    let mut correct = 0usize;
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    let mut labels = Vec::new();
+    for i in 0..requests {
+        let (img, label) = shapes::gen_image(4242, i as u64);
+        labels.push(label);
+        pending.push(server.submit(img, &variant)?);
+    }
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv()?;
+        let pred = resp
+            .logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as i32;
+        if pred == labels[i] {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let ms = server.metrics();
+    println!(
+        "served {requests} requests ({model}/{variant}) in {:.1} ms — {:.1} req/s",
+        wall.as_secs_f64() * 1e3,
+        requests as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "  accuracy (native load-gen) {:.3} | batches {} mean_batch {:.2} padded {} | exec {:.2} ms mean | e2e {:.2} ms mean",
+        correct as f64 / requests as f64,
+        ms.batches,
+        ms.mean_batch,
+        ms.padded_slots,
+        ms.mean_exec_us / 1e3,
+        ms.mean_e2e_us / 1e3,
+    );
+    server.shutdown();
+    Ok(())
+}

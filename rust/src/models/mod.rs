@@ -1,0 +1,5 @@
+//! Model zoo: load graphs + weights from the artifact directory.
+
+pub mod zoo;
+
+pub use zoo::{Artifacts, LoadedModel};

@@ -1,0 +1,203 @@
+//! Artifact manifest + model loading.
+//!
+//! `make artifacts` produces `artifacts/manifest.json` (see
+//! `python/compile/aot.py`); this module resolves it into [`Engine`]s,
+//! datasets and HLO paths.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::io::tensorfile::{self, TensorMap};
+use crate::nn::{Engine, Graph};
+use crate::quant::clip::ActStats;
+use crate::tensor::TensorF;
+use crate::util::json::{parse_file, Value};
+
+/// Parsed artifact manifest.
+pub struct Artifacts {
+    pub root: PathBuf,
+    pub manifest: Value,
+}
+
+/// A model loaded into the native engine.
+pub struct LoadedModel {
+    pub name: String,
+    pub engine: Engine,
+    /// Per-enc-point (mean, std, max) profiled at export time.
+    pub enc_stats: Vec<ActStats>,
+    /// fp32 eval accuracy recorded at export time.
+    pub fp32_acc: f64,
+}
+
+/// Labeled image set.
+pub struct Dataset {
+    pub images: TensorF,
+    pub labels: Vec<i32>,
+}
+
+impl Artifacts {
+    /// Locate the artifacts directory: `$OVERQ_ARTIFACTS`, ./artifacts,
+    /// or the crate-root artifacts dir.
+    pub fn locate() -> Result<Artifacts> {
+        let candidates = [
+            std::env::var("OVERQ_ARTIFACTS").unwrap_or_default(),
+            "artifacts".to_string(),
+            format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")),
+        ];
+        for c in candidates.iter().filter(|c| !c.is_empty()) {
+            let root = PathBuf::from(c);
+            if root.join("manifest.json").exists() {
+                return Artifacts::open(&root);
+            }
+        }
+        anyhow::bail!("artifacts not found — run `make artifacts` first")
+    }
+
+    pub fn open(root: &Path) -> Result<Artifacts> {
+        let manifest = parse_file(&root.join("manifest.json"))?;
+        Ok(Artifacts {
+            root: root.to_path_buf(),
+            manifest,
+        })
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.manifest
+            .at(&["models"])
+            .as_obj()
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Load one model into the native engine.
+    pub fn load_model(&self, name: &str) -> Result<LoadedModel> {
+        let meta = self.manifest.at(&["models", name]);
+        let graph_rel = meta.at(&["graph"]).as_str().context("model graph path")?;
+        let weights_rel = meta
+            .at(&["weights"])
+            .as_str()
+            .context("model weights path")?;
+        let graph = Graph::load(&self.root.join(graph_rel))?;
+        let weights = tensorfile::read(&self.root.join(weights_rel))?;
+        let enc_stats = parse_enc_stats(&weights)?;
+        let engine = Engine::new(graph, &weights)?;
+        Ok(LoadedModel {
+            name: name.to_string(),
+            engine,
+            enc_stats,
+            fp32_acc: meta.at(&["fp32_acc"]).as_f64().unwrap_or(0.0),
+        })
+    }
+
+    /// Load the eval or profile dataset.
+    pub fn load_dataset(&self, which: &str) -> Result<Dataset> {
+        let rel = self
+            .manifest
+            .at(&["data", which])
+            .as_str()
+            .with_context(|| format!("dataset {which}"))?;
+        let t = tensorfile::read(&self.root.join(rel))?;
+        Ok(Dataset {
+            images: t["images"].as_f32()?.clone(),
+            labels: t["labels"].as_i32()?.data.clone(),
+        })
+    }
+
+    /// HLO artifact entries: (model, variant, batch, path).
+    pub fn hlo_entries(&self) -> Vec<(String, String, usize, PathBuf)> {
+        self.manifest
+            .at(&["hlo"])
+            .as_arr()
+            .map(|arr| {
+                arr.iter()
+                    .map(|h| {
+                        (
+                            h.at(&["model"]).as_str().unwrap_or("").to_string(),
+                            h.at(&["variant"]).as_str().unwrap_or("").to_string(),
+                            h.at(&["batch"]).as_usize().unwrap_or(0),
+                            self.root.join(h.at(&["path"]).as_str().unwrap_or("")),
+                        )
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Full manifest entry for an HLO artifact.
+    pub fn hlo_meta(&self, model: &str, variant: &str, batch: usize) -> Option<&Value> {
+        self.manifest.at(&["hlo"]).as_arr()?.iter().find(|h| {
+            h.at(&["model"]).as_str() == Some(model)
+                && h.at(&["variant"]).as_str() == Some(variant)
+                && h.at(&["batch"]).as_usize() == Some(batch)
+        })
+    }
+
+    pub fn testvectors(&self) -> Result<TensorMap> {
+        let rel = self
+            .manifest
+            .at(&["testvectors"])
+            .as_str()
+            .context("testvectors path")?;
+        tensorfile::read(&self.root.join(rel))
+    }
+}
+
+fn parse_enc_stats(weights: &TensorMap) -> Result<Vec<ActStats>> {
+    let t = weights
+        .get("enc.stats")
+        .context("weights missing enc.stats")?
+        .as_f32()?;
+    let e = t.dims()[0];
+    Ok((0..e)
+        .map(|i| ActStats {
+            mean: t.data[i * 3],
+            std: t.data[i * 3 + 1],
+            max: t.data[i * 3 + 2],
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arts() -> Option<Artifacts> {
+        Artifacts::locate().ok()
+    }
+
+    #[test]
+    fn loads_all_models() {
+        let Some(a) = arts() else { return };
+        let names = a.model_names();
+        assert_eq!(names.len(), 4);
+        for name in names {
+            let m = a.load_model(&name).unwrap();
+            assert!(m.fp32_acc > 0.7, "{name}: {}", m.fp32_acc);
+            assert_eq!(m.enc_stats.len(), m.engine.graph.num_enc_points());
+            for s in &m.enc_stats {
+                assert!(s.max > 0.0 && s.std > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn loads_datasets() {
+        let Some(a) = arts() else { return };
+        let ev = a.load_dataset("evalset").unwrap();
+        assert_eq!(ev.images.dims()[0], ev.labels.len());
+        assert_eq!(ev.images.dims()[3], 3);
+        let pf = a.load_dataset("profileset").unwrap();
+        assert!(pf.images.dims()[0] >= 256);
+    }
+
+    #[test]
+    fn hlo_entries_exist() {
+        let Some(a) = arts() else { return };
+        let entries = a.hlo_entries();
+        assert!(entries.len() >= 8);
+        for (_, _, _, p) in entries {
+            assert!(p.exists(), "{}", p.display());
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! im2col patch extraction (XLA "SAME" convention) — generic over dtype
+//! so fp32 activations and OverQ (codes, state) planes share the path.
+//!
+//! Padding follows XLA/TF SAME: `pad_lo = pad_total / 2`, which differs
+//! from naive symmetric padding for stride 2 on even sizes. Mirrors
+//! `python/compile/model.py::_im2col`; columns are ordered (dy, dx) outer
+//! with channels innermost per tap, matching the flattened weight layout
+//! (kh, kw, cin, cout) → (K, cout).
+
+use crate::tensor::Tensor;
+
+/// Output spatial size for SAME padding.
+pub fn same_out(h: usize, stride: usize) -> usize {
+    h.div_ceil(stride)
+}
+
+/// Extract patches from (N, H, W, C) into (N*OH*OW, kh*kw*C).
+/// Out-of-bounds taps read `T::default()` (zero — a real zero in OverQ
+/// terms, claimable like any ReLU zero in the padded stream).
+pub fn im2col<T: Copy + Default>(
+    x: &Tensor<T>,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+) -> (Tensor<T>, usize, usize) {
+    let (n, h, w, c) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
+    let oh = same_out(h, stride);
+    let ow = same_out(w, stride);
+    let pth = ((oh - 1) * stride + kh).saturating_sub(h);
+    let ptw = ((ow - 1) * stride + kw).saturating_sub(w);
+    let (ph, pw) = (pth / 2, ptw / 2);
+    let k = kh * kw * c;
+    let mut out = Tensor::<T>::zeros(&[n * oh * ow, k]);
+    for img in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((img * oh) + oy) * ow + ox;
+                let base = row * k;
+                for dy in 0..kh {
+                    let iy = (oy * stride + dy) as i64 - ph as i64;
+                    for dx in 0..kw {
+                        let ix = (ox * stride + dx) as i64 - pw as i64;
+                        let off = base + (dy * kw + dx) * c;
+                        if iy >= 0 && iy < h as i64 && ix >= 0 && ix < w as i64 {
+                            let src = ((img * h + iy as usize) * w + ix as usize) * c;
+                            out.data[off..off + c].copy_from_slice(&x.data[src..src + c]);
+                        }
+                        // else: stays default() (zero padding)
+                    }
+                }
+            }
+        }
+    }
+    (out, oh, ow)
+}
+
+/// Gather columns of an im2col matrix by a per-channel index (OCS):
+/// expands the channel dimension inside every (dy, dx) tap.
+pub fn gather_channels<T: Copy + Default>(
+    cols: &Tensor<T>,
+    c: usize,
+    taps: usize,
+    gather: &[usize],
+) -> Tensor<T> {
+    let m = cols.dims()[0];
+    let cg = gather.len();
+    let mut out = Tensor::<T>::zeros(&[m, taps * cg]);
+    for r in 0..m {
+        let src = cols.row(r);
+        let dst = out.row_mut(r);
+        for t in 0..taps {
+            for (gi, &g) in gather.iter().enumerate() {
+                dst[t * cg + gi] = src[t * c + g];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::TensorF;
+    use crate::util::rng::Rng;
+
+    /// Naive direct convolution for cross-checking.
+    fn conv_naive(x: &TensorF, w: &[f32], kh: usize, kw: usize, cin: usize, cout: usize, stride: usize) -> TensorF {
+        let (n, h, wd, _) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
+        let oh = same_out(h, stride);
+        let ow = same_out(wd, stride);
+        let pth = ((oh - 1) * stride + kh).saturating_sub(h);
+        let ptw = ((ow - 1) * stride + kw).saturating_sub(wd);
+        let (ph, pw) = (pth / 2, ptw / 2);
+        let mut out = TensorF::zeros(&[n, oh, ow, cout]);
+        for img in 0..n {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for oc in 0..cout {
+                        let mut acc = 0f32;
+                        for dy in 0..kh {
+                            for dx in 0..kw {
+                                let iy = (oy * stride + dy) as i64 - ph as i64;
+                                let ix = (ox * stride + dx) as i64 - pw as i64;
+                                if iy < 0 || ix < 0 || iy >= h as i64 || ix >= wd as i64 {
+                                    continue;
+                                }
+                                for ic in 0..cin {
+                                    acc += x.at(&[img, iy as usize, ix as usize, ic])
+                                        * w[(((dy * kw) + dx) * cin + ic) * cout + oc];
+                                }
+                            }
+                        }
+                        *out.at_mut(&[img, oy, ox, oc]) = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn im2col_matmul_matches_naive_conv() {
+        let mut rng = Rng::new(1);
+        for &(h, stride, kh) in &[(8usize, 1usize, 3usize), (8, 2, 3), (7, 2, 3), (8, 1, 1), (8, 2, 1)] {
+            let (cin, cout, n) = (5, 4, 2);
+            let mut x = TensorF::zeros(&[n, h, h, cin]);
+            for v in x.data.iter_mut() {
+                *v = rng.normal();
+            }
+            let mut w = vec![0f32; kh * kh * cin * cout];
+            for v in w.iter_mut() {
+                *v = rng.normal();
+            }
+            let want = conv_naive(&x, &w, kh, kh, cin, cout, stride);
+            let (cols, oh, ow) = im2col(&x, kh, kh, stride);
+            let k = kh * kh * cin;
+            let mut got = TensorF::zeros(&[n, oh, ow, cout]);
+            for r in 0..cols.dims()[0] {
+                for oc in 0..cout {
+                    let mut acc = 0f32;
+                    for kk in 0..k {
+                        acc += cols.data[r * k + kk] * w[kk * cout + oc];
+                    }
+                    got.data[r * cout + oc] = acc;
+                }
+            }
+            assert!(
+                got.allclose(&want, 1e-5, 1e-5),
+                "mismatch h={h} stride={stride} kh={kh}"
+            );
+        }
+    }
+
+    #[test]
+    fn gather_expands_channels() {
+        // 1x1 kernel, 3 channels, gather duplicates channel 1
+        let x = Tensor::from_vec(&[1, 1, 1, 3], vec![10, 20, 30]);
+        let (cols, _, _) = im2col(&x, 1, 1, 1);
+        let g = gather_channels(&cols, 3, 1, &[0, 1, 1, 2]);
+        assert_eq!(g.row(0), &[10, 20, 20, 30]);
+    }
+
+    #[test]
+    fn padding_is_zero() {
+        let x = TensorF::full(&[1, 2, 2, 1], 1.0);
+        let (cols, oh, ow) = im2col(&x, 3, 3, 1);
+        assert_eq!((oh, ow), (2, 2));
+        // top-left patch has 5 in-bounds ones, 4 padded zeros
+        let s: f32 = cols.row(0).iter().sum();
+        assert_eq!(s, 4.0); // (2x2 visible at kernel positions) — row 0 covers indices (-1..1)^2
+    }
+}

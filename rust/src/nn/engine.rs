@@ -1,0 +1,659 @@
+//! The graph executor: fp32 reference path + OverQ hardware path.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::io::tensorfile::TensorMap;
+use crate::overq::{self, encode_tensor, Encoded, OverQConfig};
+use crate::quant::uniform::{quantize_weights_mmse, QuantWeights};
+use crate::tensor::{TensorF, TensorI};
+
+use super::conv::im2col;
+use super::gemm::gemm_f32;
+use super::graph::{Graph, Node, Op};
+
+/// Per-run quantization configuration.
+#[derive(Clone, Debug)]
+pub struct QuantConfig {
+    /// OverQ mode (bits, cascade, RO/PR switches).
+    pub overq: OverQConfig,
+    /// Activation scale (clip / qmax) per enc point.
+    pub act_scales: Vec<f32>,
+}
+
+/// Prepared conv layer.
+#[derive(Clone, Debug)]
+struct PConv {
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    cin: usize,
+    cout: usize,
+    quant: bool,
+    /// Flattened fp32 weights (K, cout), K ordered (kh, kw, cin).
+    wf: TensorF,
+    bias: Vec<f32>,
+    /// Artifact-exported int8 codes/scales (bit-exact with JAX path).
+    qw: Option<QuantWeights>,
+    /// 1-rolled quantized weights for the OverQ GEMM.
+    wroll: Option<TensorI>,
+    /// OCS channel gather (replaces cin when present).
+    gather: Option<Vec<usize>>,
+}
+
+#[derive(Clone, Debug)]
+struct PDense {
+    w: TensorF,
+    bias: Vec<f32>,
+}
+
+/// The inference engine for one loaded model.
+pub struct Engine {
+    pub graph: Graph,
+    convs: HashMap<usize, PConv>,
+    denses: HashMap<usize, PDense>,
+}
+
+impl Engine {
+    /// Build from a parsed graph + the artifact weight map
+    /// (`weights/<model>.tensors`).
+    pub fn new(graph: Graph, weights: &TensorMap) -> Result<Engine> {
+        let mut convs = HashMap::new();
+        let mut denses = HashMap::new();
+        for node in &graph.nodes {
+            match &node.op {
+                Op::Conv {
+                    kh,
+                    kw,
+                    stride,
+                    cin,
+                    cout,
+                    relu: _,
+                    quant,
+                    enc: _,
+                } => {
+                    let w4 = weights
+                        .get(&format!("n{}.w", node.id))
+                        .with_context(|| format!("missing n{}.w", node.id))?
+                        .as_f32()?
+                        .clone();
+                    let k = kh * kw * cin;
+                    anyhow::ensure!(w4.numel() == k * cout, "n{} weight shape", node.id);
+                    let wf = w4.reshape(&[k, *cout]);
+                    let bias = weights
+                        .get(&format!("n{}.b", node.id))
+                        .with_context(|| format!("missing n{}.b", node.id))?
+                        .as_f32()?
+                        .data
+                        .clone();
+                    let (qw, wroll) = if *quant {
+                        // prefer exported codes (bit-exact with python)
+                        let qw = match (
+                            weights.get(&format!("n{}.wq", node.id)),
+                            weights.get(&format!("n{}.ws", node.id)),
+                        ) {
+                            (Some(c), Some(s)) => QuantWeights {
+                                codes: c.as_i32()?.clone(),
+                                scales: s.as_f32()?.data.clone(),
+                            },
+                            _ => quantize_weights_mmse(&wf, 8),
+                        };
+                        let wroll = overq::dotprod::roll_weights(&qw.codes);
+                        (Some(qw), Some(wroll))
+                    } else {
+                        (None, None)
+                    };
+                    convs.insert(
+                        node.id,
+                        PConv {
+                            kh: *kh,
+                            kw: *kw,
+                            stride: *stride,
+                            cin: *cin,
+                            cout: *cout,
+                            quant: *quant,
+                            wf,
+                            bias,
+                            qw,
+                            wroll,
+                            gather: None,
+                        },
+                    );
+                }
+                Op::Dense { cin, cout } => {
+                    let w = weights
+                        .get(&format!("n{}.w", node.id))
+                        .context("dense w")?
+                        .as_f32()?
+                        .clone()
+                        .reshape(&[*cin, *cout]);
+                    let bias = weights
+                        .get(&format!("n{}.b", node.id))
+                        .context("dense b")?
+                        .as_f32()?
+                        .data
+                        .clone();
+                    denses.insert(node.id, PDense { w, bias });
+                }
+                _ => {}
+            }
+        }
+        Ok(Engine {
+            graph,
+            convs,
+            denses,
+        })
+    }
+
+    /// Apply OCS channel splitting to every quantized conv: duplicate the
+    /// `ratio` fraction of input channels with the largest |w|, halve the
+    /// copies, and re-quantize the expanded weights (MMSE, 8-bit).
+    pub fn apply_ocs(&mut self, ratio: f64) {
+        for pc in self.convs.values_mut() {
+            if !pc.quant || ratio <= 0.0 {
+                continue;
+            }
+            let (kh, kw, cin, cout) = (pc.kh, pc.kw, pc.cin, pc.cout);
+            let taps = kh * kw;
+            // rank input channels by max |w| over taps and outputs
+            let mut mags: Vec<(f32, usize)> = (0..cin)
+                .map(|c| {
+                    let mut m = 0f32;
+                    for t in 0..taps {
+                        for j in 0..cout {
+                            m = m.max(pc.wf.data[(t * cin + c) * cout + j].abs());
+                        }
+                    }
+                    (m, c)
+                })
+                .collect();
+            mags.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            let nsplit = ((cin as f64 * ratio).ceil() as usize).min(cin);
+            let mut is_split = vec![false; cin];
+            for &(_, c) in &mags[..nsplit] {
+                is_split[c] = true;
+            }
+            let mut gather = Vec::with_capacity(cin + nsplit);
+            for c in 0..cin {
+                gather.push(c);
+                if is_split[c] {
+                    gather.push(c);
+                }
+            }
+            let cg = gather.len();
+            // expanded fp32 weights: duplicated channels halved
+            let mut wexp = TensorF::zeros(&[taps * cg, cout]);
+            for t in 0..taps {
+                for (gi, &src) in gather.iter().enumerate() {
+                    let f = if is_split[src] { 0.5 } else { 1.0 };
+                    for j in 0..cout {
+                        wexp.data[(t * cg + gi) * cout + j] =
+                            pc.wf.data[(t * cin + src) * cout + j] * f;
+                    }
+                }
+            }
+            let qw = quantize_weights_mmse(&wexp, 8);
+            pc.wroll = Some(overq::dotprod::roll_weights(&qw.codes));
+            pc.qw = Some(qw);
+            pc.gather = Some(gather);
+        }
+    }
+
+    /// Re-quantize all conv weights natively at `wbits` (default path
+    /// uses the artifact-exported 8-bit codes).
+    pub fn requantize_weights(&mut self, wbits: u32) {
+        for pc in self.convs.values_mut() {
+            if pc.quant && pc.gather.is_none() {
+                let qw = quantize_weights_mmse(&pc.wf, wbits);
+                pc.wroll = Some(overq::dotprod::roll_weights(&qw.codes));
+                pc.qw = Some(qw);
+            }
+        }
+    }
+
+    /// fp32 forward. Returns logits (N, classes); if `taps` is non-empty,
+    /// also collects those node outputs (for profiling / Fig. 6b).
+    pub fn forward_f32(&self, x: &TensorF, taps: &[usize]) -> Result<(TensorF, Vec<TensorF>)> {
+        let mut vals: Vec<Option<TensorF>> = vec![None; self.graph.nodes.len()];
+        for node in &self.graph.nodes {
+            let out = self.eval_f32(node, &vals, x)?;
+            vals[node.id] = Some(out);
+        }
+        let logits = vals
+            .last()
+            .and_then(|v| v.clone())
+            .context("empty graph")?;
+        let tap_out = taps
+            .iter()
+            .map(|&t| vals[t].clone().unwrap())
+            .collect();
+        Ok((logits, tap_out))
+    }
+
+    fn eval_f32(&self, node: &Node, vals: &[Option<TensorF>], x: &TensorF) -> Result<TensorF> {
+        let input = |i: usize| -> &TensorF { vals[node.inputs[i]].as_ref().unwrap() };
+        Ok(match &node.op {
+            Op::Input => x.clone(),
+            Op::Conv { relu, .. } => {
+                let pc = &self.convs[&node.id];
+                let src = input(0);
+                let (cols, oh, ow) = im2col(src, pc.kh, pc.kw, pc.stride);
+                let n = src.dims()[0];
+                let m = n * oh * ow;
+                let mut out = TensorF::zeros(&[m, pc.cout]);
+                gemm_f32(&cols, &pc.wf, &mut out);
+                add_bias_relu(&mut out, &pc.bias, *relu);
+                out.reshape(&[n, oh, ow, pc.cout])
+            }
+            Op::Add { relu } => {
+                let (a, b) = (input(0), input(1));
+                anyhow::ensure!(a.dims() == b.dims(), "add dims");
+                let mut out = a.clone();
+                for (o, &bv) in out.data.iter_mut().zip(&b.data) {
+                    *o += bv;
+                    if *relu && *o < 0.0 {
+                        *o = 0.0;
+                    }
+                }
+                out
+            }
+            Op::Concat => concat_channels(&node.inputs.iter().map(|&i| vals[i].as_ref().unwrap()).collect::<Vec<_>>()),
+            Op::MaxPool => pool2(input(0), true),
+            Op::AvgPool => pool2(input(0), false),
+            Op::Gap => gap(input(0)),
+            Op::Dense { .. } => {
+                let pd = &self.denses[&node.id];
+                let src = input(0);
+                let m = src.dims()[0];
+                let mut out = TensorF::zeros(&[m, pd.w.dims()[1]]);
+                gemm_f32(src, &pd.w, &mut out);
+                add_bias_relu(&mut out, &pd.bias, false);
+                out
+            }
+        })
+    }
+
+    /// OverQ hardware-path forward: encode at enc points, integer GEMM,
+    /// dequant. Bit-exact (codes/states) with the AOT JAX model.
+    pub fn forward_quant(&self, x: &TensorF, qc: &QuantConfig) -> Result<TensorF> {
+        anyhow::ensure!(
+            qc.act_scales.len() >= self.graph.num_enc_points(),
+            "need {} act scales, got {}",
+            self.graph.num_enc_points(),
+            qc.act_scales.len()
+        );
+        let mut vals: Vec<Option<TensorF>> = vec![None; self.graph.nodes.len()];
+        let mut encoded: HashMap<usize, Encoded> = HashMap::new();
+        for node in &self.graph.nodes {
+            let out = match &node.op {
+                Op::Conv { relu, quant: true, enc, .. } => {
+                    let pc = &self.convs[&node.id];
+                    let e = enc.context("quant conv without enc")?;
+                    let src = vals[node.inputs[0]].as_ref().unwrap();
+                    let n = src.dims()[0];
+                    let scale = qc.act_scales[e];
+                    let (ccols, scols, oh, ow, kdim) = if let Some(gather) = &pc.gather {
+                        // OCS: expand channels on the raw tensor, then
+                        // encode the expanded stream (hardware sees the
+                        // duplicated channels as real channels).
+                        let exp = expand_channels(src, gather);
+                        let encx = encode_tensor(&exp, scale, &qc.overq);
+                        let (cc, oh, ow) = im2col(&encx.codes, pc.kh, pc.kw, pc.stride);
+                        let (sc, _, _) = im2col(&encx.state, pc.kh, pc.kw, pc.stride);
+                        let k = pc.kh * pc.kw * gather.len();
+                        (cc, sc, oh, ow, k)
+                    } else {
+                        let encx = encoded.entry(e).or_insert_with(|| {
+                            encode_tensor(src, scale, &qc.overq)
+                        });
+                        let (cc, oh, ow) = im2col(&encx.codes, pc.kh, pc.kw, pc.stride);
+                        let (sc, _, _) = im2col(&encx.state, pc.kh, pc.kw, pc.stride);
+                        (cc, sc, oh, ow, pc.kh * pc.kw * pc.cin)
+                    };
+                    let m = n * oh * ow;
+                    let qw = pc.qw.as_ref().context("quant conv missing qweights")?;
+                    let wroll = pc.wroll.as_ref().unwrap();
+                    anyhow::ensure!(qw.codes.dims()[0] == kdim, "n{} K mismatch", node.id);
+                    let mut acc = TensorI::zeros(&[m, pc.cout]);
+                    overq::dotprod::gemm_overq(
+                        &ccols.reshape(&[m, kdim]),
+                        &scols.reshape(&[m, kdim]),
+                        &qw.codes,
+                        wroll,
+                        &qc.overq,
+                        &mut acc,
+                    );
+                    // dequant: acc * act_scale * w_scale / B + bias (+relu)
+                    let inv_b = 1.0f32 / qc.overq.b() as f32;
+                    let mut out = TensorF::zeros(&[m, pc.cout]);
+                    for i in 0..m {
+                        let arow = &acc.data[i * pc.cout..(i + 1) * pc.cout];
+                        let orow = &mut out.data[i * pc.cout..(i + 1) * pc.cout];
+                        for j in 0..pc.cout {
+                            let mut v =
+                                arow[j] as f32 * (scale * qw.scales[j] * inv_b) + pc.bias[j];
+                            if *relu && v < 0.0 {
+                                v = 0.0;
+                            }
+                            orow[j] = v;
+                        }
+                    }
+                    out.reshape(&[n, oh, ow, pc.cout])
+                }
+                _ => self.eval_f32(node, &vals, x)?,
+            };
+            vals[node.id] = Some(out);
+        }
+        vals.last().and_then(|v| v.clone()).context("empty graph")
+    }
+
+    /// Classification accuracy over a labeled batch (fp32 path).
+    pub fn accuracy_f32(&self, images: &TensorF, labels: &[i32], batch: usize) -> Result<f64> {
+        self.accuracy_with(images, labels, batch, |xb| {
+            Ok(self.forward_f32(xb, &[])?.0)
+        })
+    }
+
+    /// Classification accuracy over a labeled batch (quant path).
+    pub fn accuracy_quant(
+        &self,
+        images: &TensorF,
+        labels: &[i32],
+        batch: usize,
+        qc: &QuantConfig,
+    ) -> Result<f64> {
+        self.accuracy_with(images, labels, batch, |xb| self.forward_quant(xb, qc))
+    }
+
+    fn accuracy_with<F>(&self, images: &TensorF, labels: &[i32], batch: usize, fwd: F) -> Result<f64>
+    where
+        F: Fn(&TensorF) -> Result<TensorF>,
+    {
+        let n = images.dims()[0];
+        anyhow::ensure!(labels.len() >= n, "labels too short");
+        let img_sz: usize = images.dims()[1..].iter().product();
+        let mut correct = 0usize;
+        let mut i = 0;
+        while i < n {
+            let bsz = batch.min(n - i);
+            let mut dims = vec![bsz];
+            dims.extend_from_slice(&images.dims()[1..]);
+            let xb = TensorF::from_vec(
+                &dims,
+                images.data[i * img_sz..(i + bsz) * img_sz].to_vec(),
+            );
+            let logits = fwd(&xb)?;
+            let classes = logits.dims()[1];
+            for b in 0..bsz {
+                let row = &logits.data[b * classes..(b + 1) * classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred as i32 == labels[i + b] {
+                    correct += 1;
+                }
+            }
+            i += bsz;
+        }
+        Ok(correct as f64 / n as f64)
+    }
+}
+
+fn add_bias_relu(out: &mut TensorF, bias: &[f32], relu: bool) {
+    let n = bias.len();
+    for row in 0..out.dims()[0] {
+        let orow = &mut out.data[row * n..(row + 1) * n];
+        for j in 0..n {
+            orow[j] += bias[j];
+            if relu && orow[j] < 0.0 {
+                orow[j] = 0.0;
+            }
+        }
+    }
+}
+
+fn concat_channels(inputs: &[&TensorF]) -> TensorF {
+    let (n, h, w) = (
+        inputs[0].dims()[0],
+        inputs[0].dims()[1],
+        inputs[0].dims()[2],
+    );
+    let ctotal: usize = inputs.iter().map(|t| t.dims()[3]).sum();
+    let mut out = TensorF::zeros(&[n, h, w, ctotal]);
+    let rows = n * h * w;
+    for r in 0..rows {
+        let dst = out.row_mut(r);
+        let mut off = 0;
+        for t in inputs {
+            let c = t.dims()[3];
+            dst[off..off + c].copy_from_slice(t.row(r));
+            off += c;
+        }
+    }
+    out
+}
+
+fn pool2(x: &TensorF, is_max: bool) -> TensorF {
+    let (n, h, w, c) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = TensorF::zeros(&[n, oh, ow, c]);
+    for img in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..c {
+                    let vals = [
+                        x.at(&[img, oy * 2, ox * 2, ch]),
+                        x.at(&[img, oy * 2, ox * 2 + 1, ch]),
+                        x.at(&[img, oy * 2 + 1, ox * 2, ch]),
+                        x.at(&[img, oy * 2 + 1, ox * 2 + 1, ch]),
+                    ];
+                    *out.at_mut(&[img, oy, ox, ch]) = if is_max {
+                        vals.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v))
+                    } else {
+                        vals.iter().sum::<f32>() / 4.0
+                    };
+                }
+            }
+        }
+    }
+    out
+}
+
+fn gap(x: &TensorF) -> TensorF {
+    let (n, h, w, c) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
+    let mut out = TensorF::zeros(&[n, c]);
+    for img in 0..n {
+        for y in 0..h {
+            for xx in 0..w {
+                for ch in 0..c {
+                    out.data[img * c + ch] += x.at(&[img, y, xx, ch]);
+                }
+            }
+        }
+        for ch in 0..c {
+            out.data[img * c + ch] /= (h * w) as f32;
+        }
+    }
+    out
+}
+
+/// Duplicate channels of an (N,H,W,C) tensor according to a gather index.
+fn expand_channels(x: &TensorF, gather: &[usize]) -> TensorF {
+    let (n, h, w, c) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
+    let cg = gather.len();
+    let mut out = TensorF::zeros(&[n, h, w, cg]);
+    let rows = n * h * w;
+    for r in 0..rows {
+        let src = &x.data[r * c..(r + 1) * c];
+        let dst = out.row_mut(r);
+        for (gi, &g) in gather.iter().enumerate() {
+            dst[gi] = src[g];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::tensorfile::{AnyTensor, TensorMap};
+    use crate::util::json::parse;
+    use crate::util::rng::Rng;
+
+    fn toy_engine(quant: bool) -> Engine {
+        let graph = Graph::from_json(
+            &parse(&format!(
+                r#"{{
+          "name": "toy",
+          "nodes": [
+            {{"id": 0, "op": "input", "in": []}},
+            {{"id": 1, "op": "conv", "in": [0], "kh": 3, "kw": 3, "stride": 1,
+             "cin": 3, "cout": 4, "relu": true, "quant": false}},
+            {{"id": 2, "op": "conv", "in": [1], "kh": 3, "kw": 3, "stride": 2,
+             "cin": 4, "cout": 6, "relu": true, "quant": {quant}, "enc": 0}},
+            {{"id": 3, "op": "gap", "in": [2]}},
+            {{"id": 4, "op": "dense", "in": [3], "cin": 6, "cout": 5}}
+          ]
+        }}"#
+            ))
+            .unwrap(),
+        )
+        .unwrap();
+        let mut rng = Rng::new(42);
+        let mut weights = TensorMap::new();
+        let mut add_w = |name: &str, dims: &[usize]| {
+            let mut t = TensorF::zeros(dims);
+            for v in t.data.iter_mut() {
+                *v = rng.normal() * 0.3;
+            }
+            weights.insert(name.into(), AnyTensor::F32(t));
+        };
+        add_w("n1.w", &[3, 3, 3, 4]);
+        add_w("n1.b", &[4]);
+        add_w("n2.w", &[3, 3, 4, 6]);
+        add_w("n2.b", &[6]);
+        add_w("n4.w", &[6, 5]);
+        add_w("n4.b", &[5]);
+        Engine::new(graph, &weights).unwrap()
+    }
+
+    fn rand_input(seed: u64, n: usize) -> TensorF {
+        let mut rng = Rng::new(seed);
+        let mut x = TensorF::zeros(&[n, 8, 8, 3]);
+        for v in x.data.iter_mut() {
+            *v = rng.normal();
+        }
+        x
+    }
+
+    #[test]
+    fn f32_forward_shapes() {
+        let e = toy_engine(false);
+        let x = rand_input(1, 2);
+        let (logits, taps) = e.forward_f32(&x, &[1, 2]).unwrap();
+        assert_eq!(logits.dims(), &[2, 5]);
+        assert_eq!(taps[0].dims(), &[2, 8, 8, 4]);
+        assert_eq!(taps[1].dims(), &[2, 4, 4, 6]);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn quant_approaches_f32_at_fine_scale() {
+        let e = toy_engine(true);
+        let x = rand_input(2, 2);
+        let (fp, taps) = e.forward_f32(&x, &[1]).unwrap();
+        let max = taps[0].max_abs();
+        // bits=6 with scale covering the whole range: small act error
+        let qc = QuantConfig {
+            overq: OverQConfig::baseline(6),
+            act_scales: vec![max / 63.0],
+        };
+        let q = e.forward_quant(&x, &qc).unwrap();
+        for (a, b) in fp.data.iter().zip(&q.data) {
+            assert!((a - b).abs() < 0.25 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn overq_no_worse_than_baseline_on_aggressive_clip() {
+        let e = toy_engine(true);
+        let x = rand_input(3, 4);
+        let (fp, taps) = e.forward_f32(&x, &[1]).unwrap();
+        let std = taps[0].std();
+        let scale = 2.0 * std / 15.0; // aggressive 4-bit clip → many outliers
+        let l2 = |a: &TensorF, b: &TensorF| -> f64 {
+            a.data
+                .iter()
+                .zip(&b.data)
+                .map(|(&x, &y)| ((x - y) as f64).powi(2))
+                .sum()
+        };
+        let base = e
+            .forward_quant(
+                &x,
+                &QuantConfig {
+                    overq: OverQConfig::baseline(4),
+                    act_scales: vec![scale],
+                },
+            )
+            .unwrap();
+        let ovq = e
+            .forward_quant(
+                &x,
+                &QuantConfig {
+                    overq: OverQConfig::full(4, 4),
+                    act_scales: vec![scale],
+                },
+            )
+            .unwrap();
+        assert!(
+            l2(&ovq, &fp) <= l2(&base, &fp),
+            "overq {} vs base {}",
+            l2(&ovq, &fp),
+            l2(&base, &fp)
+        );
+    }
+
+    #[test]
+    fn ocs_preserves_behavior() {
+        let mut e = toy_engine(true);
+        let x = rand_input(4, 2);
+        let (_, taps) = e.forward_f32(&x, &[1]).unwrap();
+        let scale = taps[0].max_abs() / 15.0;
+        let qc = QuantConfig {
+            overq: OverQConfig::baseline(4),
+            act_scales: vec![scale],
+        };
+        let before = e.forward_quant(&x, &qc).unwrap();
+        e.apply_ocs(0.25);
+        let after = e.forward_quant(&x, &qc).unwrap();
+        // OCS changes quantization error but not the function: outputs
+        // stay close to the unsplit quantized outputs.
+        for (a, b) in before.data.iter().zip(&after.data) {
+            assert!((a - b).abs() < 0.5 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let e = toy_engine(false);
+        let x = rand_input(5, 4);
+        let (logits, _) = e.forward_f32(&x, &[]).unwrap();
+        let labels: Vec<i32> = (0..4)
+            .map(|i| {
+                let row = &logits.data[i * 5..(i + 1) * 5];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0 as i32
+            })
+            .collect();
+        let acc = e.accuracy_f32(&x, &labels, 2).unwrap();
+        assert_eq!(acc, 1.0);
+    }
+}

@@ -1,0 +1,59 @@
+//! f32 GEMM for the fp32 path (convs via im2col, the final dense layer).
+//!
+//! Row-major `out(M,N) = A(M,K) · W(K,N)`, i-k-j loop order so the inner
+//! loop is a contiguous axpy over W rows (auto-vectorizes well), with a
+//! zero-skip on A that exploits ReLU sparsity.
+
+use crate::tensor::TensorF;
+
+/// out += A @ W. `out` must be zeroed by the caller if accumulation
+/// isn't wanted.
+pub fn gemm_f32(a: &TensorF, w: &TensorF, out: &mut TensorF) {
+    let (m, k) = (a.dims()[0], a.dims()[1]);
+    let n = w.dims()[1];
+    assert_eq!(w.dims()[0], k, "inner dims");
+    assert_eq!(out.dims(), &[m, n]);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // ReLU sparsity
+            }
+            let wrow = &w.data[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += av * wrow[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn prop_matches_naive() {
+        check("gemm matches naive", 60, |rng: &mut Rng| {
+            let (m, k, n) = (1 + rng.index(12), 1 + rng.index(20), 1 + rng.index(12));
+            let mut a = TensorF::zeros(&[m, k]);
+            let mut w = TensorF::zeros(&[k, n]);
+            for v in a.data.iter_mut() {
+                *v = if rng.bool(0.3) { 0.0 } else { rng.normal() };
+            }
+            for v in w.data.iter_mut() {
+                *v = rng.normal();
+            }
+            let mut out = TensorF::zeros(&[m, n]);
+            gemm_f32(&a, &w, &mut out);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f32 = (0..k).map(|x| a.data[i * k + x] * w.data[x * n + j]).sum();
+                    assert!((out.data[i * n + j] - want).abs() < 1e-4 * (1.0 + want.abs()));
+                }
+            }
+        });
+    }
+}

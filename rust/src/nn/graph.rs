@@ -1,0 +1,197 @@
+//! Graph IR — parse the JSON exported by python (`graphs/<model>.json`).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// Node operation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    Input,
+    Conv {
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        cin: usize,
+        cout: usize,
+        relu: bool,
+        quant: bool,
+        /// Enc-point index of the input tensor (quant convs only).
+        enc: Option<usize>,
+    },
+    Add {
+        relu: bool,
+    },
+    Concat,
+    MaxPool,
+    AvgPool,
+    Gap,
+    Dense {
+        cin: usize,
+        cout: usize,
+    },
+}
+
+/// One SSA node.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: usize,
+    pub op: Op,
+    pub inputs: Vec<usize>,
+}
+
+/// The model graph.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn from_json(v: &Value) -> Result<Graph> {
+        let name = v
+            .at(&["name"])
+            .as_str()
+            .context("graph missing name")?
+            .to_string();
+        let nodes_json = v.at(&["nodes"]).as_arr().context("graph missing nodes")?;
+        let mut nodes = Vec::with_capacity(nodes_json.len());
+        for (i, n) in nodes_json.iter().enumerate() {
+            let id = n.at(&["id"]).as_usize().context("node missing id")?;
+            if id != i {
+                bail!("node ids must be dense SSA order (got {id} at {i})");
+            }
+            let inputs: Vec<usize> = n
+                .at(&["in"])
+                .as_arr()
+                .context("node missing in")?
+                .iter()
+                .map(|x| x.as_usize().unwrap())
+                .collect();
+            for &src in &inputs {
+                if src >= i {
+                    bail!("node {i}: input {src} violates SSA order");
+                }
+            }
+            let op = match n.at(&["op"]).as_str().context("node missing op")? {
+                "input" => Op::Input,
+                "conv" => Op::Conv {
+                    kh: n.at(&["kh"]).as_usize().context("conv kh")?,
+                    kw: n.at(&["kw"]).as_usize().context("conv kw")?,
+                    stride: n.at(&["stride"]).as_usize().context("conv stride")?,
+                    cin: n.at(&["cin"]).as_usize().context("conv cin")?,
+                    cout: n.at(&["cout"]).as_usize().context("conv cout")?,
+                    relu: n.at(&["relu"]).as_bool().unwrap_or(false),
+                    quant: n.at(&["quant"]).as_bool().unwrap_or(false),
+                    enc: n.at(&["enc"]).as_usize(),
+                },
+                "add" => Op::Add {
+                    relu: n.at(&["relu"]).as_bool().unwrap_or(false),
+                },
+                "concat" => Op::Concat,
+                "maxpool" => Op::MaxPool,
+                "avgpool" => Op::AvgPool,
+                "gap" => Op::Gap,
+                "dense" => Op::Dense {
+                    cin: n.at(&["cin"]).as_usize().context("dense cin")?,
+                    cout: n.at(&["cout"]).as_usize().context("dense cout")?,
+                },
+                other => bail!("unknown op {other}"),
+            };
+            nodes.push(Node { id, op, inputs });
+        }
+        Ok(Graph { name, nodes })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Graph> {
+        Graph::from_json(&crate::util::json::parse_file(path)?)
+    }
+
+    /// Number of enc points (distinct tensors feeding quantized convs).
+    pub fn num_enc_points(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                Op::Conv { enc: Some(e), .. } => Some(*e + 1),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Node id producing each enc-point tensor.
+    pub fn enc_point_sources(&self) -> Vec<usize> {
+        let mut srcs = vec![usize::MAX; self.num_enc_points()];
+        for n in &self.nodes {
+            if let Op::Conv { enc: Some(e), .. } = &n.op {
+                srcs[*e] = n.inputs[0];
+            }
+        }
+        srcs
+    }
+
+    /// Quantized conv node ids in execution order.
+    pub fn quant_convs(&self) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Conv { quant: true, .. }))
+            .map(|n| n.id)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    const SAMPLE: &str = r#"{
+      "name": "toy",
+      "nodes": [
+        {"id": 0, "op": "input", "in": []},
+        {"id": 1, "op": "conv", "in": [0], "kh": 3, "kw": 3, "stride": 1,
+         "cin": 3, "cout": 8, "relu": true, "quant": false},
+        {"id": 2, "op": "conv", "in": [1], "kh": 3, "kw": 3, "stride": 2,
+         "cin": 8, "cout": 16, "relu": true, "quant": true, "enc": 0},
+        {"id": 3, "op": "gap", "in": [2]},
+        {"id": 4, "op": "dense", "in": [3], "cin": 16, "cout": 10}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let g = Graph::from_json(&parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(g.name, "toy");
+        assert_eq!(g.nodes.len(), 5);
+        assert_eq!(g.num_enc_points(), 1);
+        assert_eq!(g.enc_point_sources(), vec![1]);
+        assert_eq!(g.quant_convs(), vec![2]);
+        match &g.nodes[2].op {
+            Op::Conv { stride, quant, enc, .. } => {
+                assert_eq!(*stride, 2);
+                assert!(quant);
+                assert_eq!(*enc, Some(0));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_ssa() {
+        let bad = SAMPLE.replace("\"in\": [1],", "\"in\": [9],");
+        assert!(Graph::from_json(&parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn real_artifact_graphs_parse() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/graphs");
+        if !dir.exists() {
+            return; // artifacts not built yet
+        }
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let p = entry.unwrap().path();
+            let g = Graph::load(&p).unwrap();
+            assert!(g.num_enc_points() > 0, "{}", g.name);
+        }
+    }
+}

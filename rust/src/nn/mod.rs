@@ -1,0 +1,21 @@
+//! Native inference engine executing the graph IR exported by
+//! `python/compile/model.py`.
+//!
+//! Two execution paths over the same graph:
+//! * **fp32** — folded conv+bias forward (reference accuracy, activation
+//!   profiling taps).
+//! * **quant** — the hardware path: OverQ-encode each enc-point tensor,
+//!   im2col the (codes, state) planes, run the OverQ integer GEMM
+//!   (`overq::dotprod::gemm_overq`, numerically identical to the Pallas
+//!   kernel), dequantize, bias, ReLU.
+//!
+//! Codes and states are bit-exact with the JAX path (verified against
+//! dumped test vectors in `tests/integration_crosslang.rs`).
+
+pub mod conv;
+pub mod engine;
+pub mod gemm;
+pub mod graph;
+
+pub use engine::{Engine, QuantConfig};
+pub use graph::{Graph, Node, Op};

@@ -1,0 +1,163 @@
+//! Outlier-coverage analysis (paper §3.2, Table 1, Eq. 1).
+//!
+//! *Outlier coverage* = fraction of outliers (values the quantizer would
+//! clip) handled by range overwrite. Eq. (1) models it as
+//! `P = 1 - (1 - p0)^c` under iid zeros with probability p0.
+
+use crate::tensor::TensorF;
+
+use super::encode::{encode_tensor, int_codes};
+use super::state::{OverQConfig, MSB};
+
+/// Coverage statistics for one activation tensor at one config.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoverageStats {
+    /// Total values inspected.
+    pub total: usize,
+    /// Values exceeding qmax (would be clipped by plain quantization).
+    pub outliers: usize,
+    /// Outliers covered by range overwrite.
+    pub covered: usize,
+    /// Exact zeros.
+    pub zeros: usize,
+    /// Slots claimed for precision overwrite.
+    pub pr_slots: usize,
+}
+
+impl CoverageStats {
+    /// Fraction of outliers covered (1.0 when there are none).
+    pub fn coverage(&self) -> f64 {
+        if self.outliers == 0 {
+            1.0
+        } else {
+            self.covered as f64 / self.outliers as f64
+        }
+    }
+
+    pub fn zero_frac(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.zeros as f64 / self.total as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &CoverageStats) {
+        self.total += o.total;
+        self.outliers += o.outliers;
+        self.covered += o.covered;
+        self.zeros += o.zeros;
+        self.pr_slots += o.pr_slots;
+    }
+}
+
+/// Eq. (1): probability a zero lies within `c` slots, iid zeros at `p0`.
+pub fn theory_coverage(p0: f64, cascade: usize) -> f64 {
+    1.0 - (1.0 - p0).powi(cascade as i32)
+}
+
+/// Measure coverage of an activation tensor at the given scale/config.
+///
+/// Counts MSB slots (each identifies exactly one covered outlier) against
+/// the raw outlier count from the pre-encode integer codes.
+pub fn coverage_stats(x: &TensorF, scale: f32, cfg: &OverQConfig) -> CoverageStats {
+    let mut s = CoverageStats {
+        total: x.numel(),
+        ..Default::default()
+    };
+    let inv = 1.0f32 / scale;
+    let bf = cfg.b() as f32;
+    let qmax = cfg.qmax();
+    for &v in &x.data {
+        let (code, _) = int_codes(v, inv, bf);
+        if code > qmax {
+            s.outliers += 1;
+        }
+        if code == 0 {
+            s.zeros += 1;
+        }
+    }
+    let enc = encode_tensor(x, scale, cfg);
+    for (k, &st) in enc.state.data.iter().enumerate() {
+        if st == MSB {
+            s.covered += 1;
+        }
+        if st == super::state::LSB {
+            s.pr_slots += 1;
+        }
+        let _ = k;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn synth(rng: &mut Rng, rows: usize, c: usize, p0: f64, pout: f64) -> TensorF {
+        let mut x = TensorF::zeros(&[rows, c]);
+        for v in x.data.iter_mut() {
+            *v = if rng.bool(p0) {
+                0.0
+            } else if rng.bool(pout) {
+                rng.normal().abs() * 4.0 + 5.0
+            } else {
+                rng.normal().abs() * 0.8 + 0.05
+            };
+        }
+        x
+    }
+
+    #[test]
+    fn eq1_matches_bernoulli_simulation() {
+        // iid zero pattern + sparse outliers: measured coverage tracks
+        // Eq. (1) within sampling error (the paper's Table 1 'Theory').
+        let mut rng = Rng::new(2024);
+        let x = synth(&mut rng, 600, 64, 0.5, 0.012);
+        for c in 1..=4 {
+            let cfg = OverQConfig::ro(4, c);
+            let s = coverage_stats(&x, 0.35, &cfg);
+            assert!(s.outliers > 50, "need outliers, got {}", s.outliers);
+            let want = theory_coverage(s.zero_frac(), c);
+            assert!(
+                (s.coverage() - want).abs() < 0.12,
+                "c={c}: got {} want {}",
+                s.coverage(),
+                want
+            );
+        }
+    }
+
+    #[test]
+    fn coverage_monotone_in_cascade() {
+        check("coverage monotone in c", 60, |rng: &mut Rng| {
+            let p0 = 0.4 + rng.f64() * 0.3;
+            let x = synth(rng, 40, 32, p0, 0.05);
+            let mut prev = -1.0;
+            for c in 1..=6 {
+                let s = coverage_stats(&x, 0.3, &OverQConfig::ro(4, c));
+                assert!(s.coverage() >= prev - 1e-12);
+                prev = s.coverage();
+            }
+        });
+    }
+
+    #[test]
+    fn theory_limits() {
+        assert_eq!(theory_coverage(0.5, 1), 0.5);
+        assert_eq!(theory_coverage(0.5, 2), 0.75);
+        assert!((theory_coverage(0.5, 6) - 0.984375).abs() < 1e-9);
+        assert_eq!(theory_coverage(0.0, 5), 0.0);
+        assert_eq!(theory_coverage(1.0, 1), 1.0);
+    }
+
+    #[test]
+    fn no_outliers_full_coverage() {
+        let x = TensorF::from_vec(&[1, 4], vec![0.1, 0.0, 0.2, 0.0]);
+        let s = coverage_stats(&x, 0.1, &OverQConfig::ro(4, 2));
+        assert_eq!(s.outliers, 0);
+        assert_eq!(s.coverage(), 1.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! Decoding: reconstruct effective dequantized activations from slot
+//! codes + states (the "fake-quant view" used by accuracy experiments).
+//!
+//! Identity (DESIGN.md §7): the hardware dot product over slots equals
+//! the plain dot product over this decoded tensor — tested in dotprod.rs.
+
+use crate::tensor::{Tensor, TensorF, TensorI};
+
+use super::state::{OverQConfig, SlotState, LSB, MSB, NORM, SHIFT};
+
+/// Decode one row of slot codes to effective values at ORIGINAL indices.
+///
+/// x̂_k = codes[k+1]                 if state[k+1] == SHIFT (value moved)
+///     = 0                          if state[k]  != NORM (consumed zero)
+///     = codes[k] + codes[k+1]·B    if state[k+1] == MSB (chain start)
+///     = codes[k] + codes[k+1]/B    if state[k+1] == LSB (PR)
+///     = codes[k]                   otherwise
+/// all times `scale`.
+pub fn decode_channels(
+    codes: &[i32],
+    state: &[SlotState],
+    scale: f32,
+    cfg: &OverQConfig,
+    out: &mut [f32],
+) {
+    let c = codes.len();
+    let b = cfg.b() as f32;
+    for k in 0..c {
+        let nxt_state = if k + 1 < c { state[k + 1] } else { NORM };
+        let nxt_code = if k + 1 < c { codes[k + 1] } else { 0 };
+        let v = if nxt_state == SHIFT {
+            nxt_code as f32
+        } else if state[k] != NORM {
+            0.0
+        } else {
+            match nxt_state {
+                MSB => codes[k] as f32 + nxt_code as f32 * b,
+                LSB => codes[k] as f32 + nxt_code as f32 / b,
+                _ => codes[k] as f32,
+            }
+        };
+        out[k] = v * scale;
+    }
+}
+
+/// Decode an (R, C) code matrix (row-wise [`decode_channels`]).
+pub fn decode_rows(
+    codes: &TensorI,
+    state: &Tensor<SlotState>,
+    scale: f32,
+    cfg: &OverQConfig,
+) -> TensorF {
+    let mut out = TensorF::zeros(codes.dims());
+    let c = *codes.dims().last().unwrap();
+    for r in 0..codes.num_rows() {
+        decode_channels(
+            codes.row(r),
+            state.row(r),
+            scale,
+            cfg,
+            &mut out.data[r * c..(r + 1) * c],
+        );
+    }
+    out
+}
+
+/// Alias matching the python API name.
+pub fn fakequant_from_codes(
+    codes: &TensorI,
+    state: &Tensor<SlotState>,
+    scale: f32,
+    cfg: &OverQConfig,
+) -> TensorF {
+    decode_rows(codes, state, scale, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::overq::encode::{encode_channels, encode_tensor};
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn decode_chain() {
+        let cfg = OverQConfig::ro(4, 3);
+        let v = [20, 3, 5, 0, 2];
+        let vf: Vec<i32> = v.iter().map(|&x| x * 16).collect();
+        let (mut codes, mut state) = (vec![0; 5], vec![0u8; 5]);
+        encode_channels(&v, &vf, &cfg, &mut codes, &mut state);
+        let mut out = vec![0.0; 5];
+        decode_channels(&codes, &state, 1.0, &cfg, &mut out);
+        // original values: 20 (covered outlier), 3, 5, 0 (consumed), 2
+        assert_eq!(out, vec![20.0, 3.0, 5.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn prop_error_never_worse_than_clip() {
+        check("decode error <= clip error pointwise", 200, |rng: &mut Rng| {
+            let cfg = OverQConfig {
+                bits: 4,
+                cascade: 1 + rng.index(5),
+                range_overwrite: true,
+                precision_overwrite: rng.bool(0.5),
+            };
+            let c = 1 + rng.index(40);
+            let scale = 0.25f32;
+            let mut x = TensorF::zeros(&[1, c]);
+            for v in x.data.iter_mut() {
+                *v = if rng.bool(0.5) {
+                    0.0
+                } else {
+                    rng.normal().abs() * (if rng.bool(0.1) { 8.0 } else { 1.0 })
+                };
+            }
+            let enc = encode_tensor(&x, scale, &cfg);
+            let dec = decode_rows(&enc.codes, &enc.state, scale, &cfg);
+            let qmax = cfg.qmax() as f32;
+            for k in 0..c {
+                let xv = x.data[k];
+                let base = ((xv / scale + 0.5).floor().clamp(0.0, qmax)) * scale;
+                let e_base = (xv - base).abs();
+                let e_ovq = (xv - dec.data[k]).abs();
+                assert!(
+                    e_ovq <= e_base + 1e-5,
+                    "worse at {k}: x={xv} base={base} ovq={}",
+                    dec.data[k]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn zeros_stay_zero() {
+        let cfg = OverQConfig::full(4, 4);
+        let x = TensorF::zeros(&[2, 8]);
+        let enc = encode_tensor(&x, 0.1, &cfg);
+        let dec = decode_rows(&enc.codes, &enc.state, 0.1, &cfg);
+        assert!(dec.data.iter().all(|&v| v == 0.0));
+    }
+}

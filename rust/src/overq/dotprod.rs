@@ -1,0 +1,195 @@
+//! The OverQ dot product / GEMM — the hardware-view computation.
+//!
+//! `sum_k codes[k] * factor[k] * w[sel(k)]` with `sel(k) = k-1` for all
+//! non-NORM slots (weight copy from the adjacent PE) and per-slot factor
+//! B / B² / 1 (NORM-SHIFT / MSB / LSB). The result is `B * Σ x̂·w` in
+//! fixed point; epilogues fold the extra B into the dequant scale.
+//!
+//! `gemm_overq` is the native analogue of the Pallas kernel
+//! (`python/compile/kernels/overq_matmul.py`): the state-muxed weight
+//! copy becomes a second GEMM against the 1-rolled weight matrix:
+//! `out = A0 @ W + A1 @ Wroll`.
+
+use crate::tensor::{Tensor, TensorI};
+
+use super::state::{OverQConfig, SlotState, NORM};
+
+/// Slot-wise dot product against one weight column (reference form).
+pub fn dot_fixed_point(
+    codes: &[i32],
+    state: &[SlotState],
+    w: &[i32],
+    cfg: &OverQConfig,
+) -> i64 {
+    let mut acc = 0i64;
+    for k in 0..codes.len() {
+        let wsel = if state[k] != NORM {
+            if k == 0 {
+                0
+            } else {
+                w[k - 1]
+            }
+        } else {
+            w[k]
+        };
+        acc += codes[k] as i64 * cfg.factor(state[k]) * wsel as i64;
+    }
+    acc
+}
+
+/// OverQ GEMM: (M,K) codes/state × (K,N) int8-range weights → (M,N) i32.
+///
+/// Identical numerics to the Pallas kernel; accumulates in i32 (bounds
+/// proven for b ≤ 5, K ≤ 512 — see python/tests/test_kernel.py).
+/// `wroll` must be `w` shifted down one row (row 0 = zeros); pass the
+/// output of [`roll_weights`].
+pub fn gemm_overq(
+    codes: &TensorI,
+    state: &Tensor<SlotState>,
+    w: &TensorI,
+    wroll: &TensorI,
+    cfg: &OverQConfig,
+    out: &mut TensorI,
+) {
+    let (m, k) = (codes.dims()[0], codes.dims()[1]);
+    let n = w.dims()[1];
+    assert_eq!(w.dims()[0], k);
+    assert_eq!(out.dims(), &[m, n]);
+    let b = cfg.b();
+    let bb = b * b;
+    out.data.fill(0);
+    // Row-major GEMM with the decode fused into the k loop. Each slot
+    // reads EITHER w[kk] (NORM) or wroll[kk] (the weight-copy states),
+    // so exactly one axpy per non-zero slot; ReLU zeros (~50 % of
+    // slots) are skipped entirely — the §Perf optimization that took
+    // this kernel from 1.05 to >3 GOPS (EXPERIMENTS.md §Perf).
+    // per-state factor table: NORM/SHIFT -> B, MSB -> B*B, LSB -> 1
+    let ftab = [b, bb, b, 1i32];
+    for i in 0..m {
+        let crow = codes.row(i);
+        let srow = state.row(i);
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let code = crow[kk];
+            if code == 0 {
+                continue;
+            }
+            let st = srow[kk];
+            let v = code * ftab[(st & 3) as usize];
+            let wrow = if st == NORM {
+                &w.data[kk * n..(kk + 1) * n]
+            } else {
+                &wroll.data[kk * n..(kk + 1) * n]
+            };
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += v * wv;
+            }
+        }
+    }
+}
+
+/// Build the 1-rolled weight matrix (row 0 zeroed) used by [`gemm_overq`].
+pub fn roll_weights(w: &TensorI) -> TensorI {
+    let (k, n) = (w.dims()[0], w.dims()[1]);
+    let mut out = TensorI::zeros(&[k, n]);
+    out.data[n..].copy_from_slice(&w.data[..(k - 1) * n]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::overq::decode::decode_rows;
+    use crate::overq::encode::encode_tensor;
+    use crate::tensor::TensorF;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn rand_acts(rng: &mut Rng, m: usize, k: usize) -> TensorF {
+        let mut x = TensorF::zeros(&[m, k]);
+        for v in x.data.iter_mut() {
+            *v = if rng.bool(0.5) {
+                0.0
+            } else {
+                rng.normal().abs() * (if rng.bool(0.08) { 10.0 } else { 1.0 })
+            };
+        }
+        x
+    }
+
+    #[test]
+    fn prop_gemm_equals_decode_identity() {
+        // hardware GEMM == B * (decoded activations @ W), exactly.
+        check("overq gemm identity", 120, |rng: &mut Rng| {
+            let (m, k, n) = (1 + rng.index(12), 1 + rng.index(40), 1 + rng.index(12));
+            let cfg = OverQConfig {
+                bits: 4,
+                cascade: 1 + rng.index(5),
+                range_overwrite: rng.bool(0.8),
+                precision_overwrite: rng.bool(0.5),
+            };
+            let scale = 0.2f32;
+            let x = rand_acts(rng, m, k);
+            let enc = encode_tensor(&x, scale, &cfg);
+            let mut w = TensorI::zeros(&[k, n]);
+            for v in w.data.iter_mut() {
+                *v = rng.range(-127, 128) as i32;
+            }
+            let wroll = roll_weights(&w);
+            let mut out = TensorI::zeros(&[m, n]);
+            gemm_overq(&enc.codes, &enc.state, &w, &wroll, &cfg, &mut out);
+            // reference: decode (scale 1 → integer-valued * 1/B) then matmul
+            let dec = decode_rows(&enc.codes, &enc.state, 1.0, &cfg);
+            let b = cfg.b() as f64;
+            for i in 0..m {
+                for j in 0..n {
+                    let mut want = 0f64;
+                    for kk in 0..k {
+                        want += dec.data[i * k + kk] as f64 * w.data[kk * n + j] as f64;
+                    }
+                    want *= b;
+                    assert!(
+                        (out.data[i * n + j] as f64 - want).abs() < 0.5,
+                        "mismatch at ({i},{j}): {} vs {}",
+                        out.data[i * n + j],
+                        want
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_gemm_matches_slotwise_dot() {
+        check("gemm == dot_fixed_point per column", 80, |rng: &mut Rng| {
+            let (m, k, n) = (1 + rng.index(6), 1 + rng.index(30), 1 + rng.index(6));
+            let cfg = OverQConfig::full(4, 3);
+            let x = rand_acts(rng, m, k);
+            let enc = encode_tensor(&x, 0.25, &cfg);
+            let mut w = TensorI::zeros(&[k, n]);
+            for v in w.data.iter_mut() {
+                *v = rng.range(-127, 128) as i32;
+            }
+            let wroll = roll_weights(&w);
+            let mut out = TensorI::zeros(&[m, n]);
+            gemm_overq(&enc.codes, &enc.state, &w, &wroll, &cfg, &mut out);
+            let mut wcol = vec![0i32; k];
+            for j in 0..n {
+                for kk in 0..k {
+                    wcol[kk] = w.data[kk * n + j];
+                }
+                for i in 0..m {
+                    let want = dot_fixed_point(enc.codes.row(i), enc.state.row(i), &wcol, &cfg);
+                    assert_eq!(out.data[i * n + j] as i64, want);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn roll_shifts_rows() {
+        let w = TensorI::from_vec(&[3, 2], vec![1, 2, 3, 4, 5, 6]);
+        let r = roll_weights(&w);
+        assert_eq!(r.data, vec![0, 0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,293 @@
+//! The OverQ encoder — the paper's rescale-unit state computation.
+//!
+//! Greedy left-to-right scan along the channel axis (DESIGN.md §7),
+//! linear time: each slot is visited once because chains jump past their
+//! claimed window (the paper's O(nc) → O(n) argument in §3.2).
+//!
+//! Must stay bit-exact with `python/compile/overq.py::encode_rows_ref`.
+
+use crate::tensor::{Tensor, TensorF, TensorI};
+
+use super::state::{OverQConfig, SlotState, LSB, MSB, NORM, SHIFT};
+
+/// Encoded activation plane: b-bit slot codes + 2-bit state lane.
+#[derive(Clone, Debug)]
+pub struct Encoded {
+    pub codes: TensorI,
+    pub state: Tensor<SlotState>,
+    /// The activation scale used (clip / qmax).
+    pub scale: f32,
+}
+
+/// Integerization shared with python (`overq.int_codes_np`):
+/// `v = floor(x * (1/scale) + 0.5)`, `vfine = floor(x * (1/scale) * B + 0.5)`.
+/// The reciprocal is computed once in f32 to match JAX bit-for-bit.
+#[inline]
+pub fn int_codes(x: f32, inv_scale: f32, b: f32) -> (i32, i32) {
+    let v = (x * inv_scale + 0.5).floor() as i32;
+    let vfine = (x * inv_scale * b + 0.5).floor() as i32;
+    (v, vfine)
+}
+
+/// Encode one channel vector in place. `v`/`vfine` are the unclamped
+/// integer codes; outputs go to `codes`/`state` (same length).
+pub fn encode_channels(
+    v: &[i32],
+    vfine: &[i32],
+    cfg: &OverQConfig,
+    codes: &mut [i32],
+    state: &mut [SlotState],
+) {
+    let c = v.len();
+    let b = cfg.bits;
+    let bb = 1i32 << b;
+    let qmax = bb - 1;
+    codes[..c].fill(0);
+    state[..c].fill(NORM);
+    let mut i = 0;
+    while i < c {
+        let vi = v[i];
+        if vi > qmax {
+            // --- outlier: try range overwrite via nearest zero in (i, i+c]
+            let mut j = 0;
+            if cfg.range_overwrite {
+                for d in 1..=cfg.cascade {
+                    if i + d < c && v[i + d] == 0 {
+                        j = i + d;
+                        break;
+                    }
+                }
+            }
+            if j > 0 {
+                let full = vi.min(bb * bb - 1);
+                codes[i] = full & qmax;
+                state[i] = NORM;
+                codes[i + 1] = full >> b;
+                state[i + 1] = MSB;
+                for k in (i + 2)..=j {
+                    codes[k] = v[k - 1].min(qmax);
+                    state[k] = SHIFT;
+                }
+                i = j + 1;
+            } else {
+                codes[i] = qmax; // uncovered outlier: clamp
+                i += 1;
+            }
+        } else if vi > 0 {
+            codes[i] = vi;
+            if cfg.precision_overwrite && i + 1 < c && v[i + 1] == 0 {
+                // PR re-derives (hi, lo) from the 2b-bit fine code so
+                // hi + lo/B is the best representation (v may round up).
+                let vf = vfine[i];
+                let hi = (vf >> b).min(qmax);
+                let lo = vf & qmax;
+                if lo > 0 {
+                    codes[i] = hi;
+                    codes[i + 1] = lo;
+                    state[i + 1] = LSB;
+                    i += 2;
+                    continue;
+                }
+            }
+            i += 1;
+        } else {
+            i += 1; // zero — may be claimed by jumps above
+        }
+    }
+}
+
+/// Encode an (R, C) matrix of raw integer codes row by row.
+pub fn encode_rows(v: &TensorI, vfine: &TensorI, cfg: &OverQConfig) -> (TensorI, Tensor<SlotState>) {
+    assert_eq!(v.dims(), vfine.dims());
+    let mut codes = TensorI::zeros(v.dims());
+    let mut state = Tensor::<SlotState>::zeros(v.dims());
+    for r in 0..v.num_rows() {
+        encode_channels(
+            v.row(r),
+            vfine.row(r),
+            cfg,
+            codes.row_mut(r),
+            state.row_mut(r),
+        );
+    }
+    (codes, state)
+}
+
+/// Encode an activation tensor (..., C) along its channel axis with a
+/// per-tensor scale. This is the runtime entry point used by the native
+/// engine, the systolic simulator and the harnesses.
+pub fn encode_tensor(x: &TensorF, scale: f32, cfg: &OverQConfig) -> Encoded {
+    let inv = 1.0f32 / scale;
+    let bf = (1u32 << cfg.bits) as f32;
+    let c = *x.dims().last().expect("rank >= 1");
+    let rows = x.numel() / c;
+    let mut codes = TensorI::zeros(x.dims());
+    let mut state = Tensor::<SlotState>::zeros(x.dims());
+    // scratch per row; the fine codes are only needed when precision
+    // overwrite is enabled (halves the float work for baseline/RO runs)
+    let mut v = vec![0i32; c];
+    let mut vfine = vec![0i32; c];
+    for r in 0..rows {
+        let xr = &x.data[r * c..(r + 1) * c];
+        if cfg.precision_overwrite {
+            for (k, &xv) in xr.iter().enumerate() {
+                let t = xv * inv;
+                v[k] = (t + 0.5).floor() as i32;
+                vfine[k] = (t * bf + 0.5).floor() as i32;
+            }
+        } else {
+            for (k, &xv) in xr.iter().enumerate() {
+                v[k] = (xv * inv + 0.5).floor() as i32;
+            }
+        }
+        encode_channels(&v, &vfine, cfg, codes.row_mut(r), state.row_mut(r));
+    }
+    Encoded {
+        codes,
+        state,
+        scale,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn enc(v: &[i32], cfg: &OverQConfig) -> (Vec<i32>, Vec<SlotState>) {
+        let vf: Vec<i32> = v.iter().map(|&x| x * cfg.b()).collect();
+        let mut codes = vec![0; v.len()];
+        let mut state = vec![0; v.len()];
+        encode_channels(v, &vf, cfg, &mut codes, &mut state);
+        (codes, state)
+    }
+
+    #[test]
+    fn known_chain() {
+        // Worked example from the paper's Fig. 4(c) style: outlier
+        // cascades over two non-zeros to a zero three slots away.
+        let cfg = OverQConfig::ro(4, 3);
+        let (codes, state) = enc(&[20, 3, 5, 0, 2], &cfg);
+        assert_eq!(state, vec![NORM, MSB, SHIFT, SHIFT, NORM]);
+        assert_eq!(codes, vec![20 & 15, 20 >> 4, 3, 5, 2]);
+    }
+
+    #[test]
+    fn adjacent_overwrite() {
+        let cfg = OverQConfig::ro(4, 1);
+        let (codes, state) = enc(&[200, 0, 1], &cfg);
+        assert_eq!(state, vec![NORM, MSB, NORM]);
+        // 200 fits in the doubled range (< B²-1 = 255): lo=8, hi=12
+        assert_eq!(codes, vec![200 & 15, 200 >> 4, 1]);
+    }
+
+    #[test]
+    fn huge_outlier_clamps_to_double_range() {
+        let cfg = OverQConfig::ro(4, 1);
+        let (codes, state) = enc(&[999, 0], &cfg);
+        assert_eq!(state, vec![NORM, MSB]);
+        assert_eq!(codes, vec![255 & 15, 255 >> 4]);
+    }
+
+    #[test]
+    fn uncovered_outlier_clamps() {
+        let cfg = OverQConfig::ro(4, 2);
+        let (codes, state) = enc(&[20, 1, 1, 0], &cfg);
+        assert_eq!(state, vec![NORM; 4]);
+        assert_eq!(codes, vec![15, 1, 1, 0]);
+    }
+
+    #[test]
+    fn baseline_never_sets_state() {
+        let cfg = OverQConfig::baseline(4);
+        let (codes, state) = enc(&[20, 0, 3, 0], &cfg);
+        assert_eq!(state, vec![NORM; 4]);
+        assert_eq!(codes, vec![15, 0, 3, 0]);
+    }
+
+    #[test]
+    fn pr_uses_fine_code() {
+        let cfg = OverQConfig::full(4, 1);
+        // x = 0.37, scale 0.1: v = 4 (rounds up), vfine = 59 → hi 3, lo 11
+        let v = vec![4, 0];
+        let vfine = vec![59, 0];
+        let mut codes = vec![0; 2];
+        let mut state = vec![0; 2];
+        encode_channels(&v, &vfine, &cfg, &mut codes, &mut state);
+        assert_eq!(state, vec![NORM, LSB]);
+        assert_eq!(codes, vec![3, 11]);
+    }
+
+    #[test]
+    fn ro_beats_pr_for_same_zero() {
+        // outlier at 0 claims the zero at 1; the non-outlier at 2 then
+        // has no zero to its right and stays plain.
+        let cfg = OverQConfig::full(4, 1);
+        let (_, state) = enc(&[30, 0, 3], &cfg);
+        assert_eq!(state, vec![NORM, MSB, NORM]);
+    }
+
+    #[test]
+    fn prop_invariants() {
+        check("encoder invariants", 300, |rng: &mut Rng| {
+            let c = 1 + rng.index(48);
+            let cfg = OverQConfig {
+                bits: 3 + rng.index(3) as u32,
+                cascade: 1 + rng.index(6),
+                range_overwrite: rng.bool(0.7),
+                precision_overwrite: rng.bool(0.5),
+            };
+            let qmax = cfg.qmax();
+            let mut v = vec![0i32; c];
+            for x in v.iter_mut() {
+                *x = if rng.bool(0.5) {
+                    0
+                } else if rng.bool(0.1) {
+                    qmax + 1 + rng.range(0, 40) as i32
+                } else {
+                    rng.range(1, qmax as i64 + 1) as i32
+                };
+            }
+            let vf: Vec<i32> = v
+                .iter()
+                .map(|&x| x * cfg.b() + rng.range(0, cfg.b() as i64) as i32)
+                .collect();
+            let mut codes = vec![0; c];
+            let mut state = vec![0; c];
+            encode_channels(&v, &vf, &cfg, &mut codes, &mut state);
+            // 1. codes fit in b bits
+            assert!(codes.iter().all(|&x| x >= 0 && x <= qmax));
+            // 2. slot 0 is never a continuation
+            assert_eq!(state[0], NORM);
+            // 3. LSB/MSB-as-terminator slots only ever overwrite zeros:
+            //    an LSB slot's original value is always zero.
+            for k in 0..c {
+                if state[k] == LSB {
+                    assert_eq!(v[k], 0, "PR overwrote non-zero at {k}");
+                }
+            }
+            // 4. every chain is NORM,MSB,(SHIFT)*: check transitions
+            for k in 1..c {
+                if state[k] == MSB {
+                    assert_eq!(state[k - 1], NORM);
+                }
+                if state[k] == SHIFT {
+                    assert!(state[k - 1] == MSB || state[k - 1] == SHIFT);
+                }
+            }
+            // 5. chains end on an original zero (the claimed slot)
+            for k in 0..c {
+                let is_chain = state[k] == MSB || state[k] == SHIFT;
+                let next_in_chain = k + 1 < c && state[k + 1] == SHIFT;
+                if is_chain && !next_in_chain {
+                    assert_eq!(v[k], 0, "chain did not end on a zero at {k}");
+                }
+            }
+            // 6. OverQ disabled => all NORM
+            if !cfg.range_overwrite && !cfg.precision_overwrite {
+                assert!(state.iter().all(|&s| s == NORM));
+            }
+        });
+    }
+}

@@ -1,0 +1,31 @@
+//! OverQ — overwrite quantization (the paper's contribution).
+//!
+//! Activations are uniformly quantized to `bits` bits; values the
+//! quantizer would clip are **outliers**. OverQ opportunistically widens
+//! outliers by letting them overwrite nearby ReLU zeros:
+//!
+//! * **Range overwrite (RO)** — an outlier's out-of-range MSBs are stored
+//!   in an adjacent zero's slot; the adjacent PE copies the outlier's
+//!   weight and left-shifts its product (Fig. 1/3/4a of the paper).
+//! * **Precision overwrite (PR)** — a non-outlier next to an unclaimed
+//!   zero stores `bits` extra LSBs there; the PE right-shifts (Fig. 4b).
+//! * **Cascading** — with cascade factor `c`, an outlier may claim the
+//!   nearest zero up to `c` slots away; intermediate values shift over by
+//!   one slot and reuse their predecessor's weight (Fig. 4c).
+//!
+//! This module is bit-exact with `python/compile/overq.py` (the
+//! `lax.scan` encoder lowered into the AOT model) and with the numpy
+//! normative reference — verified by `tests/integration_crosslang.rs`
+//! against dumped test vectors.
+
+pub mod coverage;
+pub mod decode;
+pub mod dotprod;
+pub mod encode;
+pub mod state;
+
+pub use coverage::{coverage_stats, theory_coverage, CoverageStats};
+pub use decode::{decode_rows, fakequant_from_codes};
+pub use dotprod::{dot_fixed_point, gemm_overq};
+pub use encode::{encode_rows, encode_tensor, int_codes, Encoded};
+pub use state::{OverQConfig, SlotState, LSB, MSB, NORM, SHIFT};

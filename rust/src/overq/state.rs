@@ -1,0 +1,115 @@
+//! OverQ slot states and mode configuration.
+
+/// Slot state lane values (2 bits in hardware, matching the paper's
+/// "one or two bits depending on which OverQ features are supported").
+pub type SlotState = u8;
+
+/// Slot holds its own value's low bits (weight `w_k`, factor `B`).
+pub const NORM: SlotState = 0;
+/// Slot holds the previous outlier's MSBs (weight `w_{k-1}`, factor `B²`).
+pub const MSB: SlotState = 1;
+/// Cascade: slot holds the previous original value (weight `w_{k-1}`, factor `B`).
+pub const SHIFT: SlotState = 2;
+/// Precision overwrite LSBs (weight `w_{k-1}`, factor `1`).
+pub const LSB: SlotState = 3;
+
+/// OverQ operating mode — a hardware configuration strap.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OverQConfig {
+    /// Activation bitwidth b (the paper evaluates 4 and 5).
+    pub bits: u32,
+    /// Cascade factor c; 1 = adjacent-only (no cascading).
+    pub cascade: usize,
+    /// Range overwrite enabled.
+    pub range_overwrite: bool,
+    /// Precision overwrite enabled.
+    pub precision_overwrite: bool,
+}
+
+impl OverQConfig {
+    /// Plain uniform quantization (no OverQ).
+    pub fn baseline(bits: u32) -> Self {
+        OverQConfig {
+            bits,
+            cascade: 1,
+            range_overwrite: false,
+            precision_overwrite: false,
+        }
+    }
+
+    /// Range overwrite only, given cascade factor.
+    pub fn ro(bits: u32, cascade: usize) -> Self {
+        OverQConfig {
+            bits,
+            cascade,
+            range_overwrite: true,
+            precision_overwrite: false,
+        }
+    }
+
+    /// Full OverQ: range + precision overwrite with cascading.
+    pub fn full(bits: u32, cascade: usize) -> Self {
+        OverQConfig {
+            bits,
+            cascade,
+            range_overwrite: true,
+            precision_overwrite: true,
+        }
+    }
+
+    /// B = 2^bits.
+    #[inline]
+    pub fn b(&self) -> i32 {
+        1 << self.bits
+    }
+
+    /// qmax = B - 1, the largest plain code.
+    #[inline]
+    pub fn qmax(&self) -> i32 {
+        (1 << self.bits) - 1
+    }
+
+    /// Per-slot fixed-point factor (B for NORM/SHIFT, B² for MSB, 1 for LSB).
+    #[inline]
+    pub fn factor(&self, state: SlotState) -> i64 {
+        let b = 1i64 << self.bits;
+        match state {
+            MSB => b * b,
+            LSB => 1,
+            _ => b,
+        }
+    }
+
+    /// Bits of OverQ state per slot: 1 if only RO, 2 if PR supported
+    /// (paper §3.1), 0 when OverQ is disabled entirely.
+    pub fn state_bits(&self) -> u32 {
+        match (self.range_overwrite, self.precision_overwrite) {
+            (false, false) => 0,
+            (true, false) => 1,
+            _ => 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factors() {
+        let c = OverQConfig::full(4, 4);
+        assert_eq!(c.b(), 16);
+        assert_eq!(c.qmax(), 15);
+        assert_eq!(c.factor(NORM), 16);
+        assert_eq!(c.factor(SHIFT), 16);
+        assert_eq!(c.factor(MSB), 256);
+        assert_eq!(c.factor(LSB), 1);
+    }
+
+    #[test]
+    fn state_bits() {
+        assert_eq!(OverQConfig::baseline(4).state_bits(), 0);
+        assert_eq!(OverQConfig::ro(4, 4).state_bits(), 1);
+        assert_eq!(OverQConfig::full(4, 4).state_bits(), 2);
+    }
+}

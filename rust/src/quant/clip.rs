@@ -1,0 +1,236 @@
+//! Clipping-threshold selection (paper §2.1 / Table 2 baselines).
+//!
+//! Each method maps profiled activation samples → a clip value; the
+//! activation scale is then `clip / qmax`.
+
+use super::histogram::Histogram;
+
+/// Supported clipping methods.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ClipMethod {
+    /// Minimize Σ (x - Q(x))² over a grid of clip candidates
+    /// (Sung et al. 2015, Shin et al. 2016).
+    Mmse,
+    /// Fixed percentile of values (McKinstry et al. 2018), e.g. 0.999.
+    Percentile(f64),
+    /// KL-divergence calibration (Migacz, TensorRT 2017).
+    Kl,
+    /// mean + t·std (the paper's STD sweep unit).
+    StdMul(f64),
+    /// Plain max (no clipping).
+    Max,
+}
+
+/// Profile summary of one activation tensor (enc point).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ActStats {
+    pub mean: f32,
+    pub std: f32,
+    pub max: f32,
+}
+
+impl ClipMethod {
+    /// Pick the clip threshold. `samples` are raw (non-negative)
+    /// activation values; `stats` the precomputed summary; `bits` the
+    /// activation bitwidth the quantizer will use.
+    pub fn clip(&self, samples: &[f32], stats: ActStats, bits: u32) -> f32 {
+        match *self {
+            ClipMethod::Max => stats.max.max(1e-6),
+            ClipMethod::StdMul(t) => {
+                (stats.mean + (t as f32) * stats.std).clamp(1e-6, stats.max.max(1e-6))
+            }
+            ClipMethod::Percentile(p) => {
+                let h = Histogram::from_samples(samples, 2048);
+                h.percentile(p).max(1e-6)
+            }
+            ClipMethod::Mmse => mmse_clip(samples, stats.max, bits),
+            ClipMethod::Kl => kl_clip(samples, bits),
+        }
+    }
+}
+
+/// Grid-search the clip that minimizes total squared quantization error.
+fn mmse_clip(samples: &[f32], max: f32, bits: u32) -> f32 {
+    if samples.is_empty() || max <= 0.0 {
+        return 1e-6;
+    }
+    let qmax = ((1u32 << bits) - 1) as f32;
+    let mut best = max;
+    let mut best_err = f64::INFINITY;
+    for step in 1..=60 {
+        let clip = max * step as f32 / 60.0;
+        let scale = clip / qmax;
+        let inv = 1.0 / scale;
+        let mut err = 0f64;
+        for &x in samples {
+            let q = (x * inv + 0.5).floor().clamp(0.0, qmax) * scale;
+            let d = (q - x) as f64;
+            err += d * d;
+        }
+        if err < best_err {
+            best_err = err;
+            best = clip;
+        }
+    }
+    best
+}
+
+/// TensorRT-style KL calibration: choose the threshold whose clipped+
+/// requantized distribution minimizes KL(P ‖ Q) against the reference.
+fn kl_clip(samples: &[f32], bits: u32) -> f32 {
+    const BINS: usize = 1024;
+    if samples.is_empty() {
+        return 1e-6;
+    }
+    let h = Histogram::from_samples(samples, BINS);
+    let levels = 1usize << bits; // quantization levels
+    if h.total == 0 {
+        return 1e-6;
+    }
+    let mut best = h.max;
+    let mut best_kl = f64::INFINITY;
+    // candidate thresholds from `levels` bins upward
+    let start = levels.max(BINS / 16);
+    for t in (start..=BINS).step_by(8) {
+        // P: reference distribution clipped at bin t (outliers folded
+        // into the last bin, as TensorRT does)
+        let mut p: Vec<f64> = h.bins[..t].iter().map(|&c| c as f64).collect();
+        let tail: f64 = h.bins[t..].iter().map(|&c| c as f64).sum();
+        *p.last_mut().unwrap() += tail;
+        // Q: quantize bins [0, t) to `levels` levels then expand
+        let mut q = vec![0f64; t];
+        let chunk = t as f64 / levels as f64;
+        for level in 0..levels {
+            let lo = (level as f64 * chunk) as usize;
+            let hi = (((level + 1) as f64 * chunk) as usize).min(t).max(lo + 1);
+            let mass: f64 = p[lo..hi].iter().sum();
+            let nonzero = p[lo..hi].iter().filter(|&&x| x > 0.0).count();
+            if nonzero > 0 {
+                let share = mass / nonzero as f64;
+                for qq in q[lo..hi].iter_mut().zip(&p[lo..hi]) {
+                    if *qq.1 > 0.0 {
+                        *qq.0 = share;
+                    }
+                }
+            }
+        }
+        // KL(P||Q) over non-zero P bins
+        let psum: f64 = p.iter().sum();
+        let qsum: f64 = q.iter().sum();
+        if psum <= 0.0 || qsum <= 0.0 {
+            continue;
+        }
+        let mut kl = 0f64;
+        for i in 0..t {
+            if p[i] > 0.0 && q[i] > 0.0 {
+                let pi = p[i] / psum;
+                let qi = q[i] / qsum;
+                kl += pi * (pi / qi).ln();
+            } else if p[i] > 0.0 {
+                kl += 1e3; // unmatched mass penalty
+            }
+        }
+        if kl < best_kl {
+            best_kl = kl;
+            best = h.edge(t - 1);
+        }
+    }
+    best.max(1e-6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn bell_with_outliers(n: usize, seed: u64) -> (Vec<f32>, ActStats) {
+        let mut rng = Rng::new(seed);
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            let x = if rng.bool(0.01) {
+                rng.normal().abs() * 3.0 + 6.0
+            } else {
+                rng.normal().abs()
+            };
+            v.push(x);
+        }
+        let mean = v.iter().sum::<f32>() / n as f32;
+        let var = v.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / n as f32;
+        let max = v.iter().fold(0f32, |m, &x| m.max(x));
+        (
+            v.clone(),
+            ActStats {
+                mean,
+                std: var.sqrt(),
+                max,
+            },
+        )
+    }
+
+    #[test]
+    fn all_methods_clip_below_max_on_heavy_tail() {
+        let (samples, stats) = bell_with_outliers(20_000, 1);
+        for m in [
+            ClipMethod::Mmse,
+            ClipMethod::Percentile(0.999),
+            ClipMethod::Kl,
+            ClipMethod::StdMul(4.0),
+        ] {
+            let clip = m.clip(&samples, stats, 4);
+            assert!(clip > 0.0);
+            assert!(
+                clip < stats.max,
+                "{m:?} did not clip: {clip} vs max {}",
+                stats.max
+            );
+        }
+        assert_eq!(ClipMethod::Max.clip(&samples, stats, 4), stats.max);
+    }
+
+    #[test]
+    fn mmse_reduces_error_vs_max() {
+        let (samples, stats) = bell_with_outliers(20_000, 2);
+        let bits = 4;
+        let qmax = 15.0f32;
+        let err = |clip: f32| -> f64 {
+            let scale = clip / qmax;
+            samples
+                .iter()
+                .map(|&x| {
+                    let q = (x / scale + 0.5).floor().clamp(0.0, qmax) * scale;
+                    ((q - x) as f64).powi(2)
+                })
+                .sum()
+        };
+        let clip = ClipMethod::Mmse.clip(&samples, stats, bits);
+        assert!(err(clip) < err(stats.max) * 0.8);
+    }
+
+    #[test]
+    fn std_mul_monotone_in_t() {
+        let (samples, stats) = bell_with_outliers(5000, 3);
+        let c1 = ClipMethod::StdMul(2.0).clip(&samples, stats, 4);
+        let c2 = ClipMethod::StdMul(4.0).clip(&samples, stats, 4);
+        assert!(c2 >= c1);
+    }
+
+    #[test]
+    fn percentile_tracks_distribution() {
+        let samples: Vec<f32> = (1..=10_000).map(|i| i as f32 / 10_000.0).collect();
+        let stats = ActStats {
+            mean: 0.5,
+            std: 0.29,
+            max: 1.0,
+        };
+        let c = ClipMethod::Percentile(0.9).clip(&samples, stats, 4);
+        assert!((c - 0.9).abs() < 0.02, "{c}");
+    }
+
+    #[test]
+    fn empty_samples_do_not_panic() {
+        let stats = ActStats::default();
+        for m in [ClipMethod::Mmse, ClipMethod::Kl, ClipMethod::Percentile(0.99)] {
+            assert!(m.clip(&[], stats, 4) > 0.0);
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! Activation histograms for calibration (KL / percentile clipping).
+
+/// Fixed-bin histogram over [0, max] of non-negative activations.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub bins: Vec<u64>,
+    pub max: f32,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(num_bins: usize, max: f32) -> Self {
+        Histogram {
+            bins: vec![0; num_bins],
+            max: max.max(1e-12),
+            total: 0,
+        }
+    }
+
+    /// Build from samples in one pass (max must be known up front).
+    pub fn from_samples(samples: &[f32], num_bins: usize) -> Self {
+        let max = samples.iter().fold(0f32, |m, &x| m.max(x));
+        let mut h = Histogram::new(num_bins, max);
+        for &x in samples {
+            h.add(x);
+        }
+        h
+    }
+
+    pub fn add(&mut self, x: f32) {
+        if x < 0.0 {
+            return;
+        }
+        let idx = ((x / self.max) * self.bins.len() as f32) as usize;
+        let idx = idx.min(self.bins.len() - 1);
+        self.bins[idx] += 1;
+        self.total += 1;
+    }
+
+    /// Upper edge of bin i.
+    pub fn edge(&self, i: usize) -> f32 {
+        self.max * (i + 1) as f32 / self.bins.len() as f32
+    }
+
+    /// Smallest threshold covering fraction `p` of the mass.
+    pub fn percentile(&self, p: f64) -> f32 {
+        let target = (self.total as f64 * p).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.bins.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.edge(i);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_percentiles() {
+        let samples: Vec<f32> = (0..1000).map(|i| i as f32 / 1000.0).collect();
+        let h = Histogram::from_samples(&samples, 100);
+        assert_eq!(h.total, 1000);
+        assert!((h.percentile(0.5) - 0.5).abs() < 0.02);
+        assert!((h.percentile(0.999) - 0.999).abs() < 0.02);
+        assert!(h.percentile(1.0) <= h.max + 1e-6);
+    }
+
+    #[test]
+    fn negative_values_ignored() {
+        let mut h = Histogram::new(10, 1.0);
+        h.add(-0.5);
+        assert_eq!(h.total, 0);
+    }
+
+    #[test]
+    fn overflow_goes_to_last_bin() {
+        let mut h = Histogram::new(10, 1.0);
+        h.add(5.0);
+        assert_eq!(h.bins[9], 1);
+    }
+}

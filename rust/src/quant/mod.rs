@@ -1,0 +1,20 @@
+//! Post-training quantization substrate (paper §2.1 baselines + weights).
+//!
+//! * [`uniform`] — affine/symmetric uniform quantizers and the
+//!   per-output-channel MMSE weight quantizer (mirrors
+//!   `python/compile/model.py::quantize_weights`).
+//! * [`histogram`] — activation histograms for calibration.
+//! * [`clip`] — clipping-threshold selection: MMSE, percentile,
+//!   KL-divergence (TensorRT-style) and STD-multiple sweeping.
+//! * [`ocs`] — outlier channel splitting (Zhao et al. 2019) for weights.
+//! * [`zeroq`] — ZeroQ-style data-free calibration input generator.
+
+pub mod clip;
+pub mod histogram;
+pub mod ocs;
+pub mod uniform;
+pub mod zeroq;
+
+pub use clip::ClipMethod;
+pub use histogram::Histogram;
+pub use uniform::{fake_quant, fake_quant_tensor, quantize_weights_mmse, QuantWeights};

@@ -1,0 +1,124 @@
+//! Outlier channel splitting (OCS, Zhao et al. ICML 2019) — weight-side
+//! baseline used in Table 2.
+//!
+//! Input channels whose weights contain the largest magnitudes are
+//! duplicated with both copies halved: the layer output is unchanged in
+//! fp32 but the per-channel weight range (and thus quantization error)
+//! shrinks. The activation side replays the duplicated channels via a
+//! gather index, exactly like the original implementation's channel
+//! duplication. Splitting needs *static* outlier locations, which is why
+//! it applies to weights only (paper §2.1).
+
+use crate::tensor::TensorF;
+
+/// Result of splitting a (K, N) weight matrix.
+#[derive(Clone, Debug)]
+pub struct OcsSplit {
+    /// Expanded weights (K + S, N).
+    pub weights: TensorF,
+    /// Gather index: row k of the expanded matrix reads activation
+    /// channel `gather[k]` of the original K channels.
+    pub gather: Vec<usize>,
+}
+
+/// Split the `expand_ratio` fraction of input channels with the largest
+/// absolute weight (paper used 5 %). `expand_ratio` in [0, 1).
+pub fn split_weights(w: &TensorF, expand_ratio: f64) -> OcsSplit {
+    let (k, n) = (w.dims()[0], w.dims()[1]);
+    let splits = ((k as f64 * expand_ratio).ceil() as usize).min(k);
+    // rank channels by max |w| across output channels
+    let mut mags: Vec<(f32, usize)> = (0..k)
+        .map(|i| {
+            let m = (0..n).fold(0f32, |m, j| m.max(w.data[i * n + j].abs()));
+            (m, i)
+        })
+        .collect();
+    mags.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let split_set: Vec<usize> = mags[..splits].iter().map(|&(_, i)| i).collect();
+    let is_split = {
+        let mut v = vec![false; k];
+        for &i in &split_set {
+            v[i] = true;
+        }
+        v
+    };
+
+    let mut weights = TensorF::zeros(&[k + splits, n]);
+    let mut gather = Vec::with_capacity(k + splits);
+    let mut row = 0;
+    for i in 0..k {
+        if is_split[i] {
+            // two half copies, adjacent rows, same activation channel
+            for _ in 0..2 {
+                for j in 0..n {
+                    weights.data[row * n + j] = w.data[i * n + j] * 0.5;
+                }
+                gather.push(i);
+                row += 1;
+            }
+        } else {
+            for j in 0..n {
+                weights.data[row * n + j] = w.data[i * n + j];
+            }
+            gather.push(i);
+            row += 1;
+        }
+    }
+    debug_assert_eq!(row, k + splits);
+    OcsSplit { weights, gather }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn preserves_fp32_output() {
+        check("ocs preserves dot product", 100, |rng: &mut Rng| {
+            let (k, n) = (2 + rng.index(30), 1 + rng.index(8));
+            let mut w = TensorF::zeros(&[k, n]);
+            for v in w.data.iter_mut() {
+                *v = rng.normal();
+            }
+            let mut x = vec![0f32; k];
+            for v in x.iter_mut() {
+                *v = rng.normal();
+            }
+            let split = split_weights(&w, 0.1 + rng.f64() * 0.3);
+            for j in 0..n {
+                let want: f32 = (0..k).map(|i| x[i] * w.data[i * n + j]).sum();
+                let got: f32 = split
+                    .gather
+                    .iter()
+                    .enumerate()
+                    .map(|(r, &src)| x[src] * split.weights.data[r * n + j])
+                    .sum();
+                assert!((want - got).abs() < 1e-4 * (1.0 + want.abs()), "{want} vs {got}");
+            }
+        });
+    }
+
+    #[test]
+    fn reduces_max_magnitude() {
+        let mut rng = Rng::new(3);
+        let (k, n) = (64, 4);
+        let mut w = TensorF::zeros(&[k, n]);
+        for v in w.data.iter_mut() {
+            *v = rng.normal() * 0.05;
+        }
+        w.data[5 * n] = 2.0; // big outlier in channel 5
+        let split = split_weights(&w, 0.05);
+        assert!(split.weights.max_abs() <= 1.0 + 1e-6);
+        assert_eq!(split.weights.dims()[0], k + (k as f64 * 0.05).ceil() as usize);
+    }
+
+    #[test]
+    fn zero_ratio_is_identity() {
+        let w = TensorF::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let s = split_weights(&w, 0.0);
+        assert_eq!(s.weights.data, w.data);
+        assert_eq!(s.gather, vec![0, 1, 2]);
+    }
+}

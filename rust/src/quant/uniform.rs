@@ -1,0 +1,147 @@
+//! Uniform quantizers.
+//!
+//! Activations: unsigned affine with zero-point 0 (inputs are post-ReLU),
+//! `scale = clip / qmax`, rounding `floor(x * (1/scale) + 0.5)` — the
+//! exact convention shared with JAX (see DESIGN.md §7).
+//! Weights: symmetric per-output-channel int8 with MMSE scale search.
+
+use crate::tensor::{TensorF, TensorI};
+
+/// Fake-quantize one value: quantize to `bits` unsigned, dequantize.
+#[inline]
+pub fn fake_quant(x: f32, inv_scale: f32, scale: f32, bits: u32) -> f32 {
+    let qmax = ((1u32 << bits) - 1) as f32;
+    let v = (x * inv_scale + 0.5).floor().clamp(0.0, qmax);
+    v * scale
+}
+
+/// Fake-quantize a tensor with a per-tensor scale.
+pub fn fake_quant_tensor(x: &TensorF, scale: f32, bits: u32) -> TensorF {
+    let inv = 1.0 / scale;
+    x.map(|v| fake_quant(v, inv, scale, bits))
+}
+
+/// Quantized weight matrix for one layer: int codes + per-column scales.
+#[derive(Clone, Debug)]
+pub struct QuantWeights {
+    /// (K, N) codes in [-(qmax+1), qmax].
+    pub codes: TensorI,
+    /// (N,) scales.
+    pub scales: Vec<f32>,
+}
+
+/// Per-output-channel symmetric MMSE weight quantization of a (K, N)
+/// matrix. Bit-compatible with the python exporter (same 31-point grid).
+pub fn quantize_weights_mmse(w: &TensorF, wbits: u32) -> QuantWeights {
+    let (k, n) = (w.dims()[0], w.dims()[1]);
+    let qmax = ((1i32 << (wbits - 1)) - 1) as f32;
+    let mut codes = TensorI::zeros(&[k, n]);
+    let mut scales = vec![0f32; n];
+    let mut col = vec![0f32; k];
+    for j in 0..n {
+        for i in 0..k {
+            col[i] = w.data[i * n + j];
+        }
+        let amax = col.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-8);
+        let mut best = amax / qmax;
+        let mut best_err = f64::INFINITY;
+        for step in 0..31 {
+            let frac = 0.4 + 0.6 * step as f32 / 30.0;
+            let s = amax * frac / qmax;
+            let inv = 1.0f32 / s;
+            let mut err = 0f64;
+            for &x in &col {
+                let q = (x * inv + 0.5).floor().clamp(-qmax - 1.0, qmax);
+                let d = (q * s - x) as f64;
+                err += d * d;
+            }
+            if err < best_err {
+                best_err = err;
+                best = s;
+            }
+        }
+        scales[j] = best;
+        let inv = 1.0f32 / best;
+        for i in 0..k {
+            codes.data[i * n + j] =
+                (col[i] * inv + 0.5).floor().clamp(-qmax - 1.0, qmax) as i32;
+        }
+    }
+    QuantWeights { codes, scales }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fake_quant_basics() {
+        // scale 0.1, 4 bits: qmax 15 → clip at 1.5
+        assert!((fake_quant(0.32, 10.0, 0.1, 4) - 0.3).abs() < 1e-6);
+        assert!((fake_quant(99.0, 10.0, 0.1, 4) - 1.5).abs() < 1e-6);
+        assert_eq!(fake_quant(0.0, 10.0, 0.1, 4), 0.0);
+        assert_eq!(fake_quant(-0.3, 10.0, 0.1, 4), 0.0); // unsigned clamps below
+    }
+
+    #[test]
+    fn prop_fake_quant_error_bound() {
+        check("fq error <= scale/2 inside range", 200, |rng: &mut Rng| {
+            let scale = 0.05 + rng.f32() * 0.5;
+            let bits = 3 + rng.index(4) as u32;
+            let clip = scale * ((1u32 << bits) - 1) as f32;
+            let x = rng.f32() * clip;
+            let q = fake_quant(x, 1.0 / scale, scale, bits);
+            assert!((q - x).abs() <= scale / 2.0 + 1e-6);
+        });
+    }
+
+    #[test]
+    fn mmse_weights_roundtrip() {
+        let mut rng = Rng::new(5);
+        let (k, n) = (32, 6);
+        let mut w = TensorF::zeros(&[k, n]);
+        for v in w.data.iter_mut() {
+            *v = rng.normal() * 0.1;
+        }
+        let qw = quantize_weights_mmse(&w, 8);
+        assert_eq!(qw.codes.dims(), &[k, n]);
+        for j in 0..n {
+            assert!(qw.scales[j] > 0.0);
+            for i in 0..k {
+                let deq = qw.codes.data[i * n + j] as f32 * qw.scales[j];
+                assert!((deq - w.data[i * n + j]).abs() < 0.01);
+                assert!(qw.codes.data[i * n + j].abs() <= 128);
+            }
+        }
+    }
+
+    #[test]
+    fn mmse_not_worse_than_max_scaling() {
+        let mut rng = Rng::new(9);
+        let mut w = TensorF::zeros(&[64, 1]);
+        for v in w.data.iter_mut() {
+            *v = rng.normal() * 0.02;
+        }
+        w.data[0] = 0.5; // outlier
+        let qw = quantize_weights_mmse(&w, 8);
+        let qmax = 127f32;
+        let s_max = 0.5 / qmax;
+        let err_max: f64 = w
+            .data
+            .iter()
+            .map(|&x| {
+                let q = (x / s_max + 0.5).floor().clamp(-128.0, 127.0);
+                ((q * s_max - x) as f64).powi(2)
+            })
+            .sum();
+        let err_mmse: f64 = w
+            .data
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| ((qw.codes.data[i] as f32 * qw.scales[0] - x) as f64).powi(2))
+            .sum();
+        assert!(err_mmse <= err_max + 1e-12);
+    }
+}

@@ -1,0 +1,91 @@
+//! ZeroQ-style data-free calibration (Cai et al., CVPR 2020).
+//!
+//! ZeroQ calibrates quantizers without training data by synthesizing
+//! "distilled" inputs that match the network's BatchNorm statistics. Our
+//! exported graphs have BN folded away, so we use the closest equivalent
+//! that exercises the same code path (DESIGN.md §2): synthetic inputs
+//! drawn to match the *input* distribution (channelwise normalized
+//! images), optionally smoothed to have natural spatial correlation.
+//! Downstream, the fp32 engine forwards these synthetic images and the
+//! resulting activation taps calibrate the clips — no real data touched.
+
+use crate::tensor::TensorF;
+use crate::util::rng::Rng;
+
+/// Generate `n` synthetic calibration images of shape (n, h, w, c),
+/// matching a zero-mean/unit-std normalized input distribution with
+/// local spatial smoothing (box blur) to mimic natural image statistics.
+pub fn synthetic_calibration_batch(n: usize, h: usize, w: usize, c: usize, seed: u64) -> TensorF {
+    let mut rng = Rng::new(seed ^ 0x5A5A_0001);
+    let mut x = TensorF::zeros(&[n, h, w, c]);
+    for v in x.data.iter_mut() {
+        *v = rng.normal();
+    }
+    // 3x3 box blur per channel: correlated patches drive realistic
+    // conv activations (pure white noise under-excites deep layers).
+    let mut out = TensorF::zeros(&[n, h, w, c]);
+    for img in 0..n {
+        for ch in 0..c {
+            for y in 0..h {
+                for xx in 0..w {
+                    let mut s = 0f32;
+                    let mut cnt = 0f32;
+                    for dy in -1i64..=1 {
+                        for dx in -1i64..=1 {
+                            let yy = y as i64 + dy;
+                            let xc = xx as i64 + dx;
+                            if yy >= 0 && yy < h as i64 && xc >= 0 && xc < w as i64 {
+                                s += x.at(&[img, yy as usize, xc as usize, ch]);
+                                cnt += 1.0;
+                            }
+                        }
+                    }
+                    *out.at_mut(&[img, y, xx, ch]) = s / cnt * 1.8; // re-amplify post-blur
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_determinism() {
+        let a = synthetic_calibration_batch(2, 8, 8, 3, 7);
+        let b = synthetic_calibration_batch(2, 8, 8, 3, 7);
+        assert_eq!(a.dims(), &[2, 8, 8, 3]);
+        assert_eq!(a.data, b.data);
+        let c = synthetic_calibration_batch(2, 8, 8, 3, 8);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn roughly_standardized() {
+        let x = synthetic_calibration_batch(8, 16, 16, 3, 1);
+        assert!(x.mean().abs() < 0.1, "mean {}", x.mean());
+        let s = x.std();
+        assert!(s > 0.4 && s < 1.2, "std {s}");
+    }
+
+    #[test]
+    fn spatially_correlated() {
+        // adjacent pixels correlate far more than distant ones
+        let x = synthetic_calibration_batch(4, 16, 16, 1, 2);
+        let mut near = 0f64;
+        let mut far = 0f64;
+        let mut n = 0f64;
+        for img in 0..4 {
+            for y in 0..16 {
+                for xx in 0..15 {
+                    near += (x.at(&[img, y, xx, 0]) * x.at(&[img, y, xx + 1, 0])) as f64;
+                    far += (x.at(&[img, y, xx, 0]) * x.at(&[img, 15 - y, 15 - xx, 0])) as f64;
+                    n += 1.0;
+                }
+            }
+        }
+        assert!(near / n > (far / n).abs() + 0.05);
+    }
+}

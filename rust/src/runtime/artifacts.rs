@@ -1,0 +1,58 @@
+//! Executable cache keyed by (model, variant, batch).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::models::Artifacts;
+
+use super::pjrt::{Executable, Runtime};
+
+/// Lazily-compiled executable cache over the artifact manifest.
+pub struct ExecutableCache {
+    runtime: Runtime,
+    paths: HashMap<(String, String, usize), PathBuf>,
+    cache: HashMap<(String, String, usize), Executable>,
+}
+
+impl ExecutableCache {
+    pub fn new(arts: &Artifacts) -> Result<ExecutableCache> {
+        let runtime = Runtime::cpu()?;
+        let mut paths = HashMap::new();
+        for (model, variant, batch, path) in arts.hlo_entries() {
+            paths.insert((model, variant, batch), path);
+        }
+        Ok(ExecutableCache {
+            runtime,
+            paths,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Batch sizes available for (model, variant), ascending.
+    pub fn batch_sizes(&self, model: &str, variant: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .paths
+            .keys()
+            .filter(|(m, va, _)| m == model && va == variant)
+            .map(|&(_, _, b)| b)
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Get (compiling on first use) the executable for a key.
+    pub fn get(&mut self, model: &str, variant: &str, batch: usize) -> Result<&Executable> {
+        let key = (model.to_string(), variant.to_string(), batch);
+        if !self.cache.contains_key(&key) {
+            let path = self
+                .paths
+                .get(&key)
+                .with_context(|| format!("no HLO artifact for {model}/{variant}/b{batch}"))?;
+            let exe = self.runtime.load_hlo_text(path)?;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(&self.cache[&key])
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin). The interchange format
+//! is HLO *text*, not serialized protos — jax ≥ 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and aot.py).
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use pjrt::{Executable, Runtime};

@@ -1,0 +1,105 @@
+//! PJRT client + executable wrappers.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::tensor::{TensorF, TensorI};
+
+/// A PJRT client (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// A compiled executable with its expected input arity.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu().context("create PJRT CPU client")?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+impl Executable {
+    /// Execute with f32/i32 tensor inputs; returns the first output of
+    /// the 1-tuple (aot.py lowers with `return_tuple=True`) as f32.
+    pub fn run_f32(&self, inputs: &[Input]) -> Result<TensorF> {
+        let lits: Vec<xla::Literal> = inputs.iter().map(Input::to_literal).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        let out = result.to_tuple1().context("unwrap 1-tuple")?;
+        let shape = out.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = out.to_vec::<f32>().context("read f32 output")?;
+        Ok(TensorF::from_vec(&dims, data))
+    }
+
+    /// Execute and return an i32 output (kernel artifacts).
+    pub fn run_i32(&self, inputs: &[Input]) -> Result<TensorI> {
+        let lits: Vec<xla::Literal> = inputs.iter().map(Input::to_literal).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        let out = result.to_tuple1().context("unwrap 1-tuple")?;
+        let shape = out.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = out.to_vec::<i32>().context("read i32 output")?;
+        Ok(TensorI::from_vec(&dims, data))
+    }
+}
+
+/// Typed input tensor for [`Executable::run_f32`].
+pub enum Input {
+    F32(TensorF),
+    I32(TensorI),
+}
+
+impl Input {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Input::F32(t) => {
+                let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data).reshape(&dims)?
+            }
+            Input::I32(t) => {
+                let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data).reshape(&dims)?
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need artifacts live in
+    // rust/tests/integration_runtime.rs (they require `make artifacts`
+    // and a working libxla_extension).
+}

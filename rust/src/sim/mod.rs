@@ -1,0 +1,20 @@
+//! Cycle-level weight-stationary systolic-array simulator (paper §4).
+//!
+//! The array spatially unrolls input channels along rows and output
+//! channels along columns (Fig. 5a): activations stream left→right,
+//! partial sums top→bottom, weights stay resident in the PEs. The OverQ
+//! PE (Fig. 5c) extends the baseline PE with a 2-bit state register, a
+//! weight mux reading the *row above* (the paper's weight copy between
+//! physically adjacent PEs) and a shifter for the MSB/LSB product
+//! alignment.
+//!
+//! The simulator is bit-exact against [`crate::overq::dotprod::gemm_overq`]
+//! (and therefore against the Pallas kernel) and reports cycle counts and
+//! PE utilization for the hardware-comparison benches.
+
+pub mod array;
+pub mod pe;
+pub mod stats;
+
+pub use array::{simulate_matmul, SystolicArray};
+pub use stats::SimStats;

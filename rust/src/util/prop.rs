@@ -1,0 +1,68 @@
+//! Property-testing driver — substitute for `proptest`.
+//!
+//! Runs a property over many seeded random cases; on failure it reports
+//! the failing seed so the case can be replayed deterministically:
+//!
+//! ```no_run
+//! use overq::util::prop::check;
+//! check("sum commutes", 200, |rng| {
+//!     let (a, b) = (rng.range(-100, 100), rng.range(-100, 100));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//! (no_run: doctest binaries don't inherit the xla rpath on this image)
+
+use super::rng::Rng;
+
+/// Run `prop` on `cases` deterministic random cases. Panics (with the
+/// failing seed) if a case panics.
+pub fn check<F: Fn(&mut Rng)>(name: &str, cases: u64, prop: F) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0x5EED_0000 ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result` instead of panicking.
+pub fn check_result<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    for seed in 0..cases {
+        let mut rng = Rng::new(0x5EED_0000 ^ seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("abs is nonneg", 50, |r| {
+            let x = r.normal();
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at seed")]
+    fn reports_failing_seed() {
+        check("always fails eventually", 10, |r| {
+            assert!(r.f64() < 0.9, "unlucky draw");
+        });
+    }
+}

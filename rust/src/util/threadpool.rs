@@ -1,0 +1,93 @@
+//! Minimal scoped thread pool — substitute for `rayon`-style parallel maps.
+//!
+//! On this testbed (`nproc == 1`) the pool degrades to sequential
+//! execution, but the coordinator and harness code are written against
+//! this interface so multi-core machines parallelize for free.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Number of worker threads to use by default.
+pub fn default_parallelism() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f(i)` for every i in 0..n, splitting across `threads` workers.
+/// Work-stealing via a shared atomic counter.
+pub fn parallel_for<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = Arc::new(AtomicUsize::new(0));
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let counter = Arc::clone(&counter);
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Parallel map preserving order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots: Vec<std::sync::Mutex<&mut T>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        parallel_for(n, threads, |i| {
+            **slots[i].lock().unwrap() = f(i);
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_all_indices() {
+        let hits = AtomicU64::new(0);
+        parallel_for(100, 4, |i| {
+            hits.fetch_add(1 << (i % 60), Ordering::Relaxed);
+        });
+        // every index executed exactly once => sum of powers matches
+        let mut want = 0u64;
+        for i in 0..100 {
+            want = want.wrapping_add(1 << (i % 60));
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), want);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let v = parallel_map(50, 4, |i| i * i);
+        assert_eq!(v, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequential_fallback() {
+        let v = parallel_map(10, 1, |i| i + 1);
+        assert_eq!(v[9], 10);
+    }
+}

@@ -1,0 +1,163 @@
+//! Cross-language integration: rust encoder/engine vs JAX-dumped vectors.
+//!
+//! `python/compile/aot.py::dump_testvectors` writes encoder cases and a
+//! full quantized forward (inputs, scales, logits) into
+//! `artifacts/testvectors/cross.tensors`. These tests assert that the
+//! rust OverQ encoder is BIT-EXACT with the normative python reference
+//! and that the native engine's logits match the JAX/Pallas hardware
+//! path to float tolerance.
+//!
+//! Skipped (cleanly) when artifacts have not been built.
+
+use overq::models::Artifacts;
+use overq::nn::engine::QuantConfig;
+use overq::overq::{encode_rows, int_codes, OverQConfig};
+use overq::tensor::{Tensor, TensorF, TensorI};
+
+fn arts() -> Option<Artifacts> {
+    Artifacts::locate().ok()
+}
+
+#[test]
+fn encoder_bit_exact_with_python() {
+    let Some(a) = arts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let tv = a.testvectors().unwrap();
+    let bits = 4u32;
+    let cascade = 4usize;
+    for i in 0..3 {
+        let x = tv[&format!("enc{i}.x")].as_f32().unwrap();
+        let scale = tv[&format!("enc{i}.scale")].as_f32().unwrap().data[0];
+        let inv = 1.0f32 / scale;
+        let bf = (1u32 << bits) as f32;
+        let mut v = TensorI::zeros(x.dims());
+        let mut vf = TensorI::zeros(x.dims());
+        for (k, &xv) in x.data.iter().enumerate() {
+            let (a, b) = int_codes(xv, inv, bf);
+            v.data[k] = a;
+            vf.data[k] = b;
+        }
+        for (tag, ro, pr) in [("full", true, true), ("ro", true, false), ("pr", false, true)] {
+            let cfg = OverQConfig {
+                bits,
+                cascade,
+                range_overwrite: ro,
+                precision_overwrite: pr,
+            };
+            let (codes, state) = encode_rows(&v, &vf, &cfg);
+            let want_codes = tv[&format!("enc{i}.{tag}.codes")].as_i32().unwrap();
+            let want_state = tv[&format!("enc{i}.{tag}.state")].as_i32().unwrap();
+            assert_eq!(
+                codes.data, want_codes.data,
+                "codes mismatch case {i} tag {tag}"
+            );
+            let state_i: Vec<i32> = state.data.iter().map(|&s| s as i32).collect();
+            assert_eq!(state_i, want_state.data, "state mismatch case {i} tag {tag}");
+        }
+    }
+}
+
+#[test]
+fn native_engine_matches_jax_quant_logits() {
+    let Some(a) = arts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let tv = a.testvectors().unwrap();
+    let meta = tv["fw.meta"].as_i32().unwrap();
+    let (bits, cascade, ro, pr) = (
+        meta.data[0] as u32,
+        meta.data[1] as usize,
+        meta.data[2] != 0,
+        meta.data[3] != 0,
+    );
+    let x = tv["fw.x"].as_f32().unwrap().clone();
+    let scales = tv["fw.act_scales"].as_f32().unwrap().data.clone();
+    let want = tv["fw.logits_quant"].as_f32().unwrap();
+
+    let model = a.load_model("resnet18m").unwrap();
+    let qc = QuantConfig {
+        overq: OverQConfig {
+            bits,
+            cascade,
+            range_overwrite: ro,
+            precision_overwrite: pr,
+        },
+        act_scales: scales,
+    };
+    let got = model.engine.forward_quant(&x, &qc).unwrap();
+    assert_eq!(got.dims(), want.dims());
+    for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+        assert!(
+            (g - w).abs() < 1e-3 + 1e-3 * w.abs(),
+            "logit {i}: rust {g} vs jax {w}"
+        );
+    }
+}
+
+#[test]
+fn native_engine_matches_jax_fp32_logits() {
+    let Some(a) = arts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let tv = a.testvectors().unwrap();
+    let x = tv["fw.x"].as_f32().unwrap().clone();
+    let want = tv["fw.logits_fp32"].as_f32().unwrap();
+    let model = a.load_model("resnet18m").unwrap();
+    let (got, _) = model.engine.forward_f32(&x, &[]).unwrap();
+    for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+        assert!(
+            (g - w).abs() < 1e-3 + 1e-3 * w.abs(),
+            "logit {i}: rust {g} vs jax {w}"
+        );
+    }
+}
+
+#[test]
+fn fp32_accuracy_matches_exported() {
+    let Some(a) = arts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let ev = a.load_dataset("evalset").unwrap();
+    // subset for speed; exported accuracy was measured on 1024 images
+    let n = 512.min(ev.images.dims()[0]);
+    let img_sz: usize = ev.images.dims()[1..].iter().product();
+    let sub = TensorF::from_vec(
+        &[n, 16, 16, 3],
+        ev.images.data[..n * img_sz].to_vec(),
+    );
+    for name in ["resnet18m", "vgg11m"] {
+        let m = a.load_model(name).unwrap();
+        let acc = m.engine.accuracy_f32(&sub, &ev.labels[..n], 64).unwrap();
+        assert!(
+            (acc - m.fp32_acc).abs() < 0.05,
+            "{name}: rust {acc} vs exported {}",
+            m.fp32_acc
+        );
+    }
+}
+
+#[test]
+fn quant_encoding_stable_under_row_split() {
+    // encoding a tensor in one call == encoding each row separately
+    let Some(_) = arts() else { return };
+    let mut x = TensorF::zeros(&[4, 24]);
+    let mut rng = overq::util::rng::Rng::new(3);
+    for v in x.data.iter_mut() {
+        *v = if rng.bool(0.5) { 0.0 } else { rng.normal().abs() };
+    }
+    let cfg = OverQConfig::full(4, 4);
+    let full = overq::overq::encode_tensor(&x, 0.1, &cfg);
+    for r in 0..4 {
+        let row = TensorF::from_vec(&[1, 24], x.data[r * 24..(r + 1) * 24].to_vec());
+        let enc = overq::overq::encode_tensor(&row, 0.1, &cfg);
+        assert_eq!(enc.codes.data, full.codes.row(r));
+        let srow: Vec<u8> = full.state.row(r).to_vec();
+        assert_eq!(enc.state.data, srow);
+    }
+    let _ = Tensor::<u8>::zeros(&[1]);
+}

@@ -1,0 +1,123 @@
+//! PJRT runtime integration: AOT artifacts vs the native engine.
+//!
+//! Loads the HLO artifacts produced by `make artifacts`, executes them on
+//! the PJRT CPU client, and cross-checks against the native rust engine
+//! on the SAME inputs (the artifact eval set — not the rust load
+//! generator, which is distribution-matched but not bit-identical).
+
+use overq::harness::calibrate::{scales_from_stats, subset};
+use overq::models::Artifacts;
+use overq::nn::engine::QuantConfig;
+use overq::overq::OverQConfig;
+use overq::runtime::artifacts::ExecutableCache;
+use overq::runtime::pjrt::Input;
+use overq::tensor::{TensorF, TensorI};
+
+fn arts() -> Option<Artifacts> {
+    Artifacts::locate().ok()
+}
+
+#[test]
+fn fp32_artifact_matches_native_engine() {
+    let Some(a) = arts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut cache = ExecutableCache::new(&a).unwrap();
+    let ev = a.load_dataset("evalset").unwrap();
+    let (x, _) = subset(&ev, 8);
+    let model = a.load_model("resnet18m").unwrap();
+    let (want, _) = model.engine.forward_f32(&x, &[]).unwrap();
+    let exe = cache.get("resnet18m", "fp32", 8).unwrap();
+    let got = exe.run_f32(&[Input::F32(x)]).unwrap();
+    assert_eq!(got.dims(), want.dims());
+    for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+        assert!(
+            (g - w).abs() < 1e-3 + 1e-3 * w.abs(),
+            "logit {i}: pjrt {g} vs native {w}"
+        );
+    }
+}
+
+#[test]
+fn quant_artifact_matches_native_engine() {
+    let Some(a) = arts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut cache = ExecutableCache::new(&a).unwrap();
+    let ev = a.load_dataset("evalset").unwrap();
+    let (x, _) = subset(&ev, 8);
+    let model = a.load_model("resnet18m").unwrap();
+    let scales = scales_from_stats(&model.enc_stats, 6.0, 4);
+    let qc = QuantConfig {
+        overq: OverQConfig::full(4, 4),
+        act_scales: scales.clone(),
+    };
+    let want = model.engine.forward_quant(&x, &qc).unwrap();
+    let exe = cache.get("resnet18m", "full_c4", 8).unwrap();
+    let got = exe
+        .run_f32(&[
+            Input::F32(x),
+            Input::F32(TensorF::from_vec(&[scales.len()], scales)),
+        ])
+        .unwrap();
+    for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+        assert!(
+            (g - w).abs() < 1e-3 + 1e-3 * w.abs(),
+            "logit {i}: pjrt {g} vs native {w}"
+        );
+    }
+}
+
+#[test]
+fn kernel_artifact_matches_native_gemm() {
+    let Some(a) = arts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let meta = a.hlo_meta("kernel", "overq_matmul", 256).cloned();
+    let Some(meta) = meta else {
+        eprintln!("skipping: kernel artifact missing");
+        return;
+    };
+    let shape: Vec<usize> = meta
+        .at(&["shape"])
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+    let (m, k, n) = (shape[0], shape[1], shape[2]);
+    let bits = meta.at(&["bits"]).as_usize().unwrap() as u32;
+    let cfg = OverQConfig::full(bits, 4);
+
+    // random encoded inputs (channel block = 24 divides K = 72)
+    let mut rng = overq::util::rng::Rng::new(11);
+    let mut x = TensorF::zeros(&[m * 3, k / 3]);
+    for v in x.data.iter_mut() {
+        *v = if rng.bool(0.5) {
+            0.0
+        } else {
+            rng.normal().abs() * (if rng.bool(0.1) { 8.0 } else { 1.0 })
+        };
+    }
+    let enc = overq::overq::encode_tensor(&x, 0.25, &cfg);
+    let codes = enc.codes.reshape(&[m, k]);
+    let state_u8 = enc.state.reshape(&[m, k]);
+    let mut w = TensorI::zeros(&[k, n]);
+    for v in w.data.iter_mut() {
+        *v = rng.range(-127, 128) as i32;
+    }
+    let wroll = overq::overq::dotprod::roll_weights(&w);
+    let mut want = TensorI::zeros(&[m, n]);
+    overq::overq::dotprod::gemm_overq(&codes, &state_u8, &w, &wroll, &cfg, &mut want);
+
+    let mut cache = ExecutableCache::new(&a).unwrap();
+    let exe = cache.get("kernel", "overq_matmul", 256).unwrap();
+    let state_i32 = state_u8.map(|s| s as i32);
+    let got = exe
+        .run_i32(&[Input::I32(codes), Input::I32(state_i32), Input::I32(w)])
+        .unwrap();
+    assert_eq!(got.data, want.data, "Pallas-kernel HLO != native gemm");
+}

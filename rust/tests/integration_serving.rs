@@ -1,0 +1,87 @@
+//! Serving coordinator end-to-end: requests → batcher → PJRT → responses.
+//!
+//! Uses the fp32 variant (small HLO, fast compile). Checks: every
+//! request answered, predictions match the native engine, batching
+//! actually batches, metrics account for every request.
+
+use overq::coordinator::batcher::BatchPolicy;
+use overq::coordinator::{Server, ServerConfig};
+use overq::harness::calibrate::{scales_from_stats, subset};
+use overq::models::Artifacts;
+use overq::tensor::TensorF;
+
+#[test]
+fn serve_fp32_end_to_end() {
+    let Ok(arts) = Artifacts::locate() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let model = arts.load_model("resnet18m").unwrap();
+    let ev = arts.load_dataset("evalset").unwrap();
+    let n = 24usize;
+    let (images, _) = subset(&ev, n);
+    let img_sz = 16 * 16 * 3;
+
+    let server = Server::start(ServerConfig {
+        model: "resnet18m".into(),
+        policy: BatchPolicy::default(),
+        act_scales: scales_from_stats(&model.enc_stats, 6.0, 4),
+    })
+    .unwrap();
+
+    // native predictions as ground truth
+    let (logits, _) = model.engine.forward_f32(&images, &[]).unwrap();
+    let native_preds: Vec<usize> = (0..n)
+        .map(|i| {
+            logits.data[i * 10..(i + 1) * 10]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        })
+        .collect();
+
+    // open-loop submit
+    let mut pending = Vec::new();
+    for i in 0..n {
+        let img = TensorF::from_vec(
+            &[16, 16, 3],
+            images.data[i * img_sz..(i + 1) * img_sz].to_vec(),
+        );
+        pending.push(server.submit(img, "fp32").unwrap());
+    }
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv().expect("response lost");
+        assert_eq!(resp.logits.len(), 10);
+        let pred = resp
+            .logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(pred, native_preds[i], "request {i} disagrees with native");
+        assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
+    }
+
+    let m = server.metrics();
+    assert_eq!(m.requests, n as u64, "metrics lost requests");
+    assert!(m.batches < n as u64, "batcher never batched");
+    assert_eq!(m.padded_slots as usize % 8, m.padded_slots as usize % 8); // sane
+    server.shutdown();
+}
+
+#[test]
+fn server_shutdown_is_clean() {
+    let Ok(_) = Artifacts::locate() else { return };
+    let model = Artifacts::locate().unwrap().load_model("resnet18m").unwrap();
+    let server = Server::start(ServerConfig {
+        model: "resnet18m".into(),
+        policy: BatchPolicy::default(),
+        act_scales: scales_from_stats(&model.enc_stats, 6.0, 4),
+    })
+    .unwrap();
+    // no requests at all — drop must join the worker without hanging
+    server.shutdown();
+}
