@@ -1,0 +1,69 @@
+//! `cargo bench --bench policy` — times a full autotune pass (profile →
+//! score → greedy search → measured-coverage validation) on zoo models
+//! and writes `BENCH_policy.json` so the perf trajectory tracks this
+//! path. Runs artifact-free on the synthetic zoo; picks up the AOT zoo
+//! automatically when artifacts are present.
+
+use std::collections::BTreeMap;
+
+use overq::data::shapes;
+use overq::models::{synth_model, Artifacts};
+use overq::policy::{autotune, profile_enc_points, AutotuneConfig};
+use overq::util::bench::{bench, BenchResult};
+use overq::util::json::Value;
+
+fn result_json(r: &BenchResult) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("name".into(), Value::Str(r.name.clone()));
+    m.insert("iters".into(), Value::Num(r.iters as f64));
+    m.insert("mean_ns".into(), Value::Num(r.mean_ns));
+    m.insert("std_ns".into(), Value::Num(r.std_ns));
+    m.insert("min_ns".into(), Value::Num(r.min_ns));
+    Value::Obj(m)
+}
+
+fn main() {
+    let mut results = Vec::new();
+
+    // synthetic zoo: always available
+    for name in ["synth-tiny", "synth-cnn"] {
+        let model = synth_model(name, 42).expect("synth model");
+        let (images, _) = shapes::gen_batch(42, 0, 16);
+        let cfg = AutotuneConfig::default();
+
+        results.push(bench(&format!("profile_enc_points {name} n16"), || {
+            let p = profile_enc_points(&model, &images, 4096).unwrap();
+            std::hint::black_box(p.len());
+        }));
+        results.push(bench(&format!("autotune {name} n16"), || {
+            let r = autotune(&model, &images, &cfg).unwrap();
+            std::hint::black_box(r.total_area);
+        }));
+    }
+
+    // artifact zoo, when built
+    if let Ok(arts) = Artifacts::locate() {
+        if let Ok(model) = arts.load_model("resnet18m") {
+            if let Ok(pf) = arts.load_dataset("profileset") {
+                let images = overq::harness::calibrate::subset(&pf, 32).0;
+                let cfg = AutotuneConfig::default();
+                results.push(bench("autotune resnet18m n32", || {
+                    let r = autotune(&model, &images, &cfg).unwrap();
+                    std::hint::black_box(r.total_area);
+                }));
+            }
+        }
+    } else {
+        eprintln!("artifacts not built — synthetic zoo only");
+    }
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Value::Str("policy".into()));
+    top.insert(
+        "results".into(),
+        Value::Arr(results.iter().map(result_json).collect()),
+    );
+    let json = Value::Obj(top).to_json();
+    std::fs::write("BENCH_policy.json", &json).expect("write BENCH_policy.json");
+    println!("wrote BENCH_policy.json ({} cases)", results.len());
+}

@@ -68,10 +68,7 @@ fn main() {
     }
     // native engine quant forward on the same batch
     {
-        let qc = QuantConfig {
-            overq: OverQConfig::full(4, 4),
-            act_scales: scales,
-        };
+        let qc = QuantConfig::uniform(OverQConfig::full(4, 4), scales);
         bench("native resnet18m full-overq b8", || {
             let out = model.engine.forward_quant(&x8, &qc).unwrap();
             std::hint::black_box(out.data[0]);

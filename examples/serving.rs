@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
     }
     let mut preds = Vec::new();
     for rx in pending {
-        let resp = rx.recv()?;
+        let resp = rx.recv()?.map_err(|e| anyhow::anyhow!("{e}"))?;
         let pred = resp
             .logits
             .iter()
@@ -82,10 +82,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Accuracy parity: the native engine must agree with the PJRT path.
-    let qc = QuantConfig {
-        overq: OverQConfig::full(4, 4),
-        act_scales: scales,
-    };
+    let qc = QuantConfig::uniform(OverQConfig::full(4, 4), scales);
     let native_acc = model.engine.accuracy_quant(&images, &labels, 48, &qc)?;
     println!("  native-engine accuracy on same inputs: {native_acc:.4}");
     assert!(

@@ -3,9 +3,11 @@
 //! Architecture: clients submit [`InferRequest`]s over a channel; a
 //! single worker thread (an actor owning the non-`Send` PJRT state)
 //! drains the queue through the [`batcher`], routes each group to the
-//! best-fitting compiled executable ([`router`]), executes, and replies
-//! per-request. Python never appears on this path — the executables were
-//! AOT-compiled by `make artifacts`.
+//! best-fitting compiled executable ([`router`]) or to the native
+//! engine backend (deployment-plan variants `plan:<name>` and
+//! `native_fp32`), executes, and replies per-request. Python never
+//! appears on this path — the executables were AOT-compiled by
+//! `make artifacts`, and plan variants run the in-process engine.
 
 pub mod batcher;
 pub mod metrics;
@@ -13,4 +15,4 @@ pub mod router;
 pub mod server;
 
 pub use metrics::MetricsSnapshot;
-pub use server::{InferRequest, InferResponse, Server, ServerConfig};
+pub use server::{InferRequest, InferResponse, InferResult, Server, ServerConfig};

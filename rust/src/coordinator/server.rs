@@ -1,14 +1,28 @@
-//! The inference server: request channel → batcher → PJRT executables.
+//! The inference server: request channel → batcher → execution backends.
 //!
-//! One worker thread owns the (non-`Send`) PJRT client and executables —
-//! the actor pattern. Clients hold a cheap cloneable [`Server`] handle.
+//! One worker thread owns all execution state — the actor pattern.
+//! Clients hold a cheap [`Server`] handle. Two backends hang off the
+//! same batching/metrics pipeline:
+//!
+//! * **PJRT** — AOT-compiled HLO executables from `make artifacts`
+//!   (requires the `pjrt` feature), keyed (model, variant, batch).
+//! * **native** — the in-process rust engine. This is how mixed-precision
+//!   deployment plans are served: [`Server::register_plan`] installs a
+//!   [`DeploymentPlan`] and requests for variant `plan:<name>` run the
+//!   native quantized forward with that plan's per-enc-point config.
+//!   `native_fp32` runs the fp32 reference path. No artifacts needed
+//!   when the model is handed over in-process ([`Server::start_local`]).
 
+use std::collections::HashMap;
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::models::zoo::LoadedModel;
 use crate::models::Artifacts;
+use crate::nn::QuantConfig;
+use crate::policy::DeploymentPlan;
 use crate::runtime::artifacts::ExecutableCache;
 use crate::runtime::pjrt::Input;
 use crate::tensor::TensorF;
@@ -21,10 +35,11 @@ use super::router::pick_batch;
 pub struct InferRequest {
     /// (H, W, C) normalized image.
     pub image: TensorF,
-    /// Which compiled variant to run ("fp32", "base", "full_c4", ...).
+    /// Which variant to run ("fp32", "full_c4", "plan:<name>",
+    /// "native_fp32", ...).
     pub variant: String,
     pub submitted: Instant,
-    pub resp: SyncSender<InferResponse>,
+    pub resp: SyncSender<InferResult>,
 }
 
 /// Reply for one request.
@@ -36,33 +51,55 @@ pub struct InferResponse {
     pub e2e: Duration,
 }
 
+/// Per-request outcome: bad variants / backend failures reach the
+/// client instead of killing the worker.
+pub type InferResult = std::result::Result<InferResponse, String>;
+
+/// Messages into the worker.
+enum Msg {
+    Infer(InferRequest),
+    RegisterPlan(DeploymentPlan),
+}
+
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub model: String,
     pub policy: BatchPolicy,
-    /// Activation scales per enc point, for quantized variants.
+    /// Activation scales per enc point, for HLO-quantized variants.
     pub act_scales: Vec<f32>,
 }
 
 /// Handle to a running server.
 pub struct Server {
-    tx: Option<Sender<InferRequest>>,
+    tx: Option<Sender<Msg>>,
     metrics: SharedMetrics,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Start the worker; compiles executables lazily on first use.
+    /// Start the worker against the artifact directory; compiles HLO
+    /// executables lazily and loads the native model on first use.
     pub fn start(cfg: ServerConfig) -> Result<Server> {
-        let arts = Artifacts::locate()?;
-        let (tx, rx) = std::sync::mpsc::channel::<InferRequest>();
+        Server::spawn(cfg, None)
+    }
+
+    /// Start with an in-process model — no artifacts required. Only
+    /// native variants (`plan:<name>`, `native_fp32`) are servable
+    /// unless artifacts are also present.
+    pub fn start_local(cfg: ServerConfig, model: LoadedModel) -> Result<Server> {
+        Server::spawn(cfg, Some(model))
+    }
+
+    fn spawn(cfg: ServerConfig, native: Option<LoadedModel>) -> Result<Server> {
+        let arts = Artifacts::locate().ok();
+        let (tx, rx) = std::sync::mpsc::channel::<Msg>();
         let metrics = shared();
         let m2 = metrics.clone();
         let worker = std::thread::Builder::new()
             .name("overq-worker".into())
             .spawn(move || {
-                if let Err(e) = worker_loop(arts, cfg, rx, m2) {
+                if let Err(e) = worker_loop(arts, cfg, native, rx, m2) {
                     eprintln!("[server] worker exited with error: {e:#}");
                 }
             })
@@ -74,10 +111,23 @@ impl Server {
         })
     }
 
+    /// Install (or replace) a deployment plan; requests may then target
+    /// variant `plan:<name>`. Ordered with respect to later `submit`s.
+    pub fn register_plan(&self, plan: DeploymentPlan) -> Result<()> {
+        self.tx
+            .as_ref()
+            .context("server stopped")?
+            .send(Msg::RegisterPlan(plan))
+            .ok()
+            .context("worker gone")
+    }
+
     /// Submit one request and block for its response.
     pub fn infer(&self, image: TensorF, variant: &str) -> Result<InferResponse> {
         let rx = self.submit(image, variant)?;
-        rx.recv().context("worker dropped the response")
+        rx.recv()
+            .context("worker dropped the response")?
+            .map_err(|e| anyhow::anyhow!("{e}"))
     }
 
     /// Warm a variant: trigger compilation of every batch size by
@@ -92,23 +142,25 @@ impl Server {
             .map(|_| self.submit(TensorF::zeros(dims), variant))
             .collect::<Result<_>>()?;
         for rx in burst {
-            rx.recv().context("warmup response lost")?;
+            rx.recv()
+                .context("warmup response lost")?
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
         }
         Ok(t0.elapsed())
     }
 
     /// Submit without blocking; returns the response channel.
-    pub fn submit(&self, image: TensorF, variant: &str) -> Result<Receiver<InferResponse>> {
+    pub fn submit(&self, image: TensorF, variant: &str) -> Result<Receiver<InferResult>> {
         let (rtx, rrx) = sync_channel(1);
         self.tx
             .as_ref()
             .context("server stopped")?
-            .send(InferRequest {
+            .send(Msg::Infer(InferRequest {
                 image,
                 variant: variant.to_string(),
                 submitted: Instant::now(),
                 resp: rtx,
-            })
+            }))
             .ok()
             .context("worker gone")?;
         Ok(rrx)
@@ -136,42 +188,187 @@ impl Drop for Server {
     }
 }
 
-fn worker_loop(
-    arts: Artifacts,
+/// Worker-side state shared across batches.
+struct WorkerState {
     cfg: ServerConfig,
-    rx: std::sync::mpsc::Receiver<InferRequest>,
+    arts: Option<Artifacts>,
+    cache: ExecutableCache,
+    native: Option<LoadedModel>,
+    plans: HashMap<String, DeploymentPlan>,
+    scales: TensorF,
+    metrics: SharedMetrics,
+}
+
+fn worker_loop(
+    arts: Option<Artifacts>,
+    cfg: ServerConfig,
+    native: Option<LoadedModel>,
+    rx: std::sync::mpsc::Receiver<Msg>,
     metrics: SharedMetrics,
 ) -> Result<()> {
-    let mut cache = ExecutableCache::new(&arts)?;
+    let cache = match &arts {
+        Some(a) => ExecutableCache::new(a)?,
+        None => ExecutableCache::empty(),
+    };
     let scales = TensorF::from_vec(&[cfg.act_scales.len()], cfg.act_scales.clone());
-    while let Some(mut batch) = collect(&rx, &cfg.policy) {
-        // group by variant, preserving FIFO within groups
-        batch.sort_by(|a, b| a.variant.cmp(&b.variant));
+    let mut st = WorkerState {
+        cfg,
+        arts,
+        cache,
+        native,
+        plans: HashMap::new(),
+        scales,
+        metrics,
+    };
+    while let Some(batch) = collect(&rx, &st.cfg.policy) {
+        // apply control messages, then group inference FIFO by variant
+        let mut infers: Vec<InferRequest> = Vec::with_capacity(batch.len());
+        for msg in batch {
+            match msg {
+                Msg::RegisterPlan(plan) => {
+                    st.plans.insert(plan.name.clone(), plan);
+                }
+                Msg::Infer(req) => infers.push(req),
+            }
+        }
+        infers.sort_by(|a, b| a.variant.cmp(&b.variant));
         let mut i = 0;
-        while i < batch.len() {
+        while i < infers.len() {
             let mut j = i + 1;
-            while j < batch.len() && batch[j].variant == batch[i].variant {
+            while j < infers.len() && infers[j].variant == infers[i].variant {
                 j += 1;
             }
-            let group = &batch[i..j];
-            run_group(&cfg, &mut cache, group, &scales, &metrics)?;
+            let group = &infers[i..j];
+            if let Err(e) = run_group(&mut st, group) {
+                // per-group failure (unknown variant, backend error):
+                // reply to every request and keep serving
+                let msg = format!("{e:#}");
+                for req in group {
+                    let _ = req.resp.send(Err(msg.clone()));
+                }
+            }
             i = j;
         }
     }
     Ok(())
 }
 
-fn run_group(
-    cfg: &ServerConfig,
-    cache: &mut ExecutableCache,
+fn run_group(st: &mut WorkerState, group: &[InferRequest]) -> Result<()> {
+    let variant = group[0].variant.as_str();
+    if let Some(plan_name) = variant.strip_prefix("plan:") {
+        let plan = st
+            .plans
+            .get(plan_name)
+            .with_context(|| format!("no registered plan {plan_name:?}"))?;
+        anyhow::ensure!(
+            plan.model == st.cfg.model,
+            "plan {plan_name:?} was tuned for model {:?}, server is serving {:?}",
+            plan.model,
+            st.cfg.model
+        );
+        let qc = plan.to_quant_config();
+        return run_group_native(st, group, Some(&qc));
+    }
+    if variant == "native_fp32" {
+        return run_group_native(st, group, None);
+    }
+    let available = st.cache.batch_sizes(&st.cfg.model, variant);
+    // fp32 falls back to the native engine whenever PJRT can't actually
+    // run it — no HLO artifact, or the binary was built without the
+    // `pjrt` feature (the stub would reject the compiled path) — as
+    // long as a native model is in-process or loadable from artifacts.
+    if variant == "fp32"
+        && (available.is_empty() || !cfg!(feature = "pjrt"))
+        && (st.native.is_some() || st.arts.is_some())
+    {
+        return run_group_native(st, group, None);
+    }
+    run_group_pjrt(st, group, &available)
+}
+
+/// Ensure the native model is loaded (in-process handoff or artifacts).
+fn native_model<'a>(st: &'a mut WorkerState) -> Result<&'a LoadedModel> {
+    if st.native.is_none() {
+        let arts = st
+            .arts
+            .as_ref()
+            .context("native backend needs an in-process model or artifacts")?;
+        st.native = Some(arts.load_model(&st.cfg.model)?);
+    }
+    Ok(st.native.as_ref().unwrap())
+}
+
+fn run_group_native(
+    st: &mut WorkerState,
     group: &[InferRequest],
-    scales: &TensorF,
-    metrics: &SharedMetrics,
+    qc: Option<&QuantConfig>,
+) -> Result<()> {
+    let max_batch = st.cfg.policy.max_batch.max(1);
+    let metrics = st.metrics.clone();
+    let model = native_model(st)?;
+    if let Some(qc) = qc {
+        anyhow::ensure!(
+            qc.num_enc_points() >= model.engine.graph.num_enc_points(),
+            "plan covers {} enc points, model {} has {}",
+            qc.num_enc_points(),
+            model.name,
+            model.engine.graph.num_enc_points()
+        );
+    }
+    let dims = group[0].image.dims().to_vec();
+    let img_sz: usize = dims.iter().product();
+    let mut done = 0;
+    while done < group.len() {
+        let take = max_batch.min(group.len() - done);
+        let mut bdims = vec![take];
+        bdims.extend_from_slice(&dims);
+        let mut xb = TensorF::zeros(&bdims);
+        for (slot, req) in group[done..done + take].iter().enumerate() {
+            anyhow::ensure!(
+                req.image.numel() == img_sz,
+                "request image shape {:?} != group shape {:?}",
+                req.image.dims(),
+                dims
+            );
+            xb.data[slot * img_sz..(slot + 1) * img_sz].copy_from_slice(&req.image.data);
+        }
+        let queue_start = Instant::now();
+        let t0 = Instant::now();
+        let logits = match qc {
+            Some(qc) => model.engine.forward_quant(&xb, qc)?,
+            None => model.engine.forward_f32(&xb, &[])?.0,
+        };
+        let exec = t0.elapsed();
+        let classes = logits.dims()[1];
+        {
+            let mut m = metrics.lock().unwrap();
+            m.record_batch(take, 0, exec);
+            for req in &group[done..done + take] {
+                m.record_request(queue_start - req.submitted, req.submitted.elapsed());
+            }
+        }
+        for (slot, req) in group[done..done + take].iter().enumerate() {
+            let resp = InferResponse {
+                logits: logits.data[slot * classes..(slot + 1) * classes].to_vec(),
+                batch_size: take,
+                queue: queue_start - req.submitted,
+                e2e: req.submitted.elapsed(),
+            };
+            let _ = req.resp.send(Ok(resp)); // client may have gone away
+        }
+        done += take;
+    }
+    Ok(())
+}
+
+fn run_group_pjrt(
+    st: &mut WorkerState,
+    group: &[InferRequest],
+    available: &[usize],
 ) -> Result<()> {
     let variant = &group[0].variant;
-    let available = cache.batch_sizes(&cfg.model, variant);
-    let Some(exe_batch) = pick_batch(group.len(), &available) else {
-        anyhow::bail!("no executable for {}/{}", cfg.model, variant);
+    let Some(exe_batch) = pick_batch(group.len(), available) else {
+        anyhow::bail!("no executable for {}/{}", st.cfg.model, variant);
     };
     let dims = group[0].image.dims().to_vec(); // (H, W, C)
     let img_sz: usize = dims.iter().product();
@@ -186,9 +383,9 @@ fn run_group(
             xb.data[slot * img_sz..(slot + 1) * img_sz].copy_from_slice(&req.image.data);
         }
         let queue_start = Instant::now();
-        let exe = cache.get(&cfg.model, variant, exe_batch)?;
+        let exe = st.cache.get(&st.cfg.model, variant, exe_batch)?;
         let inputs: Vec<Input> = if needs_scales {
-            vec![Input::F32(xb), Input::F32(scales.clone())]
+            vec![Input::F32(xb), Input::F32(st.scales.clone())]
         } else {
             vec![Input::F32(xb)]
         };
@@ -197,7 +394,7 @@ fn run_group(
         let exec = t0.elapsed();
         let classes = logits.dims()[1];
         {
-            let mut m = metrics.lock().unwrap();
+            let mut m = st.metrics.lock().unwrap();
             m.record_batch(take, exe_batch - take, exec);
             for req in &group[done..done + take] {
                 m.record_request(queue_start - req.submitted, req.submitted.elapsed());
@@ -210,7 +407,7 @@ fn run_group(
                 queue: queue_start - req.submitted,
                 e2e: req.submitted.elapsed(),
             };
-            let _ = req.resp.send(resp); // client may have gone away
+            let _ = req.resp.send(Ok(resp)); // client may have gone away
         }
         done += take;
     }

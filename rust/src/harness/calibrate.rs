@@ -15,6 +15,20 @@ pub struct Profile {
     pub stats: Vec<ActStats>,
 }
 
+/// Evenly subsample a tensor to at most `max_samples` values. The
+/// stride rounds down, so the strided walk can yield up to stride-1
+/// extra values when numel is not a multiple — cap at exactly
+/// `max_samples`.
+pub fn subsample(t: &TensorF, max_samples: usize) -> Vec<f32> {
+    let stride = (t.numel() / max_samples).max(1);
+    t.data
+        .iter()
+        .step_by(stride)
+        .take(max_samples)
+        .copied()
+        .collect()
+}
+
 /// Forward a batch of images through the fp32 path collecting enc-point
 /// tensors, subsampled to at most `max_samples` values per point.
 pub fn profile_acts(model: &LoadedModel, images: &TensorF, max_samples: usize) -> Result<Profile> {
@@ -23,14 +37,8 @@ pub fn profile_acts(model: &LoadedModel, images: &TensorF, max_samples: usize) -
     let mut samples = Vec::with_capacity(taps.len());
     let mut stats = Vec::with_capacity(taps.len());
     for t in &taps {
-        let stride = (t.numel() / max_samples).max(1);
-        let s: Vec<f32> = t.data.iter().step_by(stride).copied().collect();
-        samples.push(s);
-        stats.push(ActStats {
-            mean: t.mean(),
-            std: t.std(),
-            max: t.data.iter().fold(0f32, |m, &x| m.max(x)),
-        });
+        samples.push(subsample(t, max_samples));
+        stats.push(ActStats::from_tensor(t));
     }
     Ok(Profile { samples, stats })
 }
@@ -59,16 +67,14 @@ pub fn scales_from_stats(stats: &[ActStats], t: f64, bits: u32) -> Vec<f32> {
         .collect()
 }
 
-/// Build a QuantConfig for a clip method on a live profile.
+/// Build a (uniform) QuantConfig for a clip method on a live profile.
+/// Per-enc-point mixed-precision configs come from `policy::autotune`.
 pub fn quant_config(
     profile: &Profile,
     method: ClipMethod,
     overq: OverQConfig,
 ) -> QuantConfig {
-    QuantConfig {
-        act_scales: scales_for(profile, method, overq.bits),
-        overq,
-    }
+    QuantConfig::uniform(overq, scales_for(profile, method, overq.bits))
 }
 
 /// Subset the first `n` images of a dataset.
@@ -117,4 +123,40 @@ pub fn std_sweep_best(
         best_t,
         quant_config(profile, ClipMethod::StdMul(best_t), overq),
     ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shapes;
+    use crate::models::synth::synth_model;
+
+    #[test]
+    fn profile_acts_caps_samples_exactly() {
+        let model = synth_model("synth-tiny", 11).unwrap();
+        let (images, _) = shapes::gen_batch(11, 0, 4);
+        // tap numels (4 images, 16x16x8 and 8x8x12) are not multiples of
+        // 100, so the strided walk used to overshoot max_samples
+        let prof = profile_acts(&model, &images, 100).unwrap();
+        for (e, s) in prof.samples.iter().enumerate() {
+            assert_eq!(s.len(), 100, "enc {e}: {} samples", s.len());
+        }
+        // when the tap is smaller than the cap, keep everything
+        let prof = profile_acts(&model, &images, usize::MAX).unwrap();
+        let srcs = model.engine.graph.enc_point_sources();
+        let (_, taps) = model.engine.forward_f32(&images, &srcs).unwrap();
+        for (s, t) in prof.samples.iter().zip(&taps) {
+            assert_eq!(s.len(), t.numel());
+        }
+    }
+
+    #[test]
+    fn uniform_quant_config_covers_all_enc_points() {
+        let model = synth_model("synth-tiny", 12).unwrap();
+        let (images, _) = shapes::gen_batch(12, 0, 4);
+        let prof = profile_acts(&model, &images, 512).unwrap();
+        let qc = quant_config(&prof, ClipMethod::StdMul(4.0), OverQConfig::full(4, 4));
+        assert_eq!(qc.num_enc_points(), model.engine.graph.num_enc_points());
+        assert!(qc.layers.iter().all(|l| l.scale > 0.0));
+    }
 }

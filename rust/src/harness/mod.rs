@@ -1,9 +1,11 @@
-//! Experiment harnesses — one per paper table/figure (DESIGN.md §5).
+//! Experiment harnesses — one per paper table/figure (DESIGN.md §5),
+//! plus the per-layer policy report (`policy`).
 
 pub mod calibrate;
 pub mod fig6a;
 pub mod fig6b;
 pub mod hwcmp;
+pub mod policy;
 pub mod table1;
 pub mod table2;
 pub mod table3;

@@ -1,0 +1,122 @@
+//! Policy harness — Table-1-style per-layer report for the autotuner.
+//!
+//! Runs the coverage-driven mixed-precision autotuner on a model and
+//! renders one row per enc point: zero/outlier statistics, the chosen
+//! (bits, cascade, mode), Eq. (1) theory coverage vs measured coverage,
+//! the Table-3 PE area, and the layer's MAC share — plus plan-vs-global-
+//! baseline summary rows ("equal or lower area, equal or better
+//! coverage" is the contract the deployment plan must certify).
+
+use anyhow::Result;
+
+use crate::models::zoo::LoadedModel;
+use crate::overq::OverQConfig;
+use crate::policy::{autotune, AutotuneConfig, AutotuneResult};
+use crate::tensor::TensorF;
+use crate::util::bench::Table;
+
+/// Short mode tag for a config ("base", "ro", "pr", "full").
+pub fn mode_tag(cfg: &OverQConfig) -> &'static str {
+    match (cfg.range_overwrite, cfg.precision_overwrite) {
+        (false, false) => "base",
+        (true, false) => "ro",
+        (false, true) => "pr",
+        (true, true) => "full",
+    }
+}
+
+/// Run the autotuner and render the per-layer report.
+pub fn run(
+    model: &LoadedModel,
+    images: &TensorF,
+    cfg: &AutotuneConfig,
+) -> Result<(Table, AutotuneResult)> {
+    let result = autotune(model, images, cfg)?;
+    let total_macs: f64 = result.layers.iter().map(|l| l.macs as f64).sum();
+
+    let mut table = Table::new(
+        &format!(
+            "Policy — per-layer OverQ plan for {} (baseline {}@A{} c{})",
+            model.name,
+            mode_tag(&cfg.baseline),
+            cfg.baseline.bits,
+            cfg.baseline.cascade
+        ),
+        &[
+            "Enc", "Zero %", "Outlier %", "Bits", "Casc", "Mode", "Theory Cov %",
+            "Meas Cov %", "Base Cov %", "PE µm²", "MAC %",
+        ],
+    );
+    for lc in &result.layers {
+        let c = &lc.chosen;
+        table.row(vec![
+            lc.enc.to_string(),
+            format!("{:.1}", lc.p0 * 100.0),
+            format!("{:.2}", c.outlier_rate * 100.0),
+            c.cfg.bits.to_string(),
+            if c.cfg.range_overwrite {
+                c.cfg.cascade.to_string()
+            } else {
+                "-".into()
+            },
+            mode_tag(&c.cfg).into(),
+            format!("{:.1}", c.theory_cov * 100.0),
+            format!("{:.1}", lc.measured_cov * 100.0),
+            format!("{:.1}", lc.baseline_measured_cov * 100.0),
+            format!("{:.1}", c.area),
+            format!("{:.1}", lc.macs as f64 / total_macs * 100.0),
+        ]);
+    }
+    let plan = &result.plan;
+    table.row(vec![
+        "PLAN".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:.1}", plan.mean_coverage * 100.0),
+        format!("{:.1}", plan.baseline_coverage * 100.0),
+        format!("{:.1}", plan.total_area),
+        "100.0".into(),
+    ]);
+    table.row(vec![
+        "BASE".into(),
+        "-".into(),
+        "-".into(),
+        cfg.baseline.bits.to_string(),
+        cfg.baseline.cascade.to_string(),
+        mode_tag(&cfg.baseline).into(),
+        "-".into(),
+        format!("{:.1}", plan.baseline_coverage * 100.0),
+        format!("{:.1}", plan.baseline_coverage * 100.0),
+        format!("{:.1}", plan.baseline_area),
+        "100.0".into(),
+    ]);
+    Ok((table, result))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shapes;
+    use crate::models::synth::synth_model;
+
+    #[test]
+    fn report_shapes_and_budget_holds() {
+        let model = synth_model("synth-tiny", 3).unwrap();
+        let (images, _) = shapes::gen_batch(3, 0, 8);
+        let cfg = AutotuneConfig::default();
+        let (table, result) = run(&model, &images, &cfg).unwrap();
+        // one row per enc point + PLAN + BASE summary rows
+        assert_eq!(table.rows.len(), 2 + 2);
+        // the contract: equal or lower MAC-weighted PE area
+        assert!(
+            result.total_area <= result.baseline_area + 1e-9,
+            "plan area {} exceeds baseline {}",
+            result.total_area,
+            result.baseline_area
+        );
+    }
+}

@@ -13,6 +13,11 @@
 //! * [`nn`] + [`models`] — a native int8/fp32 inference engine that
 //!   executes the graph IR exported by `python/compile/model.py`,
 //!   bit-exact with the JAX/Pallas path on codes and states.
+//! * [`policy`] — the per-layer policy engine: a coverage-driven
+//!   mixed-precision autotuner that picks (bits, cascade, RO/PR) per enc
+//!   point under a PE-area budget and emits serializable
+//!   [`policy::DeploymentPlan`]s the serving layer runs as
+//!   `plan:<name>` variants.
 //! * [`sim`] — cycle-level weight-stationary systolic-array simulator
 //!   with baseline and OverQ processing elements.
 //! * [`area`] — parametric ASIC area model reproducing Table 3.
@@ -38,6 +43,7 @@ pub mod models;
 pub mod nn;
 pub mod olaccel;
 pub mod overq;
+pub mod policy;
 pub mod quant;
 pub mod runtime;
 pub mod sim;

@@ -4,13 +4,15 @@
 //! the end-to-end serving path. All of them need `make artifacts` first
 //! (except `table3`, which is pure modelling).
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use overq::coordinator::batcher::BatchPolicy;
 use overq::coordinator::{Server, ServerConfig};
 use overq::data::shapes;
-use overq::harness::{calibrate, fig6a, fig6b, hwcmp, table1, table2, table3};
-use overq::models::Artifacts;
+use overq::harness::{calibrate, fig6a, fig6b, hwcmp, policy, table1, table2, table3};
+use overq::models::zoo::LoadedModel;
+use overq::models::{synth_model, Artifacts};
+use overq::policy::{AutotuneConfig, DeploymentPlan};
 use overq::util::cli::Args;
 
 const USAGE: &str = "\
@@ -27,8 +29,17 @@ COMMANDS (paper artifacts):
   hwcmp      systolic + OLAccel hardware comparison     [--rows 32 --cols 16]
 
 COMMANDS (system):
+  policy     coverage-driven mixed-precision autotuner: choose an OverQ
+             config per enc point under a PE-area budget and emit a
+             deployment plan JSON
+             [overq policy <model> --images 64 --std-t 4.0
+              --bits 3,4,5,8 --cascades 1,2,3,4
+              --baseline-bits 4 --baseline-cascade 4
+              --budget <µm²> --name <plan> --out plans/<model>.plan.json]
+             (models starting with \"synth\" need no artifacts)
   serve      run the serving coordinator on synthetic traffic
              [--variant full_c4 --requests 64 --model resnet18m]
+             [--plan plans/<model>.plan.json serves plan:<name> natively]
   eval       native-engine accuracy for one config
              [--model resnet18m --bits 4 --cascade 4 --std-t 6 --mode full|ro|base]
   info       artifact manifest summary
@@ -92,6 +103,7 @@ fn dispatch(args: &Args) -> Result<()> {
             cfg.layer = args.get_usize("layer", cfg.layer);
             emit(hwcmp::run(&arts, &cfg)?, args)
         }
+        "policy" => policy_cmd(args),
         "serve" => serve(args),
         "eval" => eval_cmd(args),
         "info" => info(),
@@ -162,20 +174,111 @@ fn eval_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn serve(args: &Args) -> Result<()> {
+/// Resolve a model: synthetic (artifact-free) when the name starts with
+/// "synth", the AOT artifact zoo otherwise.
+fn load_model_any(name: &str) -> Result<(LoadedModel, Option<Artifacts>)> {
+    if name.starts_with("synth") {
+        return Ok((synth_model(name, 42)?, None));
+    }
     let arts = Artifacts::locate()?;
-    let model = args.get_or("model", "resnet18m").to_string();
-    let variant = args.get_or("variant", "full_c4").to_string();
+    let model = arts.load_model(name)?;
+    Ok((model, Some(arts)))
+}
+
+fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|t| t.trim().parse::<usize>().with_context(|| format!("bad list entry {t:?}")))
+        .collect()
+}
+
+fn policy_cmd(args: &Args) -> Result<()> {
+    use overq::overq::OverQConfig;
+    use overq::quant::clip::ClipMethod;
+
+    let name = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("model"))
+        .unwrap_or("synth-cnn")
+        .to_string();
+    let (model, arts) = load_model_any(&name)?;
+    let n = args.get_usize("images", 64);
+    let images = match &arts {
+        Some(a) => calibrate::subset(&a.load_dataset("profileset")?, n).0,
+        None => shapes::gen_batch(4242, 0, n).0,
+    };
+
+    let mut at = AutotuneConfig {
+        clip: ClipMethod::StdMul(args.get_f64("std-t", 4.0)),
+        baseline: OverQConfig::full(
+            args.get_usize("baseline-bits", 4) as u32,
+            args.get_usize("baseline-cascade", 4),
+        ),
+        plan_name: args.get("name").map(|s| s.to_string()),
+        ..AutotuneConfig::default()
+    };
+    if let Some(b) = args.get("bits") {
+        at.space.bits = parse_usize_list(b)?.into_iter().map(|b| b as u32).collect();
+    }
+    if let Some(c) = args.get("cascades") {
+        at.space.cascades = parse_usize_list(c)?;
+    }
+    if let Some(b) = args.get("budget") {
+        at.budget_area = Some(b.parse::<f64>().context("--budget expects µm²")?);
+    }
+
+    let (table, result) = policy::run(&model, &images, &at)?;
+    emit(table, args)?;
+    let default_out = format!("plans/{name}.plan.json");
+    let out = args.get_or("out", &default_out);
+    result.plan.save(std::path::Path::new(out))?;
+    println!(
+        "plan {:?} → {out}: coverage {:.1}% (baseline {:.1}%) at area {:.1} µm² (baseline {:.1}, budget {:.1})",
+        result.plan.name,
+        result.plan.mean_coverage * 100.0,
+        result.plan.baseline_coverage * 100.0,
+        result.total_area,
+        result.baseline_area,
+        at.budget_area.unwrap_or(result.baseline_area),
+    );
+    println!("serve it: overq serve --plan {out} --model {name}");
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
     let requests = args.get_usize("requests", 64);
-    let m = arts.load_model(&model)?;
-    let scales = calibrate::scales_from_stats(&m.enc_stats, args.get_f64("std-t", 6.0), 4);
-    let server = Server::start(ServerConfig {
-        model: model.clone(),
-        policy: BatchPolicy::default(),
-        act_scales: scales,
-    })?;
-    let compile = server.warmup(&variant, &[16, 16, 3], 8)?;
-    println!("warmup/compile: {:.1} ms", compile.as_secs_f64() * 1e3);
+    let (server, variant, model) = if let Some(path) = args.get("plan") {
+        // plan-backed serving: native engine backend, no HLO needed
+        let plan = DeploymentPlan::load(std::path::Path::new(path))?;
+        let model = args.get_or("model", &plan.model).to_string();
+        let (loaded, _) = load_model_any(&model)?;
+        let server = Server::start_local(
+            ServerConfig {
+                model: model.clone(),
+                policy: BatchPolicy::default(),
+                act_scales: vec![],
+            },
+            loaded,
+        )?;
+        server.register_plan(plan.clone())?;
+        (server, format!("plan:{}", plan.name), model)
+    } else {
+        let arts = Artifacts::locate()?;
+        let model = args.get_or("model", "resnet18m").to_string();
+        let variant = args.get_or("variant", "full_c4").to_string();
+        let m = arts.load_model(&model)?;
+        let scales =
+            calibrate::scales_from_stats(&m.enc_stats, args.get_f64("std-t", 6.0), 4);
+        let server = Server::start(ServerConfig {
+            model: model.clone(),
+            policy: BatchPolicy::default(),
+            act_scales: scales,
+        })?;
+        let compile = server.warmup(&variant, &[16, 16, 3], 8)?;
+        println!("warmup/compile: {:.1} ms", compile.as_secs_f64() * 1e3);
+        (server, variant, model)
+    };
     let mut correct = 0usize;
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
@@ -186,7 +289,7 @@ fn serve(args: &Args) -> Result<()> {
         pending.push(server.submit(img, &variant)?);
     }
     for (i, rx) in pending.into_iter().enumerate() {
-        let resp = rx.recv()?;
+        let resp = rx.recv()?.map_err(|e| anyhow::anyhow!("{e}"))?;
         let pred = resp
             .logits
             .iter()

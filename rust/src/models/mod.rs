@@ -1,5 +1,8 @@
-//! Model zoo: load graphs + weights from the artifact directory.
+//! Model zoo: load graphs + weights from the artifact directory, or
+//! build synthetic artifact-free models for tests/benches.
 
+pub mod synth;
 pub mod zoo;
 
+pub use synth::synth_model;
 pub use zoo::{Artifacts, LoadedModel};

@@ -1,0 +1,151 @@
+//! Synthetic model zoo — deterministic, artifact-free [`LoadedModel`]s.
+//!
+//! The real zoo loads graphs + trained weights exported by `make
+//! artifacts`; that directory is not always present (CI, fresh clones).
+//! These generators build the same graph IR in memory with seeded random
+//! weights, then profile enc stats on the native synthetic image
+//! distribution (`data::shapes`). Random weights make no accuracy
+//! claims, but ReLU zeros and activation outliers — everything the
+//! policy engine, coverage analysis and serving path exercise — behave
+//! like the real thing, so tests and benches run anywhere.
+
+use anyhow::Result;
+
+use crate::data::shapes;
+use crate::io::tensorfile::{AnyTensor, TensorMap};
+use crate::nn::{Engine, Graph};
+use crate::quant::clip::ActStats;
+use crate::tensor::TensorF;
+use crate::util::json::parse;
+use crate::util::rng::Rng;
+
+use super::zoo::LoadedModel;
+
+/// Names [`synth_model`] accepts.
+pub fn names() -> &'static [&'static str] {
+    &["synth-tiny", "synth-cnn"]
+}
+
+/// Build a synthetic model by name. Deterministic in (name, seed).
+pub fn synth_model(name: &str, seed: u64) -> Result<LoadedModel> {
+    let graph_json = match name {
+        // two quantized convs — the smallest multi-enc-point model
+        "synth-tiny" => r#"{
+          "name": "synth-tiny",
+          "nodes": [
+            {"id": 0, "op": "input", "in": []},
+            {"id": 1, "op": "conv", "in": [0], "kh": 3, "kw": 3, "stride": 1,
+             "cin": 3, "cout": 8, "relu": true, "quant": false},
+            {"id": 2, "op": "conv", "in": [1], "kh": 3, "kw": 3, "stride": 2,
+             "cin": 8, "cout": 12, "relu": true, "quant": true, "enc": 0},
+            {"id": 3, "op": "conv", "in": [2], "kh": 3, "kw": 3, "stride": 2,
+             "cin": 12, "cout": 16, "relu": true, "quant": true, "enc": 1},
+            {"id": 4, "op": "gap", "in": [3]},
+            {"id": 5, "op": "dense", "in": [4], "cin": 16, "cout": 10}
+          ]
+        }"#,
+        // four enc points over a conv stack with a pool — a "zoo model"
+        // shaped like the artifact minis, sized for benches
+        "synth-cnn" => r#"{
+          "name": "synth-cnn",
+          "nodes": [
+            {"id": 0, "op": "input", "in": []},
+            {"id": 1, "op": "conv", "in": [0], "kh": 3, "kw": 3, "stride": 1,
+             "cin": 3, "cout": 12, "relu": true, "quant": false},
+            {"id": 2, "op": "conv", "in": [1], "kh": 3, "kw": 3, "stride": 1,
+             "cin": 12, "cout": 16, "relu": true, "quant": true, "enc": 0},
+            {"id": 3, "op": "maxpool", "in": [2]},
+            {"id": 4, "op": "conv", "in": [3], "kh": 3, "kw": 3, "stride": 1,
+             "cin": 16, "cout": 24, "relu": true, "quant": true, "enc": 1},
+            {"id": 5, "op": "conv", "in": [4], "kh": 3, "kw": 3, "stride": 2,
+             "cin": 24, "cout": 32, "relu": true, "quant": true, "enc": 2},
+            {"id": 6, "op": "conv", "in": [5], "kh": 3, "kw": 3, "stride": 1,
+             "cin": 32, "cout": 32, "relu": true, "quant": true, "enc": 3},
+            {"id": 7, "op": "gap", "in": [6]},
+            {"id": 8, "op": "dense", "in": [7], "cin": 32, "cout": 10}
+          ]
+        }"#,
+        other => anyhow::bail!(
+            "unknown synthetic model {other:?} (available: {:?})",
+            names()
+        ),
+    };
+    let graph = Graph::from_json(&parse(graph_json).map_err(|e| anyhow::anyhow!("{e}"))?)?;
+
+    // seeded random weights, scaled to keep activations O(1)
+    let mut rng = Rng::new(seed ^ 0x5F37_59DF);
+    let mut weights = TensorMap::new();
+    for node in &graph.nodes {
+        use crate::nn::graph::Op;
+        let (wdims, bdim): (Vec<usize>, usize) = match &node.op {
+            Op::Conv {
+                kh, kw, cin, cout, ..
+            } => (vec![*kh, *kw, *cin, *cout], *cout),
+            Op::Dense { cin, cout } => (vec![*cin, *cout], *cout),
+            _ => continue,
+        };
+        let fan_in: usize = wdims[..wdims.len() - 1].iter().product();
+        let std = (2.0 / fan_in as f32).sqrt(); // He init
+        let mut w = TensorF::zeros(&wdims);
+        for v in w.data.iter_mut() {
+            *v = rng.normal() * std;
+        }
+        let mut b = TensorF::zeros(&[bdim]);
+        for v in b.data.iter_mut() {
+            *v = rng.normal() * 0.05;
+        }
+        weights.insert(format!("n{}.w", node.id), AnyTensor::F32(w));
+        weights.insert(format!("n{}.b", node.id), AnyTensor::F32(b));
+    }
+    let engine = Engine::new(graph, &weights)?;
+
+    // profile enc stats on the native synthetic image distribution
+    let (images, labels) = shapes::gen_batch(seed, 0, 32);
+    let srcs = engine.graph.enc_point_sources();
+    let (_, taps) = engine.forward_f32(&images, &srcs)?;
+    let enc_stats: Vec<ActStats> = taps.iter().map(ActStats::from_tensor).collect();
+    let fp32_acc = engine.accuracy_f32(&images, &labels, 16)?;
+
+    Ok(LoadedModel {
+        name: name.to_string(),
+        engine,
+        enc_stats,
+        fp32_acc,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_well_formed() {
+        let a = synth_model("synth-tiny", 7).unwrap();
+        let b = synth_model("synth-tiny", 7).unwrap();
+        assert_eq!(a.engine.graph.num_enc_points(), 2);
+        assert_eq!(a.enc_stats.len(), 2);
+        for (sa, sb) in a.enc_stats.iter().zip(&b.enc_stats) {
+            assert_eq!(sa.mean, sb.mean);
+            assert_eq!(sa.std, sb.std);
+            assert_eq!(sa.max, sb.max);
+        }
+        // ReLU taps: nonnegative with real mass and real zeros
+        for s in &a.enc_stats {
+            assert!(s.max > 0.0 && s.std > 0.0);
+        }
+    }
+
+    #[test]
+    fn cnn_has_four_enc_points_and_runs() {
+        let m = synth_model("synth-cnn", 1).unwrap();
+        assert_eq!(m.engine.graph.num_enc_points(), 4);
+        let (x, _) = shapes::gen_batch(2, 0, 2);
+        let (logits, _) = m.engine.forward_f32(&x, &[]).unwrap();
+        assert_eq!(logits.dims(), &[2, 10]);
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(synth_model("nope", 0).is_err());
+    }
+}

@@ -13,13 +13,41 @@ use super::conv::im2col;
 use super::gemm::gemm_f32;
 use super::graph::{Graph, Node, Op};
 
-/// Per-run quantization configuration.
+/// Quantization of one enc point: the OverQ hardware mode plus the
+/// activation scale (clip / qmax at that layer's bitwidth).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerQuant {
+    /// OverQ mode (bits, cascade, RO/PR switches) for this enc point.
+    pub overq: OverQConfig,
+    /// Activation scale (clip / qmax) for this enc point.
+    pub scale: f32,
+}
+
+/// Per-run quantization configuration: one [`LayerQuant`] per enc point,
+/// so mixed-precision deployment plans can vary bits/cascade/mode layer
+/// by layer. [`QuantConfig::uniform`] reproduces the old single-global
+/// behavior.
 #[derive(Clone, Debug)]
 pub struct QuantConfig {
-    /// OverQ mode (bits, cascade, RO/PR switches).
-    pub overq: OverQConfig,
-    /// Activation scale (clip / qmax) per enc point.
-    pub act_scales: Vec<f32>,
+    /// Per-enc-point configuration, indexed by enc-point id.
+    pub layers: Vec<LayerQuant>,
+}
+
+impl QuantConfig {
+    /// The same OverQ mode at every enc point (the paper's setting).
+    pub fn uniform(overq: OverQConfig, act_scales: Vec<f32>) -> QuantConfig {
+        QuantConfig {
+            layers: act_scales
+                .into_iter()
+                .map(|scale| LayerQuant { overq, scale })
+                .collect(),
+        }
+    }
+
+    /// Number of enc points configured.
+    pub fn num_enc_points(&self) -> usize {
+        self.layers.len()
+    }
 }
 
 /// Prepared conv layer.
@@ -278,10 +306,10 @@ impl Engine {
     /// dequant. Bit-exact (codes/states) with the AOT JAX model.
     pub fn forward_quant(&self, x: &TensorF, qc: &QuantConfig) -> Result<TensorF> {
         anyhow::ensure!(
-            qc.act_scales.len() >= self.graph.num_enc_points(),
-            "need {} act scales, got {}",
+            qc.layers.len() >= self.graph.num_enc_points(),
+            "need {} enc-point configs, got {}",
             self.graph.num_enc_points(),
-            qc.act_scales.len()
+            qc.layers.len()
         );
         let mut vals: Vec<Option<TensorF>> = vec![None; self.graph.nodes.len()];
         let mut encoded: HashMap<usize, Encoded> = HashMap::new();
@@ -292,20 +320,21 @@ impl Engine {
                     let e = enc.context("quant conv without enc")?;
                     let src = vals[node.inputs[0]].as_ref().unwrap();
                     let n = src.dims()[0];
-                    let scale = qc.act_scales[e];
+                    let lq = qc.layers[e];
+                    let scale = lq.scale;
                     let (ccols, scols, oh, ow, kdim) = if let Some(gather) = &pc.gather {
                         // OCS: expand channels on the raw tensor, then
                         // encode the expanded stream (hardware sees the
                         // duplicated channels as real channels).
                         let exp = expand_channels(src, gather);
-                        let encx = encode_tensor(&exp, scale, &qc.overq);
+                        let encx = encode_tensor(&exp, scale, &lq.overq);
                         let (cc, oh, ow) = im2col(&encx.codes, pc.kh, pc.kw, pc.stride);
                         let (sc, _, _) = im2col(&encx.state, pc.kh, pc.kw, pc.stride);
                         let k = pc.kh * pc.kw * gather.len();
                         (cc, sc, oh, ow, k)
                     } else {
                         let encx = encoded.entry(e).or_insert_with(|| {
-                            encode_tensor(src, scale, &qc.overq)
+                            encode_tensor(src, scale, &lq.overq)
                         });
                         let (cc, oh, ow) = im2col(&encx.codes, pc.kh, pc.kw, pc.stride);
                         let (sc, _, _) = im2col(&encx.state, pc.kh, pc.kw, pc.stride);
@@ -321,11 +350,11 @@ impl Engine {
                         &scols.reshape(&[m, kdim]),
                         &qw.codes,
                         wroll,
-                        &qc.overq,
+                        &lq.overq,
                         &mut acc,
                     );
                     // dequant: acc * act_scale * w_scale / B + bias (+relu)
-                    let inv_b = 1.0f32 / qc.overq.b() as f32;
+                    let inv_b = 1.0f32 / lq.overq.b() as f32;
                     let mut out = TensorF::zeros(&[m, pc.cout]);
                     for i in 0..m {
                         let arow = &acc.data[i * pc.cout..(i + 1) * pc.cout];
@@ -568,10 +597,7 @@ mod tests {
         let (fp, taps) = e.forward_f32(&x, &[1]).unwrap();
         let max = taps[0].max_abs();
         // bits=6 with scale covering the whole range: small act error
-        let qc = QuantConfig {
-            overq: OverQConfig::baseline(6),
-            act_scales: vec![max / 63.0],
-        };
+        let qc = QuantConfig::uniform(OverQConfig::baseline(6), vec![max / 63.0]);
         let q = e.forward_quant(&x, &qc).unwrap();
         for (a, b) in fp.data.iter().zip(&q.data) {
             assert!((a - b).abs() < 0.25 * (1.0 + a.abs()), "{a} vs {b}");
@@ -595,19 +621,13 @@ mod tests {
         let base = e
             .forward_quant(
                 &x,
-                &QuantConfig {
-                    overq: OverQConfig::baseline(4),
-                    act_scales: vec![scale],
-                },
+                &QuantConfig::uniform(OverQConfig::baseline(4), vec![scale]),
             )
             .unwrap();
         let ovq = e
             .forward_quant(
                 &x,
-                &QuantConfig {
-                    overq: OverQConfig::full(4, 4),
-                    act_scales: vec![scale],
-                },
+                &QuantConfig::uniform(OverQConfig::full(4, 4), vec![scale]),
             )
             .unwrap();
         assert!(
@@ -624,10 +644,7 @@ mod tests {
         let x = rand_input(4, 2);
         let (_, taps) = e.forward_f32(&x, &[1]).unwrap();
         let scale = taps[0].max_abs() / 15.0;
-        let qc = QuantConfig {
-            overq: OverQConfig::baseline(4),
-            act_scales: vec![scale],
-        };
+        let qc = QuantConfig::uniform(OverQConfig::baseline(4), vec![scale]);
         let before = e.forward_quant(&x, &qc).unwrap();
         e.apply_ocs(0.25);
         let after = e.forward_quant(&x, &qc).unwrap();
@@ -636,6 +653,101 @@ mod tests {
         for (a, b) in before.data.iter().zip(&after.data) {
             assert!((a - b).abs() < 0.5 * (1.0 + a.abs()), "{a} vs {b}");
         }
+    }
+
+    fn toy_engine_two_enc() -> Engine {
+        let graph = Graph::from_json(
+            &parse(
+                r#"{
+          "name": "toy2",
+          "nodes": [
+            {"id": 0, "op": "input", "in": []},
+            {"id": 1, "op": "conv", "in": [0], "kh": 3, "kw": 3, "stride": 1,
+             "cin": 3, "cout": 4, "relu": true, "quant": true, "enc": 0},
+            {"id": 2, "op": "conv", "in": [1], "kh": 3, "kw": 3, "stride": 2,
+             "cin": 4, "cout": 6, "relu": true, "quant": true, "enc": 1},
+            {"id": 3, "op": "gap", "in": [2]},
+            {"id": 4, "op": "dense", "in": [3], "cin": 6, "cout": 5}
+          ]
+        }"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let mut rng = Rng::new(77);
+        let mut weights = TensorMap::new();
+        let mut add_w = |name: &str, dims: &[usize]| {
+            let mut t = TensorF::zeros(dims);
+            for v in t.data.iter_mut() {
+                *v = rng.normal() * 0.3;
+            }
+            weights.insert(name.into(), AnyTensor::F32(t));
+        };
+        add_w("n1.w", &[3, 3, 3, 4]);
+        add_w("n1.b", &[4]);
+        add_w("n2.w", &[3, 3, 4, 6]);
+        add_w("n2.b", &[6]);
+        add_w("n4.w", &[6, 5]);
+        add_w("n4.b", &[5]);
+        Engine::new(graph, &weights).unwrap()
+    }
+
+    #[test]
+    fn mixed_precision_per_enc_point() {
+        let e = toy_engine_two_enc();
+        let x = rand_input(6, 3);
+        let (fp, taps) = e.forward_f32(&x, &[0, 1]).unwrap();
+        // enc 0 sees the raw input, enc 1 the first conv's output
+        let s0 = x.max_abs();
+        let s1 = taps[1].max_abs();
+        let l2 = |a: &TensorF, b: &TensorF| -> f64 {
+            a.data
+                .iter()
+                .zip(&b.data)
+                .map(|(&x, &y)| ((x - y) as f64).powi(2))
+                .sum()
+        };
+        // uniform A4 vs mixed A8(enc0)/A4(enc1): widening one layer must
+        // not hurt, and the per-layer scales must be honored per point.
+        let qc4 = QuantConfig::uniform(OverQConfig::baseline(4), vec![s0 / 15.0, s1 / 15.0]);
+        let mixed = QuantConfig {
+            layers: vec![
+                LayerQuant {
+                    overq: OverQConfig::baseline(8),
+                    scale: s0 / 255.0,
+                },
+                LayerQuant {
+                    overq: OverQConfig::baseline(4),
+                    scale: s1 / 15.0,
+                },
+            ],
+        };
+        let out4 = e.forward_quant(&x, &qc4).unwrap();
+        let outm = e.forward_quant(&x, &mixed).unwrap();
+        assert!(
+            l2(&outm, &fp) <= l2(&out4, &fp) + 1e-9,
+            "mixed {} vs uniform {}",
+            l2(&outm, &fp),
+            l2(&out4, &fp)
+        );
+        // uniform() is just sugar for identical per-layer entries
+        let by_hand = QuantConfig {
+            layers: vec![
+                LayerQuant {
+                    overq: OverQConfig::baseline(4),
+                    scale: s0 / 15.0,
+                },
+                LayerQuant {
+                    overq: OverQConfig::baseline(4),
+                    scale: s1 / 15.0,
+                },
+            ],
+        };
+        assert_eq!(
+            e.forward_quant(&x, &by_hand).unwrap().data,
+            out4.data,
+            "uniform() diverged from explicit per-layer construction"
+        );
     }
 
     #[test]

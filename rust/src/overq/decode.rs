@@ -130,6 +130,138 @@ mod tests {
         });
     }
 
+    /// Independent value-level reference of DESIGN.md §7: walk the raw
+    /// integer codes and produce the *effective dequantized values*
+    /// directly, without going through the (codes, state) bit
+    /// representation. encode→decode must reproduce this exactly.
+    fn normative_fakequant(x: &[f32], scale: f32, cfg: &OverQConfig) -> Vec<f32> {
+        use crate::overq::encode::int_codes;
+        let c = x.len();
+        let inv = 1.0f32 / scale;
+        let bf = cfg.b() as f32;
+        let (bb, qmax) = (cfg.b(), cfg.qmax());
+        let (mut v, mut vf) = (vec![0i32; c], vec![0i32; c]);
+        for (k, &xv) in x.iter().enumerate() {
+            let (a, b) = int_codes(xv, inv, bf);
+            v[k] = a;
+            vf[k] = b;
+        }
+        let mut out = vec![0.0f32; c];
+        let mut i = 0;
+        while i < c {
+            let vi = v[i];
+            if vi > qmax {
+                let mut j = 0;
+                if cfg.range_overwrite {
+                    for d in 1..=cfg.cascade {
+                        if i + d < c && v[i + d] == 0 {
+                            j = i + d;
+                            break;
+                        }
+                    }
+                }
+                if j > 0 {
+                    // covered outlier: full value in the widened range;
+                    // intermediates shift over (clamped); the claimed
+                    // zero stays zero
+                    out[i] = vi.min(bb * bb - 1) as f32 * scale;
+                    for k in (i + 1)..j {
+                        out[k] = v[k].min(qmax) as f32 * scale;
+                    }
+                    out[j] = 0.0;
+                    i = j + 1;
+                } else {
+                    out[i] = qmax as f32 * scale; // uncovered: clamp
+                    i += 1;
+                }
+            } else if vi > 0 {
+                if cfg.precision_overwrite && i + 1 < c && v[i + 1] == 0 {
+                    let hi = (vf[i] >> cfg.bits).min(qmax);
+                    let lo = vf[i] & qmax;
+                    if lo > 0 {
+                        out[i] = (hi as f32 + lo as f32 / bf) * scale;
+                        out[i + 1] = 0.0;
+                        i += 2;
+                        continue;
+                    }
+                }
+                out[i] = vi as f32 * scale;
+                i += 1;
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn prop_roundtrip_matches_normative_path() {
+        check("encode→decode == normative fake-quant", 250, |rng: &mut Rng| {
+            let cfg = OverQConfig {
+                bits: 3 + rng.index(3) as u32, // 3..5
+                cascade: 1 + rng.index(4),
+                range_overwrite: rng.bool(0.75),
+                precision_overwrite: rng.bool(0.5),
+            };
+            let rows = 1 + rng.index(4);
+            let c = 1 + rng.index(48);
+            let scale = 0.1 + rng.f32() * 0.4;
+            let mut x = TensorF::zeros(&[rows, c]);
+            for v in x.data.iter_mut() {
+                *v = if rng.bool(0.45) {
+                    0.0
+                } else {
+                    rng.normal().abs() * (if rng.bool(0.15) { 10.0 } else { 1.0 })
+                };
+            }
+            let enc = encode_tensor(&x, scale, &cfg);
+            let dec = fakequant_from_codes(&enc.codes, &enc.state, scale, &cfg);
+            for r in 0..rows {
+                let want = normative_fakequant(x.row(r), scale, &cfg);
+                let got = &dec.data[r * c..(r + 1) * c];
+                for k in 0..c {
+                    assert!(
+                        got[k] == want[k],
+                        "row {r} slot {k}: decoded {} != normative {} \
+                         (x={}, cfg={cfg:?})",
+                        got[k],
+                        want[k],
+                        x.row(r)[k]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_roundtrip_is_plain_quant_without_zeros_or_outliers() {
+        // with nothing to overwrite, every mode degenerates to the plain
+        // uniform quantizer
+        check("roundtrip degenerates to uniform quant", 100, |rng: &mut Rng| {
+            let bits = 3 + rng.index(3) as u32;
+            for cfg in [
+                OverQConfig::baseline(bits),
+                OverQConfig::ro(bits, 1 + rng.index(4)),
+                OverQConfig::full(bits, 1 + rng.index(4)),
+            ] {
+                let c = 1 + rng.index(32);
+                let scale = 0.25f32;
+                let qmax = cfg.qmax() as f32;
+                let mut x = TensorF::zeros(&[1, c]);
+                for v in x.data.iter_mut() {
+                    // strictly in-range, never rounding to zero
+                    *v = scale * (1.0 + rng.f32() * (qmax - 1.0));
+                }
+                let enc = encode_tensor(&x, scale, &cfg);
+                let dec = fakequant_from_codes(&enc.codes, &enc.state, scale, &cfg);
+                for (k, &xv) in x.data.iter().enumerate() {
+                    let plain = (xv / scale + 0.5).floor().min(qmax) * scale;
+                    assert_eq!(dec.data[k], plain, "slot {k} x={xv} cfg={cfg:?}");
+                }
+            }
+        });
+    }
+
     #[test]
     fn zeros_stay_zero() {
         let cfg = OverQConfig::full(4, 4);

@@ -1,0 +1,329 @@
+//! Coverage-driven greedy Pareto search over per-layer OverQ configs.
+//!
+//! For every enc point the tuner scores each candidate config with a
+//! fast analytic proxy — Eq. (1) `theory_coverage` for the outlier term
+//! plus uniform-quantizer rounding error — and keeps the per-layer
+//! Pareto frontier over (PE area, predicted error). A global greedy pass
+//! then walks the frontiers, spending an area budget where it buys the
+//! largest error reduction per µm², with cost weighted by each layer's
+//! MAC share (the PE array is shared temporally, so the deployment cost
+//! of a layer's config is area × occupancy). Final choices are validated
+//! with *measured* coverage (`overq::coverage_stats`) on the profiling
+//! taps, which is what lands in the emitted [`DeploymentPlan`].
+
+use anyhow::Result;
+
+use crate::models::zoo::LoadedModel;
+use crate::overq::{coverage_stats, theory_coverage, OverQConfig};
+use crate::quant::clip::ClipMethod;
+use crate::tensor::TensorF;
+
+use super::candidates::{pe_area, CandidateSpace};
+use super::plan::{DeploymentPlan, PlanLayer, PLAN_VERSION};
+use super::profile::{profile_enc_points, EncPointProfile};
+
+/// Autotuner knobs.
+#[derive(Clone, Debug)]
+pub struct AutotuneConfig {
+    /// Candidate search space.
+    pub space: CandidateSpace,
+    /// Clip-threshold method used to derive each candidate's scale.
+    pub clip: ClipMethod,
+    /// Global config the plan must beat (coverage) at ≤ its area.
+    pub baseline: OverQConfig,
+    /// MAC-weighted mean PE-area budget (µm²). `None` = the baseline's
+    /// own area, i.e. "equal or lower total PE area".
+    pub budget_area: Option<f64>,
+    /// Max profiled values per enc point for proxy scoring.
+    pub max_samples: usize,
+    /// Plan name to emit (defaults to `<model>-auto`).
+    pub plan_name: Option<String>,
+}
+
+impl Default for AutotuneConfig {
+    fn default() -> Self {
+        AutotuneConfig {
+            space: CandidateSpace::default(),
+            clip: ClipMethod::StdMul(4.0),
+            baseline: OverQConfig::full(4, 4),
+            budget_area: None,
+            max_samples: 4096,
+            plan_name: None,
+        }
+    }
+}
+
+/// One scored candidate at one enc point.
+#[derive(Clone, Copy, Debug)]
+pub struct ScoredCandidate {
+    pub cfg: OverQConfig,
+    /// Activation scale (clip / qmax at `cfg.bits`).
+    pub scale: f32,
+    /// PE area (µm²) from the Table-3 model.
+    pub area: f64,
+    /// Predicted mean squared activation error on the profile samples.
+    pub pred_err: f64,
+    /// Eq. (1) coverage (0 when RO is off).
+    pub theory_cov: f64,
+    /// Outlier fraction of the samples at this candidate's scale.
+    pub outlier_rate: f64,
+}
+
+/// The tuner's decision for one enc point.
+#[derive(Clone, Debug)]
+pub struct LayerChoice {
+    pub enc: usize,
+    pub chosen: ScoredCandidate,
+    /// The global baseline config scored at this layer.
+    pub baseline: ScoredCandidate,
+    /// Measured coverage of the chosen config on the profiling tap.
+    pub measured_cov: f64,
+    /// Measured coverage of the baseline config on the profiling tap.
+    pub baseline_measured_cov: f64,
+    pub p0: f64,
+    pub macs: u64,
+}
+
+/// Full autotune output: per-layer choices + the emitted plan.
+#[derive(Clone, Debug)]
+pub struct AutotuneResult {
+    pub layers: Vec<LayerChoice>,
+    /// MAC-weighted mean PE area of the plan.
+    pub total_area: f64,
+    /// MAC-weighted mean PE area of the global baseline.
+    pub baseline_area: f64,
+    pub plan: DeploymentPlan,
+}
+
+/// Score one candidate on one enc point's samples.
+///
+/// Error model per sample x (scale s, step s, fine step s/B):
+/// * exact zero          → 0
+/// * in-range value      → s²/12, or (s/B)²/12 with probability `p0`
+///                         when PR can park LSBs in a neighboring zero
+/// * outlier             → covered (prob. Eq. 1, RO only): rounding at
+///                         step s in the widened range, clamped at B²-1;
+///                         uncovered: clamp error against qmax·s
+pub fn score_candidate(
+    prof: &EncPointProfile,
+    cfg: &OverQConfig,
+    clip: ClipMethod,
+) -> ScoredCandidate {
+    let qmax = cfg.qmax() as f32;
+    let clip_v = clip.clip(&prof.samples, prof.stats, cfg.bits).max(1e-6);
+    let scale = clip_v / qmax;
+    let cov = if cfg.range_overwrite {
+        theory_coverage(prof.p0, cfg.cascade)
+    } else {
+        0.0
+    };
+    let b = cfg.b() as f32;
+    let wide_max = (b * b - 1.0) * scale;
+    let step_sq = (scale as f64).powi(2) / 12.0;
+    let fine_sq = step_sq / (b as f64 * b as f64);
+    let mut err = 0.0f64;
+    let mut outliers = 0usize;
+    for &x in &prof.samples {
+        if x == 0.0 {
+            continue;
+        }
+        let v = (x / scale + 0.5).floor();
+        if v > qmax {
+            outliers += 1;
+            let covered = if x > wide_max {
+                ((x - wide_max) as f64).powi(2)
+            } else {
+                step_sq
+            };
+            let clamped = ((x - qmax * scale) as f64).powi(2);
+            err += cov * covered + (1.0 - cov) * clamped;
+        } else if cfg.precision_overwrite {
+            err += prof.p0 * fine_sq + (1.0 - prof.p0) * step_sq;
+        } else {
+            err += step_sq;
+        }
+    }
+    let n = prof.samples.len().max(1) as f64;
+    ScoredCandidate {
+        cfg: *cfg,
+        scale,
+        area: pe_area(cfg),
+        pred_err: err / n,
+        theory_cov: cov,
+        outlier_rate: outliers as f64 / n,
+    }
+}
+
+/// Per-layer Pareto frontier over (area ↑, pred_err ↓), keeping only
+/// candidates whose coverage cannot fall below the baseline's: either
+/// they provably produce no outliers on the whole tap (the profiled max
+/// rounds inside the code range), or RO is on with theory coverage ≥
+/// the baseline's at this layer.
+fn frontier(
+    prof: &EncPointProfile,
+    space: &CandidateSpace,
+    clip: ClipMethod,
+    baseline: &ScoredCandidate,
+) -> Vec<ScoredCandidate> {
+    let mut scored: Vec<ScoredCandidate> = space
+        .enumerate()
+        .iter()
+        .map(|c| score_candidate(prof, c, clip))
+        .filter(|s| {
+            let outlier_free =
+                prof.stats.max < (s.cfg.qmax() as f32 + 0.5) * s.scale;
+            outlier_free || s.theory_cov >= baseline.theory_cov - 1e-12
+        })
+        .collect();
+    // the baseline itself is always admissible, so the frontier (and the
+    // min-area start point) can never exceed the baseline's area
+    scored.push(*baseline);
+    scored.sort_by(|a, b| {
+        a.area
+            .partial_cmp(&b.area)
+            .unwrap()
+            .then(a.pred_err.partial_cmp(&b.pred_err).unwrap())
+    });
+    let mut front: Vec<ScoredCandidate> = Vec::new();
+    for s in scored {
+        match front.last() {
+            Some(last) if s.area == last.area => continue, // kept cheaper-err already
+            Some(last) if s.pred_err >= last.pred_err => continue, // dominated
+            _ => front.push(s),
+        }
+    }
+    front
+}
+
+/// Run the autotuner: profile, search, measure, emit a plan.
+pub fn autotune(
+    model: &LoadedModel,
+    images: &TensorF,
+    cfg: &AutotuneConfig,
+) -> Result<AutotuneResult> {
+    let profiles = profile_enc_points(model, images, cfg.max_samples)?;
+    anyhow::ensure!(!profiles.is_empty(), "model has no enc points to tune");
+
+    let total_macs: f64 = profiles.iter().map(|p| p.macs as f64).sum();
+    let weight = |p: &EncPointProfile| p.macs as f64 / total_macs;
+
+    // score baselines + build frontiers
+    let baselines: Vec<ScoredCandidate> = profiles
+        .iter()
+        .map(|p| score_candidate(p, &cfg.baseline, cfg.clip))
+        .collect();
+    let fronts: Vec<Vec<ScoredCandidate>> = profiles
+        .iter()
+        .zip(&baselines)
+        .map(|(p, b)| frontier(p, &cfg.space, cfg.clip, b))
+        .collect();
+
+    let baseline_area: f64 = profiles
+        .iter()
+        .zip(&baselines)
+        .map(|(p, b)| weight(p) * b.area)
+        .sum();
+    let budget = cfg.budget_area.unwrap_or(baseline_area);
+
+    // greedy: start at each frontier's min-area point, then repeatedly
+    // take the upgrade with the best error reduction per weighted µm²
+    let mut idx = vec![0usize; fronts.len()];
+    let mut total_area: f64 = fronts
+        .iter()
+        .zip(&profiles)
+        .map(|(f, p)| weight(p) * f[0].area)
+        .sum();
+    loop {
+        let mut best: Option<(usize, f64)> = None; // (layer, gain/cost)
+        for (l, front) in fronts.iter().enumerate() {
+            if idx[l] + 1 >= front.len() {
+                continue;
+            }
+            let (cur, nxt) = (&front[idx[l]], &front[idx[l] + 1]);
+            let w = weight(&profiles[l]);
+            let d_area = (nxt.area - cur.area) * w;
+            if total_area + d_area > budget + 1e-9 {
+                continue;
+            }
+            let d_err = (cur.pred_err - nxt.pred_err) * w;
+            // frontier ⇒ d_area > 0 and d_err > 0
+            let ratio = d_err / d_area.max(1e-12);
+            if best.map(|(_, r)| ratio > r).unwrap_or(true) {
+                best = Some((l, ratio));
+            }
+        }
+        let Some((l, _)) = best else { break };
+        let w = weight(&profiles[l]);
+        total_area += (fronts[l][idx[l] + 1].area - fronts[l][idx[l]].area) * w;
+        idx[l] += 1;
+    }
+
+    // measure coverage of the final choices (and baseline) on the taps
+    let mut layers = Vec::with_capacity(profiles.len());
+    for (l, p) in profiles.iter().enumerate() {
+        let chosen = fronts[l][idx[l]];
+        let m = coverage_stats(&p.tap, chosen.scale, &chosen.cfg);
+        let mb = coverage_stats(&p.tap, baselines[l].scale, &cfg.baseline);
+        layers.push(LayerChoice {
+            enc: p.enc,
+            chosen,
+            baseline: baselines[l],
+            measured_cov: m.coverage(),
+            baseline_measured_cov: mb.coverage(),
+            p0: p.p0,
+            macs: p.macs,
+        });
+    }
+
+    // outlier-weighted mean coverage (layers with no outliers count as
+    // fully covered but carry no weight)
+    let cov_mean = |f: &dyn Fn(&LayerChoice) -> (f64, f64)| -> f64 {
+        let (mut num, mut den) = (0.0, 0.0);
+        for lc in &layers {
+            let (cov, rate) = f(lc);
+            num += cov * rate * lc.macs as f64;
+            den += rate * lc.macs as f64;
+        }
+        if den > 0.0 {
+            num / den
+        } else {
+            1.0
+        }
+    };
+    let mean_coverage = cov_mean(&|lc| (lc.measured_cov, lc.chosen.outlier_rate));
+    let baseline_coverage =
+        cov_mean(&|lc| (lc.baseline_measured_cov, lc.baseline.outlier_rate));
+
+    let plan = DeploymentPlan {
+        version: PLAN_VERSION,
+        name: cfg
+            .plan_name
+            .clone()
+            .unwrap_or_else(|| format!("{}-auto", model.name)),
+        model: model.name.clone(),
+        layers: layers
+            .iter()
+            .map(|lc| PlanLayer {
+                enc: lc.enc,
+                overq: lc.chosen.cfg,
+                scale: lc.chosen.scale,
+                p0: lc.p0,
+                outlier_rate: lc.chosen.outlier_rate,
+                theory_coverage: lc.chosen.theory_cov,
+                measured_coverage: lc.measured_cov,
+                area: lc.chosen.area,
+                macs: lc.macs,
+            })
+            .collect(),
+        total_area,
+        baseline_area,
+        mean_coverage,
+        baseline_coverage,
+    };
+    Ok(AutotuneResult {
+        layers,
+        total_area,
+        baseline_area,
+        plan,
+    })
+}

@@ -1,0 +1,119 @@
+//! Candidate OverQ configurations and their PE-area cost.
+//!
+//! The search space is the cross product of activation bitwidths and
+//! OverQ modes (baseline / RO at cascade 1..c / full at cascade 1..c,
+//! plus PR-only). "Cascade 0" in the issue's notation — no range
+//! overwrite at all — is the baseline/PR-only candidates here, since the
+//! crate encodes adjacent-only RO as `cascade = 1`.
+
+use crate::area::{pe_breakdown, PeVariant};
+use crate::overq::OverQConfig;
+
+/// Search space knobs for the autotuner.
+#[derive(Clone, Debug)]
+pub struct CandidateSpace {
+    /// Activation bitwidths to consider.
+    pub bits: Vec<u32>,
+    /// Cascade factors for RO/full candidates (1 = adjacent-only).
+    pub cascades: Vec<usize>,
+    /// Allow range-overwrite candidates.
+    pub allow_ro: bool,
+    /// Allow precision-overwrite candidates.
+    pub allow_pr: bool,
+}
+
+impl Default for CandidateSpace {
+    fn default() -> Self {
+        CandidateSpace {
+            bits: vec![3, 4, 5, 8],
+            cascades: vec![1, 2, 3, 4],
+            allow_ro: true,
+            allow_pr: true,
+        }
+    }
+}
+
+impl CandidateSpace {
+    /// Enumerate every candidate configuration in the space.
+    pub fn enumerate(&self) -> Vec<OverQConfig> {
+        let mut out = Vec::new();
+        for &bits in &self.bits {
+            out.push(OverQConfig::baseline(bits));
+            if self.allow_pr {
+                // PR-only: precision overwrite without range overwrite
+                out.push(OverQConfig {
+                    bits,
+                    cascade: 1,
+                    range_overwrite: false,
+                    precision_overwrite: true,
+                });
+            }
+            for &c in &self.cascades {
+                if self.allow_ro {
+                    out.push(OverQConfig::ro(bits, c));
+                    if self.allow_pr {
+                        out.push(OverQConfig::full(bits, c));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The PE flavour a config requires (which Table-3 column it pays for).
+pub fn pe_variant(cfg: &OverQConfig) -> PeVariant {
+    match (cfg.range_overwrite, cfg.precision_overwrite) {
+        (false, false) => PeVariant::Baseline,
+        (true, false) => PeVariant::OverQRo,
+        // PR needs the 2-bit state lane and both shift directions even
+        // without RO, so it pays the full-PE area.
+        _ => PeVariant::OverQFull,
+    }
+}
+
+/// Total PE area (µm²) a config costs, from the Table-3 model.
+pub fn pe_area(cfg: &OverQConfig) -> f64 {
+    pe_breakdown(pe_variant(cfg), cfg.bits).total()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enumerate_covers_modes() {
+        let space = CandidateSpace::default();
+        let all = space.enumerate();
+        // 4 bits × (1 baseline + 1 pr-only + 4 ro + 4 full)
+        assert_eq!(all.len(), 4 * 10);
+        assert!(all.iter().any(|c| !c.range_overwrite && !c.precision_overwrite));
+        assert!(all.iter().any(|c| c.range_overwrite && c.cascade == 4));
+        assert!(all.iter().any(|c| !c.range_overwrite && c.precision_overwrite));
+    }
+
+    #[test]
+    fn area_ordering() {
+        // same bits: baseline < ro < full; more bits: bigger PE
+        let b = pe_area(&OverQConfig::baseline(4));
+        let ro = pe_area(&OverQConfig::ro(4, 4));
+        let full = pe_area(&OverQConfig::full(4, 4));
+        assert!(b < ro && ro < full);
+        assert!(pe_area(&OverQConfig::baseline(8)) > b);
+        // cascade factor is a rescale-unit property, not a PE property
+        assert_eq!(pe_area(&OverQConfig::ro(4, 1)), pe_area(&OverQConfig::ro(4, 4)));
+    }
+
+    #[test]
+    fn restricted_space() {
+        let space = CandidateSpace {
+            bits: vec![4],
+            cascades: vec![1, 2],
+            allow_ro: true,
+            allow_pr: false,
+        };
+        let all = space.enumerate();
+        assert_eq!(all.len(), 3); // baseline + ro(1) + ro(2)
+        assert!(all.iter().all(|c| !c.precision_overwrite));
+    }
+}

@@ -1,0 +1,262 @@
+//! Deployment plans — the serializable output of the autotuner.
+//!
+//! A plan maps every enc point of a model to the OverQ configuration the
+//! policy engine chose for it, together with the evidence (coverage,
+//! area, zero/outlier statistics) backing the choice. Plans round-trip
+//! through JSON (`util::json`, see docs/deployment_plan.md for the
+//! format) so they can be versioned next to the AOT artifacts and
+//! registered with the serving coordinator as `plan:<name>` variants.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::nn::{LayerQuant, QuantConfig};
+use crate::overq::OverQConfig;
+use crate::util::json::{parse_file, Value};
+
+/// Current plan file format version.
+pub const PLAN_VERSION: u32 = 1;
+
+/// One enc point's chosen configuration + evidence.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanLayer {
+    /// Enc-point id (dense, 0-based).
+    pub enc: usize,
+    /// Chosen OverQ mode.
+    pub overq: OverQConfig,
+    /// Activation scale (clip / qmax at `overq.bits`).
+    pub scale: f32,
+    /// Exact-zero fraction measured at profiling time.
+    pub p0: f64,
+    /// Outlier fraction at the chosen scale.
+    pub outlier_rate: f64,
+    /// Eq. (1) coverage prediction at `p0` / cascade.
+    pub theory_coverage: f64,
+    /// Coverage measured with `overq::coverage_stats` on the tap.
+    pub measured_coverage: f64,
+    /// PE area (µm²) the config costs (Table-3 model).
+    pub area: f64,
+    /// MACs per image through this enc point (cost weight).
+    pub macs: u64,
+}
+
+/// A per-layer mixed-precision deployment plan for one model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeploymentPlan {
+    pub version: u32,
+    /// Plan name; the serving layer exposes it as variant `plan:<name>`.
+    pub name: String,
+    /// Model the plan was tuned for.
+    pub model: String,
+    /// Per-enc-point choices, sorted by `enc` (dense).
+    pub layers: Vec<PlanLayer>,
+    /// MAC-weighted mean PE area of the plan (area-time proxy).
+    pub total_area: f64,
+    /// Same metric for the global baseline config it was tuned against.
+    pub baseline_area: f64,
+    /// Outlier-weighted mean measured coverage of the plan.
+    pub mean_coverage: f64,
+    /// Same metric for the global baseline config.
+    pub baseline_coverage: f64,
+}
+
+impl DeploymentPlan {
+    /// Engine-ready per-enc-point quantization config.
+    pub fn to_quant_config(&self) -> QuantConfig {
+        QuantConfig {
+            layers: self
+                .layers
+                .iter()
+                .map(|l| LayerQuant {
+                    overq: l.overq,
+                    scale: l.scale,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let layers: Vec<Value> = self
+            .layers
+            .iter()
+            .map(|l| {
+                obj(&[
+                    ("enc", Value::Num(l.enc as f64)),
+                    ("bits", Value::Num(l.overq.bits as f64)),
+                    ("cascade", Value::Num(l.overq.cascade as f64)),
+                    ("ro", Value::Bool(l.overq.range_overwrite)),
+                    ("pr", Value::Bool(l.overq.precision_overwrite)),
+                    ("scale", Value::Num(l.scale as f64)),
+                    ("p0", Value::Num(l.p0)),
+                    ("outlier_rate", Value::Num(l.outlier_rate)),
+                    ("theory_coverage", Value::Num(l.theory_coverage)),
+                    ("measured_coverage", Value::Num(l.measured_coverage)),
+                    ("area", Value::Num(l.area)),
+                    ("macs", Value::Num(l.macs as f64)),
+                ])
+            })
+            .collect();
+        obj(&[
+            ("version", Value::Num(self.version as f64)),
+            ("name", Value::Str(self.name.clone())),
+            ("model", Value::Str(self.model.clone())),
+            ("layers", Value::Arr(layers)),
+            ("total_area", Value::Num(self.total_area)),
+            ("baseline_area", Value::Num(self.baseline_area)),
+            ("mean_coverage", Value::Num(self.mean_coverage)),
+            ("baseline_coverage", Value::Num(self.baseline_coverage)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<DeploymentPlan> {
+        let version = v.at(&["version"]).as_usize().context("plan version")? as u32;
+        anyhow::ensure!(
+            version == PLAN_VERSION,
+            "unsupported plan version {version} (expected {PLAN_VERSION})"
+        );
+        let mut layers = Vec::new();
+        for l in v.at(&["layers"]).as_arr().context("plan layers")? {
+            layers.push(PlanLayer {
+                enc: l.at(&["enc"]).as_usize().context("layer enc")?,
+                overq: OverQConfig {
+                    bits: l.at(&["bits"]).as_usize().context("layer bits")? as u32,
+                    cascade: l.at(&["cascade"]).as_usize().context("layer cascade")?,
+                    // mode flags change the numerics — a missing key is
+                    // a malformed plan, not a default
+                    range_overwrite: l.at(&["ro"]).as_bool().context("layer ro")?,
+                    precision_overwrite: l.at(&["pr"]).as_bool().context("layer pr")?,
+                },
+                scale: l.at(&["scale"]).as_f64().context("layer scale")? as f32,
+                p0: l.at(&["p0"]).as_f64().unwrap_or(0.0),
+                outlier_rate: l.at(&["outlier_rate"]).as_f64().unwrap_or(0.0),
+                theory_coverage: l.at(&["theory_coverage"]).as_f64().unwrap_or(0.0),
+                measured_coverage: l.at(&["measured_coverage"]).as_f64().unwrap_or(0.0),
+                area: l.at(&["area"]).as_f64().unwrap_or(0.0),
+                macs: l.at(&["macs"]).as_f64().unwrap_or(0.0) as u64,
+            });
+        }
+        layers.sort_by_key(|l| l.enc);
+        for (i, l) in layers.iter().enumerate() {
+            anyhow::ensure!(l.enc == i, "plan enc points not dense (missing enc {i})");
+        }
+        Ok(DeploymentPlan {
+            version,
+            name: v.at(&["name"]).as_str().context("plan name")?.to_string(),
+            model: v.at(&["model"]).as_str().context("plan model")?.to_string(),
+            layers,
+            total_area: v.at(&["total_area"]).as_f64().unwrap_or(0.0),
+            baseline_area: v.at(&["baseline_area"]).as_f64().unwrap_or(0.0),
+            mean_coverage: v.at(&["mean_coverage"]).as_f64().unwrap_or(0.0),
+            baseline_coverage: v.at(&["baseline_coverage"]).as_f64().unwrap_or(0.0),
+        })
+    }
+
+    /// Write the plan as JSON, creating parent directories.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("create {}", dir.display()))?;
+        }
+        std::fs::write(path, self.to_json().to_json())
+            .with_context(|| format!("write {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<DeploymentPlan> {
+        DeploymentPlan::from_json(&parse_file(path)?)
+            .with_context(|| format!("parse plan {}", path.display()))
+    }
+}
+
+fn obj(fields: &[(&str, Value)]) -> Value {
+    Value::Obj(
+        fields
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.clone()))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn sample_plan() -> DeploymentPlan {
+        DeploymentPlan {
+            version: PLAN_VERSION,
+            name: "toy-a4".into(),
+            model: "toy".into(),
+            layers: vec![
+                PlanLayer {
+                    enc: 0,
+                    overq: OverQConfig::full(4, 2),
+                    scale: 0.031,
+                    p0: 0.52,
+                    outlier_rate: 0.013,
+                    theory_coverage: 0.77,
+                    measured_coverage: 0.81,
+                    area: 350.25,
+                    macs: 884_736,
+                },
+                PlanLayer {
+                    enc: 1,
+                    overq: OverQConfig::baseline(8),
+                    scale: 0.0011,
+                    p0: 0.48,
+                    outlier_rate: 0.0,
+                    theory_coverage: 0.0,
+                    measured_coverage: 1.0,
+                    area: 410.5,
+                    macs: 442_368,
+                },
+            ],
+            total_area: 370.3,
+            baseline_area: 380.0,
+            mean_coverage: 0.87,
+            baseline_coverage: 0.8,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let plan = sample_plan();
+        let text = plan.to_json().to_json();
+        let back = DeploymentPlan::from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(plan, back);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let plan = sample_plan();
+        let dir = std::env::temp_dir().join("overq_plan_test");
+        let path = dir.join("toy.plan.json");
+        plan.save(&path).unwrap();
+        let back = DeploymentPlan::load(&path).unwrap();
+        assert_eq!(plan, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn to_quant_config_order() {
+        let qc = sample_plan().to_quant_config();
+        assert_eq!(qc.num_enc_points(), 2);
+        assert_eq!(qc.layers[0].overq.bits, 4);
+        assert_eq!(qc.layers[1].overq.bits, 8);
+        assert!((qc.layers[1].scale - 0.0011).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_sparse_or_wrong_version() {
+        let mut plan = sample_plan();
+        plan.layers[1].enc = 3; // hole at 1
+        let text = plan.to_json().to_json();
+        assert!(DeploymentPlan::from_json(&parse(&text).unwrap()).is_err());
+
+        let mut plan = sample_plan();
+        plan.version = 99;
+        let text = plan.to_json().to_json();
+        assert!(DeploymentPlan::from_json(&parse(&text).unwrap()).is_err());
+    }
+}

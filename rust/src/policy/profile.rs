@@ -1,0 +1,81 @@
+//! Per-enc-point statistics feeding the autotuner.
+//!
+//! One fp32 forward over the profiling batch collects, for every enc
+//! point: the full activation tensor (for *measured* coverage via
+//! `overq::coverage_stats`), a bounded subsample (for the fast predicted
+//! error/coverage proxy), summary stats, the exact-zero fraction `p0`
+//! driving Eq. (1), and the MAC count of the quantized convs reading the
+//! point (the cost weight for the area-time budget).
+
+use anyhow::Result;
+
+use crate::harness::calibrate::subsample;
+use crate::models::zoo::LoadedModel;
+use crate::nn::conv::same_out;
+use crate::nn::graph::Op;
+use crate::quant::clip::ActStats;
+use crate::tensor::TensorF;
+
+/// Everything the autotuner knows about one enc point.
+#[derive(Clone, Debug)]
+pub struct EncPointProfile {
+    /// Enc-point id (index into `QuantConfig::layers`).
+    pub enc: usize,
+    /// Summary stats of the profiled activations.
+    pub stats: ActStats,
+    /// Exact-zero fraction of the tap (the paper's `p0`).
+    pub p0: f64,
+    /// MACs per image across quantized convs consuming this point.
+    pub macs: u64,
+    /// Full profiled activation tensor (for measured coverage).
+    pub tap: TensorF,
+    /// Bounded subsample for candidate scoring.
+    pub samples: Vec<f32>,
+}
+
+/// Profile every enc point of a model with one fp32 forward.
+pub fn profile_enc_points(
+    model: &LoadedModel,
+    images: &TensorF,
+    max_samples: usize,
+) -> Result<Vec<EncPointProfile>> {
+    let graph = &model.engine.graph;
+    let srcs = graph.enc_point_sources();
+    let (_, taps) = model.engine.forward_f32(images, &srcs)?;
+
+    // MACs per enc point: conv cost at the spatial size of its input tap.
+    let mut macs = vec![0u64; srcs.len()];
+    for node in &graph.nodes {
+        if let Op::Conv {
+            kh,
+            kw,
+            stride,
+            cin,
+            cout,
+            quant: true,
+            enc: Some(e),
+            ..
+        } = &node.op
+        {
+            let tap = &taps[*e];
+            let (h, w) = (tap.dims()[1], tap.dims()[2]);
+            let (oh, ow) = (same_out(h, *stride), same_out(w, *stride));
+            macs[*e] += (kh * kw * cin * cout * oh * ow) as u64;
+        }
+    }
+
+    let mut out = Vec::with_capacity(taps.len());
+    for (e, tap) in taps.into_iter().enumerate() {
+        let samples = subsample(&tap, max_samples);
+        let stats = ActStats::from_tensor(&tap);
+        out.push(EncPointProfile {
+            enc: e,
+            stats,
+            p0: tap.zero_frac(),
+            macs: macs[e].max(1),
+            tap,
+            samples,
+        });
+    }
+    Ok(out)
+}

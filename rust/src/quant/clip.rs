@@ -4,6 +4,7 @@
 //! activation scale is then `clip / qmax`.
 
 use super::histogram::Histogram;
+use crate::tensor::TensorF;
 
 /// Supported clipping methods.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -27,6 +28,18 @@ pub struct ActStats {
     pub mean: f32,
     pub std: f32,
     pub max: f32,
+}
+
+impl ActStats {
+    /// Summarize one activation tensor (the shared profiling primitive
+    /// for calibration, the policy engine and the synthetic zoo).
+    pub fn from_tensor(t: &TensorF) -> ActStats {
+        ActStats {
+            mean: t.mean(),
+            std: t.std(),
+            max: t.data.iter().fold(0f32, |m, &x| m.max(x)),
+        }
+    }
 }
 
 impl ClipMethod {

@@ -10,24 +10,37 @@ use crate::models::Artifacts;
 use super::pjrt::{Executable, Runtime};
 
 /// Lazily-compiled executable cache over the artifact manifest.
+///
+/// Construction only indexes the manifest; the PJRT client is created on
+/// the first [`ExecutableCache::get`], so a server built without the
+/// `pjrt` feature (or without HLO artifacts) can still run native-engine
+/// variants through the same worker.
 pub struct ExecutableCache {
-    runtime: Runtime,
+    runtime: Option<Runtime>,
     paths: HashMap<(String, String, usize), PathBuf>,
     cache: HashMap<(String, String, usize), Executable>,
 }
 
 impl ExecutableCache {
     pub fn new(arts: &Artifacts) -> Result<ExecutableCache> {
-        let runtime = Runtime::cpu()?;
         let mut paths = HashMap::new();
         for (model, variant, batch, path) in arts.hlo_entries() {
             paths.insert((model, variant, batch), path);
         }
         Ok(ExecutableCache {
-            runtime,
+            runtime: None,
             paths,
             cache: HashMap::new(),
         })
+    }
+
+    /// An empty cache (no artifacts at all): every lookup misses.
+    pub fn empty() -> ExecutableCache {
+        ExecutableCache {
+            runtime: None,
+            paths: HashMap::new(),
+            cache: HashMap::new(),
+        }
     }
 
     /// Batch sizes available for (model, variant), ascending.
@@ -50,7 +63,10 @@ impl ExecutableCache {
                 .paths
                 .get(&key)
                 .with_context(|| format!("no HLO artifact for {model}/{variant}/b{batch}"))?;
-            let exe = self.runtime.load_hlo_text(path)?;
+            if self.runtime.is_none() {
+                self.runtime = Some(Runtime::cpu()?);
+            }
+            let exe = self.runtime.as_ref().unwrap().load_hlo_text(path)?;
             self.cache.insert(key.clone(), exe);
         }
         Ok(&self.cache[&key])

@@ -1,22 +1,33 @@
 //! PJRT client + executable wrappers.
+//!
+//! The real implementation needs the external `xla` crate and is gated
+//! behind the `pjrt` cargo feature. Without it this module compiles to a
+//! stub with the same API whose constructors return errors — callers
+//! (the executable cache, the serving worker) treat that exactly like
+//! "artifacts not built" and fall back to the native engine backend.
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 use crate::tensor::{TensorF, TensorI};
 
 /// A PJRT client (CPU).
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
 }
 
 /// A compiled executable with its expected input arity.
 pub struct Executable {
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
     pub name: String,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     pub fn cpu() -> Result<Runtime> {
         Ok(Runtime {
@@ -47,6 +58,7 @@ impl Runtime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Execute with f32/i32 tensor inputs; returns the first output of
     /// the 1-tuple (aot.py lowers with `return_tuple=True`) as f32.
@@ -76,12 +88,42 @@ impl Executable {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        anyhow::bail!(
+            "PJRT runtime unavailable: built without the `pjrt` feature \
+             (rebuild with `--features pjrt` and the xla crate installed)"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "disabled".into()
+    }
+
+    pub fn load_hlo_text(&self, _path: &Path) -> Result<Executable> {
+        anyhow::bail!("PJRT runtime unavailable: built without the `pjrt` feature")
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Executable {
+    pub fn run_f32(&self, _inputs: &[Input]) -> Result<TensorF> {
+        anyhow::bail!("PJRT executable unavailable: built without the `pjrt` feature")
+    }
+
+    pub fn run_i32(&self, _inputs: &[Input]) -> Result<TensorI> {
+        anyhow::bail!("PJRT executable unavailable: built without the `pjrt` feature")
+    }
+}
+
 /// Typed input tensor for [`Executable::run_f32`].
 pub enum Input {
     F32(TensorF),
     I32(TensorI),
 }
 
+#[cfg(feature = "pjrt")]
 impl Input {
     fn to_literal(&self) -> Result<xla::Literal> {
         Ok(match self {
@@ -100,6 +142,6 @@ impl Input {
 #[cfg(test)]
 mod tests {
     // Runtime tests that need artifacts live in
-    // rust/tests/integration_runtime.rs (they require `make artifacts`
-    // and a working libxla_extension).
+    // rust/tests/integration_runtime.rs (they require `make artifacts`,
+    // the `pjrt` feature and a working libxla_extension).
 }

@@ -78,15 +78,15 @@ fn native_engine_matches_jax_quant_logits() {
     let want = tv["fw.logits_quant"].as_f32().unwrap();
 
     let model = a.load_model("resnet18m").unwrap();
-    let qc = QuantConfig {
-        overq: OverQConfig {
+    let qc = QuantConfig::uniform(
+        OverQConfig {
             bits,
             cascade,
             range_overwrite: ro,
             precision_overwrite: pr,
         },
-        act_scales: scales,
-    };
+        scales,
+    );
     let got = model.engine.forward_quant(&x, &qc).unwrap();
     assert_eq!(got.dims(), want.dims());
     for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {

@@ -1,0 +1,167 @@
+//! Policy engine end-to-end: autotune → deployment plan → serving.
+//!
+//! Runs entirely on synthetic models (`models::synth`), so — unlike the
+//! artifact-bound integration suites — these tests never skip.
+//!
+//! Covers the PR's acceptance contract: the autotuned plan's measured
+//! per-layer coverage is at least the global-baseline's at equal or
+//! lower MAC-weighted PE area, the plan round-trips through JSON, and
+//! the coordinator serves a `plan:<name>` variant whose responses match
+//! the native engine bit-for-bit.
+
+use overq::coordinator::batcher::BatchPolicy;
+use overq::coordinator::{Server, ServerConfig};
+use overq::data::shapes;
+use overq::models::synth_model;
+use overq::policy::{autotune, AutotuneConfig, DeploymentPlan};
+
+#[test]
+fn autotune_beats_baseline_at_equal_or_lower_area() {
+    let model = synth_model("synth-cnn", 21).unwrap();
+    let (images, _) = shapes::gen_batch(21, 0, 16);
+    let cfg = AutotuneConfig::default();
+    let result = autotune(&model, &images, &cfg).unwrap();
+
+    assert_eq!(result.layers.len(), 4);
+    // area contract: MAC-weighted mean PE area within the baseline's
+    assert!(
+        result.total_area <= result.baseline_area + 1e-9,
+        "plan area {} > baseline {}",
+        result.total_area,
+        result.baseline_area
+    );
+    // coverage contract: per layer, measured coverage no worse than the
+    // global baseline config's (small slack for sampling noise)
+    for lc in &result.layers {
+        assert!(
+            lc.measured_cov >= lc.baseline_measured_cov - 0.05,
+            "enc {}: plan coverage {:.3} < baseline {:.3}",
+            lc.enc,
+            lc.measured_cov,
+            lc.baseline_measured_cov
+        );
+    }
+    assert!(
+        result.plan.mean_coverage >= result.plan.baseline_coverage - 0.05,
+        "mean coverage {:.3} < baseline {:.3}",
+        result.plan.mean_coverage,
+        result.plan.baseline_coverage
+    );
+    // the emitted plan mirrors the choices and is engine-ready
+    let qc = result.plan.to_quant_config();
+    assert_eq!(qc.num_enc_points(), model.engine.graph.num_enc_points());
+    let out = model.engine.forward_quant(&images, &qc).unwrap();
+    assert_eq!(out.dims(), &[16, 10]);
+    assert!(out.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn plan_survives_json_file_roundtrip() {
+    let model = synth_model("synth-tiny", 5).unwrap();
+    let (images, _) = shapes::gen_batch(5, 0, 8);
+    let result = autotune(&model, &images, &AutotuneConfig::default()).unwrap();
+
+    let dir = std::env::temp_dir().join("overq_policy_it");
+    let path = dir.join("synth-tiny.plan.json");
+    result.plan.save(&path).unwrap();
+    let back = DeploymentPlan::load(&path).unwrap();
+    assert_eq!(back, result.plan);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn server_serves_plan_variant_end_to_end() {
+    let model = synth_model("synth-tiny", 9).unwrap();
+    let (images, _) = shapes::gen_batch(9, 0, 8);
+    let result = autotune(&model, &images, &AutotuneConfig::default()).unwrap();
+    let plan = result.plan.clone();
+    let qc = plan.to_quant_config();
+    let variant = format!("plan:{}", plan.name);
+
+    // ground truth from the in-process engine on the same images
+    let n = 20usize;
+    let (load, _) = shapes::gen_batch(77, 0, n);
+    let logits = model.engine.forward_quant(&load, &qc).unwrap();
+    let native_preds: Vec<usize> = (0..n)
+        .map(|i| {
+            logits.data[i * 10..(i + 1) * 10]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        })
+        .collect();
+
+    let server = Server::start_local(
+        ServerConfig {
+            model: "synth-tiny".into(),
+            policy: BatchPolicy::default(),
+            act_scales: vec![],
+        },
+        model,
+    )
+    .unwrap();
+    server.register_plan(plan).unwrap();
+
+    let img_sz = 16 * 16 * 3;
+    let mut pending = Vec::new();
+    for i in 0..n {
+        let img = overq::tensor::TensorF::from_vec(
+            &[16, 16, 3],
+            load.data[i * img_sz..(i + 1) * img_sz].to_vec(),
+        );
+        pending.push(server.submit(img, &variant).unwrap());
+    }
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx
+            .recv()
+            .expect("response lost")
+            .expect("plan request failed");
+        assert_eq!(resp.logits.len(), 10);
+        let pred = resp
+            .logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(pred, native_preds[i], "request {i} disagrees with native");
+    }
+    let m = server.metrics();
+    assert_eq!(m.requests, n as u64, "metrics lost requests");
+    assert!(m.batches <= n as u64);
+
+    // unknown plans fail the request, not the server
+    let (img, _) = shapes::gen_image(1, 1);
+    let rx = server.submit(img, "plan:nope").unwrap();
+    let err = rx.recv().expect("response lost").unwrap_err();
+    assert!(err.contains("no registered plan"), "{err}");
+    // ...and the worker is still alive afterwards
+    let (img, _) = shapes::gen_image(1, 2);
+    let ok = server.infer(img, &variant);
+    assert!(ok.is_ok(), "server died after bad variant: {ok:?}");
+    server.shutdown();
+}
+
+#[test]
+fn native_fp32_variant_without_artifacts() {
+    let model = synth_model("synth-tiny", 13).unwrap();
+    let (x, _) = shapes::gen_batch(13, 5, 1);
+    let (want, _) = model.engine.forward_f32(&x, &[]).unwrap();
+    let server = Server::start_local(
+        ServerConfig {
+            model: "synth-tiny".into(),
+            policy: BatchPolicy::default(),
+            act_scales: vec![],
+        },
+        model,
+    )
+    .unwrap();
+    let img = overq::tensor::TensorF::from_vec(&[16, 16, 3], x.data.clone());
+    let resp = server.infer(img, "native_fp32").unwrap();
+    for (a, b) in resp.logits.iter().zip(&want.data) {
+        assert_eq!(a, b, "native_fp32 via server != direct engine");
+    }
+    server.shutdown();
+}

@@ -50,10 +50,7 @@ fn quant_artifact_matches_native_engine() {
     let (x, _) = subset(&ev, 8);
     let model = a.load_model("resnet18m").unwrap();
     let scales = scales_from_stats(&model.enc_stats, 6.0, 4);
-    let qc = QuantConfig {
-        overq: OverQConfig::full(4, 4),
-        act_scales: scales.clone(),
-    };
+    let qc = QuantConfig::uniform(OverQConfig::full(4, 4), scales.clone());
     let want = model.engine.forward_quant(&x, &qc).unwrap();
     let exe = cache.get("resnet18m", "full_c4", 8).unwrap();
     let got = exe

@@ -52,7 +52,7 @@ fn serve_fp32_end_to_end() {
         pending.push(server.submit(img, "fp32").unwrap());
     }
     for (i, rx) in pending.into_iter().enumerate() {
-        let resp = rx.recv().expect("response lost");
+        let resp = rx.recv().expect("response lost").expect("request failed");
         assert_eq!(resp.logits.len(), 10);
         let pred = resp
             .logits

@@ -1,0 +1,128 @@
+//! Compile-only stub of the `xla` crate (PJRT bindings).
+//!
+//! The real crate wraps libxla_extension's PJRT C API; it is not
+//! available in offline build environments, so this stub mirrors the
+//! exact API surface `overq::runtime::pjrt` uses and fails at runtime
+//! with a clear error. Swap the `xla` path dependency in the workspace
+//! `Cargo.toml` for the real crate (and build with `--features pjrt`)
+//! to run the AOT HLO artifacts.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error for every stubbed runtime entry point.
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(XlaError(format!(
+        "{what} unavailable (compile-only stub; link the real xla crate)"
+    )))
+}
+
+/// Elements a [`Literal`] can carry.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// A host-side tensor literal.
+#[derive(Clone, Debug, Default)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("literal transfer")
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable("tuple unpack")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        unavailable("array shape")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("literal read")
+    }
+}
+
+/// Shape of an array literal.
+#[derive(Clone, Debug, Default)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Clone, Debug, Default)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        unavailable("HLO text parsing")
+    }
+}
+
+/// An XLA computation ready to compile.
+#[derive(Clone, Debug, Default)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug, Default)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PJRT CPU client")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compilation")
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug, Default)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Mirrors `execute::<Literal>(&inputs)` → device buffers per output,
+    /// per partition.
+    pub fn execute<T>(&self, _inputs: &[Literal]) -> Result<Vec<Vec<Literal>>> {
+        unavailable("execution")
+    }
+}
