@@ -1,0 +1,139 @@
+//! `cargo bench --bench serving` — drives the multi-model coordinator
+//! with mixed fp32/plan traffic and writes `BENCH_serving.json`
+//! (throughput + e2e latency percentiles) so the serving path has a
+//! perf trajectory. Runs artifact-free on the synthetic zoo.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use overq::coordinator::batcher::BatchPolicy;
+use overq::coordinator::Coordinator;
+use overq::data::shapes;
+use overq::harness::policy::baseline_plan;
+use overq::models::synth_model;
+use overq::policy::{autotune, AutotuneConfig};
+use overq::tensor::TensorF;
+use overq::util::json::Value;
+
+struct Case {
+    name: String,
+    requests: usize,
+    wall_ms: f64,
+    req_per_s: f64,
+    p50_e2e_us: f64,
+    p95_e2e_us: f64,
+    mean_batch: f64,
+}
+
+fn case_json(c: &Case) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("name".into(), Value::Str(c.name.clone()));
+    m.insert("requests".into(), Value::Num(c.requests as f64));
+    m.insert("wall_ms".into(), Value::Num(c.wall_ms));
+    m.insert("req_per_s".into(), Value::Num(c.req_per_s));
+    m.insert("p50_e2e_us".into(), Value::Num(c.p50_e2e_us));
+    m.insert("p95_e2e_us".into(), Value::Num(c.p95_e2e_us));
+    m.insert("mean_batch".into(), Value::Num(c.mean_batch));
+    Value::Obj(m)
+}
+
+/// Drive `n` seeded requests through one variant/split and snapshot.
+fn drive(
+    name: &str,
+    model: &str,
+    route: Route,
+    n: usize,
+) -> anyhow::Result<Case> {
+    let loaded = synth_model(model, 42)?;
+    let (images, _) = shapes::gen_batch(4242, 0, 16);
+    let cfg = AutotuneConfig {
+        plan_name: Some("tuned".into()),
+        ..AutotuneConfig::default()
+    };
+    let plan_tuned = autotune(&loaded, &images, &cfg)?.plan;
+    let plan_base = baseline_plan(&loaded, &images, &cfg, "base")?;
+
+    let coord = Coordinator::builder()
+        .policy(BatchPolicy::default())
+        .seed(7)
+        .model_local(loaded)
+        .build()?;
+    let handle = coord.model(model)?;
+    handle.register_plan(plan_tuned)?;
+    handle.register_plan(plan_base)?;
+    if let Route::Split(split) = &route {
+        handle.set_traffic_split(split)?;
+    }
+
+    let img_sz = 16 * 16 * 3;
+    let (load, _) = shapes::gen_batch(77, 0, n);
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        let img = TensorF::from_vec(
+            &[16, 16, 3],
+            load.data[i * img_sz..(i + 1) * img_sz].to_vec(),
+        );
+        pending.push(match &route {
+            Route::Variant(v) => handle.submit_variant(img, v)?,
+            Route::Split(_) => handle.submit_routed(img)?,
+        });
+    }
+    for rx in pending {
+        rx.recv()?.map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    let wall = t0.elapsed();
+    let m = handle.metrics();
+    coord.shutdown();
+    Ok(Case {
+        name: name.to_string(),
+        requests: n,
+        wall_ms: wall.as_secs_f64() * 1e3,
+        req_per_s: n as f64 / wall.as_secs_f64(),
+        p50_e2e_us: m.p50_e2e_us,
+        p95_e2e_us: m.p95_e2e_us,
+        mean_batch: m.mean_batch,
+    })
+}
+
+enum Route {
+    Variant(&'static str),
+    Split(Vec<(&'static str, f64)>),
+}
+
+fn main() {
+    let n = 256usize;
+    let cases = [
+        ("serve synth-tiny native_fp32", "synth-tiny", Route::Variant("native_fp32")),
+        ("serve synth-tiny plan:tuned", "synth-tiny", Route::Variant("plan:tuned")),
+        (
+            "serve synth-tiny ab 60/30/10 plans+fp32",
+            "synth-tiny",
+            Route::Split(vec![
+                ("plan:tuned", 0.6),
+                ("plan:base", 0.3),
+                ("native_fp32", 0.1),
+            ]),
+        ),
+        ("serve synth-cnn plan:tuned", "synth-cnn", Route::Variant("plan:tuned")),
+    ];
+    let mut results = Vec::new();
+    for (name, model, route) in cases {
+        let c = drive(name, model, route, n).expect("bench case failed");
+        println!(
+            "{:<40} {:>8.1} req/s  p50 {:>8.1} µs  p95 {:>8.1} µs  mean_batch {:.2}",
+            c.name, c.req_per_s, c.p50_e2e_us, c.p95_e2e_us, c.mean_batch
+        );
+        results.push(c);
+    }
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Value::Str("serving".into()));
+    top.insert(
+        "results".into(),
+        Value::Arr(results.iter().map(case_json).collect()),
+    );
+    let json = Value::Obj(top).to_json();
+    std::fs::write("BENCH_serving.json", &json).expect("write BENCH_serving.json");
+    println!("wrote BENCH_serving.json ({} cases)", results.len());
+}

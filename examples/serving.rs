@@ -7,8 +7,7 @@
 
 use std::time::Instant;
 
-use overq::coordinator::batcher::BatchPolicy;
-use overq::coordinator::{Server, ServerConfig};
+use overq::coordinator::{Coordinator, VariantSpec};
 use overq::harness::calibrate::{scales_from_stats, subset};
 use overq::models::Artifacts;
 use overq::nn::engine::QuantConfig;
@@ -18,7 +17,7 @@ use overq::tensor::TensorF;
 fn main() -> anyhow::Result<()> {
     let arts = Artifacts::locate()?;
     let model_name = "resnet18m";
-    let variant = "full_c4";
+    let variant: VariantSpec = "full_c4".parse()?;
     let n_requests = 96usize;
 
     let model = arts.load_model(model_name)?;
@@ -28,16 +27,17 @@ fn main() -> anyhow::Result<()> {
     let img_sz = 16 * 16 * 3;
 
     println!("== OverQ serving example: {model_name}/{variant} ==");
-    let server = Server::start(ServerConfig {
-        model: model_name.into(),
-        policy: BatchPolicy::default(),
-        act_scales: scales.clone(),
-    })?;
+    let coord = Coordinator::builder()
+        .model(model_name)
+        .act_scales(scales.clone())
+        .build()?;
+    let handle = coord.model(model_name)?;
 
     // Warmup compiles the b1 and b8 executables (one-time cost,
     // reported separately from steady-state latency).
-    let compile = server.warmup(variant, &[16, 16, 3], 8)?;
+    let compile = handle.warmup(&variant, 8)?;
     println!("warmup/compile: {:.1} ms", compile.as_secs_f64() * 1e3);
+    handle.reset_metrics(); // steady-state numbers only
 
     // Open-loop: submit everything, then collect.
     let t0 = Instant::now();
@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
             &[16, 16, 3],
             images.data[i * img_sz..(i + 1) * img_sz].to_vec(),
         );
-        pending.push(server.submit(img, variant)?);
+        pending.push(handle.submit(img, &variant)?);
     }
     let mut preds = Vec::new();
     for rx in pending {
@@ -69,7 +69,7 @@ fn main() -> anyhow::Result<()> {
         .count() as f64
         / n_requests as f64;
 
-    let m = server.metrics();
+    let m = handle.metrics();
     println!(
         "served {n_requests} requests in {:.1} ms — {:.1} req/s, accuracy {:.4}",
         wall.as_secs_f64() * 1e3,
@@ -77,8 +77,14 @@ fn main() -> anyhow::Result<()> {
         served_acc
     );
     println!(
-        "  batches {} (mean size {:.2}, padded slots {}) exec {:.2} ms/batch queue {:.2} ms mean",
-        m.batches, m.mean_batch, m.padded_slots, m.mean_exec_us / 1e3, m.mean_queue_us / 1e3
+        "  batches {} (mean size {:.2}, padded slots {}) exec {:.2} ms/batch queue {:.2} ms mean | e2e p50 {:.2} ms p95 {:.2} ms",
+        m.batches,
+        m.mean_batch,
+        m.padded_slots,
+        m.mean_exec_us / 1e3,
+        m.mean_queue_us / 1e3,
+        m.p50_e2e_us / 1e3,
+        m.p95_e2e_us / 1e3
     );
 
     // Accuracy parity: the native engine must agree with the PJRT path.
@@ -90,6 +96,6 @@ fn main() -> anyhow::Result<()> {
         "PJRT and native paths disagree"
     );
     println!("parity OK");
-    server.shutdown();
+    coord.shutdown();
     Ok(())
 }

@@ -1,9 +1,22 @@
 //! Serving metrics: counters + latency summaries, shared via a mutex.
+//!
+//! Latencies are tracked globally and per resolved variant (the
+//! [`super::variant::VariantSpec`] key), so an A/B traffic split can be
+//! read back as per-arm request counts and latency percentiles.
 
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::util::stats::Summary;
+
+/// Per-variant latency accounting.
+#[derive(Default)]
+pub struct VariantMetrics {
+    pub requests: u64,
+    pub queue_us: Summary,
+    pub e2e_us: Summary,
+}
 
 /// Live metrics (behind [`SharedMetrics`]).
 #[derive(Default)]
@@ -15,12 +28,23 @@ pub struct Metrics {
     pub e2e_us: Summary,
     pub exec_us: Summary,
     pub batch_size: Summary,
+    pub per_variant: BTreeMap<String, VariantMetrics>,
 }
 
 pub type SharedMetrics = Arc<Mutex<Metrics>>;
 
 pub fn shared() -> SharedMetrics {
     Arc::new(Mutex::new(Metrics::default()))
+}
+
+/// Point-in-time per-variant copy for reporting.
+#[derive(Clone, Debug, Default)]
+pub struct VariantSnapshot {
+    pub requests: u64,
+    pub mean_queue_us: f64,
+    pub mean_e2e_us: f64,
+    pub p50_e2e_us: f64,
+    pub p95_e2e_us: f64,
 }
 
 /// Point-in-time copy for reporting.
@@ -31,9 +55,13 @@ pub struct MetricsSnapshot {
     pub padded_slots: u64,
     pub mean_queue_us: f64,
     pub mean_e2e_us: f64,
+    pub p50_e2e_us: f64,
+    pub p95_e2e_us: f64,
     pub p_max_e2e_us: f64,
     pub mean_exec_us: f64,
     pub mean_batch: f64,
+    /// Keyed by the resolved variant string (e.g. `plan:a`, `fp32`).
+    pub per_variant: BTreeMap<String, VariantSnapshot>,
 }
 
 impl Metrics {
@@ -45,9 +73,25 @@ impl Metrics {
         self.batch_size.add(batch as f64);
     }
 
-    pub fn record_request(&mut self, queue: Duration, e2e: Duration) {
-        self.queue_us.add(queue.as_micros() as f64);
-        self.e2e_us.add(e2e.as_micros() as f64);
+    pub fn record_request(&mut self, variant: &str, queue: Duration, e2e: Duration) {
+        let (q_us, e_us) = (queue.as_micros() as f64, e2e.as_micros() as f64);
+        self.queue_us.add(q_us);
+        self.e2e_us.add(e_us);
+        // avoid a per-request String allocation once the key exists
+        if !self.per_variant.contains_key(variant) {
+            self.per_variant
+                .insert(variant.to_string(), VariantMetrics::default());
+        }
+        let v = self.per_variant.get_mut(variant).unwrap();
+        v.requests += 1;
+        v.queue_us.add(q_us);
+        v.e2e_us.add(e_us);
+    }
+
+    /// Zero all counters and summaries — e.g. to drop warmup traffic
+    /// before a measurement window, or between A/B experiment epochs.
+    pub fn reset(&mut self) {
+        *self = Metrics::default();
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -57,9 +101,27 @@ impl Metrics {
             padded_slots: self.padded_slots,
             mean_queue_us: self.queue_us.mean(),
             mean_e2e_us: self.e2e_us.mean(),
+            p50_e2e_us: self.e2e_us.percentile(50.0),
+            p95_e2e_us: self.e2e_us.percentile(95.0),
             p_max_e2e_us: self.e2e_us.max,
             mean_exec_us: self.exec_us.mean(),
             mean_batch: self.batch_size.mean(),
+            per_variant: self
+                .per_variant
+                .iter()
+                .map(|(k, v)| {
+                    (
+                        k.clone(),
+                        VariantSnapshot {
+                            requests: v.requests,
+                            mean_queue_us: v.queue_us.mean(),
+                            mean_e2e_us: v.e2e_us.mean(),
+                            p50_e2e_us: v.e2e_us.percentile(50.0),
+                            p95_e2e_us: v.e2e_us.percentile(95.0),
+                        },
+                    )
+                })
+                .collect(),
         }
     }
 }
@@ -75,7 +137,11 @@ mod tests {
             let mut g = m.lock().unwrap();
             g.record_batch(4, 4, Duration::from_micros(100));
             g.record_batch(8, 0, Duration::from_micros(300));
-            g.record_request(Duration::from_micros(10), Duration::from_micros(500));
+            g.record_request(
+                "plan:a",
+                Duration::from_micros(10),
+                Duration::from_micros(500),
+            );
         }
         let s = m.lock().unwrap().snapshot();
         assert_eq!(s.requests, 12);
@@ -84,5 +150,33 @@ mod tests {
         assert!((s.mean_exec_us - 200.0).abs() < 1e-9);
         assert!((s.mean_batch - 6.0).abs() < 1e-9);
         assert_eq!(s.mean_e2e_us, 500.0);
+    }
+
+    #[test]
+    fn per_variant_counts_and_percentiles() {
+        let m = shared();
+        {
+            let mut g = m.lock().unwrap();
+            for i in 1..=100u64 {
+                let variant = if i % 10 == 0 { "plan:b" } else { "plan:a" };
+                g.record_request(
+                    variant,
+                    Duration::from_micros(1),
+                    Duration::from_micros(i),
+                );
+            }
+        }
+        let s = m.lock().unwrap().snapshot();
+        assert_eq!(s.per_variant.len(), 2);
+        assert_eq!(s.per_variant["plan:a"].requests, 90);
+        assert_eq!(s.per_variant["plan:b"].requests, 10);
+        // overall e2e stream is 1..=100 µs (nearest-rank percentiles)
+        assert!((49.0..=52.0).contains(&s.p50_e2e_us), "{}", s.p50_e2e_us);
+        assert!((94.0..=96.0).contains(&s.p95_e2e_us), "{}", s.p95_e2e_us);
+        assert_eq!(s.p_max_e2e_us, 100.0);
+        // plan:b saw 10, 20, ..., 100
+        let b = &s.per_variant["plan:b"];
+        assert!(b.p50_e2e_us >= 40.0 && b.p50_e2e_us <= 60.0, "{}", b.p50_e2e_us);
+        assert_eq!(b.p95_e2e_us, 100.0);
     }
 }

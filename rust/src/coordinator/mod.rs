@@ -1,18 +1,28 @@
 //! Serving coordinator — the L3 request path.
 //!
-//! Architecture: clients submit [`InferRequest`]s over a channel; a
-//! single worker thread (an actor owning the non-`Send` PJRT state)
-//! drains the queue through the [`batcher`], routes each group to the
-//! best-fitting compiled executable ([`router`]) or to the native
-//! engine backend (deployment-plan variants `plan:<name>` and
-//! `native_fp32`), executes, and replies per-request. Python never
-//! appears on this path — the executables were AOT-compiled by
-//! `make artifacts`, and plan variants run the in-process engine.
+//! Architecture: a [`Coordinator`] hosts N model shards; each shard is
+//! a single worker thread (an actor owning the non-`Send` PJRT state)
+//! that drains its queue through the [`batcher`], routes each group to
+//! the best-fitting compiled executable ([`router`]) or to the native
+//! engine backend (deployment-plan variants `plan:<name>` and the fp32
+//! reference paths), executes, and replies per-request. Clients hold a
+//! cheap [`ModelHandle`] and submit typed [`VariantSpec`]s ([`variant`])
+//! that are validated at `submit` time; weighted A/B traffic splits
+//! resolve through a deterministic seeded router so experiments
+//! reproduce exactly. Python never appears on this path — the
+//! executables were AOT-compiled by `make artifacts`, and plan variants
+//! run the in-process engine.
+//!
+//! See `docs/serving.md` for the full API walkthrough.
 
 pub mod batcher;
 pub mod metrics;
 pub mod router;
 pub mod server;
+pub mod variant;
 
-pub use metrics::MetricsSnapshot;
-pub use server::{InferRequest, InferResponse, InferResult, Server, ServerConfig};
+pub use metrics::{MetricsSnapshot, VariantSnapshot};
+pub use server::{
+    Coordinator, InferRequest, InferResponse, InferResult, ModelHandle, ServerBuilder,
+};
+pub use variant::{Backend, VariantSpec};

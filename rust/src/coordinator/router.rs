@@ -1,4 +1,7 @@
-//! Routing: pick the executable batch size for a pending group.
+//! Routing: executable batch-size selection, group chunking, and the
+//! deterministic weighted router behind A/B traffic splits.
+
+use crate::util::rng::Rng;
 
 /// Choose the compiled batch size for `pending` requests from the
 /// `available` (ascending) sizes: the smallest size that fits them all,
@@ -27,6 +30,24 @@ pub fn chunks(pending: usize, exe_batch: usize) -> Vec<usize> {
     out
 }
 
+/// Pick an arm index proportionally to `weights` with one uniform draw
+/// from `rng`. Weights must be positive; the caller validates. Because
+/// the RNG is owned by the shard and seeded at build time, the arm
+/// sequence for a given request order is reproducible — A/B experiments
+/// can be replayed exactly.
+pub fn pick_weighted(rng: &mut Rng, weights: &[f64]) -> usize {
+    assert!(!weights.is_empty(), "pick_weighted needs at least one arm");
+    let total: f64 = weights.iter().sum();
+    let mut x = rng.f64() * total;
+    for (i, &w) in weights.iter().enumerate() {
+        x -= w;
+        if x < 0.0 {
+            return i;
+        }
+    }
+    weights.len() - 1 // fp rounding landed exactly on `total`
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -48,6 +69,34 @@ mod tests {
         assert_eq!(chunks(12, 8), vec![8, 4]);
         assert_eq!(chunks(8, 8), vec![8]);
         assert_eq!(chunks(3, 8), vec![3]);
+    }
+
+    #[test]
+    fn weighted_pick_is_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let w = [0.9, 0.1];
+        for _ in 0..100 {
+            assert_eq!(pick_weighted(&mut a, &w), pick_weighted(&mut b, &w));
+        }
+    }
+
+    #[test]
+    fn weighted_pick_respects_proportions() {
+        let mut rng = Rng::new(4242);
+        let w = [0.9, 0.1];
+        let n = 10_000;
+        let mut counts = [0usize; 2];
+        for _ in 0..n {
+            counts[pick_weighted(&mut rng, &w)] += 1;
+        }
+        let frac0 = counts[0] as f64 / n as f64;
+        assert!((frac0 - 0.9).abs() < 0.02, "arm 0 got {frac0}");
+        // single arm always wins
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            assert_eq!(pick_weighted(&mut rng, &[5.0]), 0);
+        }
     }
 
     #[test]

@@ -1,20 +1,32 @@
-//! The inference server: request channel → batcher → execution backends.
+//! The multi-model serving coordinator: typed requests → per-model
+//! shards → batcher → execution backends.
 //!
-//! One worker thread owns all execution state — the actor pattern.
-//! Clients hold a cheap [`Server`] handle. Two backends hang off the
-//! same batching/metrics pipeline:
+//! A [`Coordinator`] owns N model shards. Each shard is one worker
+//! thread owning all execution state for its model — the actor pattern —
+//! with its own engine, [`ExecutableCache`] and registered deployment
+//! plans. Clients resolve a cheap, cloneable [`ModelHandle`] once
+//! (`coordinator.model("resnet18m")?`) and submit typed
+//! [`VariantSpec`]s; unknown variants fail at `submit` time, not inside
+//! the worker. Two backends hang off the same batching/metrics pipeline:
 //!
 //! * **PJRT** — AOT-compiled HLO executables from `make artifacts`
 //!   (requires the `pjrt` feature), keyed (model, variant, batch).
-//! * **native** — the in-process rust engine. This is how mixed-precision
-//!   deployment plans are served: [`Server::register_plan`] installs a
-//!   [`DeploymentPlan`] and requests for variant `plan:<name>` run the
-//!   native quantized forward with that plan's per-enc-point config.
-//!   `native_fp32` runs the fp32 reference path. No artifacts needed
-//!   when the model is handed over in-process ([`Server::start_local`]).
+//! * **native** — the in-process rust engine. Mixed-precision deployment
+//!   plans are served here: [`ModelHandle::register_plan`] installs a
+//!   [`DeploymentPlan`] and requests for `plan:<name>` run the native
+//!   quantized forward with that plan's per-enc-point config. No
+//!   artifacts are needed when the model is handed over in-process
+//!   ([`ServerBuilder::model_local`]).
+//!
+//! The admin plane lives on the handle: [`ModelHandle::register_plan`],
+//! [`ModelHandle::swap_plan`] (hot-swap the plan behind an alias without
+//! dropping in-flight requests), [`ModelHandle::set_traffic_split`]
+//! (deterministic seeded A/B routing), and per-variant
+//! [`MetricsSnapshot`]s.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -26,18 +38,20 @@ use crate::policy::DeploymentPlan;
 use crate::runtime::artifacts::ExecutableCache;
 use crate::runtime::pjrt::Input;
 use crate::tensor::TensorF;
+use crate::util::rng::Rng;
 
 use super::batcher::{collect, BatchPolicy};
 use super::metrics::{shared, MetricsSnapshot, SharedMetrics};
-use super::router::pick_batch;
+use super::router::{chunks, pick_batch, pick_weighted};
+use super::variant::{Backend, VariantSpec};
 
-/// A single inference request (one image).
+/// A single inference request (one image), already resolved to a
+/// non-split variant.
 pub struct InferRequest {
     /// (H, W, C) normalized image.
     pub image: TensorF,
-    /// Which variant to run ("fp32", "full_c4", "plan:<name>",
-    /// "native_fp32", ...).
-    pub variant: String,
+    /// Resolved (non-split) variant to execute.
+    pub spec: VariantSpec,
     pub submitted: Instant,
     pub resp: SyncSender<InferResult>,
 }
@@ -51,95 +65,529 @@ pub struct InferResponse {
     pub e2e: Duration,
 }
 
-/// Per-request outcome: bad variants / backend failures reach the
-/// client instead of killing the worker.
+/// Per-request outcome: backend failures reach the client instead of
+/// killing the worker.
 pub type InferResult = std::result::Result<InferResponse, String>;
 
-/// Messages into the worker.
+/// Messages into a shard worker.
 enum Msg {
     Infer(InferRequest),
-    RegisterPlan(DeploymentPlan),
+    /// Install `plan` so that requests for `plan:<alias>` run it.
+    InstallPlan { alias: String, plan: DeploymentPlan },
 }
 
-/// Server configuration.
-#[derive(Clone, Debug)]
-pub struct ServerConfig {
-    pub model: String,
-    pub policy: BatchPolicy,
-    /// Activation scales per enc point, for HLO-quantized variants.
-    pub act_scales: Vec<f32>,
+/// One model registration inside [`ServerBuilder`].
+struct ModelSpec {
+    name: String,
+    local: Option<LoadedModel>,
+    act_scales: Vec<f32>,
+    input_dims: Vec<usize>,
 }
 
-/// Handle to a running server.
-pub struct Server {
-    tx: Option<Sender<Msg>>,
+/// Builder for a [`Coordinator`] — replaces the old bare `ServerConfig`.
+///
+/// ```no_run
+/// use overq::coordinator::Coordinator;
+/// # fn main() -> anyhow::Result<()> {
+/// let coord = Coordinator::builder()
+///     .model("resnet18m")
+///     .model("resnet50m")
+///     .seed(7)
+///     .build()?;
+/// let handle = coord.model("resnet18m")?;
+/// # Ok(())
+/// # }
+/// ```
+pub struct ServerBuilder {
+    policy: BatchPolicy,
+    seed: u64,
+    models: Vec<ModelSpec>,
+    /// A builder-misuse message (e.g. per-model setter before any
+    /// model); surfaced as an error from [`ServerBuilder::build`].
+    misuse: Option<String>,
+}
+
+impl Default for ServerBuilder {
+    fn default() -> Self {
+        ServerBuilder::new()
+    }
+}
+
+impl ServerBuilder {
+    pub fn new() -> ServerBuilder {
+        ServerBuilder {
+            policy: BatchPolicy::default(),
+            seed: 0x0A0B_5EED,
+            models: Vec::new(),
+            misuse: None,
+        }
+    }
+
+    /// Batching policy applied to every shard.
+    pub fn policy(mut self, policy: BatchPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Seed for the deterministic traffic-split routers.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Add an artifact-backed model shard (requires `make artifacts`).
+    pub fn model(mut self, name: &str) -> Self {
+        self.models.push(ModelSpec {
+            name: name.to_string(),
+            local: None,
+            act_scales: Vec::new(),
+            input_dims: vec![16, 16, 3],
+        });
+        self
+    }
+
+    /// Add a shard around an in-process model — no artifacts required.
+    /// Only native variants (`plan:<name>`, `native_fp32`, `fp32`) are
+    /// servable unless artifacts are also present.
+    pub fn model_local(mut self, model: LoadedModel) -> Self {
+        self.models.push(ModelSpec {
+            name: model.name.clone(),
+            local: Some(model),
+            act_scales: Vec::new(),
+            input_dims: vec![16, 16, 3],
+        });
+        self
+    }
+
+    /// Activation scales (per enc point) for the most recently added
+    /// model — used by HLO-quantized variants. Calling this before any
+    /// `model`/`model_local` is a build-time error, not a silent no-op.
+    pub fn act_scales(mut self, scales: Vec<f32>) -> Self {
+        match self.models.last_mut() {
+            Some(m) => m.act_scales = scales,
+            None => {
+                self.misuse
+                    .get_or_insert_with(|| "act_scales() called before any model".to_string());
+            }
+        }
+        self
+    }
+
+    /// Expected request image shape for the most recently added model
+    /// (default `[16, 16, 3]`); submits with other shapes fail fast.
+    /// Calling this before any `model`/`model_local` is a build-time
+    /// error, not a silent no-op.
+    pub fn input_dims(mut self, dims: &[usize]) -> Self {
+        match self.models.last_mut() {
+            Some(m) => m.input_dims = dims.to_vec(),
+            None => {
+                self.misuse
+                    .get_or_insert_with(|| "input_dims() called before any model".to_string());
+            }
+        }
+        self
+    }
+
+    /// Spawn one worker per registered model.
+    pub fn build(self) -> Result<Coordinator> {
+        let ServerBuilder {
+            policy,
+            seed,
+            models,
+            misuse,
+        } = self;
+        if let Some(m) = misuse {
+            anyhow::bail!("ServerBuilder misuse: {m}");
+        }
+        anyhow::ensure!(!models.is_empty(), "ServerBuilder needs at least one model");
+        let arts_root = Artifacts::locate().ok().map(|a| a.root);
+
+        // validate every spec BEFORE spawning any worker, so a failed
+        // build never leaves orphaned shard threads behind
+        let probe = match &arts_root {
+            Some(r) => Some(Artifacts::open(r)?),
+            None => None,
+        };
+        let art_models: Vec<String> = probe.as_ref().map(|a| a.model_names()).unwrap_or_default();
+        let mut seen: HashSet<String> = HashSet::new();
+        for spec in &models {
+            anyhow::ensure!(
+                seen.insert(spec.name.clone()),
+                "duplicate model {:?} in builder",
+                spec.name
+            );
+            anyhow::ensure!(
+                spec.local.is_some() || art_models.iter().any(|n| n == &spec.name),
+                "model {:?} is not in the artifact manifest and no in-process \
+                 model was given (ServerBuilder::model_local)",
+                spec.name
+            );
+        }
+
+        let mut shards: Vec<Arc<Shard>> = Vec::with_capacity(models.len());
+        for (i, spec) in models.into_iter().enumerate() {
+            let arts = match &arts_root {
+                Some(r) => Some(Artifacts::open(r)?),
+                None => None,
+            };
+            let compiled: HashSet<String> = arts
+                .as_ref()
+                .map(|a| {
+                    a.hlo_entries()
+                        .into_iter()
+                        .filter(|(m, _, _, _)| m == &spec.name)
+                        .map(|(_, v, _, _)| v)
+                        .collect()
+                })
+                .unwrap_or_default();
+            let (tx, rx) = std::sync::mpsc::channel::<Msg>();
+            let metrics = shared();
+            let m2 = metrics.clone();
+            let worker_name = spec.name.clone();
+            let scales = spec.act_scales.clone();
+            let local = spec.local;
+            let worker = std::thread::Builder::new()
+                .name(format!("overq-shard-{}", spec.name))
+                .spawn(move || {
+                    if let Err(e) = worker_loop(arts, worker_name, policy, scales, local, rx, m2)
+                    {
+                        eprintln!("[coordinator] shard worker exited with error: {e:#}");
+                    }
+                })
+                .context("spawn shard worker")?;
+            shards.push(Arc::new(Shard {
+                name: spec.name,
+                input_dims: spec.input_dims,
+                compiled,
+                tx: Mutex::new(Some(tx)),
+                worker: Mutex::new(Some(worker)),
+                metrics,
+                plans: Mutex::new(HashSet::new()),
+                split: Mutex::new(None),
+                rng: Mutex::new(Rng::new(seed ^ (0x51AB_D001u64 + i as u64))),
+            }));
+        }
+        Ok(Coordinator { shards })
+    }
+}
+
+/// Client-side state for one model shard. The native engine is always
+/// servable: `ServerBuilder::build` refuses models that are neither
+/// in-process nor loadable from the artifact manifest.
+struct Shard {
+    name: String,
+    input_dims: Vec<usize>,
+    /// HLO variant names present in the artifact manifest for this model.
+    compiled: HashSet<String>,
+    tx: Mutex<Option<Sender<Msg>>>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
     metrics: SharedMetrics,
-    worker: Option<std::thread::JoinHandle<()>>,
+    /// Registered plan aliases — the submit-time fail-fast view of the
+    /// worker's plan map. Kept in step with `install_plan` (inserted
+    /// before the control message is sent), so a client's own
+    /// registrations are always visible to its later submits.
+    plans: Mutex<HashSet<String>>,
+    /// Installed A/B traffic split, if any.
+    split: Mutex<Option<Vec<(VariantSpec, f64)>>>,
+    /// Seeded router state for deterministic weighted arm picks.
+    rng: Mutex<Rng>,
 }
 
-impl Server {
-    /// Start the worker against the artifact directory; compiles HLO
-    /// executables lazily and loads the native model on first use.
-    pub fn start(cfg: ServerConfig) -> Result<Server> {
-        Server::spawn(cfg, None)
+/// Handle to a running multi-model coordinator. Owns one worker thread
+/// per model shard; dropping it (or calling [`Coordinator::shutdown`])
+/// drains the queues and joins the workers.
+pub struct Coordinator {
+    shards: Vec<Arc<Shard>>,
+}
+
+impl Coordinator {
+    /// Entry point: `Coordinator::builder().model(...).build()`.
+    pub fn builder() -> ServerBuilder {
+        ServerBuilder::new()
     }
 
-    /// Start with an in-process model — no artifacts required. Only
-    /// native variants (`plan:<name>`, `native_fp32`) are servable
-    /// unless artifacts are also present.
-    pub fn start_local(cfg: ServerConfig, model: LoadedModel) -> Result<Server> {
-        Server::spawn(cfg, Some(model))
-    }
-
-    fn spawn(cfg: ServerConfig, native: Option<LoadedModel>) -> Result<Server> {
-        let arts = Artifacts::locate().ok();
-        let (tx, rx) = std::sync::mpsc::channel::<Msg>();
-        let metrics = shared();
-        let m2 = metrics.clone();
-        let worker = std::thread::Builder::new()
-            .name("overq-worker".into())
-            .spawn(move || {
-                if let Err(e) = worker_loop(arts, cfg, native, rx, m2) {
-                    eprintln!("[server] worker exited with error: {e:#}");
-                }
+    /// Cheap handle to one hosted model.
+    pub fn model(&self, name: &str) -> Result<ModelHandle> {
+        self.shards
+            .iter()
+            .find(|s| s.name == name)
+            .map(|s| ModelHandle { shard: s.clone() })
+            .with_context(|| {
+                format!(
+                    "coordinator hosts no model {name:?} (available: {:?})",
+                    self.model_names()
+                )
             })
-            .context("spawn worker")?;
-        Ok(Server {
-            tx: Some(tx),
-            metrics,
-            worker: Some(worker),
-        })
     }
 
-    /// Install (or replace) a deployment plan; requests may then target
-    /// variant `plan:<name>`. Ordered with respect to later `submit`s.
-    pub fn register_plan(&self, plan: DeploymentPlan) -> Result<()> {
-        self.tx
-            .as_ref()
-            .context("server stopped")?
-            .send(Msg::RegisterPlan(plan))
-            .ok()
-            .context("worker gone")
+    /// Names of the hosted models, in registration order.
+    pub fn model_names(&self) -> Vec<String> {
+        self.shards.iter().map(|s| s.name.clone()).collect()
+    }
+
+    /// Graceful shutdown: close every queue and join the workers.
+    /// In-flight requests are drained, not dropped.
+    pub fn shutdown(self) {
+        // Drop does the work; this is the explicit spelling.
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        for s in &self.shards {
+            drop(s.tx.lock().unwrap().take());
+        }
+        for s in &self.shards {
+            let handle = s.worker.lock().unwrap().take();
+            if let Some(w) = handle {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+/// Cheap, cloneable per-model handle: the request plane (`submit`,
+/// `infer`, `infer_routed`) plus the admin plane (`register_plan`,
+/// `swap_plan`, `set_traffic_split`, `metrics`).
+#[derive(Clone)]
+pub struct ModelHandle {
+    shard: Arc<Shard>,
+}
+
+impl ModelHandle {
+    /// The model this handle targets.
+    pub fn model_name(&self) -> &str {
+        &self.shard.name
+    }
+
+    /// Validate a non-split spec against what this shard can serve.
+    fn check_leaf(&self, leaf: &VariantSpec) -> Result<()> {
+        match leaf {
+            VariantSpec::Split(_) => {
+                anyhow::bail!("nested traffic splits are not supported")
+            }
+            VariantSpec::Plan(name) => {
+                anyhow::ensure!(
+                    self.shard.plans.lock().unwrap().contains(name),
+                    "no registered plan {name:?} on model {:?}",
+                    self.shard.name
+                );
+            }
+            VariantSpec::Compiled(name) => {
+                anyhow::ensure!(
+                    self.shard.compiled.contains(name),
+                    "unknown variant {name:?} for model {:?}: no compiled artifact \
+                     (and it is not a plan/fp32 variant)",
+                    self.shard.name
+                );
+                anyhow::ensure!(
+                    cfg!(feature = "pjrt"),
+                    "variant {name:?} needs the compiled (PJRT) backend, but this \
+                     binary was built without the `pjrt` feature",
+                );
+            }
+            VariantSpec::Fp32 { backend } => {
+                // the native engine is always available (build() refuses
+                // shards without it), so only the pinned-PJRT path can fail
+                if matches!(backend, Backend::Pjrt) {
+                    anyhow::ensure!(
+                        self.shard.compiled.contains("fp32") && cfg!(feature = "pjrt"),
+                        "pjrt_fp32 unavailable for model {:?}: needs an fp32 HLO \
+                         artifact and the `pjrt` feature",
+                        self.shard.name
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Draw one split arm with the deterministic seeded router. The
+    /// arms must already satisfy [`VariantSpec::validate_split`] —
+    /// callers validate once at install (`set_traffic_split_spec`) or
+    /// per hand-built spec (`submit`).
+    fn draw_arm(&self, arms: &[(VariantSpec, f64)]) -> VariantSpec {
+        let weights: Vec<f64> = arms.iter().map(|(_, w)| *w).collect();
+        let i = pick_weighted(&mut self.shard.rng.lock().unwrap(), &weights);
+        arms[i].0.clone()
+    }
+
+    /// Validate shape + leaf and enqueue one request. The leaf check
+    /// runs under the queue lock so it is atomic with a concurrent
+    /// [`ModelHandle::register_plan`] from another handle clone (which
+    /// inserts its alias and sends the control message under the same
+    /// lock): if this check sees a plan alias, the worker-side install
+    /// is already ahead of this request in the FIFO channel.
+    fn submit_leaf(&self, image: TensorF, leaf: VariantSpec) -> Result<Receiver<InferResult>> {
+        anyhow::ensure!(
+            image.dims() == &self.shard.input_dims[..],
+            "request image shape {:?} != model {:?} input shape {:?}",
+            image.dims(),
+            self.shard.name,
+            self.shard.input_dims
+        );
+        let (rtx, rrx) = sync_channel(1);
+        let guard = self.shard.tx.lock().unwrap();
+        let tx = guard.as_ref().context("coordinator stopped")?;
+        self.check_leaf(&leaf)?;
+        tx.send(Msg::Infer(InferRequest {
+            image,
+            spec: leaf,
+            submitted: Instant::now(),
+            resp: rtx,
+        }))
+        .ok()
+        .context("worker gone")?;
+        Ok(rrx)
+    }
+
+    /// Submit one request without blocking; returns the response channel.
+    /// Splits take one deterministic weighted draw from the shard
+    /// router; unknown variants and wrong image shapes fail fast.
+    pub fn submit(&self, image: TensorF, spec: &VariantSpec) -> Result<Receiver<InferResult>> {
+        let leaf = match spec {
+            VariantSpec::Split(arms) => {
+                // hand-built Split values bypass the parse/split
+                // constructors, so enforce the invariants here
+                VariantSpec::validate_split(arms)?;
+                self.draw_arm(arms)
+            }
+            other => other.clone(),
+        };
+        self.submit_leaf(image, leaf)
+    }
+
+    /// [`ModelHandle::submit`] with a string variant (parsed first).
+    pub fn submit_variant(&self, image: TensorF, variant: &str) -> Result<Receiver<InferResult>> {
+        self.submit(image, &VariantSpec::parse(variant)?)
     }
 
     /// Submit one request and block for its response.
-    pub fn infer(&self, image: TensorF, variant: &str) -> Result<InferResponse> {
-        let rx = self.submit(image, variant)?;
+    pub fn infer(&self, image: TensorF, spec: &VariantSpec) -> Result<InferResponse> {
+        let rx = self.submit(image, spec)?;
         rx.recv()
             .context("worker dropped the response")?
             .map_err(|e| anyhow::anyhow!("{e}"))
     }
 
+    /// [`ModelHandle::infer`] with a string variant (parsed first).
+    pub fn infer_variant(&self, image: TensorF, variant: &str) -> Result<InferResponse> {
+        self.infer(image, &VariantSpec::parse(variant)?)
+    }
+
+    /// Submit through the installed traffic split
+    /// ([`ModelHandle::set_traffic_split`]); `fp32` when none is set.
+    pub fn submit_routed(&self, image: TensorF) -> Result<Receiver<InferResult>> {
+        let leaf = {
+            let split = self.shard.split.lock().unwrap();
+            match &*split {
+                // validated when installed by set_traffic_split_spec
+                Some(arms) => self.draw_arm(arms),
+                None => VariantSpec::Fp32 {
+                    backend: Backend::Auto,
+                },
+            }
+        };
+        self.submit_leaf(image, leaf)
+    }
+
+    /// Blocking version of [`ModelHandle::submit_routed`].
+    pub fn infer_routed(&self, image: TensorF) -> Result<InferResponse> {
+        let rx = self.submit_routed(image)?;
+        rx.recv()
+            .context("worker dropped the response")?
+            .map_err(|e| anyhow::anyhow!("{e}"))
+    }
+
+    /// Install (or replace) a deployment plan under its own name;
+    /// requests may then target `plan:<plan.name>`. Ordered with respect
+    /// to this handle's later `submit`s.
+    pub fn register_plan(&self, plan: DeploymentPlan) -> Result<()> {
+        let alias = plan.name.clone();
+        self.install_plan(alias, plan)
+    }
+
+    /// Hot-swap: requests targeting `plan:<alias>` switch to `plan`
+    /// without clients changing their variant strings and without
+    /// dropping in-flight requests (they run on whichever plan the
+    /// worker holds when their batch executes).
+    pub fn swap_plan(&self, alias: &str, plan: DeploymentPlan) -> Result<()> {
+        anyhow::ensure!(!alias.is_empty(), "plan alias must be non-empty");
+        self.install_plan(alias.to_string(), plan)
+    }
+
+    fn install_plan(&self, alias: String, plan: DeploymentPlan) -> Result<()> {
+        anyhow::ensure!(
+            plan.model == self.shard.name,
+            "plan {:?} was tuned for model {:?}, this shard serves {:?}",
+            plan.name,
+            plan.model,
+            self.shard.name
+        );
+        // alias-insert + control-message send happen under the queue
+        // lock (same lock as submit_leaf's validate + send), so ANY
+        // handle that passes the fail-fast check is guaranteed the
+        // worker-side install is ahead of its request in the channel
+        let guard = self.shard.tx.lock().unwrap();
+        let tx = guard.as_ref().context("coordinator stopped")?;
+        self.shard.plans.lock().unwrap().insert(alias.clone());
+        tx.send(Msg::InstallPlan { alias, plan })
+            .ok()
+            .context("worker gone")?;
+        Ok(())
+    }
+
+    /// Install a weighted A/B split, e.g.
+    /// `handle.set_traffic_split(&[("plan:a", 0.9), ("plan:b", 0.1)])`.
+    /// Every arm is validated against this shard; requests submitted via
+    /// [`ModelHandle::submit_routed`] then draw arms from the seeded
+    /// router, so the arm sequence is reproducible run-to-run.
+    pub fn set_traffic_split(&self, split: &[(&str, f64)]) -> Result<()> {
+        self.set_traffic_split_spec(&VariantSpec::split(split)?)
+    }
+
+    /// [`ModelHandle::set_traffic_split`] for an already-parsed
+    /// [`VariantSpec::Split`] (e.g. straight from `VariantSpec::parse`).
+    pub fn set_traffic_split_spec(&self, spec: &VariantSpec) -> Result<()> {
+        let VariantSpec::Split(arms) = spec else {
+            anyhow::bail!("set_traffic_split needs a split variant, got {spec}")
+        };
+        VariantSpec::validate_split(arms)?;
+        for (arm, _) in arms {
+            self.check_leaf(arm)?;
+        }
+        *self.shard.split.lock().unwrap() = Some(arms.clone());
+        Ok(())
+    }
+
+    /// The currently installed traffic split, if any.
+    pub fn traffic_split(&self) -> Option<Vec<(VariantSpec, f64)>> {
+        self.shard.split.lock().unwrap().clone()
+    }
+
+    /// Point-in-time metrics for this shard (global + per-variant).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shard.metrics.lock().unwrap().snapshot()
+    }
+
+    /// Zero this shard's metrics — e.g. to exclude warmup traffic from
+    /// a measurement window, or between A/B experiment epochs. Requests
+    /// already in the queue still count when they execute.
+    pub fn reset_metrics(&self) {
+        self.shard.metrics.lock().unwrap().reset();
+    }
+
     /// Warm a variant: trigger compilation of every batch size by
     /// pushing enough dummy requests to hit the largest executable.
     /// Returns the wall time spent (the one-time compile cost).
-    pub fn warmup(&self, variant: &str, dims: &[usize], max_batch: usize) -> Result<Duration> {
+    pub fn warmup(&self, spec: &VariantSpec, max_batch: usize) -> Result<Duration> {
+        let dims = self.shard.input_dims.clone();
         let t0 = Instant::now();
         // single request exercises the b1 executable (if present)
-        let _ = self.infer(TensorF::zeros(dims), variant)?;
+        let _ = self.infer(TensorF::zeros(&dims), spec)?;
         // a burst exercises the batched executable
         let burst: Vec<_> = (0..max_batch)
-            .map(|_| self.submit(TensorF::zeros(dims), variant))
+            .map(|_| self.submit(TensorF::zeros(&dims), spec))
             .collect::<Result<_>>()?;
         for rx in burst {
             rx.recv()
@@ -148,49 +596,12 @@ impl Server {
         }
         Ok(t0.elapsed())
     }
-
-    /// Submit without blocking; returns the response channel.
-    pub fn submit(&self, image: TensorF, variant: &str) -> Result<Receiver<InferResult>> {
-        let (rtx, rrx) = sync_channel(1);
-        self.tx
-            .as_ref()
-            .context("server stopped")?
-            .send(Msg::Infer(InferRequest {
-                image,
-                variant: variant.to_string(),
-                submitted: Instant::now(),
-                resp: rtx,
-            }))
-            .ok()
-            .context("worker gone")?;
-        Ok(rrx)
-    }
-
-    pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.lock().unwrap().snapshot()
-    }
-
-    /// Graceful shutdown: close the queue and join the worker.
-    pub fn shutdown(mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-    }
 }
 
-impl Drop for Server {
-    fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-    }
-}
-
-/// Worker-side state shared across batches.
+/// Worker-side state shared across batches of one shard.
 struct WorkerState {
-    cfg: ServerConfig,
+    model_name: String,
+    policy: BatchPolicy,
     arts: Option<Artifacts>,
     cache: ExecutableCache,
     native: Option<LoadedModel>,
@@ -201,7 +612,9 @@ struct WorkerState {
 
 fn worker_loop(
     arts: Option<Artifacts>,
-    cfg: ServerConfig,
+    model_name: String,
+    policy: BatchPolicy,
+    act_scales: Vec<f32>,
     native: Option<LoadedModel>,
     rx: std::sync::mpsc::Receiver<Msg>,
     metrics: SharedMetrics,
@@ -210,9 +623,10 @@ fn worker_loop(
         Some(a) => ExecutableCache::new(a)?,
         None => ExecutableCache::empty(),
     };
-    let scales = TensorF::from_vec(&[cfg.act_scales.len()], cfg.act_scales.clone());
+    let scales = TensorF::from_vec(&[act_scales.len()], act_scales);
     let mut st = WorkerState {
-        cfg,
+        model_name,
+        policy,
         arts,
         cache,
         native,
@@ -220,27 +634,28 @@ fn worker_loop(
         scales,
         metrics,
     };
-    while let Some(batch) = collect(&rx, &st.cfg.policy) {
+    while let Some(batch) = collect(&rx, &st.policy) {
         // apply control messages, then group inference FIFO by variant
         let mut infers: Vec<InferRequest> = Vec::with_capacity(batch.len());
         for msg in batch {
             match msg {
-                Msg::RegisterPlan(plan) => {
-                    st.plans.insert(plan.name.clone(), plan);
+                Msg::InstallPlan { alias, plan } => {
+                    st.plans.insert(alias, plan);
                 }
                 Msg::Infer(req) => infers.push(req),
             }
         }
-        infers.sort_by(|a, b| a.variant.cmp(&b.variant));
+        // stable, allocation-free grouping by variant (FIFO within)
+        infers.sort_by(|a, b| a.spec.group_key().cmp(&b.spec.group_key()));
         let mut i = 0;
         while i < infers.len() {
             let mut j = i + 1;
-            while j < infers.len() && infers[j].variant == infers[i].variant {
+            while j < infers.len() && infers[j].spec == infers[i].spec {
                 j += 1;
             }
             let group = &infers[i..j];
             if let Err(e) = run_group(&mut st, group) {
-                // per-group failure (unknown variant, backend error):
+                // per-group failure (missing artifact, backend error):
                 // reply to every request and keep serving
                 let msg = format!("{e:#}");
                 for req in group {
@@ -254,46 +669,61 @@ fn worker_loop(
 }
 
 fn run_group(st: &mut WorkerState, group: &[InferRequest]) -> Result<()> {
-    let variant = group[0].variant.as_str();
-    if let Some(plan_name) = variant.strip_prefix("plan:") {
-        let plan = st
-            .plans
-            .get(plan_name)
-            .with_context(|| format!("no registered plan {plan_name:?}"))?;
-        anyhow::ensure!(
-            plan.model == st.cfg.model,
-            "plan {plan_name:?} was tuned for model {:?}, server is serving {:?}",
-            plan.model,
-            st.cfg.model
-        );
-        let qc = plan.to_quant_config();
-        return run_group_native(st, group, Some(&qc));
+    match &group[0].spec {
+        VariantSpec::Plan(name) => {
+            let plan = st
+                .plans
+                .get(name)
+                .with_context(|| format!("no registered plan {name:?}"))?;
+            anyhow::ensure!(
+                plan.model == st.model_name,
+                "plan {name:?} was tuned for model {:?}, shard serves {:?}",
+                plan.model,
+                st.model_name
+            );
+            let qc = plan.to_quant_config();
+            run_group_native(st, group, Some(&qc))
+        }
+        VariantSpec::Fp32 {
+            backend: Backend::Native,
+        } => run_group_native(st, group, None),
+        VariantSpec::Fp32 {
+            backend: Backend::Auto,
+        } => {
+            // fp32 prefers PJRT when it can actually run — an HLO
+            // artifact exists and the binary has the `pjrt` feature —
+            // and falls back to the native engine otherwise.
+            let available = st.cache.batch_sizes(&st.model_name, "fp32");
+            if !available.is_empty() && cfg!(feature = "pjrt") {
+                run_group_pjrt(st, group, "fp32", &available)
+            } else {
+                run_group_native(st, group, None)
+            }
+        }
+        VariantSpec::Fp32 {
+            backend: Backend::Pjrt,
+        } => {
+            let available = st.cache.batch_sizes(&st.model_name, "fp32");
+            run_group_pjrt(st, group, "fp32", &available)
+        }
+        VariantSpec::Compiled(name) => {
+            let available = st.cache.batch_sizes(&st.model_name, name);
+            run_group_pjrt(st, group, name, &available)
+        }
+        VariantSpec::Split(_) => {
+            anyhow::bail!("split variants must be resolved before the worker")
+        }
     }
-    if variant == "native_fp32" {
-        return run_group_native(st, group, None);
-    }
-    let available = st.cache.batch_sizes(&st.cfg.model, variant);
-    // fp32 falls back to the native engine whenever PJRT can't actually
-    // run it — no HLO artifact, or the binary was built without the
-    // `pjrt` feature (the stub would reject the compiled path) — as
-    // long as a native model is in-process or loadable from artifacts.
-    if variant == "fp32"
-        && (available.is_empty() || !cfg!(feature = "pjrt"))
-        && (st.native.is_some() || st.arts.is_some())
-    {
-        return run_group_native(st, group, None);
-    }
-    run_group_pjrt(st, group, &available)
 }
 
 /// Ensure the native model is loaded (in-process handoff or artifacts).
-fn native_model<'a>(st: &'a mut WorkerState) -> Result<&'a LoadedModel> {
+fn native_model(st: &mut WorkerState) -> Result<&LoadedModel> {
     if st.native.is_none() {
         let arts = st
             .arts
             .as_ref()
             .context("native backend needs an in-process model or artifacts")?;
-        st.native = Some(arts.load_model(&st.cfg.model)?);
+        st.native = Some(arts.load_model(&st.model_name)?);
     }
     Ok(st.native.as_ref().unwrap())
 }
@@ -303,7 +733,8 @@ fn run_group_native(
     group: &[InferRequest],
     qc: Option<&QuantConfig>,
 ) -> Result<()> {
-    let max_batch = st.cfg.policy.max_batch.max(1);
+    let max_batch = st.policy.max_batch.max(1);
+    let key = group[0].spec.key();
     let metrics = st.metrics.clone();
     let model = native_model(st)?;
     if let Some(qc) = qc {
@@ -318,8 +749,7 @@ fn run_group_native(
     let dims = group[0].image.dims().to_vec();
     let img_sz: usize = dims.iter().product();
     let mut done = 0;
-    while done < group.len() {
-        let take = max_batch.min(group.len() - done);
+    for take in chunks(group.len(), max_batch) {
         let mut bdims = vec![take];
         bdims.extend_from_slice(&dims);
         let mut xb = TensorF::zeros(&bdims);
@@ -344,7 +774,7 @@ fn run_group_native(
             let mut m = metrics.lock().unwrap();
             m.record_batch(take, 0, exec);
             for req in &group[done..done + take] {
-                m.record_request(queue_start - req.submitted, req.submitted.elapsed());
+                m.record_request(&key, queue_start - req.submitted, req.submitted.elapsed());
             }
         }
         for (slot, req) in group[done..done + take].iter().enumerate() {
@@ -364,26 +794,28 @@ fn run_group_native(
 fn run_group_pjrt(
     st: &mut WorkerState,
     group: &[InferRequest],
+    variant: &str,
     available: &[usize],
 ) -> Result<()> {
-    let variant = &group[0].variant;
     let Some(exe_batch) = pick_batch(group.len(), available) else {
-        anyhow::bail!("no executable for {}/{}", st.cfg.model, variant);
+        anyhow::bail!("no executable for {}/{}", st.model_name, variant);
     };
+    let key = group[0].spec.key();
     let dims = group[0].image.dims().to_vec(); // (H, W, C)
     let img_sz: usize = dims.iter().product();
     let needs_scales = variant != "fp32";
 
     let mut done = 0;
-    while done < group.len() {
-        let take = exe_batch.min(group.len() - done);
-        // build padded batch tensor
-        let mut xb = TensorF::zeros(&[exe_batch, dims[0], dims[1], dims[2]]);
+    for take in chunks(group.len(), exe_batch) {
+        // build padded batch tensor (shape-generic, like the native path)
+        let mut bdims = vec![exe_batch];
+        bdims.extend_from_slice(&dims);
+        let mut xb = TensorF::zeros(&bdims);
         for (slot, req) in group[done..done + take].iter().enumerate() {
             xb.data[slot * img_sz..(slot + 1) * img_sz].copy_from_slice(&req.image.data);
         }
         let queue_start = Instant::now();
-        let exe = st.cache.get(&st.cfg.model, variant, exe_batch)?;
+        let exe = st.cache.get(&st.model_name, variant, exe_batch)?;
         let inputs: Vec<Input> = if needs_scales {
             vec![Input::F32(xb), Input::F32(st.scales.clone())]
         } else {
@@ -397,7 +829,7 @@ fn run_group_pjrt(
             let mut m = st.metrics.lock().unwrap();
             m.record_batch(take, exe_batch - take, exec);
             for req in &group[done..done + take] {
-                m.record_request(queue_start - req.submitted, req.submitted.elapsed());
+                m.record_request(&key, queue_start - req.submitted, req.submitted.elapsed());
             }
         }
         for (slot, req) in group[done..done + take].iter().enumerate() {

@@ -1,0 +1,286 @@
+//! Typed serving variants — the unit of routing in the coordinator.
+//!
+//! The serving API used to pass `variant: String` all the way into the
+//! worker, where ad-hoc prefix matching decided what to run and typos
+//! only surfaced as per-request failures deep in the group loop. A
+//! [`VariantSpec`] is parsed once at the edge (`FromStr`) and validated
+//! against the target shard at `submit` time, so unknown variants fail
+//! fast with a useful error instead of inside the worker.
+//!
+//! Grammar (round-trips through `Display`):
+//!
+//! ```text
+//! fp32                      fp32 on the best available backend
+//! native_fp32               fp32 pinned to the in-process engine
+//! pjrt_fp32                 fp32 pinned to the compiled (PJRT) path
+//! plan:<name>               registered deployment plan, native engine
+//! <name>                    AOT-compiled HLO variant (e.g. full_c4)
+//! split:<v>@<w>,<v>@<w>...  weighted traffic split over the above
+//! ```
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{Context, Result};
+
+/// Which execution backend an fp32 request is pinned to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Compiled path when an artifact exists (and the `pjrt` feature is
+    /// on), the native engine otherwise.
+    Auto,
+    /// The in-process rust engine.
+    Native,
+    /// The AOT-compiled PJRT executable; fails if unavailable.
+    Pjrt,
+}
+
+/// A parsed serving variant.
+#[derive(Clone, Debug, PartialEq)]
+pub enum VariantSpec {
+    /// The fp32 reference path.
+    Fp32 { backend: Backend },
+    /// An AOT-compiled HLO variant by artifact name (e.g. `full_c4`).
+    Compiled(String),
+    /// A registered deployment plan, served on the native engine.
+    Plan(String),
+    /// A weighted split over non-split specs; the router resolves each
+    /// request to one arm deterministically at submit time.
+    Split(Vec<(VariantSpec, f64)>),
+}
+
+impl VariantSpec {
+    /// Parse from the string grammar. Prefer this over `FromStr` when
+    /// you want `anyhow` context on the failure.
+    pub fn parse(s: &str) -> Result<VariantSpec> {
+        let s = s.trim();
+        anyhow::ensure!(!s.is_empty(), "empty variant");
+        if let Some(body) = s.strip_prefix("split:") {
+            let mut arms = Vec::new();
+            for part in body.split(',') {
+                let part = part.trim();
+                let (spec, w) = part
+                    .rsplit_once('@')
+                    .with_context(|| format!("split arm {part:?} needs <variant>@<weight>"))?;
+                let weight: f64 = w
+                    .trim()
+                    .parse()
+                    .ok()
+                    .with_context(|| format!("bad split weight {w:?} in {part:?}"))?;
+                arms.push((VariantSpec::parse(spec)?, weight));
+            }
+            VariantSpec::validate_split(&arms)?;
+            return Ok(VariantSpec::Split(arms));
+        }
+        if let Some(name) = s.strip_prefix("plan:") {
+            anyhow::ensure!(!name.is_empty(), "plan variant needs a name (plan:<name>)");
+            // same charset as compiled names — '@' and ',' would break
+            // the split grammar's Display ↔ FromStr round-trip
+            anyhow::ensure!(
+                name.chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.'),
+                "plan name {name:?} has characters outside [A-Za-z0-9_.-]"
+            );
+            return Ok(VariantSpec::Plan(name.to_string()));
+        }
+        match s {
+            "fp32" => Ok(VariantSpec::Fp32 {
+                backend: Backend::Auto,
+            }),
+            "native_fp32" => Ok(VariantSpec::Fp32 {
+                backend: Backend::Native,
+            }),
+            "pjrt_fp32" => Ok(VariantSpec::Fp32 {
+                backend: Backend::Pjrt,
+            }),
+            name => {
+                anyhow::ensure!(
+                    name.chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.'),
+                    "variant {name:?} has characters outside [A-Za-z0-9_.-]"
+                );
+                Ok(VariantSpec::Compiled(name.to_string()))
+            }
+        }
+    }
+
+    /// Build a split from `(variant, weight)` string pairs (the
+    /// `set_traffic_split` argument shape).
+    pub fn split(pairs: &[(&str, f64)]) -> Result<VariantSpec> {
+        let mut arms = Vec::with_capacity(pairs.len());
+        for (v, w) in pairs {
+            arms.push((VariantSpec::parse(v)?, *w));
+        }
+        VariantSpec::validate_split(&arms)?;
+        Ok(VariantSpec::Split(arms))
+    }
+
+    /// The split-arm invariants every producer must uphold, in one
+    /// place: at least one arm, no nesting, positive finite weights.
+    pub fn validate_split(arms: &[(VariantSpec, f64)]) -> Result<()> {
+        anyhow::ensure!(!arms.is_empty(), "empty traffic split");
+        for (arm, w) in arms {
+            anyhow::ensure!(
+                !matches!(arm, VariantSpec::Split(_)),
+                "nested traffic splits are not supported"
+            );
+            anyhow::ensure!(
+                w.is_finite() && *w > 0.0,
+                "split weight for {arm} must be positive and finite, got {w}"
+            );
+        }
+        Ok(())
+    }
+
+    /// True for `Split` specs.
+    pub fn is_split(&self) -> bool {
+        matches!(self, VariantSpec::Split(_))
+    }
+
+    /// Cheap ordering key for grouping resolved (non-split) specs —
+    /// discriminant + borrowed inner name, no allocation. Orders
+    /// consistently with equality; `Split` sorts last (the worker never
+    /// sees one).
+    pub(crate) fn group_key(&self) -> (u8, &str) {
+        match self {
+            VariantSpec::Fp32 {
+                backend: Backend::Auto,
+            } => (0, ""),
+            VariantSpec::Fp32 {
+                backend: Backend::Native,
+            } => (1, ""),
+            VariantSpec::Fp32 {
+                backend: Backend::Pjrt,
+            } => (2, ""),
+            VariantSpec::Compiled(name) => (3, name.as_str()),
+            VariantSpec::Plan(name) => (4, name.as_str()),
+            VariantSpec::Split(_) => (5, ""),
+        }
+    }
+
+    /// The metrics key for a resolved (non-split) spec — its canonical
+    /// string form.
+    pub fn key(&self) -> String {
+        self.to_string()
+    }
+}
+
+impl fmt::Display for VariantSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VariantSpec::Fp32 { backend } => match backend {
+                Backend::Auto => write!(f, "fp32"),
+                Backend::Native => write!(f, "native_fp32"),
+                Backend::Pjrt => write!(f, "pjrt_fp32"),
+            },
+            VariantSpec::Compiled(name) => write!(f, "{name}"),
+            VariantSpec::Plan(name) => write!(f, "plan:{name}"),
+            VariantSpec::Split(arms) => {
+                write!(f, "split:")?;
+                for (i, (spec, w)) in arms.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{spec}@{w}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl FromStr for VariantSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<VariantSpec> {
+        VariantSpec::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_legacy_strings() {
+        assert_eq!(
+            VariantSpec::parse("fp32").unwrap(),
+            VariantSpec::Fp32 {
+                backend: Backend::Auto
+            }
+        );
+        assert_eq!(
+            VariantSpec::parse("native_fp32").unwrap(),
+            VariantSpec::Fp32 {
+                backend: Backend::Native
+            }
+        );
+        assert_eq!(
+            VariantSpec::parse("pjrt_fp32").unwrap(),
+            VariantSpec::Fp32 {
+                backend: Backend::Pjrt
+            }
+        );
+        assert_eq!(
+            VariantSpec::parse("full_c4").unwrap(),
+            VariantSpec::Compiled("full_c4".into())
+        );
+        assert_eq!(
+            VariantSpec::parse("plan:resnet18m-auto").unwrap(),
+            VariantSpec::Plan("resnet18m-auto".into())
+        );
+    }
+
+    #[test]
+    fn parses_splits() {
+        let s = VariantSpec::parse("split:plan:a@0.9,plan:b@0.1").unwrap();
+        match &s {
+            VariantSpec::Split(arms) => {
+                assert_eq!(arms.len(), 2);
+                assert_eq!(arms[0].0, VariantSpec::Plan("a".into()));
+                assert!((arms[0].1 - 0.9).abs() < 1e-12);
+                assert_eq!(arms[1].0, VariantSpec::Plan("b".into()));
+                assert!((arms[1].1 - 0.1).abs() < 1e-12);
+            }
+            other => panic!("expected split, got {other:?}"),
+        }
+        // mixed arm kinds are fine
+        let s = VariantSpec::parse("split:native_fp32@3,full_c4@1").unwrap();
+        assert!(s.is_split());
+    }
+
+    #[test]
+    fn display_fromstr_roundtrip() {
+        for text in [
+            "fp32",
+            "native_fp32",
+            "pjrt_fp32",
+            "full_c4",
+            "plan:resnet18m-auto",
+            "split:plan:a@0.9,plan:b@0.1",
+            "split:native_fp32@3,full_c4@1",
+        ] {
+            let spec: VariantSpec = text.parse().unwrap();
+            assert_eq!(spec.to_string(), text, "display of {spec:?}");
+            let back: VariantSpec = spec.to_string().parse().unwrap();
+            assert_eq!(back, spec, "round-trip of {text:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(VariantSpec::parse("").is_err());
+        assert!(VariantSpec::parse("plan:").is_err());
+        assert!(VariantSpec::parse("split:").is_err());
+        assert!(VariantSpec::parse("split:plan:a").is_err()); // no weight
+        assert!(VariantSpec::parse("split:plan:a@zero").is_err());
+        assert!(VariantSpec::parse("split:plan:a@0").is_err()); // weight must be > 0
+        assert!(VariantSpec::parse("split:plan:a@-1").is_err());
+        assert!(VariantSpec::parse("split:split:plan:a@1@1").is_err()); // nested
+        assert!(VariantSpec::parse("bad variant name").is_err());
+        assert!(VariantSpec::parse("plan:a,b").is_err()); // ',' breaks splits
+        assert!(VariantSpec::parse("plan:a@b").is_err()); // '@' breaks splits
+        assert!(VariantSpec::split(&[]).is_err());
+        assert!(VariantSpec::split(&[("plan:a", f64::NAN)]).is_err());
+    }
+}

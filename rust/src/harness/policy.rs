@@ -10,8 +10,10 @@
 use anyhow::Result;
 
 use crate::models::zoo::LoadedModel;
-use crate::overq::OverQConfig;
-use crate::policy::{autotune, AutotuneConfig, AutotuneResult};
+use crate::overq::{coverage_stats, OverQConfig};
+use crate::policy::{
+    autotune, profile_enc_points, AutotuneConfig, AutotuneResult, DeploymentPlan, PlanLayer,
+};
 use crate::tensor::TensorF;
 use crate::util::bench::Table;
 
@@ -23,6 +25,44 @@ pub fn mode_tag(cfg: &OverQConfig) -> &'static str {
         (false, true) => "pr",
         (true, true) => "full",
     }
+}
+
+/// Pin every enc point to the global baseline config and emit it as a
+/// [`DeploymentPlan`] named `name`. This is the control arm for A/B
+/// traffic splits: register the tuned plan and the baseline plan on the
+/// same coordinator shard and route weighted live traffic across them
+/// (`ModelHandle::set_traffic_split`) to measure which one wins.
+pub fn baseline_plan(
+    model: &LoadedModel,
+    images: &TensorF,
+    cfg: &AutotuneConfig,
+    name: &str,
+) -> Result<DeploymentPlan> {
+    let profiles = profile_enc_points(model, images, cfg.max_samples)?;
+    anyhow::ensure!(!profiles.is_empty(), "model has no enc points");
+
+    let mut layers = Vec::with_capacity(profiles.len());
+    for p in &profiles {
+        let sc = autotune::score_candidate(p, &cfg.baseline, cfg.clip);
+        let measured = coverage_stats(&p.tap, sc.scale, &cfg.baseline).coverage();
+        layers.push(PlanLayer {
+            enc: p.enc,
+            overq: cfg.baseline,
+            scale: sc.scale,
+            p0: p.p0,
+            outlier_rate: sc.outlier_rate,
+            theory_coverage: sc.theory_cov,
+            measured_coverage: measured,
+            area: sc.area,
+            macs: p.macs,
+        });
+    }
+    // the baseline is its own control: baseline_{area,coverage} mirror
+    // the aggregates from_layers derives for the plan itself
+    let mut plan = DeploymentPlan::from_layers(name, &model.name, layers, 0.0, 0.0);
+    plan.baseline_area = plan.total_area;
+    plan.baseline_coverage = plan.mean_coverage;
+    Ok(plan)
 }
 
 /// Run the autotuner and render the per-layer report.
@@ -102,6 +142,25 @@ mod tests {
     use super::*;
     use crate::data::shapes;
     use crate::models::synth::synth_model;
+
+    #[test]
+    fn baseline_plan_pins_every_enc_point() {
+        let model = synth_model("synth-tiny", 3).unwrap();
+        let (images, _) = shapes::gen_batch(3, 0, 8);
+        let cfg = AutotuneConfig::default();
+        let plan = baseline_plan(&model, &images, &cfg, "tiny-base").unwrap();
+        assert_eq!(plan.name, "tiny-base");
+        assert_eq!(plan.model, "synth-tiny");
+        assert_eq!(
+            plan.layers.len(),
+            model.engine.graph.num_enc_points()
+        );
+        assert!(plan.layers.iter().all(|l| l.overq == cfg.baseline));
+        // it is engine-ready, like any tuned plan
+        let qc = plan.to_quant_config();
+        let out = model.engine.forward_quant(&images, &qc).unwrap();
+        assert!(out.data.iter().all(|v| v.is_finite()));
+    }
 
     #[test]
     fn report_shapes_and_budget_holds() {

@@ -4,10 +4,14 @@
 //! the end-to-end serving path. All of them need `make artifacts` first
 //! (except `table3`, which is pure modelling).
 
+// the `cfg.field = ...` override pattern after `::default()` is the
+// house style for harness configs; keep clippy (-D warnings in CI) quiet
+#![allow(clippy::field_reassign_with_default)]
+
 use anyhow::{Context, Result};
 
 use overq::coordinator::batcher::BatchPolicy;
-use overq::coordinator::{Server, ServerConfig};
+use overq::coordinator::{Coordinator, VariantSpec};
 use overq::data::shapes;
 use overq::harness::{calibrate, fig6a, fig6b, hwcmp, policy, table1, table2, table3};
 use overq::models::zoo::LoadedModel;
@@ -37,9 +41,13 @@ COMMANDS (system):
               --baseline-bits 4 --baseline-cascade 4
               --budget <µm²> --name <plan> --out plans/<model>.plan.json]
              (models starting with \"synth\" need no artifacts)
-  serve      run the serving coordinator on synthetic traffic
-             [--variant full_c4 --requests 64 --model resnet18m]
-             [--plan plans/<model>.plan.json serves plan:<name> natively]
+  serve      run the multi-model serving coordinator on synthetic traffic
+             [--models m1,m2 | --model resnet18m] [--variant full_c4]
+             [--plan plans/a.plan.json,plans/b.plan.json]
+             [--split plan:a@0.9,plan:b@0.1] [--requests 64 --seed 4242]
+             each plan is registered on its model's shard; --split
+             installs deterministic weighted A/B routing on the first
+             model and reports per-variant p50/p95 (docs/serving.md)
   eval       native-engine accuracy for one config
              [--model resnet18m --bits 4 --cascade 4 --std-t 6 --mode full|ro|base]
   info       artifact manifest summary
@@ -248,45 +256,99 @@ fn policy_cmd(args: &Args) -> Result<()> {
 
 fn serve(args: &Args) -> Result<()> {
     let requests = args.get_usize("requests", 64);
-    let (server, variant, model) = if let Some(path) = args.get("plan") {
-        // plan-backed serving: native engine backend, no HLO needed
-        let plan = DeploymentPlan::load(std::path::Path::new(path))?;
-        let model = args.get_or("model", &plan.model).to_string();
-        let (loaded, _) = load_model_any(&model)?;
-        let server = Server::start_local(
-            ServerConfig {
-                model: model.clone(),
-                policy: BatchPolicy::default(),
-                act_scales: vec![],
-            },
-            loaded,
-        )?;
-        server.register_plan(plan.clone())?;
-        (server, format!("plan:{}", plan.name), model)
-    } else {
-        let arts = Artifacts::locate()?;
-        let model = args.get_or("model", "resnet18m").to_string();
-        let variant = args.get_or("variant", "full_c4").to_string();
-        let m = arts.load_model(&model)?;
-        let scales =
-            calibrate::scales_from_stats(&m.enc_stats, args.get_f64("std-t", 6.0), 4);
-        let server = Server::start(ServerConfig {
-            model: model.clone(),
-            policy: BatchPolicy::default(),
-            act_scales: scales,
-        })?;
-        let compile = server.warmup(&variant, &[16, 16, 3], 8)?;
-        println!("warmup/compile: {:.1} ms", compile.as_secs_f64() * 1e3);
-        (server, variant, model)
+    let seed = args.get_usize("seed", 4242) as u64;
+    let std_t = args.get_f64("std-t", 6.0);
+
+    // deployment plans to register (comma-separated files)
+    let mut plans: Vec<DeploymentPlan> = Vec::new();
+    if let Some(paths) = args.get("plan") {
+        for p in paths.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            plans.push(DeploymentPlan::load(std::path::Path::new(p))?);
+        }
+    }
+
+    // hosted models: --models a,b | --model | the plans' models | default
+    let mut names: Vec<String> = match (args.get("models"), args.get("model")) {
+        (Some(list), _) => list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        (None, Some(m)) => vec![m.to_string()],
+        (None, None) => match plans.first() {
+            Some(p) => vec![p.model.clone()],
+            None => vec!["resnet18m".to_string()],
+        },
     };
+    for p in &plans {
+        if !names.iter().any(|n| n == &p.model) {
+            names.push(p.model.clone());
+        }
+    }
+    anyhow::ensure!(!names.is_empty(), "--models gave no model names");
+
+    let mut builder = Coordinator::builder()
+        .policy(BatchPolicy::default())
+        .seed(seed);
+    for name in &names {
+        if name.starts_with("synth") {
+            builder = builder.model_local(synth_model(name, 42)?);
+        } else {
+            builder = builder.model(name);
+            if let Ok(arts) = Artifacts::locate() {
+                if let Ok(m) = arts.load_model(name) {
+                    builder =
+                        builder.act_scales(calibrate::scales_from_stats(&m.enc_stats, std_t, 4));
+                }
+            }
+        }
+    }
+    let coord = builder.build()?;
+    for plan in &plans {
+        coord.model(&plan.model)?.register_plan(plan.clone())?;
+    }
+
+    // traffic goes to the first model: --split > --plan > --variant
+    let target = names[0].clone();
+    let handle = coord.model(&target)?;
+    let spec: Option<VariantSpec> = if let Some(split) = args.get("split") {
+        // `--split plan:a@0.9,plan:b@0.1` — the `split:` prefix of the
+        // VariantSpec grammar is implied (but also accepted)
+        let text = if split.starts_with("split:") {
+            split.to_string()
+        } else {
+            format!("split:{split}")
+        };
+        handle.set_traffic_split_spec(&VariantSpec::parse(&text)?)?;
+        println!("traffic split on {target}: {split}");
+        None // routed through the installed split
+    } else if let Some(p) = plans.iter().find(|p| p.model == target) {
+        Some(VariantSpec::parse(&format!("plan:{}", p.name))?)
+    } else {
+        let v = args.get_or("variant", "full_c4");
+        let spec = VariantSpec::parse(v)?;
+        let compile = handle.warmup(&spec, 8)?;
+        println!("warmup/compile: {:.1} ms", compile.as_secs_f64() * 1e3);
+        // keep warmup traffic out of the reported counts/latencies
+        handle.reset_metrics();
+        Some(spec)
+    };
+    let route = spec
+        .as_ref()
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| "split".to_string());
+
     let mut correct = 0usize;
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
     let mut labels = Vec::new();
     for i in 0..requests {
-        let (img, label) = shapes::gen_image(4242, i as u64);
+        let (img, label) = shapes::gen_image(seed, i as u64);
         labels.push(label);
-        pending.push(server.submit(img, &variant)?);
+        pending.push(match &spec {
+            Some(s) => handle.submit(img, s)?,
+            None => handle.submit_routed(img)?,
+        });
     }
     for (i, rx) in pending.into_iter().enumerate() {
         let resp = rx.recv()?.map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -302,21 +364,31 @@ fn serve(args: &Args) -> Result<()> {
         }
     }
     let wall = t0.elapsed();
-    let ms = server.metrics();
+    let ms = handle.metrics();
     println!(
-        "served {requests} requests ({model}/{variant}) in {:.1} ms — {:.1} req/s",
+        "served {requests} requests ({target}/{route}) in {:.1} ms — {:.1} req/s",
         wall.as_secs_f64() * 1e3,
         requests as f64 / wall.as_secs_f64()
     );
     println!(
-        "  accuracy (native load-gen) {:.3} | batches {} mean_batch {:.2} padded {} | exec {:.2} ms mean | e2e {:.2} ms mean",
+        "  accuracy (native load-gen) {:.3} | batches {} mean_batch {:.2} padded {} | exec {:.2} ms mean | e2e {:.2} ms mean, {:.2} ms p50, {:.2} ms p95",
         correct as f64 / requests as f64,
         ms.batches,
         ms.mean_batch,
         ms.padded_slots,
         ms.mean_exec_us / 1e3,
         ms.mean_e2e_us / 1e3,
+        ms.p50_e2e_us / 1e3,
+        ms.p95_e2e_us / 1e3,
     );
-    server.shutdown();
+    for (variant, vs) in &ms.per_variant {
+        println!(
+            "  {variant:<28} {:>6} reqs | e2e {:.2} ms p50, {:.2} ms p95",
+            vs.requests,
+            vs.p50_e2e_us / 1e3,
+            vs.p95_e2e_us / 1e3,
+        );
+    }
+    coord.shutdown();
     Ok(())
 }

@@ -240,6 +240,19 @@ impl Engine {
         }
     }
 
+    /// Output width of the classifier head (the last dense layer's
+    /// `cout`), so serving-side consumers don't hardcode class counts.
+    pub fn num_classes(&self) -> Option<usize> {
+        self.graph
+            .nodes
+            .iter()
+            .rev()
+            .find_map(|n| match &n.op {
+                Op::Dense { cout, .. } => Some(*cout),
+                _ => None,
+            })
+    }
+
     /// fp32 forward. Returns logits (N, classes); if `taps` is non-empty,
     /// also collects those node outputs (for profiling / Fig. 6b).
     pub fn forward_f32(&self, x: &TensorF, taps: &[usize]) -> Result<(TensorF, Vec<TensorF>)> {

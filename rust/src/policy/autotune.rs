@@ -19,7 +19,7 @@ use crate::quant::clip::ClipMethod;
 use crate::tensor::TensorF;
 
 use super::candidates::{pe_area, CandidateSpace};
-use super::plan::{DeploymentPlan, PlanLayer, PLAN_VERSION};
+use super::plan::{DeploymentPlan, PlanLayer};
 use super::profile::{profile_enc_points, EncPointProfile};
 
 /// Autotuner knobs.
@@ -275,33 +275,24 @@ pub fn autotune(
         });
     }
 
-    // outlier-weighted mean coverage (layers with no outliers count as
-    // fully covered but carry no weight)
-    let cov_mean = |f: &dyn Fn(&LayerChoice) -> (f64, f64)| -> f64 {
-        let (mut num, mut den) = (0.0, 0.0);
-        for lc in &layers {
-            let (cov, rate) = f(lc);
-            num += cov * rate * lc.macs as f64;
-            den += rate * lc.macs as f64;
-        }
-        if den > 0.0 {
-            num / den
-        } else {
-            1.0
-        }
-    };
-    let mean_coverage = cov_mean(&|lc| (lc.measured_cov, lc.chosen.outlier_rate));
-    let baseline_coverage =
-        cov_mean(&|lc| (lc.baseline_measured_cov, lc.baseline.outlier_rate));
+    // the baseline's outlier-weighted mean coverage (the plan's own is
+    // derived by DeploymentPlan::from_layers, which owns the convention:
+    // layers with no outliers count as fully covered but carry no weight)
+    let (mut num, mut den) = (0.0f64, 0.0f64);
+    for lc in &layers {
+        num += lc.baseline_measured_cov * lc.baseline.outlier_rate * lc.macs as f64;
+        den += lc.baseline.outlier_rate * lc.macs as f64;
+    }
+    let baseline_coverage = if den > 0.0 { num / den } else { 1.0 };
 
-    let plan = DeploymentPlan {
-        version: PLAN_VERSION,
-        name: cfg
-            .plan_name
-            .clone()
-            .unwrap_or_else(|| format!("{}-auto", model.name)),
-        model: model.name.clone(),
-        layers: layers
+    let name = cfg
+        .plan_name
+        .clone()
+        .unwrap_or_else(|| format!("{}-auto", model.name));
+    let plan = DeploymentPlan::from_layers(
+        &name,
+        &model.name,
+        layers
             .iter()
             .map(|lc| PlanLayer {
                 enc: lc.enc,
@@ -315,11 +306,9 @@ pub fn autotune(
                 macs: lc.macs,
             })
             .collect(),
-        total_area,
         baseline_area,
-        mean_coverage,
         baseline_coverage,
-    };
+    );
     Ok(AutotuneResult {
         layers,
         total_area,

@@ -63,6 +63,45 @@ pub struct DeploymentPlan {
 }
 
 impl DeploymentPlan {
+    /// Assemble a plan from per-layer choices, deriving the MAC-weighted
+    /// mean PE area and the outlier-weighted mean coverage in one place.
+    /// These are the conventions every plan producer must share: a
+    /// layer's deployment cost is its area × MAC share, and layers with
+    /// no outliers count as fully covered but carry no coverage weight.
+    pub fn from_layers(
+        name: &str,
+        model: &str,
+        layers: Vec<PlanLayer>,
+        baseline_area: f64,
+        baseline_coverage: f64,
+    ) -> DeploymentPlan {
+        let total_macs: f64 = layers
+            .iter()
+            .map(|l| l.macs as f64)
+            .sum::<f64>()
+            .max(1.0);
+        let total_area: f64 = layers
+            .iter()
+            .map(|l| l.area * l.macs as f64 / total_macs)
+            .sum();
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for l in &layers {
+            num += l.measured_coverage * l.outlier_rate * l.macs as f64;
+            den += l.outlier_rate * l.macs as f64;
+        }
+        let mean_coverage = if den > 0.0 { num / den } else { 1.0 };
+        DeploymentPlan {
+            version: PLAN_VERSION,
+            name: name.to_string(),
+            model: model.to_string(),
+            layers,
+            total_area,
+            baseline_area,
+            mean_coverage,
+            baseline_coverage,
+        }
+    }
+
     /// Engine-ready per-enc-point quantization config.
     pub fn to_quant_config(&self) -> QuantConfig {
         QuantConfig {
@@ -217,6 +256,21 @@ mod tests {
             mean_coverage: 0.87,
             baseline_coverage: 0.8,
         }
+    }
+
+    #[test]
+    fn from_layers_derives_weighted_aggregates() {
+        let p = sample_plan();
+        let rebuilt = DeploymentPlan::from_layers("x", "toy", p.layers.clone(), 1.0, 0.5);
+        assert_eq!(rebuilt.name, "x");
+        assert_eq!(rebuilt.model, "toy");
+        // enc1 has outlier_rate 0 → carries no coverage weight
+        assert!((rebuilt.mean_coverage - 0.81).abs() < 1e-12);
+        let tm = (884_736u64 + 442_368) as f64;
+        let want_area = 350.25 * 884_736.0 / tm + 410.5 * 442_368.0 / tm;
+        assert!((rebuilt.total_area - want_area).abs() < 1e-9);
+        assert_eq!(rebuilt.baseline_area, 1.0);
+        assert_eq!(rebuilt.baseline_coverage, 0.5);
     }
 
     #[test]

@@ -4,6 +4,18 @@
 //! tests, the synthetic dataset) takes an explicit [`Rng`] so runs are
 //! reproducible from a seed.
 
+/// One splitmix64 step (Steele, Lea & Flood; public domain reference
+/// algorithm): advance `state` and return the next 64-bit output. Used
+/// to seed [`Rng`] and as the lightweight single-u64 generator behind
+/// `util::stats::Summary`'s reservoir.
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 /// xoshiro256** by Blackman & Vigna (public domain reference algorithm).
 #[derive(Clone, Debug)]
 pub struct Rng {
@@ -14,15 +26,13 @@ impl Rng {
     /// Seed via splitmix64 so nearby seeds give unrelated streams.
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
-        let mut next = || {
-            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
-            let mut z = sm;
-            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-            z ^ (z >> 31)
-        };
         Rng {
-            s: [next(), next(), next(), next()],
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
         }
     }
 

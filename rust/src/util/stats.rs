@@ -1,6 +1,13 @@
 //! Small statistics helpers shared by harnesses, benches and the batcher.
 
-/// Online mean/variance/min/max accumulator (Welford).
+use super::rng::splitmix64;
+
+/// Sample cap for [`Summary`]'s percentile reservoir.
+const RESERVOIR_CAP: usize = 4096;
+
+/// Online mean/variance/min/max accumulator (Welford), plus a bounded
+/// deterministic reservoir so percentiles stay available at O(1) memory
+/// however long the stream runs.
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
     pub n: u64,
@@ -9,6 +16,11 @@ pub struct Summary {
     pub min: f64,
     pub max: f64,
     pub sum: f64,
+    /// Uniform sample of the stream (algorithm R), capped at
+    /// [`RESERVOIR_CAP`]. Deterministic in insertion order.
+    samples: Vec<f64>,
+    /// splitmix64 state driving reservoir replacement.
+    rstate: u64,
 }
 
 impl Summary {
@@ -28,6 +40,25 @@ impl Summary {
         self.m2 += d * (x - self.mean);
         self.min = self.min.min(x);
         self.max = self.max.max(x);
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(x);
+        } else {
+            // algorithm R; a full Rng would bloat every Summary, one
+            // splitmix64 u64 of state is enough
+            let j = (splitmix64(&mut self.rstate) % self.n) as usize;
+            if j < RESERVOIR_CAP {
+                self.samples[j] = x;
+            }
+        }
+    }
+
+    /// Percentile estimate from the reservoir (exact while the stream is
+    /// under the cap). `p` in [0, 100]; 0.0 for an empty summary.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        percentile(&self.samples, p)
     }
 
     pub fn mean(&self) -> f64 {
@@ -72,6 +103,36 @@ mod tests {
         assert!((s.max - 100.0).abs() < 1e-12);
         let var: f64 = xs.iter().map(|x| (x - 50.5).powi(2)).sum::<f64>() / 99.0;
         assert!((s.var() - var).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_percentiles_exact_under_cap() {
+        let mut s = Summary::new();
+        for i in 0..101 {
+            s.add(i as f64);
+        }
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(50.0), 50.0);
+        assert_eq!(s.percentile(95.0), 95.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert_eq!(Summary::new().percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn summary_reservoir_caps_and_stays_deterministic() {
+        let run = || {
+            let mut s = Summary::new();
+            for i in 0..20_000 {
+                s.add((i % 1000) as f64);
+            }
+            s
+        };
+        let (a, b) = (run(), run());
+        assert!(a.samples.len() <= super::RESERVOIR_CAP);
+        assert_eq!(a.samples, b.samples, "reservoir is not deterministic");
+        // the sample of a uniform 0..1000 stream should put p50 mid-range
+        let p50 = a.percentile(50.0);
+        assert!((300.0..700.0).contains(&p50), "p50 {p50}");
     }
 
     #[test]

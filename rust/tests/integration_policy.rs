@@ -9,8 +9,7 @@
 //! the coordinator serves a `plan:<name>` variant whose responses match
 //! the native engine bit-for-bit.
 
-use overq::coordinator::batcher::BatchPolicy;
-use overq::coordinator::{Server, ServerConfig};
+use overq::coordinator::Coordinator;
 use overq::data::shapes;
 use overq::models::synth_model;
 use overq::policy::{autotune, AutotuneConfig, DeploymentPlan};
@@ -93,16 +92,9 @@ fn server_serves_plan_variant_end_to_end() {
         })
         .collect();
 
-    let server = Server::start_local(
-        ServerConfig {
-            model: "synth-tiny".into(),
-            policy: BatchPolicy::default(),
-            act_scales: vec![],
-        },
-        model,
-    )
-    .unwrap();
-    server.register_plan(plan).unwrap();
+    let coord = Coordinator::builder().model_local(model).build().unwrap();
+    let handle = coord.model("synth-tiny").unwrap();
+    handle.register_plan(plan).unwrap();
 
     let img_sz = 16 * 16 * 3;
     let mut pending = Vec::new();
@@ -111,7 +103,7 @@ fn server_serves_plan_variant_end_to_end() {
             &[16, 16, 3],
             load.data[i * img_sz..(i + 1) * img_sz].to_vec(),
         );
-        pending.push(server.submit(img, &variant).unwrap());
+        pending.push(handle.submit_variant(img, &variant).unwrap());
     }
     for (i, rx) in pending.into_iter().enumerate() {
         let resp = rx
@@ -128,20 +120,23 @@ fn server_serves_plan_variant_end_to_end() {
             .0;
         assert_eq!(pred, native_preds[i], "request {i} disagrees with native");
     }
-    let m = server.metrics();
+    let m = handle.metrics();
     assert_eq!(m.requests, n as u64, "metrics lost requests");
     assert!(m.batches <= n as u64);
+    assert_eq!(m.per_variant[variant.as_str()].requests, n as u64);
 
-    // unknown plans fail the request, not the server
+    // unknown plans fail the submit, not the server
     let (img, _) = shapes::gen_image(1, 1);
-    let rx = server.submit(img, "plan:nope").unwrap();
-    let err = rx.recv().expect("response lost").unwrap_err();
-    assert!(err.contains("no registered plan"), "{err}");
+    let err = handle.submit_variant(img, "plan:nope").unwrap_err();
+    assert!(
+        format!("{err:#}").contains("no registered plan"),
+        "{err:#}"
+    );
     // ...and the worker is still alive afterwards
     let (img, _) = shapes::gen_image(1, 2);
-    let ok = server.infer(img, &variant);
+    let ok = handle.infer_variant(img, &variant);
     assert!(ok.is_ok(), "server died after bad variant: {ok:?}");
-    server.shutdown();
+    coord.shutdown();
 }
 
 #[test]
@@ -149,19 +144,12 @@ fn native_fp32_variant_without_artifacts() {
     let model = synth_model("synth-tiny", 13).unwrap();
     let (x, _) = shapes::gen_batch(13, 5, 1);
     let (want, _) = model.engine.forward_f32(&x, &[]).unwrap();
-    let server = Server::start_local(
-        ServerConfig {
-            model: "synth-tiny".into(),
-            policy: BatchPolicy::default(),
-            act_scales: vec![],
-        },
-        model,
-    )
-    .unwrap();
+    let coord = Coordinator::builder().model_local(model).build().unwrap();
+    let handle = coord.model("synth-tiny").unwrap();
     let img = overq::tensor::TensorF::from_vec(&[16, 16, 3], x.data.clone());
-    let resp = server.infer(img, "native_fp32").unwrap();
+    let resp = handle.infer_variant(img, "native_fp32").unwrap();
     for (a, b) in resp.logits.iter().zip(&want.data) {
         assert_eq!(a, b, "native_fp32 via server != direct engine");
     }
-    server.shutdown();
+    coord.shutdown();
 }

@@ -1,14 +1,28 @@
-//! Serving coordinator end-to-end: requests → batcher → PJRT → responses.
+//! Serving coordinator end-to-end: typed requests → shards → batcher →
+//! backends → responses.
 //!
-//! Uses the fp32 variant (small HLO, fast compile). Checks: every
-//! request answered, predictions match the native engine, batching
-//! actually batches, metrics account for every request.
+//! The artifact-free tests (synthetic models) always run and cover the
+//! redesigned API: multi-model coordination, submit-time variant
+//! validation, error-carrying responses, deterministic A/B traffic
+//! splits, and plan hot-swap. The PJRT test still requires
+//! `make artifacts` and skips otherwise.
 
 use overq::coordinator::batcher::BatchPolicy;
-use overq::coordinator::{Server, ServerConfig};
+use overq::coordinator::{Coordinator, VariantSpec};
+use overq::data::shapes;
 use overq::harness::calibrate::{scales_from_stats, subset};
-use overq::models::Artifacts;
+use overq::harness::policy::baseline_plan;
+use overq::models::{synth_model, Artifacts};
+use overq::policy::{autotune, AutotuneConfig};
 use overq::tensor::TensorF;
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}
 
 #[test]
 fn serve_fp32_end_to_end() {
@@ -22,24 +36,17 @@ fn serve_fp32_end_to_end() {
     let (images, _) = subset(&ev, n);
     let img_sz = 16 * 16 * 3;
 
-    let server = Server::start(ServerConfig {
-        model: "resnet18m".into(),
-        policy: BatchPolicy::default(),
-        act_scales: scales_from_stats(&model.enc_stats, 6.0, 4),
-    })
-    .unwrap();
+    let coord = Coordinator::builder()
+        .model("resnet18m")
+        .act_scales(scales_from_stats(&model.enc_stats, 6.0, 4))
+        .build()
+        .unwrap();
+    let handle = coord.model("resnet18m").unwrap();
 
     // native predictions as ground truth
     let (logits, _) = model.engine.forward_f32(&images, &[]).unwrap();
     let native_preds: Vec<usize> = (0..n)
-        .map(|i| {
-            logits.data[i * 10..(i + 1) * 10]
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0
-        })
+        .map(|i| argmax(&logits.data[i * 10..(i + 1) * 10]))
         .collect();
 
     // open-loop submit
@@ -49,39 +56,327 @@ fn serve_fp32_end_to_end() {
             &[16, 16, 3],
             images.data[i * img_sz..(i + 1) * img_sz].to_vec(),
         );
-        pending.push(server.submit(img, "fp32").unwrap());
+        pending.push(handle.submit_variant(img, "fp32").unwrap());
     }
     for (i, rx) in pending.into_iter().enumerate() {
         let resp = rx.recv().expect("response lost").expect("request failed");
         assert_eq!(resp.logits.len(), 10);
-        let pred = resp
-            .logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0;
-        assert_eq!(pred, native_preds[i], "request {i} disagrees with native");
+        assert_eq!(
+            argmax(&resp.logits),
+            native_preds[i],
+            "request {i} disagrees with native"
+        );
         assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
     }
 
-    let m = server.metrics();
+    let m = handle.metrics();
     assert_eq!(m.requests, n as u64, "metrics lost requests");
     assert!(m.batches < n as u64, "batcher never batched");
-    assert_eq!(m.padded_slots as usize % 8, m.padded_slots as usize % 8); // sane
-    server.shutdown();
+    assert_eq!(m.per_variant["fp32"].requests, n as u64);
+    coord.shutdown();
 }
 
 #[test]
-fn server_shutdown_is_clean() {
-    let Ok(_) = Artifacts::locate() else { return };
-    let model = Artifacts::locate().unwrap().load_model("resnet18m").unwrap();
-    let server = Server::start(ServerConfig {
-        model: "resnet18m".into(),
-        policy: BatchPolicy::default(),
-        act_scales: scales_from_stats(&model.enc_stats, 6.0, 4),
-    })
-    .unwrap();
-    // no requests at all — drop must join the worker without hanging
-    server.shutdown();
+fn coordinator_shutdown_is_clean() {
+    // no requests at all — drop must join every shard without hanging
+    let coord = Coordinator::builder()
+        .model_local(synth_model("synth-tiny", 7).unwrap())
+        .model_local(synth_model("synth-cnn", 7).unwrap())
+        .build()
+        .unwrap();
+    assert_eq!(coord.model_names(), vec!["synth-tiny", "synth-cnn"]);
+    coord.shutdown();
+}
+
+#[test]
+fn builder_and_lookup_fail_fast() {
+    // empty builder
+    assert!(Coordinator::builder().build().is_err());
+    // duplicate model names
+    assert!(Coordinator::builder()
+        .model_local(synth_model("synth-tiny", 1).unwrap())
+        .model_local(synth_model("synth-tiny", 2).unwrap())
+        .build()
+        .is_err());
+    // a model that is neither local nor in the artifact manifest
+    assert!(Coordinator::builder().model("no-such-model").build().is_err());
+    // per-model setters before any model are a build-time error,
+    // not a silent no-op
+    assert!(Coordinator::builder()
+        .act_scales(vec![1.0])
+        .model_local(synth_model("synth-tiny", 4).unwrap())
+        .build()
+        .is_err());
+    // unknown model on lookup
+    let coord = Coordinator::builder()
+        .model_local(synth_model("synth-tiny", 3).unwrap())
+        .build()
+        .unwrap();
+    let err = coord.model("synth-cnn").unwrap_err();
+    assert!(format!("{err:#}").contains("hosts no model"), "{err:#}");
+    coord.shutdown();
+}
+
+/// Satellite: unknown variant, plan/model mismatch, and wrong image
+/// shape must each surface as `Err` to the caller while the worker keeps
+/// serving subsequent requests.
+#[test]
+fn variant_errors_fail_fast_and_worker_survives() {
+    let model = synth_model("synth-tiny", 9).unwrap();
+    let coord = Coordinator::builder()
+        .model_local(model)
+        .model_local(synth_model("synth-cnn", 9).unwrap())
+        .build()
+        .unwrap();
+    let tiny = coord.model("synth-tiny").unwrap();
+    let cnn = coord.model("synth-cnn").unwrap();
+    let good = |i| shapes::gen_image(1, i).0;
+
+    // unknown plan: rejected at submit time, with a useful message
+    let err = tiny
+        .submit(good(0), &"plan:nope".parse().unwrap())
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("no registered plan"), "{err:#}");
+
+    // unknown compiled variant (no artifacts for synthetic models)
+    let err = tiny.submit_variant(good(1), "full_c9").unwrap_err();
+    assert!(format!("{err:#}").contains("unknown variant"), "{err:#}");
+
+    // malformed variant string
+    assert!(tiny.submit_variant(good(2), "split:plan:a").is_err());
+
+    // wrong image shape
+    let err = tiny
+        .submit(TensorF::zeros(&[8, 8, 3]), &"native_fp32".parse().unwrap())
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("shape"), "{err:#}");
+
+    // plan/model mismatch: a plan tuned for synth-tiny cannot be
+    // registered on the synth-cnn shard
+    let (images, _) = shapes::gen_batch(9, 0, 8);
+    let tiny_model = synth_model("synth-tiny", 9).unwrap();
+    let plan = autotune(&tiny_model, &images, &AutotuneConfig::default())
+        .unwrap()
+        .plan;
+    let err = cnn.register_plan(plan.clone()).unwrap_err();
+    assert!(format!("{err:#}").contains("tuned for model"), "{err:#}");
+
+    // a worker-side failure also carries the error to the caller without
+    // killing the shard: register a plan that covers too few enc points
+    let mut short = plan.clone();
+    short.name = "short".into();
+    short.layers.truncate(1);
+    tiny.register_plan(short).unwrap();
+    let rx = tiny
+        .submit(good(3), &"plan:short".parse().unwrap())
+        .unwrap();
+    let err = rx.recv().expect("response lost").unwrap_err();
+    assert!(err.contains("enc points"), "{err}");
+
+    // ...and both shards are still alive afterwards
+    tiny.register_plan(plan).unwrap();
+    assert!(tiny
+        .infer(good(4), &"plan:synth-tiny-auto".parse().unwrap())
+        .is_ok());
+    assert!(tiny.infer_variant(good(5), "native_fp32").is_ok());
+    assert!(cnn.infer_variant(good(6), "native_fp32").is_ok());
+    coord.shutdown();
+}
+
+/// Acceptance: a coordinator hosting two models with a 90/10 traffic
+/// split between two registered plans serves a mixed request stream
+/// correctly — per-variant metrics show the split within ±5% over 1000
+/// seeded requests, responses are bit-exact with the native engine, and
+/// a second model serves concurrently.
+#[test]
+fn ab_split_routes_within_tolerance_across_two_models() {
+    let tiny = synth_model("synth-tiny", 21).unwrap();
+    let cnn = synth_model("synth-cnn", 21).unwrap();
+    let (images, _) = shapes::gen_batch(21, 0, 16);
+    let cfg = AutotuneConfig {
+        plan_name: Some("a".into()),
+        ..AutotuneConfig::default()
+    };
+    let plan_a = autotune(&tiny, &images, &cfg).unwrap().plan;
+    let plan_b = baseline_plan(&tiny, &images, &cfg, "b").unwrap();
+    let (qc_a, qc_b) = (plan_a.to_quant_config(), plan_b.to_quant_config());
+
+    // ground-truth logits for both arms and for the second model
+    let n = 1000usize;
+    let classes = tiny.engine.num_classes().expect("classifier head");
+    let (load, _) = shapes::gen_batch(77, 0, n);
+    let ref_a = tiny.engine.forward_quant(&load, &qc_a).unwrap();
+    let ref_b = tiny.engine.forward_quant(&load, &qc_b).unwrap();
+    let n2 = 32usize;
+    let classes2 = cnn.engine.num_classes().expect("classifier head");
+    let (load2, _) = shapes::gen_batch(78, 0, n2);
+    let (ref2, _) = cnn.engine.forward_f32(&load2, &[]).unwrap();
+
+    let coord = Coordinator::builder()
+        .policy(BatchPolicy::default())
+        .seed(4242)
+        .model_local(tiny)
+        .model_local(cnn)
+        .build()
+        .unwrap();
+    let h_tiny = coord.model("synth-tiny").unwrap();
+    let h_cnn = coord.model("synth-cnn").unwrap();
+    h_tiny.register_plan(plan_a).unwrap();
+    h_tiny.register_plan(plan_b).unwrap();
+    h_tiny
+        .set_traffic_split(&[("plan:a", 0.9), ("plan:b", 0.1)])
+        .unwrap();
+    assert_eq!(h_tiny.traffic_split().unwrap().len(), 2);
+
+    // mixed open-loop stream: routed traffic on model 1, fp32 on model 2
+    let img_sz = 16 * 16 * 3;
+    let img_of = |src: &TensorF, i: usize| {
+        TensorF::from_vec(&[16, 16, 3], src.data[i * img_sz..(i + 1) * img_sz].to_vec())
+    };
+    let mut pending = Vec::new();
+    let mut pending2 = Vec::new();
+    for i in 0..n {
+        pending.push(h_tiny.submit_routed(img_of(&load, i)).unwrap());
+        if i < n2 {
+            pending2.push(h_cnn.submit_variant(img_of(&load2, i), "native_fp32").unwrap());
+        }
+    }
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv().expect("response lost").expect("routed request failed");
+        // every response is bit-exact with one of the two arms
+        let row_a = &ref_a.data[i * classes..(i + 1) * classes];
+        let row_b = &ref_b.data[i * classes..(i + 1) * classes];
+        assert!(
+            resp.logits == row_a || resp.logits == row_b,
+            "request {i} matches neither plan arm"
+        );
+    }
+    for (i, rx) in pending2.into_iter().enumerate() {
+        let resp = rx.recv().expect("response lost").expect("fp32 request failed");
+        assert_eq!(resp.logits, ref2.data[i * classes2..(i + 1) * classes2].to_vec());
+    }
+
+    // per-variant metrics: the split holds within ±5% absolute
+    let m = h_tiny.metrics();
+    assert_eq!(m.requests, n as u64, "metrics lost requests");
+    let got_a = m.per_variant["plan:a"].requests as f64 / n as f64;
+    let got_b = m.per_variant["plan:b"].requests as f64 / n as f64;
+    assert!((got_a - 0.9).abs() <= 0.05, "plan:a fraction {got_a}");
+    assert!((got_b - 0.1).abs() <= 0.05, "plan:b fraction {got_b}");
+    assert_eq!(
+        m.per_variant["plan:a"].requests + m.per_variant["plan:b"].requests,
+        n as u64
+    );
+    assert!(m.per_variant["plan:a"].p95_e2e_us >= m.per_variant["plan:a"].p50_e2e_us);
+    let m2 = h_cnn.metrics();
+    assert_eq!(m2.requests, n2 as u64);
+    coord.shutdown();
+}
+
+/// Routing is deterministic in the builder seed: the same request
+/// sequence draws the same arm sequence.
+#[test]
+fn ab_split_is_reproducible_run_to_run() {
+    let run = || {
+        let tiny = synth_model("synth-tiny", 5).unwrap();
+        let (images, _) = shapes::gen_batch(5, 0, 8);
+        let cfg = AutotuneConfig {
+            plan_name: Some("a".into()),
+            ..AutotuneConfig::default()
+        };
+        let plan_a = autotune(&tiny, &images, &cfg).unwrap().plan;
+        let plan_b = baseline_plan(&tiny, &images, &cfg, "b").unwrap();
+        let coord = Coordinator::builder()
+            .seed(99)
+            .model_local(tiny)
+            .build()
+            .unwrap();
+        let h = coord.model("synth-tiny").unwrap();
+        h.register_plan(plan_a).unwrap();
+        h.register_plan(plan_b).unwrap();
+        h.set_traffic_split(&[("plan:a", 0.5), ("plan:b", 0.5)]).unwrap();
+        let mut pending = Vec::new();
+        for i in 0..64 {
+            pending.push(h.submit_routed(shapes::gen_image(3, i).0).unwrap());
+        }
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        let m = h.metrics();
+        let counts = (
+            m.per_variant["plan:a"].requests,
+            m.per_variant["plan:b"].requests,
+        );
+        coord.shutdown();
+        counts
+    };
+    assert_eq!(run(), run(), "seeded routing is not reproducible");
+}
+
+/// Acceptance: `swap_plan` takes effect without dropping in-flight
+/// requests — everything submitted before and after the swap is
+/// answered, and post-swap traffic runs the new plan's numerics.
+#[test]
+fn swap_plan_keeps_inflight_requests() {
+    let tiny = synth_model("synth-tiny", 13).unwrap();
+    let (images, _) = shapes::gen_batch(13, 0, 8);
+    let cfg = AutotuneConfig {
+        plan_name: Some("a".into()),
+        ..AutotuneConfig::default()
+    };
+    let plan_a = autotune(&tiny, &images, &cfg).unwrap().plan;
+    // the replacement keeps the alias "a" but runs the baseline config
+    let mut plan_b = baseline_plan(&tiny, &images, &cfg, "b").unwrap();
+    plan_b.name = "a-v2".into();
+    let (qc_a, qc_b) = (plan_a.to_quant_config(), plan_b.to_quant_config());
+
+    let n = 200usize;
+    let classes = tiny.engine.num_classes().expect("classifier head");
+    let (load, _) = shapes::gen_batch(55, 0, n);
+    let ref_a = tiny.engine.forward_quant(&load, &qc_a).unwrap();
+    let ref_b = tiny.engine.forward_quant(&load, &qc_b).unwrap();
+
+    let coord = Coordinator::builder().model_local(tiny).build().unwrap();
+    let h = coord.model("synth-tiny").unwrap();
+    h.register_plan(plan_a).unwrap();
+
+    let img_sz = 16 * 16 * 3;
+    let img_of = |i: usize| {
+        TensorF::from_vec(&[16, 16, 3], load.data[i * img_sz..(i + 1) * img_sz].to_vec())
+    };
+    let spec: VariantSpec = "plan:a".parse().unwrap();
+    let half = n / 2;
+    let mut pre = Vec::new();
+    for i in 0..half {
+        pre.push(h.submit(img_of(i), &spec).unwrap());
+    }
+    // hot-swap while the first half is in flight
+    h.swap_plan("a", plan_b).unwrap();
+    let mut post = Vec::new();
+    for i in half..n {
+        post.push(h.submit(img_of(i), &spec).unwrap());
+    }
+
+    // nothing in flight was dropped; each pre-swap response ran one of
+    // the two plans (the swap lands on a batch boundary)
+    for (i, rx) in pre.into_iter().enumerate() {
+        let resp = rx.recv().expect("response lost").expect("pre-swap request failed");
+        let row_a = &ref_a.data[i * classes..(i + 1) * classes];
+        let row_b = &ref_b.data[i * classes..(i + 1) * classes];
+        assert!(
+            resp.logits == row_a || resp.logits == row_b,
+            "pre-swap request {i} matches neither plan"
+        );
+    }
+    // post-swap traffic deterministically runs the new plan
+    for (k, rx) in post.into_iter().enumerate() {
+        let i = half + k;
+        let resp = rx.recv().expect("response lost").expect("post-swap request failed");
+        assert_eq!(
+            resp.logits,
+            ref_b.data[i * classes..(i + 1) * classes].to_vec(),
+            "post-swap request {i} did not run the swapped plan"
+        );
+    }
+    coord.shutdown();
 }
