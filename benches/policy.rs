@@ -1,14 +1,19 @@
 //! `cargo bench --bench policy` — times a full autotune pass (profile →
-//! score → greedy search → measured-coverage validation) on zoo models
-//! and writes `BENCH_policy.json` so the perf trajectory tracks this
-//! path. Runs artifact-free on the synthetic zoo; picks up the AOT zoo
+//! score → greedy search → measured-coverage validation) and the
+//! two-stage measured refinement on zoo models, and writes
+//! `BENCH_policy.json` so the perf trajectory tracks this path. The
+//! refinement block also records how well the stage-1 proxy ranking
+//! agreed with the measured-accuracy ranking (`rank_agreement`, plus
+//! the proxy/chosen/baseline probe accuracies), so regressions in the
+//! proxy show up in the bench history, not just in anecdotes. Runs
+//! artifact-free on the synthetic zoo; picks up the AOT zoo
 //! automatically when artifacts are present.
 
 use std::collections::BTreeMap;
 
 use overq::data::shapes;
 use overq::models::{synth_model, Artifacts};
-use overq::policy::{autotune, profile_enc_points, AutotuneConfig};
+use overq::policy::{autotune, autotune_measured, profile_enc_points, AutotuneConfig, ProbeSplit};
 use overq::util::bench::{bench, BenchResult};
 use overq::util::json::Value;
 
@@ -24,6 +29,7 @@ fn result_json(r: &BenchResult) -> Value {
 
 fn main() {
     let mut results = Vec::new();
+    let mut rankings = Vec::new();
 
     // synthetic zoo: always available
     for name in ["synth-tiny", "synth-cnn"] {
@@ -39,6 +45,34 @@ fn main() {
             let r = autotune(&model, &images, &cfg).unwrap();
             std::hint::black_box(r.total_area);
         }));
+
+        // two-stage refinement: time it and record proxy-vs-measured
+        // ranking agreement over the refined candidates
+        let (pimg, plab) = shapes::gen_batch(42, 16, 32);
+        let probe = ProbeSplit::new(pimg, plab).expect("probe split");
+        let mcfg = AutotuneConfig {
+            space: overq::policy::CandidateSpace {
+                weight_bits: vec![0, 4, 6],
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        results.push(bench(&format!("autotune_measured {name} n16 probe32"), || {
+            let m = autotune_measured(&model, &images, &probe, &mcfg).unwrap();
+            std::hint::black_box(m.rank_agreement);
+        }));
+        let m = autotune_measured(&model, &images, &probe, &mcfg).unwrap();
+        let mut r = BTreeMap::new();
+        r.insert("model".into(), Value::Str(name.into()));
+        r.insert("candidates".into(), Value::Num(m.candidates.len() as f64));
+        r.insert("rank_agreement".into(), Value::Num(m.rank_agreement));
+        r.insert("proxy_acc".into(), Value::Num(m.proxy_acc));
+        r.insert(
+            "chosen_acc".into(),
+            Value::Num(m.candidates[m.chosen].measured_acc),
+        );
+        r.insert("baseline_acc".into(), Value::Num(m.baseline_acc));
+        rankings.push(Value::Obj(r));
     }
 
     // artifact zoo, when built
@@ -63,6 +97,7 @@ fn main() {
         "results".into(),
         Value::Arr(results.iter().map(result_json).collect()),
     );
+    top.insert("ranking".into(), Value::Arr(rankings));
     let json = Value::Obj(top).to_json();
     std::fs::write("BENCH_policy.json", &json).expect("write BENCH_policy.json");
     println!("wrote BENCH_policy.json ({} cases)", results.len());

@@ -15,6 +15,14 @@ pub fn multiplier(act_bits: u32) -> f64 {
     C0 + C1 * act_bits as f64
 }
 
+/// [`multiplier`] generalized over the weight bitwidth. An array
+/// multiplier has one partial-product row per weight bit, so area
+/// scales linearly in `weight_bits`; the W8 point reproduces
+/// [`multiplier`] exactly (the Table-3 calibration).
+pub fn multiplier_w(act_bits: u32, weight_bits: u32) -> f64 {
+    multiplier(act_bits) * weight_bits as f64 / 8.0
+}
+
 /// Ripple/compressor adder for the partial-sum chain: linear in psum
 /// width. `psum_bits = act + weight + guard` (guard = log2 of max
 /// accumulation depth, 8 here → 256-deep columns).

@@ -16,4 +16,4 @@
 pub mod components;
 pub mod pe_area;
 
-pub use pe_area::{pe_breakdown, PeAreas, PeVariant};
+pub use pe_area::{pe_breakdown, pe_breakdown_w, PeAreas, PeVariant};

@@ -31,34 +31,43 @@ impl PeAreas {
 const WEIGHT_BITS: u32 = 8;
 const GUARD_BITS: u32 = 8; // 256-deep accumulation columns
 
-/// Compute the area breakdown for one PE variant at `act_bits`.
+/// Compute the area breakdown for one PE variant at `act_bits`, with
+/// the paper's fixed W8 weight datapath.
 pub fn pe_breakdown(variant: PeVariant, act_bits: u32) -> PeAreas {
-    let psum = act_bits + WEIGHT_BITS + GUARD_BITS;
+    pe_breakdown_w(variant, act_bits, WEIGHT_BITS)
+}
+
+/// [`pe_breakdown`] generalized over the weight bitwidth: the
+/// multiplier's partial-product rows, the weight register/mux and the
+/// partial-sum width all scale with `weight_bits`. `weight_bits = 8`
+/// reproduces the Table-3 calibration exactly.
+pub fn pe_breakdown_w(variant: PeVariant, act_bits: u32, weight_bits: u32) -> PeAreas {
+    let psum = act_bits + weight_bits + GUARD_BITS;
     // baseline "other": activation pipe reg + weight reg + control
     let other_base =
-        c::register(act_bits) + c::register(WEIGHT_BITS) + c::CTRL + c::mux2(act_bits);
+        c::register(act_bits) + c::register(weight_bits) + c::CTRL + c::mux2(act_bits);
     match variant {
         PeVariant::Baseline => PeAreas {
-            multiply: c::multiplier(act_bits),
+            multiply: c::multiplier_w(act_bits, weight_bits),
             add: c::adder(psum),
             other: other_base,
         },
         PeVariant::OverQRo => PeAreas {
-            multiply: c::multiplier(act_bits), // multiplier untouched
-            add: c::adder(psum + 1),           // +1 bit for the shifted range
+            multiply: c::multiplier_w(act_bits, weight_bits), // multiplier untouched
+            add: c::adder(psum + 1), // +1 bit for the shifted range
             other: other_base
-                + c::register(1)                        // state bit pipe
-                + c::mux2(WEIGHT_BITS)                  // weight-copy mux
-                + c::shifter(act_bits + WEIGHT_BITS, 1) // left shift (MSB)
-                + c::mux2(psum),                        // product-path select
+                + c::register(1)                         // state bit pipe
+                + c::mux2(weight_bits)                   // weight-copy mux
+                + c::shifter(act_bits + weight_bits, 1)  // left shift (MSB)
+                + c::mux2(psum),                         // product-path select
         },
         PeVariant::OverQFull => PeAreas {
-            multiply: c::multiplier(act_bits),
+            multiply: c::multiplier_w(act_bits, weight_bits),
             add: c::adder(psum + 1),
             other: other_base
-                + c::register(2)                        // 2-bit state pipe
-                + c::mux2(WEIGHT_BITS)
-                + c::shifter(act_bits + WEIGHT_BITS, 2) // both directions
+                + c::register(2)                         // 2-bit state pipe
+                + c::mux2(weight_bits)
+                + c::shifter(act_bits + weight_bits, 2)  // both directions
                 + c::mux2(psum),
         },
     }
@@ -93,6 +102,25 @@ mod tests {
         // total overhead in the paper's ballpark (≈15 % of PE)
         let tot_oh = (full.total() - base.total()) / base.total();
         assert!(tot_oh > 0.05 && tot_oh < 0.25, "{tot_oh}");
+    }
+
+    #[test]
+    fn weight_bits_scale_the_pe() {
+        // W8 is the calibration point: identical to the legacy model
+        for v in [PeVariant::Baseline, PeVariant::OverQRo, PeVariant::OverQFull] {
+            let a = pe_breakdown(v, 4);
+            let b = pe_breakdown_w(v, 4, 8);
+            assert_eq!(a.total(), b.total());
+        }
+        // narrower weights shrink every part of the PE, monotonically
+        let w4 = pe_breakdown_w(PeVariant::OverQFull, 4, 4);
+        let w6 = pe_breakdown_w(PeVariant::OverQFull, 4, 6);
+        let w8 = pe_breakdown_w(PeVariant::OverQFull, 4, 8);
+        assert!(w4.total() < w6.total() && w6.total() < w8.total());
+        assert!(w4.multiply < w8.multiply && w4.add < w8.add && w4.other < w8.other);
+        // the multiplier dominates the saving: one partial-product row
+        // per weight bit → W4 multiplier is half the W8 one
+        assert!((w4.multiply - w8.multiply / 2.0).abs() < 1e-9);
     }
 
     #[test]

@@ -10,7 +10,9 @@ use std::time::{Duration, Instant};
 /// Batching policy knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
+    /// Largest batch to assemble before executing.
     pub max_batch: usize,
+    /// Longest a batch may wait for more requests after its first.
     pub max_wait: Duration,
 }
 

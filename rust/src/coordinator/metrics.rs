@@ -13,26 +13,40 @@ use crate::util::stats::Summary;
 /// Per-variant latency accounting.
 #[derive(Default)]
 pub struct VariantMetrics {
+    /// Requests served through this variant.
     pub requests: u64,
+    /// Queue-wait latency summary (µs).
     pub queue_us: Summary,
+    /// End-to-end latency summary (µs).
     pub e2e_us: Summary,
 }
 
 /// Live metrics (behind [`SharedMetrics`]).
 #[derive(Default)]
 pub struct Metrics {
+    /// Requests executed (all variants).
     pub requests: u64,
+    /// Batches executed.
     pub batches: u64,
+    /// Padding slots wasted by fixed-batch executables.
     pub padded_slots: u64,
+    /// Queue-wait latency summary (µs).
     pub queue_us: Summary,
+    /// End-to-end latency summary (µs).
     pub e2e_us: Summary,
+    /// Backend execution-time summary (µs, per batch).
     pub exec_us: Summary,
+    /// Executed batch-size summary.
     pub batch_size: Summary,
+    /// Per-variant accounting, keyed by the resolved variant string.
     pub per_variant: BTreeMap<String, VariantMetrics>,
 }
 
+/// The handle both the worker (writes) and client handles (snapshots)
+/// hold: metrics behind a mutex, shared across clones.
 pub type SharedMetrics = Arc<Mutex<Metrics>>;
 
+/// Fresh, zeroed [`SharedMetrics`].
 pub fn shared() -> SharedMetrics {
     Arc::new(Mutex::new(Metrics::default()))
 }
@@ -40,7 +54,9 @@ pub fn shared() -> SharedMetrics {
 /// Point-in-time per-variant copy for reporting.
 #[derive(Clone, Debug, Default)]
 pub struct VariantSnapshot {
+    /// Requests served through this variant.
     pub requests: u64,
+    /// Mean queue wait (µs).
     pub mean_queue_us: f64,
     pub mean_e2e_us: f64,
     pub p50_e2e_us: f64,
@@ -50,9 +66,13 @@ pub struct VariantSnapshot {
 /// Point-in-time copy for reporting.
 #[derive(Clone, Debug, Default)]
 pub struct MetricsSnapshot {
+    /// Requests executed (all variants).
     pub requests: u64,
+    /// Batches executed.
     pub batches: u64,
+    /// Padding slots wasted by fixed-batch executables.
     pub padded_slots: u64,
+    /// Mean queue wait (µs).
     pub mean_queue_us: f64,
     pub mean_e2e_us: f64,
     pub p50_e2e_us: f64,
@@ -65,6 +85,7 @@ pub struct MetricsSnapshot {
 }
 
 impl Metrics {
+    /// Account one executed batch (`padded` = wasted executable slots).
     pub fn record_batch(&mut self, batch: usize, padded: usize, exec: Duration) {
         self.batches += 1;
         self.requests += batch as u64;
@@ -73,6 +94,7 @@ impl Metrics {
         self.batch_size.add(batch as f64);
     }
 
+    /// Account one served request under its resolved variant key.
     pub fn record_request(&mut self, variant: &str, queue: Duration, e2e: Duration) {
         let (q_us, e_us) = (queue.as_micros() as f64, e2e.as_micros() as f64);
         self.queue_us.add(q_us);
@@ -94,6 +116,7 @@ impl Metrics {
         *self = Metrics::default();
     }
 
+    /// Point-in-time copy with derived means/percentiles.
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             requests: self.requests,

@@ -52,16 +52,22 @@ pub struct InferRequest {
     pub image: TensorF,
     /// Resolved (non-split) variant to execute.
     pub spec: VariantSpec,
+    /// When the client submitted (for queue/e2e latency accounting).
     pub submitted: Instant,
+    /// Where the worker sends this request's [`InferResult`].
     pub resp: SyncSender<InferResult>,
 }
 
 /// Reply for one request.
 #[derive(Clone, Debug)]
 pub struct InferResponse {
+    /// Classifier logits, one per class.
     pub logits: Vec<f32>,
+    /// Size of the batch this request executed in.
     pub batch_size: usize,
+    /// Time spent queued before execution started.
     pub queue: Duration,
+    /// Submit-to-response wall time.
     pub e2e: Duration,
 }
 
@@ -114,6 +120,8 @@ impl Default for ServerBuilder {
 }
 
 impl ServerBuilder {
+    /// Empty builder; add shards with [`ServerBuilder::model`] /
+    /// [`ServerBuilder::model_local`], then [`ServerBuilder::build`].
     pub fn new() -> ServerBuilder {
         ServerBuilder {
             policy: BatchPolicy::default(),

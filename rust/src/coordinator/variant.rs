@@ -36,6 +36,46 @@ pub enum Backend {
 }
 
 /// A parsed serving variant.
+///
+/// The grammar round-trips through `Display`/[`FromStr`]. These are the
+/// normative examples from `docs/serving.md`, verified as doc-tests by
+/// `cargo test`:
+///
+/// ```
+/// use overq::coordinator::{Backend, VariantSpec};
+///
+/// // fp32 on the best available backend, or pinned to one
+/// assert_eq!(
+///     VariantSpec::parse("fp32")?,
+///     VariantSpec::Fp32 { backend: Backend::Auto }
+/// );
+/// assert_eq!(
+///     "native_fp32".parse::<VariantSpec>()?,
+///     VariantSpec::Fp32 { backend: Backend::Native }
+/// );
+///
+/// // a registered deployment plan, and an AOT-compiled HLO variant
+/// assert_eq!(
+///     VariantSpec::parse("plan:resnet18m-auto")?,
+///     VariantSpec::Plan("resnet18m-auto".into())
+/// );
+/// assert_eq!(
+///     VariantSpec::parse("full_c4")?,
+///     VariantSpec::Compiled("full_c4".into())
+/// );
+///
+/// // weighted A/B split; Display reproduces the exact input string
+/// let split = VariantSpec::parse("split:plan:a@0.9,plan:b@0.1")?;
+/// assert!(split.is_split());
+/// assert_eq!(split.to_string(), "split:plan:a@0.9,plan:b@0.1");
+///
+/// // parsing is strict: empty names, bad weights, nesting all fail
+/// assert!(VariantSpec::parse("plan:").is_err());
+/// assert!(VariantSpec::parse("split:plan:a").is_err()); // missing @weight
+/// assert!(VariantSpec::parse("split:plan:a@0").is_err()); // weight must be > 0
+/// assert!(VariantSpec::parse("split:split:plan:a@1@1").is_err()); // nested
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 #[derive(Clone, Debug, PartialEq)]
 pub enum VariantSpec {
     /// The fp32 reference path.

@@ -10,9 +10,11 @@
 use anyhow::Result;
 
 use crate::models::zoo::LoadedModel;
+use crate::nn::WBITS_DEFAULT;
 use crate::overq::{coverage_stats, OverQConfig};
 use crate::policy::{
-    autotune, profile_enc_points, AutotuneConfig, AutotuneResult, DeploymentPlan, PlanLayer,
+    autotune, autotune_measured, profile_enc_points, AutotuneConfig, AutotuneResult,
+    DeploymentPlan, MeasuredAutotune, PlanLayer, ProbeSplit,
 };
 use crate::tensor::TensorF;
 use crate::util::bench::Table;
@@ -24,6 +26,15 @@ pub fn mode_tag(cfg: &OverQConfig) -> &'static str {
         (true, false) => "ro",
         (false, true) => "pr",
         (true, true) => "full",
+    }
+}
+
+/// Render a weight bitwidth ("-" for the default prepared weights).
+fn wbits_tag(wbits: u32) -> String {
+    if wbits == WBITS_DEFAULT {
+        "-".into()
+    } else {
+        wbits.to_string()
     }
 }
 
@@ -49,6 +60,7 @@ pub fn baseline_plan(
             enc: p.enc,
             overq: cfg.baseline,
             scale: sc.scale,
+            wbits: WBITS_DEFAULT,
             p0: p.p0,
             outlier_rate: sc.outlier_rate,
             theory_coverage: sc.theory_cov,
@@ -83,7 +95,7 @@ pub fn run(
             cfg.baseline.cascade
         ),
         &[
-            "Enc", "Zero %", "Outlier %", "Bits", "Casc", "Mode", "Theory Cov %",
+            "Enc", "Zero %", "Outlier %", "Bits", "Wb", "Casc", "Mode", "Theory Cov %",
             "Meas Cov %", "Base Cov %", "PE µm²", "MAC %",
         ],
     );
@@ -94,6 +106,7 @@ pub fn run(
             format!("{:.1}", lc.p0 * 100.0),
             format!("{:.2}", c.outlier_rate * 100.0),
             c.cfg.bits.to_string(),
+            wbits_tag(c.wbits),
             if c.cfg.range_overwrite {
                 c.cfg.cascade.to_string()
             } else {
@@ -116,6 +129,7 @@ pub fn run(
         "-".into(),
         "-".into(),
         "-".into(),
+        "-".into(),
         format!("{:.1}", plan.mean_coverage * 100.0),
         format!("{:.1}", plan.baseline_coverage * 100.0),
         format!("{:.1}", plan.total_area),
@@ -126,6 +140,7 @@ pub fn run(
         "-".into(),
         "-".into(),
         cfg.baseline.bits.to_string(),
+        "-".into(),
         cfg.baseline.cascade.to_string(),
         mode_tag(&cfg.baseline).into(),
         "-".into(),
@@ -135,6 +150,86 @@ pub fn run(
         "100.0".into(),
     ]);
     Ok((table, result))
+}
+
+/// Run the two-stage autotuner and render both reports: the per-layer
+/// table for the winning plan, and the plan-vs-baseline accuracy table
+/// over every refined candidate. [`baseline_plan`] is the control arm:
+/// its config is what the refinement stage measures as "baseline".
+pub fn run_measured(
+    model: &LoadedModel,
+    images: &TensorF,
+    probe: &ProbeSplit,
+    cfg: &AutotuneConfig,
+) -> Result<(Table, Table, MeasuredAutotune)> {
+    let measured = autotune_measured(model, images, probe, cfg)?;
+
+    let mut acc_table = Table::new(
+        &format!(
+            "Policy refinement — measured accuracy on {} probe images ({})",
+            measured.probe_images, model.name
+        ),
+        &[
+            "Candidate", "Step", "Wb", "PE µm²", "Proxy Err", "Probe Acc %", "Picked",
+        ],
+    );
+    for (i, c) in measured.candidates.iter().enumerate() {
+        // weight bitwidths actually used, deduped for display
+        let mut wbs: Vec<u32> = c.plan.layers.iter().map(|l| l.wbits).collect();
+        wbs.sort_unstable();
+        wbs.dedup();
+        let wb = wbs
+            .iter()
+            .map(|&w| wbits_tag(w))
+            .collect::<Vec<_>>()
+            .join(",");
+        acc_table.row(vec![
+            c.plan.name.clone(),
+            c.greedy_step.to_string(),
+            wb,
+            format!("{:.1}", c.plan.total_area),
+            format!("{:.3e}", c.proxy_err),
+            format!("{:.2}", c.measured_acc * 100.0),
+            if i == measured.chosen { "◀".into() } else { "".into() },
+        ]);
+    }
+    acc_table.row(vec![
+        "baseline".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:.1}", measured.result.baseline_area),
+        "-".into(),
+        format!("{:.2}", measured.baseline_acc * 100.0),
+        "".into(),
+    ]);
+
+    let total_macs: f64 = measured.result.layers.iter().map(|l| l.macs as f64).sum();
+    let mut layer_table = Table::new(
+        &format!(
+            "Policy — per-layer OverQ plan for {} (chosen by probe accuracy)",
+            model.name
+        ),
+        &["Enc", "Zero %", "Bits", "Wb", "Casc", "Mode", "Meas Cov %", "PE µm²", "MAC %"],
+    );
+    for lc in &measured.result.layers {
+        let c = &lc.chosen;
+        layer_table.row(vec![
+            lc.enc.to_string(),
+            format!("{:.1}", lc.p0 * 100.0),
+            c.cfg.bits.to_string(),
+            wbits_tag(c.wbits),
+            if c.cfg.range_overwrite {
+                c.cfg.cascade.to_string()
+            } else {
+                "-".into()
+            },
+            mode_tag(&c.cfg).into(),
+            format!("{:.1}", lc.measured_cov * 100.0),
+            format!("{:.1}", c.area),
+            format!("{:.1}", lc.macs as f64 / total_macs * 100.0),
+        ]);
+    }
+    Ok((layer_table, acc_table, measured))
 }
 
 #[cfg(test)]
@@ -177,5 +272,33 @@ mod tests {
             result.total_area,
             result.baseline_area
         );
+    }
+
+    #[test]
+    fn measured_report_and_refinement_guarantee() {
+        let model = synth_model("synth-tiny", 3).unwrap();
+        let (images, _) = shapes::gen_batch(3, 0, 8);
+        // probe images disjoint from the profiling split (indices 8..32)
+        let (pimg, plab) = shapes::gen_batch(3, 8, 24);
+        let probe = ProbeSplit::new(pimg, plab).unwrap();
+        let mut cfg = AutotuneConfig::default();
+        cfg.space.weight_bits = vec![0, 4, 6];
+        let (layer_table, acc_table, m) = run_measured(&model, &images, &probe, &cfg).unwrap();
+        assert_eq!(layer_table.rows.len(), 2);
+        // every candidate + the baseline control row
+        assert_eq!(acc_table.rows.len(), m.candidates.len() + 1);
+        // refinement can only match or beat the proxy-only plan
+        let chosen = &m.candidates[m.chosen];
+        assert!(
+            chosen.measured_acc >= m.proxy_acc - 1e-12,
+            "chosen {} < proxy-only {}",
+            chosen.measured_acc,
+            m.proxy_acc
+        );
+        // evidence lands in the emitted plan, within the area contract
+        let probe_ev = m.result.plan.probe.expect("probe evidence");
+        assert_eq!(probe_ev.images, 24);
+        assert!((probe_ev.accuracy - chosen.measured_acc).abs() < 1e-12);
+        assert!(m.result.total_area <= m.result.baseline_area + 1e-9);
     }
 }

@@ -33,14 +33,18 @@ COMMANDS (paper artifacts):
   hwcmp      systolic + OLAccel hardware comparison     [--rows 32 --cols 16]
 
 COMMANDS (system):
-  policy     coverage-driven mixed-precision autotuner: choose an OverQ
-             config per enc point under a PE-area budget and emit a
-             deployment plan JSON
+  policy     two-stage mixed-precision autotuner: proxy-scored greedy
+             search over (OverQ config × weight bits) per enc point
+             under a PE-area budget, then optional measured-accuracy
+             refinement on a held-out probe split (docs/autotuning.md);
+             emits a deployment plan JSON
              [overq policy <model> --images 64 --std-t 4.0
-              --bits 3,4,5,8 --cascades 1,2,3,4
+              --bits 3,4,5,8 --cascades 1,2,3,4 --weight-bits 4,6,8
               --baseline-bits 4 --baseline-cascade 4
+              --probe 128 --topk 4
               --budget <µm²> --name <plan> --out plans/<model>.plan.json]
-             (models starting with \"synth\" need no artifacts)
+             (models starting with \"synth\" need no artifacts;
+              --probe 0 skips refinement and runs the proxy-only stage)
   serve      run the multi-model serving coordinator on synthetic traffic
              [--models m1,m2 | --model resnet18m] [--variant full_c4]
              [--plan plans/a.plan.json,plans/b.plan.json]
@@ -201,6 +205,7 @@ fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
 
 fn policy_cmd(args: &Args) -> Result<()> {
     use overq::overq::OverQConfig;
+    use overq::policy::ProbeSplit;
     use overq::quant::clip::ClipMethod;
 
     let name = args
@@ -211,6 +216,10 @@ fn policy_cmd(args: &Args) -> Result<()> {
         .unwrap_or("synth-cnn")
         .to_string();
     let (model, arts) = load_model_any(&name)?;
+    anyhow::ensure!(
+        model.engine.graph.num_enc_points() > 0,
+        "model {name:?} has no enc points (no quantized convs) — nothing to tune"
+    );
     let n = args.get_usize("images", 64);
     let images = match &arts {
         Some(a) => calibrate::subset(&a.load_dataset("profileset")?, n).0,
@@ -224,6 +233,7 @@ fn policy_cmd(args: &Args) -> Result<()> {
             args.get_usize("baseline-cascade", 4),
         ),
         plan_name: args.get("name").map(|s| s.to_string()),
+        topk: args.get_usize("topk", 4),
         ..AutotuneConfig::default()
     };
     if let Some(b) = args.get("bits") {
@@ -232,12 +242,55 @@ fn policy_cmd(args: &Args) -> Result<()> {
     if let Some(c) = args.get("cascades") {
         at.space.cascades = parse_usize_list(c)?;
     }
+    if let Some(w) = args.get("weight-bits") {
+        // 0 = the default prepared (8-bit) weights; mixing it in keeps
+        // the legacy datapath in the search space
+        at.space.weight_bits = parse_usize_list(w)?.into_iter().map(|w| w as u32).collect();
+    }
     if let Some(b) = args.get("budget") {
         at.budget_area = Some(b.parse::<f64>().context("--budget expects µm²")?);
     }
 
-    let (table, result) = policy::run(&model, &images, &at)?;
-    emit(table, args)?;
+    // stage 2: measured-accuracy refinement on a held-out probe split
+    let probe_n = args.get_usize("probe", 0);
+    let result = if probe_n > 0 {
+        let (pimg, plab) = match &arts {
+            // the eval split is disjoint from the profiling split
+            Some(a) => calibrate::subset(&a.load_dataset("evalset")?, probe_n),
+            // synthetic: continue the stream past the profiling images
+            None => shapes::gen_batch(4242, n as u64, probe_n),
+        };
+        let probe = ProbeSplit::new(pimg, plab)
+            .context("building the probe split (is --probe larger than the eval set?)")?;
+        let (layer_table, acc_table, measured) =
+            policy::run_measured(&model, &images, &probe, &at)?;
+        emit(layer_table, args)?;
+        acc_table.print();
+        // --csv captures the accuracy report too, next to the layer csv
+        if let Some(path) = args.get("csv") {
+            let acc_path = match path.rsplit_once('.') {
+                Some((stem, ext)) => format!("{stem}.accuracy.{ext}"),
+                None => format!("{path}.accuracy"),
+            };
+            acc_table.write_csv(&acc_path)?;
+            println!("(accuracy csv written to {acc_path})");
+        }
+        println!(
+            "probe accuracy: chosen {:.2}% | proxy-only {:.2}% | baseline {:.2}% \
+             (n={}, proxy↔measured rank agreement {:.2})",
+            measured.candidates[measured.chosen].measured_acc * 100.0,
+            measured.proxy_acc * 100.0,
+            measured.baseline_acc * 100.0,
+            measured.probe_images,
+            measured.rank_agreement,
+        );
+        measured.result
+    } else {
+        let (table, result) = policy::run(&model, &images, &at)?;
+        emit(table, args)?;
+        result
+    };
+
     let default_out = format!("plans/{name}.plan.json");
     let out = args.get_or("out", &default_out);
     result.plan.save(std::path::Path::new(out))?;

@@ -1,6 +1,7 @@
 //! The graph executor: fp32 reference path + OverQ hardware path.
 
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -13,6 +14,12 @@ use super::conv::im2col;
 use super::gemm::gemm_f32;
 use super::graph::{Graph, Node, Op};
 
+/// Weight bitwidth sentinel: use the engine's prepared weights (the
+/// artifact-exported 8-bit codes, or whatever a prior global
+/// [`Engine::requantize_weights`] installed). This is the pre-plan-v2
+/// behavior and the default everywhere.
+pub const WBITS_DEFAULT: u32 = 0;
+
 /// Quantization of one enc point: the OverQ hardware mode plus the
 /// activation scale (clip / qmax at that layer's bitwidth).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -21,6 +28,11 @@ pub struct LayerQuant {
     pub overq: OverQConfig,
     /// Activation scale (clip / qmax) for this enc point.
     pub scale: f32,
+    /// Weight bitwidth for the convs reading this enc point.
+    /// [`WBITS_DEFAULT`] (0) keeps the engine's prepared weights; any
+    /// other value re-quantizes natively (MMSE) at that width, cached
+    /// per (conv, width), OCS-expanded weights included.
+    pub wbits: u32,
 }
 
 /// Per-run quantization configuration: one [`LayerQuant`] per enc point,
@@ -34,12 +46,17 @@ pub struct QuantConfig {
 }
 
 impl QuantConfig {
-    /// The same OverQ mode at every enc point (the paper's setting).
+    /// The same OverQ mode at every enc point (the paper's setting),
+    /// with the engine's prepared (default) weights.
     pub fn uniform(overq: OverQConfig, act_scales: Vec<f32>) -> QuantConfig {
         QuantConfig {
             layers: act_scales
                 .into_iter()
-                .map(|scale| LayerQuant { overq, scale })
+                .map(|scale| LayerQuant {
+                    overq,
+                    scale,
+                    wbits: WBITS_DEFAULT,
+                })
                 .collect(),
         }
     }
@@ -68,6 +85,16 @@ struct PConv {
     wroll: Option<TensorI>,
     /// OCS channel gather (replaces cin when present).
     gather: Option<Vec<usize>>,
+    /// OCS-expanded fp32 weights (duplicated channels halved) — the
+    /// source for per-layer weight re-quantization when OCS is active.
+    wf_ocs: Option<TensorF>,
+}
+
+/// One conv's weights quantized at an explicit bitwidth (the
+/// [`LayerQuant::wbits`] path), cached per (conv node, width).
+struct PreparedW {
+    qw: QuantWeights,
+    wroll: TensorI,
 }
 
 #[derive(Clone, Debug)]
@@ -81,6 +108,9 @@ pub struct Engine {
     pub graph: Graph,
     convs: HashMap<usize, PConv>,
     denses: HashMap<usize, PDense>,
+    /// Per-(conv, wbits) quantized-weight cache for plans that pin
+    /// explicit weight bitwidths; cleared when OCS rewrites the weights.
+    wq_cache: Mutex<HashMap<(usize, u32), Arc<PreparedW>>>,
 }
 
 impl Engine {
@@ -146,6 +176,7 @@ impl Engine {
                             qw,
                             wroll,
                             gather: None,
+                            wf_ocs: None,
                         },
                     );
                 }
@@ -171,6 +202,7 @@ impl Engine {
             graph,
             convs,
             denses,
+            wq_cache: Mutex::new(HashMap::new()),
         })
     }
 
@@ -225,18 +257,94 @@ impl Engine {
             pc.wroll = Some(overq::dotprod::roll_weights(&qw.codes));
             pc.qw = Some(qw);
             pc.gather = Some(gather);
+            pc.wf_ocs = Some(wexp);
         }
+        // the fp32 source of every quantized weight changed shape
+        self.wq_cache.lock().unwrap().clear();
     }
 
-    /// Re-quantize all conv weights natively at `wbits` (default path
-    /// uses the artifact-exported 8-bit codes).
+    /// Re-quantize every conv's *prepared* weights natively at `wbits`
+    /// (the default path uses the artifact-exported 8-bit codes). With
+    /// OCS active, the expanded weights are re-quantized. Per-enc-point
+    /// widths are expressed through [`LayerQuant::wbits`] instead, which
+    /// leaves the prepared weights untouched.
     pub fn requantize_weights(&mut self, wbits: u32) {
         for pc in self.convs.values_mut() {
-            if pc.quant && pc.gather.is_none() {
-                let qw = quantize_weights_mmse(&pc.wf, wbits);
+            if pc.quant {
+                let wf = pc.wf_ocs.as_ref().unwrap_or(&pc.wf);
+                let qw = quantize_weights_mmse(wf, wbits);
                 pc.wroll = Some(overq::dotprod::roll_weights(&qw.codes));
                 pc.qw = Some(qw);
             }
+        }
+    }
+
+    /// Weights for one quantized conv at an explicit bitwidth, quantized
+    /// from the fp32 (OCS-expanded, when active) weights and cached.
+    fn prepared_weights(&self, id: usize, pc: &PConv, wbits: u32) -> Result<Arc<PreparedW>> {
+        anyhow::ensure!(
+            (2..=8).contains(&wbits),
+            "weight bitwidth {wbits} outside the supported 2..=8 range"
+        );
+        let mut cache = self.wq_cache.lock().unwrap();
+        if let Some(p) = cache.get(&(id, wbits)) {
+            return Ok(p.clone());
+        }
+        let wf = pc.wf_ocs.as_ref().unwrap_or(&pc.wf);
+        let qw = quantize_weights_mmse(wf, wbits);
+        let wroll = overq::dotprod::roll_weights(&qw.codes);
+        let p = Arc::new(PreparedW { qw, wroll });
+        cache.insert((id, wbits), p.clone());
+        Ok(p)
+    }
+
+    /// Effective input-channel count of a conv node after OCS expansion
+    /// (`None` for non-conv nodes). Lets the policy profiler account
+    /// MACs — and hence the area-time budget — on the channels the
+    /// hardware actually sees.
+    pub fn conv_in_channels(&self, node_id: usize) -> Option<usize> {
+        let pc = self.convs.get(&node_id)?;
+        Some(pc.gather.as_ref().map(|g| g.len()).unwrap_or(pc.cin))
+    }
+
+    /// Crude relative MSE of quantizing the convs that read enc point
+    /// `enc` at `wbits` (per-column uniform step, MAC-weighted across
+    /// consuming convs): the weight-side term of the policy engine's
+    /// error proxy. Returns 0 when nothing consumes the point.
+    pub fn weight_quant_rel_mse(&self, enc: usize, wbits: u32) -> f64 {
+        let qmax = ((1i64 << (wbits.max(2) - 1)) - 1) as f64;
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for node in &self.graph.nodes {
+            let Op::Conv { quant: true, enc: Some(e), .. } = &node.op else {
+                continue;
+            };
+            if *e != enc {
+                continue;
+            }
+            let pc = &self.convs[&node.id];
+            let wf = pc.wf_ocs.as_ref().unwrap_or(&pc.wf);
+            let (k, n) = (wf.dims()[0], wf.dims()[1]);
+            let (mut mse, mut msq) = (0.0f64, 0.0f64);
+            for j in 0..n {
+                let mut amax = 0f32;
+                let mut col_sq = 0.0f64;
+                for i in 0..k {
+                    let w = wf.data[i * n + j];
+                    amax = amax.max(w.abs());
+                    col_sq += (w as f64) * (w as f64);
+                }
+                let step = amax as f64 / qmax;
+                mse += step * step / 12.0 * k as f64;
+                msq += col_sq;
+            }
+            let weight = (k * n) as f64; // MAC share ∝ weight count
+            num += weight * (mse / msq.max(1e-30));
+            den += weight;
+        }
+        if den > 0.0 {
+            num / den
+        } else {
+            0.0
         }
     }
 
@@ -354,8 +462,18 @@ impl Engine {
                         (cc, sc, oh, ow, pc.kh * pc.kw * pc.cin)
                     };
                     let m = n * oh * ow;
-                    let qw = pc.qw.as_ref().context("quant conv missing qweights")?;
-                    let wroll = pc.wroll.as_ref().unwrap();
+                    let prepared = if lq.wbits != WBITS_DEFAULT {
+                        Some(self.prepared_weights(node.id, pc, lq.wbits)?)
+                    } else {
+                        None
+                    };
+                    let (qw, wroll) = match &prepared {
+                        Some(p) => (&p.qw, &p.wroll),
+                        None => (
+                            pc.qw.as_ref().context("quant conv missing qweights")?,
+                            pc.wroll.as_ref().unwrap(),
+                        ),
+                    };
                     anyhow::ensure!(qw.codes.dims()[0] == kdim, "n{} K mismatch", node.id);
                     let mut acc = TensorI::zeros(&[m, pc.cout]);
                     overq::dotprod::gemm_overq(
@@ -728,10 +846,12 @@ mod tests {
                 LayerQuant {
                     overq: OverQConfig::baseline(8),
                     scale: s0 / 255.0,
+                    wbits: 0,
                 },
                 LayerQuant {
                     overq: OverQConfig::baseline(4),
                     scale: s1 / 15.0,
+                    wbits: 0,
                 },
             ],
         };
@@ -749,10 +869,12 @@ mod tests {
                 LayerQuant {
                     overq: OverQConfig::baseline(4),
                     scale: s0 / 15.0,
+                    wbits: 0,
                 },
                 LayerQuant {
                     overq: OverQConfig::baseline(4),
                     scale: s1 / 15.0,
+                    wbits: 0,
                 },
             ],
         };
@@ -761,6 +883,71 @@ mod tests {
             out4.data,
             "uniform() diverged from explicit per-layer construction"
         );
+    }
+
+    #[test]
+    fn per_layer_weight_bits() {
+        let e = toy_engine(true);
+        let x = rand_input(8, 2);
+        let (_, taps) = e.forward_f32(&x, &[1]).unwrap();
+        let scale = taps[0].max_abs() / 63.0;
+        let mk = |wbits: u32| QuantConfig {
+            layers: vec![LayerQuant {
+                overq: OverQConfig::baseline(6),
+                scale,
+                wbits,
+            }],
+        };
+        // the toy engine has no artifact codes, so its prepared weights
+        // ARE quantize_weights_mmse(wf, 8): the default path and an
+        // explicit wbits=8 must agree bit-for-bit
+        let d0 = e.forward_quant(&x, &mk(WBITS_DEFAULT)).unwrap();
+        let d8 = e.forward_quant(&x, &mk(8)).unwrap();
+        assert_eq!(d0.data, d8.data);
+        // narrower weights actually requantize (outputs change), and the
+        // cached second run is bit-identical to the first
+        let d3 = e.forward_quant(&x, &mk(3)).unwrap();
+        assert_ne!(d3.data, d8.data);
+        assert!(d3.data.iter().all(|v| v.is_finite()));
+        assert_eq!(e.forward_quant(&x, &mk(3)).unwrap().data, d3.data);
+        // out-of-range widths fail with an error, not a bad kernel
+        assert!(e.forward_quant(&x, &mk(1)).is_err());
+        assert!(e.forward_quant(&x, &mk(9)).is_err());
+    }
+
+    #[test]
+    fn weight_bits_follow_ocs_expansion() {
+        let mut e = toy_engine(true);
+        let x = rand_input(9, 2);
+        let (_, taps) = e.forward_f32(&x, &[1]).unwrap();
+        let scale = taps[0].max_abs() / 15.0;
+        e.apply_ocs(0.25);
+        // explicit wbits requantizes the OCS-expanded weights — kdim
+        // must match the gathered channel count, not the original cin
+        let qc = QuantConfig {
+            layers: vec![LayerQuant {
+                overq: OverQConfig::baseline(4),
+                scale,
+                wbits: 6,
+            }],
+        };
+        let out = e.forward_quant(&x, &qc).unwrap();
+        assert!(out.data.iter().all(|v| v.is_finite()));
+        // cin 4 at ratio 0.25 → one split channel → 5 effective channels
+        assert_eq!(e.conv_in_channels(2), Some(5));
+        assert_eq!(e.conv_in_channels(1), Some(3)); // non-quant conv: unsplit
+        assert_eq!(e.conv_in_channels(3), None); // gap node
+    }
+
+    #[test]
+    fn weight_rel_mse_orders_by_bits() {
+        let e = toy_engine(true);
+        let m4 = e.weight_quant_rel_mse(0, 4);
+        let m8 = e.weight_quant_rel_mse(0, 8);
+        assert!(m4 > m8, "{m4} vs {m8}");
+        assert!(m8 > 0.0);
+        // nothing consumes enc 7 → no weight-side error term
+        assert_eq!(e.weight_quant_rel_mse(7, 4), 0.0);
     }
 
     #[test]

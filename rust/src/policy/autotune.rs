@@ -1,25 +1,42 @@
-//! Coverage-driven greedy Pareto search over per-layer OverQ configs.
+//! Two-stage autotuner: proxy-scored greedy Pareto search, then
+//! measured-accuracy refinement.
 //!
-//! For every enc point the tuner scores each candidate config with a
-//! fast analytic proxy — Eq. (1) `theory_coverage` for the outlier term
-//! plus uniform-quantizer rounding error — and keeps the per-layer
+//! **Stage 1 (proxy).** For every enc point the tuner scores each
+//! candidate (OverQ config × weight bitwidth) with a fast analytic
+//! proxy — Eq. (1) `theory_coverage` for the outlier term, uniform-
+//! quantizer rounding error for the in-range term, and a crude
+//! weight-quantization term ([`crate::nn::Engine::weight_quant_rel_mse`]
+//! converted into equivalent activation MSE) — and keeps the per-layer
 //! Pareto frontier over (PE area, predicted error). A global greedy pass
-//! then walks the frontiers, spending an area budget where it buys the
+//! walks the frontiers, spending an area budget where it buys the
 //! largest error reduction per µm², with cost weighted by each layer's
 //! MAC share (the PE array is shared temporally, so the deployment cost
-//! of a layer's config is area × occupancy). Final choices are validated
-//! with *measured* coverage (`overq::coverage_stats`) on the profiling
-//! taps, which is what lands in the emitted [`DeploymentPlan`].
+//! of a layer's config is area × occupancy).
+//!
+//! **Stage 2 (refinement, [`autotune_measured`]).** The proxy cannot see
+//! everything — in particular, weight-side effects and clipping
+//! interactions only show up in task accuracy (OCS/PACT make the same
+//! observation). So the greedy upgrade path is snapshotted into a small
+//! frontier of budget-feasible candidate plans, the top-K are re-scored
+//! with `Engine::accuracy_quant` on a held-out probe split, and the plan
+//! with the best *measured* accuracy wins. The proxy-only plan is always
+//! in the candidate set, so refinement can only match or improve it.
+//! Final choices are validated with measured coverage
+//! (`overq::coverage_stats`) on the profiling taps, which is what lands
+//! in the emitted [`DeploymentPlan`] together with [`ProbeEvidence`].
 
-use anyhow::Result;
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
 
 use crate::models::zoo::LoadedModel;
+use crate::nn::{LayerQuant, QuantConfig, WBITS_DEFAULT};
 use crate::overq::{coverage_stats, theory_coverage, OverQConfig};
 use crate::quant::clip::ClipMethod;
 use crate::tensor::TensorF;
 
-use super::candidates::{pe_area, CandidateSpace};
-use super::plan::{DeploymentPlan, PlanLayer};
+use super::candidates::{effective_wbits, pe_area_w, CandidateSpace};
+use super::plan::{DeploymentPlan, PlanLayer, ProbeEvidence};
 use super::profile::{profile_enc_points, EncPointProfile};
 
 /// Autotuner knobs.
@@ -38,6 +55,9 @@ pub struct AutotuneConfig {
     pub max_samples: usize,
     /// Plan name to emit (defaults to `<model>-auto`).
     pub plan_name: Option<String>,
+    /// How many frontier plans the accuracy-refinement stage re-scores
+    /// on the probe split ([`autotune_measured`] only).
+    pub topk: usize,
 }
 
 impl Default for AutotuneConfig {
@@ -49,19 +69,65 @@ impl Default for AutotuneConfig {
             budget_area: None,
             max_samples: 4096,
             plan_name: None,
+            topk: 4,
         }
+    }
+}
+
+/// A held-out labeled split for the accuracy-refinement stage. Must be
+/// disjoint from the profiling images, or the measured ranking just
+/// refits the profiling noise.
+#[derive(Clone, Debug)]
+pub struct ProbeSplit {
+    /// (N, H, W, C) probe images.
+    pub images: TensorF,
+    /// One label per probe image.
+    pub labels: Vec<i32>,
+}
+
+impl ProbeSplit {
+    /// Validate and wrap a probe split; empty splits and label/image
+    /// mismatches are errors here, not panics deep in the accuracy loop.
+    pub fn new(images: TensorF, labels: Vec<i32>) -> Result<ProbeSplit> {
+        let n = images.dims().first().copied().unwrap_or(0);
+        anyhow::ensure!(
+            n > 0,
+            "probe split is empty — the refinement stage needs at least \
+             one labeled probe image (--probe)"
+        );
+        anyhow::ensure!(
+            labels.len() >= n,
+            "probe split has {n} images but only {} labels",
+            labels.len()
+        );
+        Ok(ProbeSplit { images, labels })
+    }
+
+    /// Number of probe images.
+    pub fn len(&self) -> usize {
+        self.images.dims()[0]
+    }
+
+    /// False for any split built by [`ProbeSplit::new`], which rejects
+    /// empty ones; present for the `len`/`is_empty` API convention.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
 /// One scored candidate at one enc point.
 #[derive(Clone, Copy, Debug)]
 pub struct ScoredCandidate {
+    /// The OverQ mode being scored.
     pub cfg: OverQConfig,
+    /// Weight bitwidth ([`WBITS_DEFAULT`] = prepared 8-bit weights).
+    pub wbits: u32,
     /// Activation scale (clip / qmax at `cfg.bits`).
     pub scale: f32,
-    /// PE area (µm²) from the Table-3 model.
+    /// PE area (µm²) from the Table-3 model at `wbits`.
     pub area: f64,
-    /// Predicted mean squared activation error on the profile samples.
+    /// Predicted mean squared activation error on the profile samples
+    /// (plus the equivalent-activation weight-quantization term).
     pub pred_err: f64,
     /// Eq. (1) coverage (0 when RO is off).
     pub theory_cov: f64,
@@ -72,7 +138,9 @@ pub struct ScoredCandidate {
 /// The tuner's decision for one enc point.
 #[derive(Clone, Debug)]
 pub struct LayerChoice {
+    /// Enc-point id.
     pub enc: usize,
+    /// The winning candidate at this enc point.
     pub chosen: ScoredCandidate,
     /// The global baseline config scored at this layer.
     pub baseline: ScoredCandidate,
@@ -80,19 +148,68 @@ pub struct LayerChoice {
     pub measured_cov: f64,
     /// Measured coverage of the baseline config on the profiling tap.
     pub baseline_measured_cov: f64,
+    /// Exact-zero fraction of the profiling tap.
     pub p0: f64,
+    /// MACs per image through this enc point (cost weight).
     pub macs: u64,
 }
 
 /// Full autotune output: per-layer choices + the emitted plan.
 #[derive(Clone, Debug)]
 pub struct AutotuneResult {
+    /// Per-enc-point decisions, in enc order.
     pub layers: Vec<LayerChoice>,
     /// MAC-weighted mean PE area of the plan.
     pub total_area: f64,
     /// MAC-weighted mean PE area of the global baseline.
     pub baseline_area: f64,
+    /// The emitted deployment plan.
     pub plan: DeploymentPlan,
+}
+
+/// One candidate plan scored by the refinement stage.
+#[derive(Clone, Debug)]
+pub struct RefinedCandidate {
+    /// The candidate's deployment plan.
+    pub plan: DeploymentPlan,
+    /// MAC-weighted mean predicted error (the stage-1 ranking score).
+    pub proxy_err: f64,
+    /// Measured top-1 accuracy on the probe split.
+    pub measured_acc: f64,
+    /// Which greedy upgrade step this plan snapshots (0 = min-area).
+    pub greedy_step: usize,
+}
+
+/// Output of the two-stage tuner ([`autotune_measured`]).
+#[derive(Clone, Debug)]
+pub struct MeasuredAutotune {
+    /// The winning plan (probe evidence attached), as an
+    /// [`AutotuneResult`] so proxy-only consumers work unchanged.
+    pub result: AutotuneResult,
+    /// Every refined candidate, best proxy score first; `candidates[0]`
+    /// is always the stage-1 (proxy-only) plan.
+    pub candidates: Vec<RefinedCandidate>,
+    /// Index of the winner in `candidates`.
+    pub chosen: usize,
+    /// Measured accuracy of the proxy-only plan (`candidates[0]`).
+    pub proxy_acc: f64,
+    /// Measured accuracy of the global-baseline control config.
+    pub baseline_acc: f64,
+    /// Spearman agreement between the proxy ranking and the measured
+    /// ranking over the candidates (1 = proxy ordered them perfectly).
+    pub rank_agreement: f64,
+    /// Probe-split size used for refinement.
+    pub probe_images: usize,
+}
+
+/// Score one candidate on one enc point's samples at the default
+/// weight bitwidth with no weight-error term (the PR-2 behavior).
+pub fn score_candidate(
+    prof: &EncPointProfile,
+    cfg: &OverQConfig,
+    clip: ClipMethod,
+) -> ScoredCandidate {
+    score_candidate_w(prof, cfg, clip, WBITS_DEFAULT, 0.0)
 }
 
 /// Score one candidate on one enc point's samples.
@@ -104,10 +221,16 @@ pub struct AutotuneResult {
 /// * outlier             → covered (prob. Eq. 1, RO only): rounding at
 ///                         step s in the widened range, clamped at B²-1;
 ///                         uncovered: clamp error against qmax·s
-pub fn score_candidate(
+///
+/// `weight_mse` is the equivalent-activation MSE of quantizing the
+/// consuming convs' weights at `wbits` (a per-sample constant), so
+/// plans that narrow the weight datapath pay for it in the proxy.
+pub fn score_candidate_w(
     prof: &EncPointProfile,
     cfg: &OverQConfig,
     clip: ClipMethod,
+    wbits: u32,
+    weight_mse: f64,
 ) -> ScoredCandidate {
     let qmax = cfg.qmax() as f32;
     let clip_v = clip.clip(&prof.samples, prof.stats, cfg.bits).max(1e-6);
@@ -146,15 +269,17 @@ pub fn score_candidate(
     let n = prof.samples.len().max(1) as f64;
     ScoredCandidate {
         cfg: *cfg,
+        wbits,
         scale,
-        area: pe_area(cfg),
-        pred_err: err / n,
+        area: pe_area_w(cfg, wbits),
+        pred_err: err / n + weight_mse,
         theory_cov: cov,
         outlier_rate: outliers as f64 / n,
     }
 }
 
-/// Per-layer Pareto frontier over (area ↑, pred_err ↓), keeping only
+/// Per-layer Pareto frontier over (area ↑, pred_err ↓) across the full
+/// (OverQ config × weight bitwidth) cross product, keeping only
 /// candidates whose coverage cannot fall below the baseline's: either
 /// they provably produce no outliers on the whole tap (the profiled max
 /// rounds inside the code range), or RO is on with theory coverage ≥
@@ -164,17 +289,18 @@ fn frontier(
     space: &CandidateSpace,
     clip: ClipMethod,
     baseline: &ScoredCandidate,
+    wterm: &[(u32, f64)],
 ) -> Vec<ScoredCandidate> {
-    let mut scored: Vec<ScoredCandidate> = space
-        .enumerate()
-        .iter()
-        .map(|c| score_candidate(prof, c, clip))
-        .filter(|s| {
-            let outlier_free =
-                prof.stats.max < (s.cfg.qmax() as f32 + 0.5) * s.scale;
-            outlier_free || s.theory_cov >= baseline.theory_cov - 1e-12
-        })
-        .collect();
+    let mut scored: Vec<ScoredCandidate> = Vec::new();
+    for c in space.enumerate() {
+        for &(w, mse) in wterm {
+            let s = score_candidate_w(prof, &c, clip, w, mse);
+            let outlier_free = prof.stats.max < (s.cfg.qmax() as f32 + 0.5) * s.scale;
+            if outlier_free || s.theory_cov >= baseline.theory_cov - 1e-12 {
+                scored.push(s);
+            }
+        }
+    }
     // the baseline itself is always admissible, so the frontier (and the
     // min-area start point) can never exceed the baseline's area
     scored.push(*baseline);
@@ -195,33 +321,103 @@ fn frontier(
     front
 }
 
-/// Run the autotuner: profile, search, measure, emit a plan.
-pub fn autotune(
+/// Stage-1 state: profiles, per-layer frontiers, baseline scores and
+/// the budget, shared by plan emission for every greedy snapshot.
+struct SearchState {
+    profiles: Vec<EncPointProfile>,
+    baselines: Vec<ScoredCandidate>,
+    fronts: Vec<Vec<ScoredCandidate>>,
+    /// MAC share per layer (the area-time cost weight).
+    weight: Vec<f64>,
+    /// Measured coverage of the baseline config per layer — fixed
+    /// across snapshots, so computed once.
+    baseline_cov: Vec<f64>,
+    baseline_area: f64,
+    budget: f64,
+}
+
+/// Memo of measured coverage per (layer, frontier index), so emitting
+/// several greedy snapshots never re-scans a tap for the same choice.
+type CovCache = HashMap<(usize, usize), f64>;
+
+/// Profile the model, build frontiers and run the greedy budget walk.
+/// Returns the state plus the full upgrade history: `history[s]` is the
+/// per-layer frontier index vector after `s` greedy upgrades (so
+/// `history.last()` is the proxy-optimal plan at the budget).
+fn search(
     model: &LoadedModel,
     images: &TensorF,
     cfg: &AutotuneConfig,
-) -> Result<AutotuneResult> {
+) -> Result<(SearchState, Vec<Vec<usize>>)> {
     let profiles = profile_enc_points(model, images, cfg.max_samples)?;
-    anyhow::ensure!(!profiles.is_empty(), "model has no enc points to tune");
+    anyhow::ensure!(
+        !profiles.is_empty(),
+        "model {:?} has no enc points to tune (no quantized convs)",
+        model.name
+    );
 
     let total_macs: f64 = profiles.iter().map(|p| p.macs as f64).sum();
-    let weight = |p: &EncPointProfile| p.macs as f64 / total_macs;
+    let weight: Vec<f64> = profiles
+        .iter()
+        .map(|p| p.macs as f64 / total_macs)
+        .collect();
 
-    // score baselines + build frontiers
+    // equivalent-activation weight-error terms per (enc, effective width)
+    let wlist = cfg.space.weight_bits_or_default();
+    for &w in &wlist {
+        // match the engine's servable range up front, so the tuner can
+        // never emit a plan that fails on every `plan:` request
+        anyhow::ensure!(
+            w == WBITS_DEFAULT || (2..=8).contains(&w),
+            "weight bitwidth {w} in the candidate space is outside the \
+             engine's supported range (0 = default, or 2..=8)"
+        );
+    }
+    let mean_sq: Vec<f64> = profiles
+        .iter()
+        .map(|p| {
+            let n = p.samples.len().max(1) as f64;
+            p.samples.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / n
+        })
+        .collect();
+    let wterm_at = |enc: usize, w: u32| -> f64 {
+        mean_sq[enc] * model.engine.weight_quant_rel_mse(enc, effective_wbits(w))
+    };
+
+    // score baselines (default weights, at their own weight term so the
+    // comparison against explicit-W8 candidates is apples-to-apples)
     let baselines: Vec<ScoredCandidate> = profiles
         .iter()
-        .map(|p| score_candidate(p, &cfg.baseline, cfg.clip))
+        .enumerate()
+        .map(|(i, p)| {
+            score_candidate_w(
+                p,
+                &cfg.baseline,
+                cfg.clip,
+                WBITS_DEFAULT,
+                wterm_at(i, WBITS_DEFAULT),
+            )
+        })
         .collect();
     let fronts: Vec<Vec<ScoredCandidate>> = profiles
         .iter()
-        .zip(&baselines)
-        .map(|(p, b)| frontier(p, &cfg.space, cfg.clip, b))
+        .enumerate()
+        .map(|(i, p)| {
+            let wterm: Vec<(u32, f64)> =
+                wlist.iter().map(|&w| (w, wterm_at(i, w))).collect();
+            frontier(p, &cfg.space, cfg.clip, &baselines[i], &wterm)
+        })
         .collect();
 
-    let baseline_area: f64 = profiles
+    let baseline_cov: Vec<f64> = profiles
         .iter()
         .zip(&baselines)
-        .map(|(p, b)| weight(p) * b.area)
+        .map(|(p, b)| coverage_stats(&p.tap, b.scale, &cfg.baseline).coverage())
+        .collect();
+    let baseline_area: f64 = baselines
+        .iter()
+        .zip(&weight)
+        .map(|(b, w)| w * b.area)
         .sum();
     let budget = cfg.budget_area.unwrap_or(baseline_area);
 
@@ -230,9 +426,10 @@ pub fn autotune(
     let mut idx = vec![0usize; fronts.len()];
     let mut total_area: f64 = fronts
         .iter()
-        .zip(&profiles)
-        .map(|(f, p)| weight(p) * f[0].area)
+        .zip(&weight)
+        .map(|(f, w)| w * f[0].area)
         .sum();
+    let mut history = vec![idx.clone()];
     loop {
         let mut best: Option<(usize, f64)> = None; // (layer, gain/cost)
         for (l, front) in fronts.iter().enumerate() {
@@ -240,12 +437,11 @@ pub fn autotune(
                 continue;
             }
             let (cur, nxt) = (&front[idx[l]], &front[idx[l] + 1]);
-            let w = weight(&profiles[l]);
-            let d_area = (nxt.area - cur.area) * w;
+            let d_area = (nxt.area - cur.area) * weight[l];
             if total_area + d_area > budget + 1e-9 {
                 continue;
             }
-            let d_err = (cur.pred_err - nxt.pred_err) * w;
+            let d_err = (cur.pred_err - nxt.pred_err) * weight[l];
             // frontier ⇒ d_area > 0 and d_err > 0
             let ratio = d_err / d_area.max(1e-12);
             if best.map(|(_, r)| ratio > r).unwrap_or(true) {
@@ -253,23 +449,67 @@ pub fn autotune(
             }
         }
         let Some((l, _)) = best else { break };
-        let w = weight(&profiles[l]);
-        total_area += (fronts[l][idx[l] + 1].area - fronts[l][idx[l]].area) * w;
+        total_area += (fronts[l][idx[l] + 1].area - fronts[l][idx[l]].area) * weight[l];
         idx[l] += 1;
+        history.push(idx.clone());
     }
 
-    // measure coverage of the final choices (and baseline) on the taps
-    let mut layers = Vec::with_capacity(profiles.len());
-    for (l, p) in profiles.iter().enumerate() {
-        let chosen = fronts[l][idx[l]];
-        let m = coverage_stats(&p.tap, chosen.scale, &chosen.cfg);
-        let mb = coverage_stats(&p.tap, baselines[l].scale, &cfg.baseline);
+    Ok((
+        SearchState {
+            profiles,
+            baselines,
+            fronts,
+            weight,
+            baseline_cov,
+            baseline_area,
+            budget,
+        },
+        history,
+    ))
+}
+
+/// MAC-weighted mean predicted error of one frontier-index state.
+fn proxy_err(st: &SearchState, idx: &[usize]) -> f64 {
+    st.fronts
+        .iter()
+        .zip(idx)
+        .zip(&st.weight)
+        .map(|((f, &i), w)| w * f[i].pred_err)
+        .sum()
+}
+
+/// MAC-weighted mean PE area of one frontier-index state.
+fn state_area(st: &SearchState, idx: &[usize]) -> f64 {
+    st.fronts
+        .iter()
+        .zip(idx)
+        .zip(&st.weight)
+        .map(|((f, &i), w)| w * f[i].area)
+        .sum()
+}
+
+/// Measure coverage of one frontier-index state on the profiling taps
+/// (memoized per choice in `cov`) and emit the per-layer choices +
+/// deployment plan.
+fn emit_plan(
+    st: &SearchState,
+    idx: &[usize],
+    name: &str,
+    model_name: &str,
+    cov: &mut CovCache,
+) -> (Vec<LayerChoice>, DeploymentPlan) {
+    let mut layers = Vec::with_capacity(st.profiles.len());
+    for (l, p) in st.profiles.iter().enumerate() {
+        let chosen = st.fronts[l][idx[l]];
+        let measured_cov = *cov
+            .entry((l, idx[l]))
+            .or_insert_with(|| coverage_stats(&p.tap, chosen.scale, &chosen.cfg).coverage());
         layers.push(LayerChoice {
             enc: p.enc,
             chosen,
-            baseline: baselines[l],
-            measured_cov: m.coverage(),
-            baseline_measured_cov: mb.coverage(),
+            baseline: st.baselines[l],
+            measured_cov,
+            baseline_measured_cov: st.baseline_cov[l],
             p0: p.p0,
             macs: p.macs,
         });
@@ -285,19 +525,16 @@ pub fn autotune(
     }
     let baseline_coverage = if den > 0.0 { num / den } else { 1.0 };
 
-    let name = cfg
-        .plan_name
-        .clone()
-        .unwrap_or_else(|| format!("{}-auto", model.name));
     let plan = DeploymentPlan::from_layers(
-        &name,
-        &model.name,
+        name,
+        model_name,
         layers
             .iter()
             .map(|lc| PlanLayer {
                 enc: lc.enc,
                 overq: lc.chosen.cfg,
                 scale: lc.chosen.scale,
+                wbits: lc.chosen.wbits,
                 p0: lc.p0,
                 outlier_rate: lc.chosen.outlier_rate,
                 theory_coverage: lc.chosen.theory_cov,
@@ -306,13 +543,216 @@ pub fn autotune(
                 macs: lc.macs,
             })
             .collect(),
-        baseline_area,
+        st.baseline_area,
         baseline_coverage,
     );
+    (layers, plan)
+}
+
+/// Run the proxy-only autotuner: profile, search, measure, emit a plan.
+/// This is stage 1 of the pipeline; [`autotune_measured`] adds the
+/// accuracy-refinement stage on a probe split.
+pub fn autotune(
+    model: &LoadedModel,
+    images: &TensorF,
+    cfg: &AutotuneConfig,
+) -> Result<AutotuneResult> {
+    let (st, history) = search(model, images, cfg)?;
+    let idx = history.last().unwrap();
+    let name = cfg
+        .plan_name
+        .clone()
+        .unwrap_or_else(|| format!("{}-auto", model.name));
+    let (layers, plan) = emit_plan(&st, idx, &name, &model.name, &mut CovCache::new());
     Ok(AutotuneResult {
         layers,
-        total_area,
-        baseline_area,
+        total_area: state_area(&st, idx),
+        baseline_area: st.baseline_area,
         plan,
     })
+}
+
+/// Run the full two-stage autotuner: stage-1 greedy search, then
+/// re-score the top-K snapshot plans of the greedy upgrade path with
+/// measured accuracy on `probe` and return the best measured plan
+/// (never worse on the probe than the proxy-only plan, which is always
+/// candidate 0).
+pub fn autotune_measured(
+    model: &LoadedModel,
+    images: &TensorF,
+    probe: &ProbeSplit,
+    cfg: &AutotuneConfig,
+) -> Result<MeasuredAutotune> {
+    let (st, history) = search(model, images, cfg)?;
+    let steps = history.len() - 1;
+    let name = cfg
+        .plan_name
+        .clone()
+        .unwrap_or_else(|| format!("{}-auto", model.name));
+
+    // snapshot picks along the greedy path: the proxy-optimal endpoint
+    // first, then evenly spaced back to the halfway state — cheaper
+    // plans the proxy liked less, for the measured ranking to arbitrate
+    let k = cfg.topk.max(1);
+    let mut picks: Vec<usize> = vec![steps];
+    if k > 1 && steps > 0 {
+        let lo = steps / 2;
+        for j in 1..k {
+            picks.push(steps - (steps - lo) * j / (k - 1));
+        }
+    }
+    picks.dedup();
+
+    let batch = probe.len().clamp(1, 64);
+    let mut candidates: Vec<RefinedCandidate> = Vec::with_capacity(picks.len());
+    let mut cand_layers: Vec<Vec<LayerChoice>> = Vec::with_capacity(picks.len());
+    let mut cov = CovCache::new(); // snapshots share most choices
+    for &s in &picks {
+        let cand_name = if s == steps {
+            name.clone()
+        } else {
+            format!("{name}-g{s}")
+        };
+        let (layers, plan) =
+            emit_plan(&st, &history[s], &cand_name, &model.name, &mut cov);
+        let acc = model
+            .engine
+            .accuracy_quant(&probe.images, &probe.labels, batch, &plan.to_quant_config())
+            .with_context(|| format!("probe accuracy of candidate {cand_name:?}"))?;
+        candidates.push(RefinedCandidate {
+            plan,
+            proxy_err: proxy_err(&st, &history[s]),
+            measured_acc: acc,
+            greedy_step: s,
+        });
+        cand_layers.push(layers);
+    }
+
+    // the control arm: every layer pinned to the global baseline config
+    let baseline_qc = QuantConfig {
+        layers: st
+            .baselines
+            .iter()
+            .map(|b| LayerQuant {
+                overq: b.cfg,
+                scale: b.scale,
+                wbits: WBITS_DEFAULT,
+            })
+            .collect(),
+    };
+    let baseline_acc = model
+        .engine
+        .accuracy_quant(&probe.images, &probe.labels, batch, &baseline_qc)
+        .context("probe accuracy of the baseline config")?;
+
+    // pick the budget-feasible plan with the best measured accuracy;
+    // ties break toward lower area, then lower proxy error. Starting
+    // from candidates[0] (the proxy-only plan) guarantees the winner's
+    // measured accuracy is ≥ the proxy-only plan's.
+    let mut chosen = 0usize;
+    for (i, c) in candidates.iter().enumerate().skip(1) {
+        if c.plan.total_area > st.budget + 1e-9 {
+            continue;
+        }
+        let best = &candidates[chosen];
+        let better = c.measured_acc > best.measured_acc + 1e-12
+            || ((c.measured_acc - best.measured_acc).abs() <= 1e-12
+                && (c.plan.total_area < best.plan.total_area - 1e-9
+                    || ((c.plan.total_area - best.plan.total_area).abs() <= 1e-9
+                        && c.proxy_err < best.proxy_err)));
+        if better {
+            chosen = i;
+        }
+    }
+
+    let proxy_acc = candidates[0].measured_acc;
+    let errs: Vec<f64> = candidates.iter().map(|c| c.proxy_err).collect();
+    let neg_accs: Vec<f64> = candidates.iter().map(|c| -c.measured_acc).collect();
+    let rank_agreement = spearman(&errs, &neg_accs);
+
+    // the winner was already emitted and measured above: rename it to
+    // the final plan name and attach the probe evidence (no second
+    // coverage pass over the taps)
+    let win_step = candidates[chosen].greedy_step;
+    let mut plan = candidates[chosen].plan.clone();
+    plan.name = name;
+    plan.probe = Some(ProbeEvidence {
+        images: probe.len(),
+        accuracy: candidates[chosen].measured_acc,
+        baseline_accuracy: baseline_acc,
+    });
+    let result = AutotuneResult {
+        layers: cand_layers[chosen].clone(),
+        total_area: state_area(&st, &history[win_step]),
+        baseline_area: st.baseline_area,
+        plan,
+    };
+    Ok(MeasuredAutotune {
+        result,
+        candidates,
+        chosen,
+        proxy_acc,
+        baseline_acc,
+        rank_agreement,
+        probe_images: probe.len(),
+    })
+}
+
+/// Spearman rank correlation (average ranks for ties); 1.0 for inputs
+/// too short or too degenerate to disagree. Used to report how well the
+/// stage-1 proxy ranking agreed with the measured-accuracy ranking.
+pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "spearman needs paired samples");
+    if a.len() < 2 {
+        return 1.0;
+    }
+    let (ra, rb) = (ranks(a), ranks(b));
+    let n = ra.len() as f64;
+    let mean = (n + 1.0) / 2.0;
+    let (mut num, mut da, mut db) = (0.0f64, 0.0f64, 0.0f64);
+    for (x, y) in ra.iter().zip(&rb) {
+        num += (x - mean) * (y - mean);
+        da += (x - mean) * (x - mean);
+        db += (y - mean) * (y - mean);
+    }
+    let den = (da * db).sqrt();
+    if den <= 0.0 {
+        1.0 // all-tied on one side: nothing to disagree about
+    } else {
+        num / den
+    }
+}
+
+/// Average ranks (1-based) with ties shared.
+fn ranks(x: &[f64]) -> Vec<f64> {
+    let mut order: Vec<usize> = (0..x.len()).collect();
+    order.sort_by(|&i, &j| x[i].partial_cmp(&x[j]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut r = vec![0.0; x.len()];
+    let mut i = 0;
+    while i < order.len() {
+        let mut j = i + 1;
+        while j < order.len() && x[order[j]] == x[order[i]] {
+            j += 1;
+        }
+        let avg = (i + j - 1) as f64 / 2.0 + 1.0;
+        for &k in &order[i..j] {
+            r[k] = avg;
+        }
+        i = j;
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spearman_basics() {
+        assert!((spearman(&[1.0, 2.0, 3.0], &[10.0, 20.0, 30.0]) - 1.0).abs() < 1e-12);
+        assert!((spearman(&[1.0, 2.0, 3.0], &[3.0, 2.0, 1.0]) + 1.0).abs() < 1e-12);
+        // ties get average ranks; a single pair is trivially "agreed"
+        assert_eq!(spearman(&[1.0], &[2.0]), 1.0);
+        assert_eq!(spearman(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 1.0);
+    }
 }

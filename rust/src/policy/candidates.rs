@@ -6,7 +6,8 @@
 //! overwrite at all — is the baseline/PR-only candidates here, since the
 //! crate encodes adjacent-only RO as `cascade = 1`.
 
-use crate::area::{pe_breakdown, PeVariant};
+use crate::area::{pe_breakdown_w, PeVariant};
+use crate::nn::WBITS_DEFAULT;
 use crate::overq::OverQConfig;
 
 /// Search space knobs for the autotuner.
@@ -16,6 +17,12 @@ pub struct CandidateSpace {
     pub bits: Vec<u32>,
     /// Cascade factors for RO/full candidates (1 = adjacent-only).
     pub cascades: Vec<usize>,
+    /// Weight bitwidths to consider per layer. [`WBITS_DEFAULT`] (0)
+    /// means the engine's prepared 8-bit weights — the only entry by
+    /// default, which keeps the proxy-only search weight-blind like the
+    /// paper's. Adding explicit widths (e.g. `[4, 6, 8]`) opens the
+    /// weight side of the area/error frontier.
+    pub weight_bits: Vec<u32>,
     /// Allow range-overwrite candidates.
     pub allow_ro: bool,
     /// Allow precision-overwrite candidates.
@@ -27,6 +34,7 @@ impl Default for CandidateSpace {
         CandidateSpace {
             bits: vec![3, 4, 5, 8],
             cascades: vec![1, 2, 3, 4],
+            weight_bits: vec![WBITS_DEFAULT],
             allow_ro: true,
             allow_pr: true,
         }
@@ -34,6 +42,15 @@ impl Default for CandidateSpace {
 }
 
 impl CandidateSpace {
+    /// The weight-bitwidth axis, normalized: empty means "default only".
+    pub fn weight_bits_or_default(&self) -> Vec<u32> {
+        if self.weight_bits.is_empty() {
+            vec![WBITS_DEFAULT]
+        } else {
+            self.weight_bits.clone()
+        }
+    }
+
     /// Enumerate every candidate configuration in the space.
     pub fn enumerate(&self) -> Vec<OverQConfig> {
         let mut out = Vec::new();
@@ -72,9 +89,26 @@ pub fn pe_variant(cfg: &OverQConfig) -> PeVariant {
     }
 }
 
-/// Total PE area (µm²) a config costs, from the Table-3 model.
+/// The weight bitwidth a [`WBITS_DEFAULT`]-or-explicit value resolves
+/// to on hardware (the prepared default weights are 8-bit).
+pub fn effective_wbits(wbits: u32) -> u32 {
+    if wbits == WBITS_DEFAULT {
+        8
+    } else {
+        wbits
+    }
+}
+
+/// Total PE area (µm²) a config costs at the default (8-bit) weight
+/// datapath, from the Table-3 model.
 pub fn pe_area(cfg: &OverQConfig) -> f64 {
-    pe_breakdown(pe_variant(cfg), cfg.bits).total()
+    pe_area_w(cfg, WBITS_DEFAULT)
+}
+
+/// Total PE area (µm²) a config costs at an explicit weight bitwidth
+/// ([`WBITS_DEFAULT`] = the 8-bit prepared-weight datapath).
+pub fn pe_area_w(cfg: &OverQConfig, wbits: u32) -> f64 {
+    pe_breakdown_w(pe_variant(cfg), cfg.bits, effective_wbits(wbits)).total()
 }
 
 #[cfg(test)]
@@ -105,10 +139,28 @@ mod tests {
     }
 
     #[test]
+    fn weight_bits_area_axis() {
+        let cfg = OverQConfig::full(4, 4);
+        // default (0) resolves to the 8-bit datapath
+        assert_eq!(pe_area_w(&cfg, 0), pe_area_w(&cfg, 8));
+        assert_eq!(pe_area(&cfg), pe_area_w(&cfg, 8));
+        // narrower weights shrink the PE monotonically
+        assert!(pe_area_w(&cfg, 4) < pe_area_w(&cfg, 6));
+        assert!(pe_area_w(&cfg, 6) < pe_area_w(&cfg, 8));
+        assert_eq!(effective_wbits(0), 8);
+        assert_eq!(effective_wbits(5), 5);
+        // normalization: empty axis means default-only
+        let mut space = CandidateSpace::default();
+        space.weight_bits.clear();
+        assert_eq!(space.weight_bits_or_default(), vec![WBITS_DEFAULT]);
+    }
+
+    #[test]
     fn restricted_space() {
         let space = CandidateSpace {
             bits: vec![4],
             cascades: vec![1, 2],
+            weight_bits: vec![WBITS_DEFAULT],
             allow_ro: true,
             allow_pr: false,
         };

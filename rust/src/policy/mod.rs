@@ -3,27 +3,36 @@
 //!
 //! The paper applies one global OverQ config to every layer, but §3.2 /
 //! Table 1 show outlier coverage depends strongly on per-layer zero and
-//! outlier statistics. This subsystem chooses the config *per enc point*:
+//! outlier statistics. This subsystem chooses the config *per enc point*
+//! in two stages (see `docs/autotuning.md` for the full walkthrough):
 //!
 //! * [`profile`] — one fp32 forward collects per-enc-point taps, zero
-//!   fraction `p0`, outlier stats and MAC weights.
-//! * [`candidates`] — the search space (bits × cascade × RO/PR) and the
-//!   Table-3 PE-area cost of each config.
-//! * [`autotune`] — scores candidates with an Eq.-(1)-based error proxy,
-//!   keeps per-layer Pareto frontiers over (area, error), and greedily
-//!   spends an area budget where it buys the most error reduction;
-//!   final choices are validated with measured `coverage_stats`.
+//!   fraction `p0`, outlier stats and MAC weights (OCS-expanded channels
+//!   included).
+//! * [`candidates`] — the search space (bits × cascade × RO/PR × weight
+//!   bitwidth) and the Table-3 PE-area cost of each config.
+//! * [`mod@autotune`] — stage 1 scores candidates with an Eq.-(1)-based
+//!   error proxy, keeps per-layer Pareto frontiers over (area, error),
+//!   and greedily spends an area budget where it buys the most error
+//!   reduction; stage 2 ([`autotune_measured`]) re-scores the top-K
+//!   greedy snapshots with measured accuracy on a held-out probe split
+//!   and picks the budget-feasible winner.
 //! * [`plan`] — the serializable [`DeploymentPlan`] artifact: per-layer
-//!   configs + evidence, JSON round-trip, and conversion to the
-//!   engine's per-enc-point [`crate::nn::QuantConfig`]. The serving
-//!   coordinator registers plans as `plan:<name>` variants.
+//!   configs + evidence (now including weight bitwidths and probe
+//!   accuracy), versioned JSON round-trip with backward-compatible v1
+//!   loading, and conversion to the engine's per-enc-point
+//!   [`crate::nn::QuantConfig`]. The serving coordinator registers
+//!   plans as `plan:<name>` variants.
 
 pub mod autotune;
 pub mod candidates;
 pub mod plan;
 pub mod profile;
 
-pub use autotune::{autotune, AutotuneConfig, AutotuneResult, LayerChoice, ScoredCandidate};
-pub use candidates::{pe_area, pe_variant, CandidateSpace};
-pub use plan::{DeploymentPlan, PlanLayer, PLAN_VERSION};
+pub use autotune::{
+    autotune, autotune_measured, spearman, AutotuneConfig, AutotuneResult, LayerChoice,
+    MeasuredAutotune, ProbeSplit, RefinedCandidate, ScoredCandidate,
+};
+pub use candidates::{effective_wbits, pe_area, pe_area_w, pe_variant, CandidateSpace};
+pub use plan::{DeploymentPlan, PlanLayer, ProbeEvidence, PLAN_VERSION};
 pub use profile::{profile_enc_points, EncPointProfile};

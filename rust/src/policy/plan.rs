@@ -12,12 +12,28 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::nn::{LayerQuant, QuantConfig};
+use crate::nn::{LayerQuant, QuantConfig, WBITS_DEFAULT};
 use crate::overq::OverQConfig;
 use crate::util::json::{parse_file, Value};
 
-/// Current plan file format version.
-pub const PLAN_VERSION: u32 = 1;
+/// Current plan file format version. Version 1 (pre-weight-bitwidth)
+/// plans still load: the `wbits` layer field defaults to
+/// [`WBITS_DEFAULT`] and the `probe` evidence block to absent, which
+/// reproduces v1 serving behavior exactly.
+pub const PLAN_VERSION: u32 = 2;
+
+/// Measured-accuracy evidence attached by the refinement stage of the
+/// autotuner (`policy::autotune_measured`): how the plan and the global
+/// baseline scored on the held-out probe split.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ProbeEvidence {
+    /// Probe-split size (images).
+    pub images: usize,
+    /// Measured top-1 accuracy of this plan on the probe split.
+    pub accuracy: f64,
+    /// Measured top-1 accuracy of the global baseline config.
+    pub baseline_accuracy: f64,
+}
 
 /// One enc point's chosen configuration + evidence.
 #[derive(Clone, Debug, PartialEq)]
@@ -28,6 +44,9 @@ pub struct PlanLayer {
     pub overq: OverQConfig,
     /// Activation scale (clip / qmax at `overq.bits`).
     pub scale: f32,
+    /// Weight bitwidth for convs reading this enc point;
+    /// [`WBITS_DEFAULT`] (0) = the engine's prepared 8-bit weights.
+    pub wbits: u32,
     /// Exact-zero fraction measured at profiling time.
     pub p0: f64,
     /// Outlier fraction at the chosen scale.
@@ -45,6 +64,8 @@ pub struct PlanLayer {
 /// A per-layer mixed-precision deployment plan for one model.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DeploymentPlan {
+    /// File-format version this plan was loaded from / will be saved
+    /// as (see [`PLAN_VERSION`]).
     pub version: u32,
     /// Plan name; the serving layer exposes it as variant `plan:<name>`.
     pub name: String,
@@ -60,6 +81,9 @@ pub struct DeploymentPlan {
     pub mean_coverage: f64,
     /// Same metric for the global baseline config.
     pub baseline_coverage: f64,
+    /// Probe-split accuracy evidence, when the accuracy-refinement
+    /// stage ran (absent in proxy-only and v1 plans).
+    pub probe: Option<ProbeEvidence>,
 }
 
 impl DeploymentPlan {
@@ -99,6 +123,7 @@ impl DeploymentPlan {
             baseline_area,
             mean_coverage,
             baseline_coverage,
+            probe: None,
         }
     }
 
@@ -111,11 +136,13 @@ impl DeploymentPlan {
                 .map(|l| LayerQuant {
                     overq: l.overq,
                     scale: l.scale,
+                    wbits: l.wbits,
                 })
                 .collect(),
         }
     }
 
+    /// Serialize to the documented JSON shape (docs/deployment_plan.md).
     pub fn to_json(&self) -> Value {
         let layers: Vec<Value> = self
             .layers
@@ -128,6 +155,7 @@ impl DeploymentPlan {
                     ("ro", Value::Bool(l.overq.range_overwrite)),
                     ("pr", Value::Bool(l.overq.precision_overwrite)),
                     ("scale", Value::Num(l.scale as f64)),
+                    ("wbits", Value::Num(l.wbits as f64)),
                     ("p0", Value::Num(l.p0)),
                     ("outlier_rate", Value::Num(l.outlier_rate)),
                     ("theory_coverage", Value::Num(l.theory_coverage)),
@@ -137,8 +165,11 @@ impl DeploymentPlan {
                 ])
             })
             .collect();
-        obj(&[
-            ("version", Value::Num(self.version as f64)),
+        let mut fields = vec![
+            // always stamp the current version: the serialized shape is
+            // the current schema regardless of what file this plan was
+            // loaded from (a v1-loaded plan re-saves as v2)
+            ("version", Value::Num(PLAN_VERSION as f64)),
             ("name", Value::Str(self.name.clone())),
             ("model", Value::Str(self.model.clone())),
             ("layers", Value::Arr(layers)),
@@ -146,14 +177,27 @@ impl DeploymentPlan {
             ("baseline_area", Value::Num(self.baseline_area)),
             ("mean_coverage", Value::Num(self.mean_coverage)),
             ("baseline_coverage", Value::Num(self.baseline_coverage)),
-        ])
+        ];
+        if let Some(p) = &self.probe {
+            fields.push((
+                "probe",
+                obj(&[
+                    ("images", Value::Num(p.images as f64)),
+                    ("accuracy", Value::Num(p.accuracy)),
+                    ("baseline_accuracy", Value::Num(p.baseline_accuracy)),
+                ]),
+            ));
+        }
+        obj(&fields)
     }
 
+    /// Parse any supported plan version (1..=[`PLAN_VERSION`]); fields
+    /// newer than the file's version get backward-compatible defaults.
     pub fn from_json(v: &Value) -> Result<DeploymentPlan> {
         let version = v.at(&["version"]).as_usize().context("plan version")? as u32;
         anyhow::ensure!(
-            version == PLAN_VERSION,
-            "unsupported plan version {version} (expected {PLAN_VERSION})"
+            (1..=PLAN_VERSION).contains(&version),
+            "unsupported plan version {version} (this build reads 1..={PLAN_VERSION})"
         );
         let mut layers = Vec::new();
         for l in v.at(&["layers"]).as_arr().context("plan layers")? {
@@ -168,6 +212,26 @@ impl DeploymentPlan {
                     precision_overwrite: l.at(&["pr"]).as_bool().context("layer pr")?,
                 },
                 scale: l.at(&["scale"]).as_f64().context("layer scale")? as f32,
+                // absent in v1 plans → the default prepared-weight path;
+                // a *present* value must be a valid width — fail at load
+                // time, not on every serve request
+                wbits: match l.at(&["wbits"]) {
+                    Value::Null => WBITS_DEFAULT,
+                    v => {
+                        let w = v.as_f64().context("layer wbits must be a number")?;
+                        anyhow::ensure!(
+                            w.fract() == 0.0 && w >= 0.0 && w <= 8.0,
+                            "layer wbits {w} is not an integer in 0..=8"
+                        );
+                        let w = w as u32;
+                        anyhow::ensure!(
+                            w == WBITS_DEFAULT || (2..=8).contains(&w),
+                            "layer wbits {w} outside the engine's supported \
+                             range (0 = default, or 2..=8)"
+                        );
+                        w
+                    }
+                },
                 p0: l.at(&["p0"]).as_f64().unwrap_or(0.0),
                 outlier_rate: l.at(&["outlier_rate"]).as_f64().unwrap_or(0.0),
                 theory_coverage: l.at(&["theory_coverage"]).as_f64().unwrap_or(0.0),
@@ -180,6 +244,17 @@ impl DeploymentPlan {
         for (i, l) in layers.iter().enumerate() {
             anyhow::ensure!(l.enc == i, "plan enc points not dense (missing enc {i})");
         }
+        let probe = match v.at(&["probe"]) {
+            Value::Null => None,
+            p => Some(ProbeEvidence {
+                images: p.at(&["images"]).as_usize().context("probe images")?,
+                accuracy: p.at(&["accuracy"]).as_f64().context("probe accuracy")?,
+                baseline_accuracy: p
+                    .at(&["baseline_accuracy"])
+                    .as_f64()
+                    .context("probe baseline_accuracy")?,
+            }),
+        };
         Ok(DeploymentPlan {
             version,
             name: v.at(&["name"]).as_str().context("plan name")?.to_string(),
@@ -189,6 +264,7 @@ impl DeploymentPlan {
             baseline_area: v.at(&["baseline_area"]).as_f64().unwrap_or(0.0),
             mean_coverage: v.at(&["mean_coverage"]).as_f64().unwrap_or(0.0),
             baseline_coverage: v.at(&["baseline_coverage"]).as_f64().unwrap_or(0.0),
+            probe,
         })
     }
 
@@ -202,6 +278,7 @@ impl DeploymentPlan {
             .with_context(|| format!("write {}", path.display()))
     }
 
+    /// Read + parse a `*.plan.json` file ([`DeploymentPlan::from_json`]).
     pub fn load(path: &Path) -> Result<DeploymentPlan> {
         DeploymentPlan::from_json(&parse_file(path)?)
             .with_context(|| format!("parse plan {}", path.display()))
@@ -232,6 +309,7 @@ mod tests {
                     enc: 0,
                     overq: OverQConfig::full(4, 2),
                     scale: 0.031,
+                    wbits: 4,
                     p0: 0.52,
                     outlier_rate: 0.013,
                     theory_coverage: 0.77,
@@ -243,6 +321,7 @@ mod tests {
                     enc: 1,
                     overq: OverQConfig::baseline(8),
                     scale: 0.0011,
+                    wbits: WBITS_DEFAULT,
                     p0: 0.48,
                     outlier_rate: 0.0,
                     theory_coverage: 0.0,
@@ -255,6 +334,11 @@ mod tests {
             baseline_area: 380.0,
             mean_coverage: 0.87,
             baseline_coverage: 0.8,
+            probe: Some(ProbeEvidence {
+                images: 128,
+                accuracy: 0.71,
+                baseline_accuracy: 0.68,
+            }),
         }
     }
 
@@ -297,8 +381,64 @@ mod tests {
         let qc = sample_plan().to_quant_config();
         assert_eq!(qc.num_enc_points(), 2);
         assert_eq!(qc.layers[0].overq.bits, 4);
+        assert_eq!(qc.layers[0].wbits, 4);
         assert_eq!(qc.layers[1].overq.bits, 8);
+        assert_eq!(qc.layers[1].wbits, WBITS_DEFAULT);
         assert!((qc.layers[1].scale - 0.0011).abs() < 1e-9);
+    }
+
+    #[test]
+    fn v1_plans_load_with_default_weight_fields() {
+        // a pre-weight-bitwidth (PR-2 era) plan file: version 1, no
+        // `wbits` layer fields, no `probe` block
+        let v1 = r#"{
+          "version": 1,
+          "name": "legacy",
+          "model": "toy",
+          "layers": [
+            {"enc": 0, "bits": 4, "cascade": 2, "ro": true, "pr": true,
+             "scale": 0.031, "p0": 0.52, "outlier_rate": 0.013,
+             "theory_coverage": 0.77, "measured_coverage": 0.81,
+             "area": 350.25, "macs": 884736},
+            {"enc": 1, "bits": 8, "cascade": 1, "ro": false, "pr": false,
+             "scale": 0.0011, "p0": 0.48, "outlier_rate": 0.0,
+             "theory_coverage": 0.0, "measured_coverage": 1.0,
+             "area": 410.5, "macs": 442368}
+          ],
+          "total_area": 370.3,
+          "baseline_area": 380.0,
+          "mean_coverage": 0.87,
+          "baseline_coverage": 0.8
+        }"#;
+        let plan = DeploymentPlan::from_json(&parse(v1).unwrap()).unwrap();
+        assert_eq!(plan.version, 1);
+        assert!(plan.layers.iter().all(|l| l.wbits == WBITS_DEFAULT));
+        assert_eq!(plan.probe, None);
+        // engine-ready on the default prepared-weight path
+        let qc = plan.to_quant_config();
+        assert!(qc.layers.iter().all(|l| l.wbits == WBITS_DEFAULT));
+        // re-saving stamps the current schema version; everything else
+        // survives without loss
+        let back =
+            DeploymentPlan::from_json(&parse(&plan.to_json().to_json()).unwrap()).unwrap();
+        let mut expect = plan.clone();
+        expect.version = PLAN_VERSION;
+        assert_eq!(back, expect);
+    }
+
+    #[test]
+    fn v2_probe_evidence_roundtrips() {
+        let plan = sample_plan();
+        assert!(plan.probe.is_some());
+        let back = DeploymentPlan::from_json(&parse(&plan.to_json().to_json()).unwrap()).unwrap();
+        assert_eq!(back.probe, plan.probe);
+        // absent probe stays absent
+        let mut bare = sample_plan();
+        bare.probe = None;
+        let text = bare.to_json().to_json();
+        assert!(!text.contains("probe"));
+        let back = DeploymentPlan::from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(back.probe, None);
     }
 
     #[test]
@@ -308,9 +448,40 @@ mod tests {
         let text = plan.to_json().to_json();
         assert!(DeploymentPlan::from_json(&parse(&text).unwrap()).is_err());
 
+        // to_json stamps PLAN_VERSION, so splice a bad version into the
+        // text to exercise the loader's version gate
+        let text = sample_plan()
+            .to_json()
+            .to_json()
+            .replace(&format!("\"version\":{PLAN_VERSION}"), "\"version\":99");
+        assert!(
+            text.contains("\"version\":99"),
+            "version splice missed: {text}"
+        );
+        assert!(DeploymentPlan::from_json(&parse(&text).unwrap()).is_err());
+
+        // unservable weight bitwidths are rejected at load time
         let mut plan = sample_plan();
-        plan.version = 99;
+        plan.layers[0].wbits = 1;
         let text = plan.to_json().to_json();
         assert!(DeploymentPlan::from_json(&parse(&text).unwrap()).is_err());
+        plan.layers[0].wbits = 12;
+        let text = plan.to_json().to_json();
+        assert!(DeploymentPlan::from_json(&parse(&text).unwrap()).is_err());
+
+        // malformed wbits values must fail loudly, not coerce to the
+        // default path (the plan would silently serve other numerics)
+        let good = sample_plan().to_json().to_json();
+        for bad in ["\"wbits\":-4", "\"wbits\":4.5", "\"wbits\":\"4\""] {
+            let text = good.replace("\"wbits\":4", bad);
+            assert!(
+                text.contains(bad),
+                "wbits splice missed for {bad}: {text}"
+            );
+            assert!(
+                DeploymentPlan::from_json(&parse(&text).unwrap()).is_err(),
+                "malformed {bad} was accepted"
+            );
+        }
     }
 }

@@ -43,7 +43,10 @@ pub fn profile_enc_points(
     let srcs = graph.enc_point_sources();
     let (_, taps) = model.engine.forward_f32(images, &srcs)?;
 
-    // MACs per enc point: conv cost at the spatial size of its input tap.
+    // MACs per enc point: conv cost at the spatial size of its input
+    // tap, over the channels the hardware actually sees — OCS channel
+    // splitting expands cin, and that extra occupancy must show up in
+    // the plan's area-time accounting.
     let mut macs = vec![0u64; srcs.len()];
     for node in &graph.nodes {
         if let Op::Conv {
@@ -60,7 +63,8 @@ pub fn profile_enc_points(
             let tap = &taps[*e];
             let (h, w) = (tap.dims()[1], tap.dims()[2]);
             let (oh, ow) = (same_out(h, *stride), same_out(w, *stride));
-            macs[*e] += (kh * kw * cin * cout * oh * ow) as u64;
+            let cin_eff = model.engine.conv_in_channels(node.id).unwrap_or(*cin);
+            macs[*e] += (kh * kw * cin_eff * cout * oh * ow) as u64;
         }
     }
 

@@ -12,7 +12,8 @@
 use overq::coordinator::Coordinator;
 use overq::data::shapes;
 use overq::models::synth_model;
-use overq::policy::{autotune, AutotuneConfig, DeploymentPlan};
+use overq::nn::WBITS_DEFAULT;
+use overq::policy::{autotune, autotune_measured, AutotuneConfig, DeploymentPlan, ProbeSplit};
 
 #[test]
 fn autotune_beats_baseline_at_equal_or_lower_area() {
@@ -137,6 +138,227 @@ fn server_serves_plan_variant_end_to_end() {
     let ok = handle.infer_variant(img, &variant);
     assert!(ok.is_ok(), "server died after bad variant: {ok:?}");
     coord.shutdown();
+}
+
+#[test]
+fn measured_refinement_never_loses_to_proxy_only() {
+    let model = synth_model("synth-cnn", 33).unwrap();
+    let (images, _) = shapes::gen_batch(33, 0, 16);
+    // a disjoint probe stream (indices 16..64 of the same seed)
+    let (pimg, plab) = shapes::gen_batch(33, 16, 48);
+    let probe = ProbeSplit::new(pimg, plab).unwrap();
+    let cfg = AutotuneConfig {
+        space: overq::policy::CandidateSpace {
+            weight_bits: vec![WBITS_DEFAULT, 4, 6],
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let m = autotune_measured(&model, &images, &probe, &cfg).unwrap();
+
+    // the acceptance contract: the chosen plan's measured accuracy is
+    // ≥ the proxy-only plan's, within the same area budget
+    assert!(
+        m.candidates[m.chosen].measured_acc >= m.proxy_acc - 1e-12,
+        "chosen {} < proxy-only {}",
+        m.candidates[m.chosen].measured_acc,
+        m.proxy_acc
+    );
+    assert!(m.result.total_area <= m.result.baseline_area + 1e-9);
+    // candidates[0] is the proxy-optimal endpoint of the greedy path
+    let max_step = m.candidates.iter().map(|c| c.greedy_step).max().unwrap();
+    assert_eq!(m.candidates[0].greedy_step, max_step);
+    // probe evidence is recorded in the emitted plan and survives JSON
+    let ev = m.result.plan.probe.expect("probe evidence");
+    assert_eq!(ev.images, 48);
+    let text = m.result.plan.to_json().to_json();
+    let back = DeploymentPlan::from_json(&overq::util::json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, m.result.plan);
+    assert!((-1.0..=1.0).contains(&m.rank_agreement));
+}
+
+#[test]
+fn v1_plan_files_load_and_serve_unchanged() {
+    // tune a plan in the default (weight-blind) space, then rewrite it
+    // as a version-1 file: no wbits fields, no probe block — exactly
+    // what a pre-weight-bitwidth `overq policy` emitted
+    let model = synth_model("synth-tiny", 41).unwrap();
+    let (images, _) = shapes::gen_batch(41, 0, 8);
+    let result = autotune(&model, &images, &AutotuneConfig::default()).unwrap();
+    let plan = &result.plan;
+    let layers_v1: Vec<String> = plan
+        .layers
+        .iter()
+        .map(|l| {
+            format!(
+                r#"{{"enc": {}, "bits": {}, "cascade": {}, "ro": {}, "pr": {},
+                    "scale": {}, "p0": {}, "outlier_rate": {},
+                    "theory_coverage": {}, "measured_coverage": {},
+                    "area": {}, "macs": {}}}"#,
+                l.enc,
+                l.overq.bits,
+                l.overq.cascade,
+                l.overq.range_overwrite,
+                l.overq.precision_overwrite,
+                l.scale,
+                l.p0,
+                l.outlier_rate,
+                l.theory_coverage,
+                l.measured_coverage,
+                l.area,
+                l.macs
+            )
+        })
+        .collect();
+    let v1_text = format!(
+        r#"{{"version": 1, "name": "{}", "model": "{}", "layers": [{}],
+            "total_area": {}, "baseline_area": {},
+            "mean_coverage": {}, "baseline_coverage": {}}}"#,
+        plan.name,
+        plan.model,
+        layers_v1.join(","),
+        plan.total_area,
+        plan.baseline_area,
+        plan.mean_coverage,
+        plan.baseline_coverage
+    );
+    let dir = std::env::temp_dir().join("overq_policy_v1_compat");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("legacy.plan.json");
+    std::fs::write(&path, &v1_text).unwrap();
+
+    let legacy = DeploymentPlan::load(&path).unwrap();
+    assert_eq!(legacy.version, 1);
+    assert_eq!(legacy.probe, None);
+    assert!(legacy.layers.iter().all(|l| l.wbits == WBITS_DEFAULT));
+    // the engine config is identical to the v2 plan's → same numerics
+    assert_eq!(legacy.to_quant_config().layers, plan.to_quant_config().layers);
+
+    // and the coordinator serves it exactly like the v2 plan
+    let qc = legacy.to_quant_config();
+    let (x, _) = shapes::gen_batch(91, 0, 4);
+    let want = model.engine.forward_quant(&x, &qc).unwrap();
+    let coord = Coordinator::builder().model_local(model).build().unwrap();
+    let handle = coord.model("synth-tiny").unwrap();
+    handle.register_plan(legacy.clone()).unwrap();
+    let img_sz = 16 * 16 * 3;
+    for i in 0..4 {
+        let img = overq::tensor::TensorF::from_vec(
+            &[16, 16, 3],
+            x.data[i * img_sz..(i + 1) * img_sz].to_vec(),
+        );
+        let resp = handle
+            .infer_variant(img, &format!("plan:{}", legacy.name))
+            .unwrap();
+        for (a, b) in resp
+            .logits
+            .iter()
+            .zip(&want.data[i * 10..(i + 1) * 10])
+        {
+            assert_eq!(a, b, "v1 plan served differently than the native engine");
+        }
+    }
+    coord.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn weight_bit_plans_serve_on_the_coordinator() {
+    let model = synth_model("synth-tiny", 55).unwrap();
+    let (images, _) = shapes::gen_batch(55, 0, 8);
+    let result = autotune(&model, &images, &AutotuneConfig::default()).unwrap();
+    // pin one layer to 4-bit weights — the serving path must honor it
+    let mut plan = result.plan.clone();
+    plan.layers[0].wbits = 4;
+    let qc = plan.to_quant_config();
+    assert_eq!(qc.layers[0].wbits, 4);
+    let (x, _) = shapes::gen_batch(56, 0, 3);
+    let want = model.engine.forward_quant(&x, &qc).unwrap();
+    // sanity: 4-bit weights actually change the numerics vs default
+    let base = model
+        .engine
+        .forward_quant(&x, &result.plan.to_quant_config())
+        .unwrap();
+    assert_ne!(want.data, base.data);
+
+    let coord = Coordinator::builder().model_local(model).build().unwrap();
+    let handle = coord.model("synth-tiny").unwrap();
+    handle.register_plan(plan.clone()).unwrap();
+    let img_sz = 16 * 16 * 3;
+    for i in 0..3 {
+        let img = overq::tensor::TensorF::from_vec(
+            &[16, 16, 3],
+            x.data[i * img_sz..(i + 1) * img_sz].to_vec(),
+        );
+        let resp = handle
+            .infer_variant(img, &format!("plan:{}", plan.name))
+            .unwrap();
+        for (a, b) in resp.logits.iter().zip(&want.data[i * 10..(i + 1) * 10]) {
+            assert_eq!(a, b, "weight-bit plan served differently than native");
+        }
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn clear_errors_for_empty_probe_and_no_enc_points() {
+    // empty probe split → a ProbeSplit::new error, not a NaN or panic
+    let err = ProbeSplit::new(overq::tensor::TensorF::zeros(&[0, 16, 16, 3]), vec![])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("probe split is empty"), "{err:#}");
+    // label shortfall is caught too
+    let err = ProbeSplit::new(overq::tensor::TensorF::zeros(&[2, 16, 16, 3]), vec![0])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("labels"), "{err:#}");
+
+    // a model with no quantized convs has no enc points to tune: the
+    // autotuner must say so instead of panicking
+    use overq::io::tensorfile::{AnyTensor, TensorMap};
+    use overq::models::zoo::LoadedModel;
+    use overq::nn::{Engine, Graph};
+    let graph = Graph::from_json(
+        &overq::util::json::parse(
+            r#"{
+              "name": "noquant",
+              "nodes": [
+                {"id": 0, "op": "input", "in": []},
+                {"id": 1, "op": "conv", "in": [0], "kh": 3, "kw": 3, "stride": 2,
+                 "cin": 3, "cout": 4, "relu": true, "quant": false},
+                {"id": 2, "op": "gap", "in": [1]},
+                {"id": 3, "op": "dense", "in": [2], "cin": 4, "cout": 10}
+              ]
+            }"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let mut weights = TensorMap::new();
+    weights.insert(
+        "n1.w".into(),
+        AnyTensor::F32(overq::tensor::TensorF::zeros(&[3, 3, 3, 4])),
+    );
+    weights.insert(
+        "n1.b".into(),
+        AnyTensor::F32(overq::tensor::TensorF::zeros(&[4])),
+    );
+    weights.insert(
+        "n3.w".into(),
+        AnyTensor::F32(overq::tensor::TensorF::zeros(&[4, 10])),
+    );
+    weights.insert(
+        "n3.b".into(),
+        AnyTensor::F32(overq::tensor::TensorF::zeros(&[10])),
+    );
+    let engine = Engine::new(graph, &weights).unwrap();
+    let model = LoadedModel {
+        name: "noquant".into(),
+        engine,
+        enc_stats: vec![],
+        fp32_acc: 0.0,
+    };
+    let (images, _) = shapes::gen_batch(1, 0, 4);
+    let err = autotune(&model, &images, &AutotuneConfig::default()).unwrap_err();
+    assert!(format!("{err:#}").contains("no enc points"), "{err:#}");
 }
 
 #[test]
