@@ -1,13 +1,15 @@
 //! `cargo bench --bench serving` — drives the multi-model coordinator
 //! with mixed fp32/plan traffic and writes `BENCH_serving.json`
 //! (throughput + e2e latency percentiles) so the serving path has a
-//! perf trajectory. Runs artifact-free on the synthetic zoo.
+//! perf trajectory, plus a bandit-vs-fixed routing scenario recording
+//! how fast outcome-aware routing converges on the better plan arm
+//! (docs/operations.md). Runs artifact-free on the synthetic zoo.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 use overq::coordinator::batcher::BatchPolicy;
-use overq::coordinator::Coordinator;
+use overq::coordinator::{BanditConfig, Coordinator, RoutingPolicy, VariantSpec};
 use overq::data::shapes;
 use overq::harness::policy::baseline_plan;
 use overq::models::synth_model;
@@ -101,6 +103,111 @@ enum Route {
     Split(Vec<(&'static str, f64)>),
 }
 
+/// Bandit-vs-fixed convergence: two plan arms with a strict reward gap
+/// (quality priors 0.9 vs 0.3 at comparable latency). The bandit run
+/// records the cumulative fraction of traffic on the better arm every
+/// 100 requests; the fixed 50/50 split is the comparison baseline.
+fn bandit_convergence(n: usize) -> anyhow::Result<Value> {
+    let model = "synth-tiny";
+    let loaded = synth_model(model, 42)?;
+    let (images, _) = shapes::gen_batch(4242, 0, 16);
+    let cfg = AutotuneConfig {
+        plan_name: Some("tuned".into()),
+        ..AutotuneConfig::default()
+    };
+    let plan_tuned = autotune(&loaded, &images, &cfg)?.plan;
+    let plan_base = baseline_plan(&loaded, &images, &cfg, "base")?;
+
+    let drive = |bandit: bool| -> anyhow::Result<(f64, f64, f64, Vec<f64>)> {
+        let coord = Coordinator::builder()
+            .policy(BatchPolicy::default())
+            .seed(7)
+            .model_local(synth_model(model, 42)?)
+            .build()?;
+        let handle = coord.model(model)?;
+        handle.register_plan(plan_tuned.clone())?;
+        handle.register_plan(plan_base.clone())?;
+        if bandit {
+            let mut bc = BanditConfig::new(
+                vec![
+                    (VariantSpec::parse("plan:tuned")?, 0.9),
+                    (VariantSpec::parse("plan:base")?, 0.3),
+                ],
+                1, // control = plan:base
+            );
+            bc.seed = 7;
+            handle.set_routing_policy(RoutingPolicy::Bandit(bc))?;
+        } else {
+            handle.set_traffic_split(&[("plan:tuned", 0.5), ("plan:base", 0.5)])?;
+        }
+        // closed-loop windows so the bandit sees rewards as it routes
+        let img_sz = 16 * 16 * 3;
+        let (load, _) = shapes::gen_batch(77, 0, n);
+        let mut trajectory = Vec::new();
+        let mut done = 0usize;
+        while done < n {
+            let take = 8.min(n - done);
+            let mut pending = Vec::with_capacity(take);
+            for i in done..done + take {
+                let img = TensorF::from_vec(
+                    &[16, 16, 3],
+                    load.data[i * img_sz..(i + 1) * img_sz].to_vec(),
+                );
+                pending.push(handle.submit_routed(img)?);
+            }
+            for rx in pending {
+                rx.recv()?.map_err(|e| anyhow::anyhow!("{e}"))?;
+            }
+            done += take;
+            // one point per 100-request boundary crossed (windows of 8
+            // land between boundaries, so test the crossing, not done%100)
+            while trajectory.len() < done / 100 {
+                let m = handle.metrics();
+                trajectory.push(
+                    m.per_variant
+                        .get("plan:tuned")
+                        .map(|v| v.requests as f64 / done as f64)
+                        .unwrap_or(0.0),
+                );
+            }
+        }
+        let m = handle.metrics();
+        let frac = |key: &str| {
+            m.per_variant
+                .get(key)
+                .map(|v| v.requests as f64 / n as f64)
+                .unwrap_or(0.0)
+        };
+        let out = (frac("plan:tuned"), frac("plan:base"), m.regret_vs_control, trajectory);
+        coord.shutdown();
+        Ok(out)
+    };
+
+    let (best_bandit, ctrl_bandit, regret, trajectory) = drive(true)?;
+    let (best_fixed, _, _, _) = drive(false)?;
+    println!(
+        "{:<40} best-arm traffic {:>5.1}% (fixed 50/50: {:>5.1}%)  control {:>4.1}%  regret {:+.2}",
+        "bandit convergence synth-tiny",
+        best_bandit * 100.0,
+        best_fixed * 100.0,
+        ctrl_bandit * 100.0,
+        regret
+    );
+
+    let mut m = BTreeMap::new();
+    m.insert("name".into(), Value::Str("bandit convergence synth-tiny".into()));
+    m.insert("requests".into(), Value::Num(n as f64));
+    m.insert("frac_best_bandit".into(), Value::Num(best_bandit));
+    m.insert("frac_best_fixed".into(), Value::Num(best_fixed));
+    m.insert("frac_control_bandit".into(), Value::Num(ctrl_bandit));
+    m.insert("regret_vs_control".into(), Value::Num(regret));
+    m.insert(
+        "trajectory_best_per_100".into(),
+        Value::Arr(trajectory.into_iter().map(Value::Num).collect()),
+    );
+    Ok(Value::Obj(m))
+}
+
 fn main() {
     let n = 256usize;
     let cases = [
@@ -127,13 +234,13 @@ fn main() {
         results.push(c);
     }
 
+    let mut all: Vec<Value> = results.iter().map(case_json).collect();
+    all.push(bandit_convergence(1000).expect("bandit convergence case failed"));
+
     let mut top = BTreeMap::new();
     top.insert("bench".into(), Value::Str("serving".into()));
-    top.insert(
-        "results".into(),
-        Value::Arr(results.iter().map(case_json).collect()),
-    );
+    top.insert("results".into(), Value::Arr(all));
     let json = Value::Obj(top).to_json();
     std::fs::write("BENCH_serving.json", &json).expect("write BENCH_serving.json");
-    println!("wrote BENCH_serving.json ({} cases)", results.len());
+    println!("wrote BENCH_serving.json ({} cases)", results.len() + 1);
 }

@@ -2,7 +2,13 @@
 //!
 //! Latencies are tracked globally and per resolved variant (the
 //! [`super::variant::VariantSpec`] key), so an A/B traffic split can be
-//! read back as per-arm request counts and latency percentiles.
+//! read back as per-arm request counts and latency percentiles. When
+//! outcome-aware routing is on ([`super::router::BanditRouter`]), each
+//! variant additionally accumulates bandit pulls and rewards, and the
+//! snapshot derives cumulative regret against the pinned control arm;
+//! the plan watcher ([`super::watch`]) surfaces its swap/rejection
+//! counters here too, so one [`MetricsSnapshot`] answers "what is the
+//! router doing and is hot-reload healthy" (docs/operations.md).
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -19,6 +25,10 @@ pub struct VariantMetrics {
     pub queue_us: Summary,
     /// End-to-end latency summary (µs).
     pub e2e_us: Summary,
+    /// Bandit pulls observed on this variant (0 under fixed routing).
+    pub pulls: u64,
+    /// Sum of bandit rewards observed on this variant.
+    pub reward_sum: f64,
 }
 
 /// Live metrics (behind [`SharedMetrics`]).
@@ -40,6 +50,16 @@ pub struct Metrics {
     pub batch_size: Summary,
     /// Per-variant accounting, keyed by the resolved variant string.
     pub per_variant: BTreeMap<String, VariantMetrics>,
+    /// Variant key of the bandit's pinned control arm, when outcome-
+    /// aware routing is installed. Configuration, not measurement: it
+    /// survives [`Metrics::reset`].
+    pub control_arm: Option<String>,
+    /// Plans swapped in by the plan watcher ([`super::watch`]).
+    pub plan_swaps: u64,
+    /// Plan files the watcher rejected (old plan left serving).
+    pub watch_errors: u64,
+    /// Most recent watcher rejection, for operator diagnosis.
+    pub last_watch_error: Option<String>,
 }
 
 /// The handle both the worker (writes) and client handles (snapshots)
@@ -61,6 +81,10 @@ pub struct VariantSnapshot {
     pub mean_e2e_us: f64,
     pub p50_e2e_us: f64,
     pub p95_e2e_us: f64,
+    /// Bandit pulls observed on this variant (0 under fixed routing).
+    pub pulls: u64,
+    /// Mean bandit reward (0.0 before the first pull).
+    pub mean_reward: f64,
 }
 
 /// Point-in-time copy for reporting.
@@ -82,6 +106,20 @@ pub struct MetricsSnapshot {
     pub mean_batch: f64,
     /// Keyed by the resolved variant string (e.g. `plan:a`, `fp32`).
     pub per_variant: BTreeMap<String, VariantSnapshot>,
+    /// The bandit's pinned control arm, when outcome-aware routing is
+    /// installed.
+    pub control_arm: Option<String>,
+    /// Cumulative regret relative to always playing the control arm:
+    /// `Σ_arm pulls(arm) · (mean_reward(control) − mean_reward(arm))`.
+    /// *Negative* regret means the bandit beat the control — the healthy
+    /// steady state when a tuned plan outperforms the baseline.
+    pub regret_vs_control: f64,
+    /// Plans swapped in by the plan watcher.
+    pub plan_swaps: u64,
+    /// Plan files the watcher rejected (old plan left serving).
+    pub watch_errors: u64,
+    /// Most recent watcher rejection, for operator diagnosis.
+    pub last_watch_error: Option<String>,
 }
 
 impl Metrics {
@@ -110,14 +148,59 @@ impl Metrics {
         v.e2e_us.add(e_us);
     }
 
+    /// Account one bandit reward observation under its arm's key.
+    pub fn record_reward(&mut self, variant: &str, reward: f64) {
+        if !self.per_variant.contains_key(variant) {
+            self.per_variant
+                .insert(variant.to_string(), VariantMetrics::default());
+        }
+        let v = self.per_variant.get_mut(variant).unwrap();
+        v.pulls += 1;
+        v.reward_sum += reward;
+    }
+
+    /// Account one plan swap applied by the plan watcher.
+    pub fn record_plan_swap(&mut self) {
+        self.plan_swaps += 1;
+    }
+
+    /// Account one plan file the watcher rejected.
+    pub fn record_watch_error(&mut self, msg: &str) {
+        self.watch_errors += 1;
+        self.last_watch_error = Some(msg.to_string());
+    }
+
     /// Zero all counters and summaries — e.g. to drop warmup traffic
     /// before a measurement window, or between A/B experiment epochs.
+    /// The control-arm pin survives: it is routing configuration, and a
+    /// fresh measurement window still needs to know which arm regret is
+    /// computed against.
     pub fn reset(&mut self) {
+        let control = self.control_arm.take();
         *self = Metrics::default();
+        self.control_arm = control;
     }
 
     /// Point-in-time copy with derived means/percentiles.
     pub fn snapshot(&self) -> MetricsSnapshot {
+        // regret vs control: defined once the control arm has been
+        // observed at least once; 0.0 (not NaN) before that
+        let regret = match self
+            .control_arm
+            .as_ref()
+            .and_then(|c| self.per_variant.get(c))
+            .filter(|c| c.pulls > 0)
+        {
+            Some(c) => {
+                let mu_c = c.reward_sum / c.pulls as f64;
+                self.per_variant
+                    .values()
+                    .filter(|v| v.pulls > 0)
+                    .map(|v| v.pulls as f64 * (mu_c - v.reward_sum / v.pulls as f64))
+                    .sum()
+            }
+            None => 0.0,
+        };
         MetricsSnapshot {
             requests: self.requests,
             batches: self.batches,
@@ -141,10 +224,21 @@ impl Metrics {
                             mean_e2e_us: v.e2e_us.mean(),
                             p50_e2e_us: v.e2e_us.percentile(50.0),
                             p95_e2e_us: v.e2e_us.percentile(95.0),
+                            pulls: v.pulls,
+                            mean_reward: if v.pulls > 0 {
+                                v.reward_sum / v.pulls as f64
+                            } else {
+                                0.0
+                            },
                         },
                     )
                 })
                 .collect(),
+            control_arm: self.control_arm.clone(),
+            regret_vs_control: regret,
+            plan_swaps: self.plan_swaps,
+            watch_errors: self.watch_errors,
+            last_watch_error: self.last_watch_error.clone(),
         }
     }
 }
@@ -201,5 +295,60 @@ mod tests {
         let b = &s.per_variant["plan:b"];
         assert!(b.p50_e2e_us >= 40.0 && b.p50_e2e_us <= 60.0, "{}", b.p50_e2e_us);
         assert_eq!(b.p95_e2e_us, 100.0);
+    }
+
+    #[test]
+    fn rewards_and_regret_vs_control() {
+        let m = shared();
+        {
+            let mut g = m.lock().unwrap();
+            g.control_arm = Some("plan:base".into());
+            // control: 4 pulls at reward 0.25; tuned: 6 pulls at 0.75
+            for _ in 0..4 {
+                g.record_reward("plan:base", 0.25);
+            }
+            for _ in 0..6 {
+                g.record_reward("plan:tuned", 0.75);
+            }
+        }
+        let s = m.lock().unwrap().snapshot();
+        assert_eq!(s.control_arm.as_deref(), Some("plan:base"));
+        assert_eq!(s.per_variant["plan:base"].pulls, 4);
+        assert_eq!(s.per_variant["plan:tuned"].pulls, 6);
+        assert!((s.per_variant["plan:tuned"].mean_reward - 0.75).abs() < 1e-12);
+        // regret = 4·(0.25−0.25) + 6·(0.25−0.75) = −3.0: beating control
+        assert!((s.regret_vs_control - (-3.0)).abs() < 1e-12, "{}", s.regret_vs_control);
+    }
+
+    #[test]
+    fn regret_is_zero_before_control_observed() {
+        let m = shared();
+        {
+            let mut g = m.lock().unwrap();
+            g.control_arm = Some("plan:base".into());
+            g.record_reward("plan:tuned", 0.9);
+        }
+        assert_eq!(m.lock().unwrap().snapshot().regret_vs_control, 0.0);
+    }
+
+    #[test]
+    fn reset_keeps_control_arm_and_zeros_watch_counters() {
+        let m = shared();
+        {
+            let mut g = m.lock().unwrap();
+            g.control_arm = Some("plan:base".into());
+            g.record_reward("plan:base", 0.5);
+            g.record_plan_swap();
+            g.record_watch_error("plans/bad.plan.json: parse error");
+            assert_eq!(g.plan_swaps, 1);
+            assert_eq!(g.watch_errors, 1);
+            g.reset();
+        }
+        let s = m.lock().unwrap().snapshot();
+        assert_eq!(s.control_arm.as_deref(), Some("plan:base"));
+        assert_eq!(s.plan_swaps, 0);
+        assert_eq!(s.watch_errors, 0);
+        assert_eq!(s.last_watch_error, None);
+        assert!(s.per_variant.is_empty());
     }
 }

@@ -13,16 +13,27 @@
 //! executables were AOT-compiled by `make artifacts`, and plan variants
 //! run the in-process engine.
 //!
-//! See `docs/serving.md` for the full API walkthrough.
+//! Day-2 operation is closed-loop: [`router::BanditRouter`] learns
+//! outcome-aware split weights from live per-variant rewards (with a
+//! pinned control arm and an exploration floor), and [`watch`] hot-
+//! reloads retuned `*.plan.json` files from disk through the same
+//! admin plane — no operator in the loop for either.
+//!
+//! See `docs/serving.md` for the full API walkthrough and
+//! `docs/operations.md` for the operations handbook.
 
 pub mod batcher;
 pub mod metrics;
 pub mod router;
 pub mod server;
 pub mod variant;
+pub mod watch;
 
 pub use metrics::{MetricsSnapshot, VariantSnapshot};
+pub use router::{ArmStats, BanditConfig, BanditRouter, BanditStrategy};
 pub use server::{
-    Coordinator, InferRequest, InferResponse, InferResult, ModelHandle, ServerBuilder,
+    Coordinator, InferRequest, InferResponse, InferResult, ModelHandle, RoutingPolicy,
+    ServerBuilder,
 };
 pub use variant::{Backend, VariantSpec};
+pub use watch::{PlanWatch, PlanWatcher, WatchReport};

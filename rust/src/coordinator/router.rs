@@ -1,6 +1,10 @@
-//! Routing: executable batch-size selection, group chunking, and the
-//! deterministic weighted router behind A/B traffic splits.
+//! Routing: executable batch-size selection, group chunking, the
+//! deterministic weighted router behind A/B traffic splits, and the
+//! outcome-aware [`BanditRouter`] behind `--routing bandit`.
 
+use anyhow::Result;
+
+use super::variant::VariantSpec;
 use crate::util::rng::Rng;
 
 /// Choose the compiled batch size for `pending` requests from the
@@ -46,6 +50,339 @@ pub fn pick_weighted(rng: &mut Rng, weights: &[f64]) -> usize {
         }
     }
     weights.len() - 1 // fp rounding landed exactly on `total`
+}
+
+/// Arm-selection strategy for the [`BanditRouter`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BanditStrategy {
+    /// Thompson sampling: sample each arm's posterior mean reward and
+    /// route the round's exploit mass to the best sample. Converges
+    /// smoothly and keeps probability-matching exploration.
+    Thompson,
+    /// UCB1: route the exploit mass to the arm with the highest
+    /// `mean + c·sqrt(2·ln(total)/pulls)` upper confidence bound.
+    Ucb,
+}
+
+impl std::str::FromStr for BanditStrategy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<BanditStrategy> {
+        match s {
+            "thompson" => Ok(BanditStrategy::Thompson),
+            "ucb" => Ok(BanditStrategy::Ucb),
+            other => anyhow::bail!("unknown bandit strategy {other:?} (thompson|ucb)"),
+        }
+    }
+}
+
+/// Configuration for a [`BanditRouter`].
+///
+/// `arms` pairs each servable (non-split) [`VariantSpec`] with a static
+/// *quality prior* in `[0, 1]` — for `plan:` arms this is typically the
+/// plan's probe-split accuracy (or its mean coverage when no probe ran);
+/// for fp32 arms it is 1.0. The per-request reward blends this prior
+/// with the request's live e2e latency (see [`BanditRouter::observe`]).
+#[derive(Clone, Debug)]
+pub struct BanditConfig {
+    /// `(variant, quality prior)` per arm; at least two, no splits.
+    pub arms: Vec<(VariantSpec, f64)>,
+    /// Index of the pinned control arm (e.g. the
+    /// `harness::policy::baseline_plan` variant). It always keeps at
+    /// least the exploration floor of traffic, so the bandit's learned
+    /// routing stays comparable against a fixed reference.
+    pub control: usize,
+    /// Minimum routing probability every arm keeps, regardless of
+    /// observed rewards. Must satisfy `0 < floor` and
+    /// `arms.len() · floor ≤ 1`.
+    pub explore_floor: f64,
+    /// Arm-selection strategy.
+    pub strategy: BanditStrategy,
+    /// Seed for the router's deterministic RNG: the same request order
+    /// and reward stream reproduce the same arm sequence.
+    pub seed: u64,
+    /// Latency softening scale (µs) in the reward. A request served at
+    /// e2e latency `l` scores `quality · tau/(tau + l)`.
+    pub tau_us: f64,
+}
+
+impl BanditConfig {
+    /// Config with the default exploration floor (0.05), Thompson
+    /// sampling, a fixed seed, and a 5 ms latency scale.
+    pub fn new(arms: Vec<(VariantSpec, f64)>, control: usize) -> BanditConfig {
+        BanditConfig {
+            arms,
+            control,
+            explore_floor: 0.05,
+            strategy: BanditStrategy::Thompson,
+            seed: 0x0B4D_D17E,
+            tau_us: 5_000.0,
+        }
+    }
+}
+
+/// Point-in-time statistics for one bandit arm.
+#[derive(Clone, Debug)]
+pub struct ArmStats {
+    /// The arm's metrics key ([`VariantSpec::key`]).
+    pub key: String,
+    /// Static quality prior from the config.
+    pub quality: f64,
+    /// Observed (completed) requests on this arm.
+    pub pulls: u64,
+    /// Mean observed reward (0.0 before the first observation).
+    pub mean_reward: f64,
+    /// Whether this is the pinned control arm.
+    pub is_control: bool,
+}
+
+struct Arm {
+    spec: VariantSpec,
+    key: String,
+    quality: f64,
+    pulls: u64,
+    reward_sum: f64,
+    reward_sq: f64,
+}
+
+impl Arm {
+    fn mean(&self) -> f64 {
+        if self.pulls == 0 {
+            0.0
+        } else {
+            self.reward_sum / self.pulls as f64
+        }
+    }
+}
+
+/// Standard normal draw (Box–Muller). Two RNG draws per call, always.
+fn gauss(rng: &mut Rng) -> f64 {
+    let u1 = rng.f64().max(1e-12);
+    let u2 = rng.f64();
+    (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+}
+
+/// Outcome-aware replacement for fixed A/B split weights: every routed
+/// request draws an arm whose probability reflects the rewards observed
+/// so far, while an exploration floor keeps every arm — in particular
+/// the pinned control arm — alive forever.
+///
+/// Reward for a request served on arm `a` at e2e latency `l` µs:
+///
+/// ```text
+/// reward = quality(a) · tau / (tau + l)      ∈ (0, 1]
+/// ```
+///
+/// so an arm wins by being accurate (quality prior) *and* fast (live
+/// latency), and the control arm's running mean is the fixed reference
+/// that `regret_vs_control` in [`super::metrics::MetricsSnapshot`] is
+/// computed against.
+///
+/// The router is deterministic: all randomness comes from one seeded
+/// [`Rng`], and every [`BanditRouter::pick`] consumes a fixed number of
+/// draws, so a replayed request/reward stream reproduces the exact arm
+/// sequence. This is the runnable version of the routing example in
+/// `docs/operations.md`:
+///
+/// ```
+/// use overq::coordinator::router::{BanditConfig, BanditRouter};
+/// use overq::coordinator::VariantSpec;
+///
+/// // two plan arms: the tuned candidate and the pinned baseline control
+/// let mut router = BanditRouter::new(BanditConfig::new(
+///     vec![
+///         (VariantSpec::parse("plan:tuned")?, 0.9),
+///         (VariantSpec::parse("plan:base")?, 0.3),
+///     ],
+///     1, // control = plan:base
+/// ))?;
+///
+/// // simulate 1000 served requests at identical latency: the quality
+/// // gap alone shifts traffic to plan:tuned...
+/// for _ in 0..1000 {
+///     let spec = router.pick();
+///     router.observe(&spec.key(), 900.0);
+/// }
+/// let stats = router.arm_stats();
+/// let total: u64 = stats.iter().map(|a| a.pulls).sum();
+/// assert!(stats[0].pulls as f64 / total as f64 >= 0.7, "tuned arm starved");
+///
+/// // ...while the control arm keeps at least its exploration floor
+/// assert!(stats[1].is_control);
+/// assert!(stats[1].pulls as f64 / total as f64 >= 0.5 * router.explore_floor());
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+pub struct BanditRouter {
+    arms: Vec<Arm>,
+    control: usize,
+    floor: f64,
+    strategy: BanditStrategy,
+    tau_us: f64,
+    rng: Rng,
+}
+
+impl BanditRouter {
+    /// Validate the config and build the router. Fails on fewer than two
+    /// arms, split/duplicate arms, an out-of-range control index, a
+    /// quality prior outside `[0, 1]`, a non-positive latency scale, or
+    /// an exploration floor outside `0 < floor ≤ 1/arms`.
+    pub fn new(cfg: BanditConfig) -> Result<BanditRouter> {
+        anyhow::ensure!(cfg.arms.len() >= 2, "bandit routing needs at least two arms");
+        anyhow::ensure!(
+            cfg.control < cfg.arms.len(),
+            "control arm index {} out of range (arms: {})",
+            cfg.control,
+            cfg.arms.len()
+        );
+        let n = cfg.arms.len() as f64;
+        anyhow::ensure!(
+            cfg.explore_floor > 0.0 && cfg.explore_floor * n <= 1.0,
+            "exploration floor {} outside 0 < floor <= 1/{} — the control \
+             arm's no-starvation guarantee needs a positive floor",
+            cfg.explore_floor,
+            cfg.arms.len()
+        );
+        anyhow::ensure!(
+            cfg.tau_us.is_finite() && cfg.tau_us > 0.0,
+            "latency scale tau_us must be positive, got {}",
+            cfg.tau_us
+        );
+        let mut arms = Vec::with_capacity(cfg.arms.len());
+        for (spec, quality) in &cfg.arms {
+            anyhow::ensure!(
+                !spec.is_split(),
+                "bandit arms must be non-split variants, got {spec}"
+            );
+            anyhow::ensure!(
+                quality.is_finite() && (0.0..=1.0).contains(quality),
+                "arm {spec} quality prior {quality} outside [0, 1]"
+            );
+            let key = spec.key();
+            anyhow::ensure!(
+                arms.iter().all(|a: &Arm| a.key != key),
+                "duplicate bandit arm {key}"
+            );
+            arms.push(Arm {
+                spec: spec.clone(),
+                key,
+                quality: *quality,
+                pulls: 0,
+                reward_sum: 0.0,
+                reward_sq: 0.0,
+            });
+        }
+        Ok(BanditRouter {
+            arms,
+            control: cfg.control,
+            floor: cfg.explore_floor,
+            strategy: cfg.strategy,
+            tau_us: cfg.tau_us,
+            rng: Rng::new(cfg.seed),
+        })
+    }
+
+    /// The configured exploration floor.
+    pub fn explore_floor(&self) -> f64 {
+        self.floor
+    }
+
+    /// Metrics key of the pinned control arm.
+    pub fn control_key(&self) -> &str {
+        &self.arms[self.control].key
+    }
+
+    /// Per-arm score for this round. Unobserved arms get a score above
+    /// any real reward (rewards are ≤ 1), tie-broken toward lower
+    /// indices, so every arm is tried before exploitation narrows.
+    /// Thompson consumes two RNG draws per arm whether or not the arm
+    /// has been observed, keeping the draw count per pick fixed.
+    fn scores(&mut self) -> Vec<f64> {
+        let total: u64 = self.arms.iter().map(|a| a.pulls).sum();
+        let mut out = Vec::with_capacity(self.arms.len());
+        for i in 0..self.arms.len() {
+            let z = match self.strategy {
+                BanditStrategy::Thompson => gauss(&mut self.rng),
+                BanditStrategy::Ucb => 0.0,
+            };
+            let a = &self.arms[i];
+            if a.pulls == 0 {
+                out.push(2.0 - i as f64 * 1e-9);
+                continue;
+            }
+            let mean = a.mean();
+            out.push(match self.strategy {
+                BanditStrategy::Thompson => {
+                    // gaussian posterior on the mean; sample sd with a
+                    // floor so exploration never collapses early
+                    let var = if a.pulls >= 2 {
+                        ((a.reward_sq - a.pulls as f64 * mean * mean) / (a.pulls - 1) as f64)
+                            .max(0.0)
+                    } else {
+                        0.0625 // uninformed: sd 0.25
+                    };
+                    let sd = var.sqrt().max(0.02);
+                    mean + sd / (a.pulls as f64).sqrt() * z
+                }
+                BanditStrategy::Ucb => {
+                    mean + 0.7 * (2.0 * (total.max(1) as f64).ln() / a.pulls as f64).sqrt()
+                }
+            });
+        }
+        out
+    }
+
+    /// Routing probabilities for this round: every arm keeps the
+    /// exploration floor; the round's winner gets the remaining mass.
+    pub fn weights(&mut self) -> Vec<f64> {
+        let scores = self.scores();
+        let winner = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let n = self.arms.len() as f64;
+        let mut w = vec![self.floor; self.arms.len()];
+        w[winner] += 1.0 - n * self.floor;
+        w
+    }
+
+    /// Draw the arm for one routed request.
+    pub fn pick(&mut self) -> VariantSpec {
+        let w = self.weights();
+        let i = pick_weighted(&mut self.rng, &w);
+        self.arms[i].spec.clone()
+    }
+
+    /// Feed back one served request: `key` is the resolved variant's
+    /// metrics key ([`VariantSpec::key`]), `e2e_us` its end-to-end
+    /// latency. Returns the recorded reward, or `None` when no arm
+    /// matches (e.g. pinned-variant traffic outside the experiment).
+    pub fn observe(&mut self, key: &str, e2e_us: f64) -> Option<f64> {
+        let tau = self.tau_us;
+        let a = self.arms.iter_mut().find(|a| a.key == key)?;
+        let reward = a.quality * tau / (tau + e2e_us.max(0.0));
+        a.pulls += 1;
+        a.reward_sum += reward;
+        a.reward_sq += reward * reward;
+        Some(reward)
+    }
+
+    /// Point-in-time per-arm statistics (pulls, mean reward, control
+    /// flag) — the serving layer folds these into its metrics snapshot.
+    pub fn arm_stats(&self) -> Vec<ArmStats> {
+        self.arms
+            .iter()
+            .enumerate()
+            .map(|(i, a)| ArmStats {
+                key: a.key.clone(),
+                quality: a.quality,
+                pulls: a.pulls,
+                mean_reward: a.mean(),
+                is_control: i == self.control,
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -97,6 +434,131 @@ mod tests {
         for _ in 0..10 {
             assert_eq!(pick_weighted(&mut rng, &[5.0]), 0);
         }
+    }
+
+    fn two_arm_config(strategy: BanditStrategy) -> BanditConfig {
+        let mut cfg = BanditConfig::new(
+            vec![
+                (VariantSpec::parse("plan:good").unwrap(), 0.9),
+                (VariantSpec::parse("plan:ctrl").unwrap(), 0.3),
+            ],
+            1,
+        );
+        cfg.strategy = strategy;
+        cfg
+    }
+
+    #[test]
+    fn bandit_converges_to_better_arm_with_floor() {
+        for strategy in [BanditStrategy::Thompson, BanditStrategy::Ucb] {
+            let mut b = BanditRouter::new(two_arm_config(strategy)).unwrap();
+            let n = 1000usize;
+            for _ in 0..n {
+                let spec = b.pick();
+                // identical latency on both arms: quality decides
+                b.observe(&spec.key(), 700.0);
+            }
+            let stats = b.arm_stats();
+            let total: u64 = stats.iter().map(|a| a.pulls).sum();
+            assert_eq!(total, n as u64);
+            let frac_good = stats[0].pulls as f64 / n as f64;
+            assert!(frac_good >= 0.7, "{strategy:?}: good arm got {frac_good}");
+            let frac_ctrl = stats[1].pulls as f64 / n as f64;
+            assert!(
+                frac_ctrl >= 0.5 * b.explore_floor(),
+                "{strategy:?}: control starved at {frac_ctrl}"
+            );
+            assert!(stats[1].is_control && !stats[0].is_control);
+            assert!(stats[0].mean_reward > stats[1].mean_reward);
+        }
+    }
+
+    #[test]
+    fn bandit_prefers_faster_arm_at_equal_quality() {
+        let mut cfg = two_arm_config(BanditStrategy::Thompson);
+        cfg.arms[0].1 = 0.8;
+        cfg.arms[1].1 = 0.8;
+        let mut b = BanditRouter::new(cfg).unwrap();
+        for _ in 0..1000 {
+            let spec = b.pick();
+            // the control arm is 10x slower
+            let e2e = if spec.key() == "plan:ctrl" { 9000.0 } else { 900.0 };
+            b.observe(&spec.key(), e2e);
+        }
+        let stats = b.arm_stats();
+        assert!(
+            stats[0].pulls as f64 / 1000.0 >= 0.7,
+            "fast arm got {}",
+            stats[0].pulls
+        );
+    }
+
+    #[test]
+    fn bandit_is_deterministic_in_seed() {
+        let run = || {
+            let mut b = BanditRouter::new(two_arm_config(BanditStrategy::Thompson)).unwrap();
+            let mut picks = Vec::new();
+            for i in 0..200 {
+                let spec = b.pick();
+                picks.push(spec.key());
+                // deterministic synthetic latency stream
+                b.observe(&spec.key(), 500.0 + (i % 7) as f64 * 100.0);
+            }
+            picks
+        };
+        assert_eq!(run(), run(), "seeded bandit is not reproducible");
+    }
+
+    #[test]
+    fn bandit_observe_ignores_foreign_keys() {
+        let mut b = BanditRouter::new(two_arm_config(BanditStrategy::Thompson)).unwrap();
+        assert_eq!(b.observe("plan:other", 100.0), None);
+        let r = b.observe("plan:good", 0.0).unwrap();
+        assert!((r - 0.9).abs() < 1e-12, "zero-latency reward is the quality prior");
+        assert_eq!(b.arm_stats()[0].pulls, 1);
+    }
+
+    #[test]
+    fn bandit_rejects_bad_configs() {
+        let arms = || {
+            vec![
+                (VariantSpec::parse("plan:a").unwrap(), 0.9),
+                (VariantSpec::parse("plan:b").unwrap(), 0.3),
+            ]
+        };
+        // too few arms
+        let mut c = BanditConfig::new(arms(), 0);
+        c.arms.truncate(1);
+        assert!(BanditRouter::new(c).is_err());
+        // control out of range
+        assert!(BanditRouter::new(BanditConfig::new(arms(), 2)).is_err());
+        // zero / oversized floor
+        let mut c = BanditConfig::new(arms(), 0);
+        c.explore_floor = 0.0;
+        assert!(BanditRouter::new(c).is_err());
+        let mut c = BanditConfig::new(arms(), 0);
+        c.explore_floor = 0.6;
+        assert!(BanditRouter::new(c).is_err());
+        // quality outside [0, 1]
+        let mut c = BanditConfig::new(arms(), 0);
+        c.arms[0].1 = 1.5;
+        assert!(BanditRouter::new(c).is_err());
+        // split arm
+        let mut c = BanditConfig::new(arms(), 0);
+        c.arms[0].0 = VariantSpec::parse("split:plan:a@1,plan:b@1").unwrap();
+        assert!(BanditRouter::new(c).is_err());
+        // duplicate arms
+        let mut c = BanditConfig::new(arms(), 0);
+        c.arms[1].0 = VariantSpec::parse("plan:a").unwrap();
+        assert!(BanditRouter::new(c).is_err());
+        // bad tau
+        let mut c = BanditConfig::new(arms(), 0);
+        c.tau_us = 0.0;
+        assert!(BanditRouter::new(c).is_err());
+        // strategy strings
+        assert_eq!("thompson".parse::<BanditStrategy>().unwrap(), BanditStrategy::Thompson);
+        assert_eq!("ucb".parse::<BanditStrategy>().unwrap(), BanditStrategy::Ucb);
+        assert!("greedy".parse::<BanditStrategy>().is_err());
     }
 
     #[test]

@@ -21,10 +21,12 @@
 //! The admin plane lives on the handle: [`ModelHandle::register_plan`],
 //! [`ModelHandle::swap_plan`] (hot-swap the plan behind an alias without
 //! dropping in-flight requests), [`ModelHandle::set_traffic_split`]
-//! (deterministic seeded A/B routing), and per-variant
-//! [`MetricsSnapshot`]s.
+//! (deterministic seeded A/B routing), [`ModelHandle::set_routing_policy`]
+//! (outcome-aware bandit routing), [`ModelHandle::watch_plans`] (plan
+//! hot-reload from disk), and per-variant [`MetricsSnapshot`]s.
 
 use std::collections::{HashMap, HashSet};
+use std::path::Path;
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -42,8 +44,27 @@ use crate::util::rng::Rng;
 
 use super::batcher::{collect, BatchPolicy};
 use super::metrics::{shared, MetricsSnapshot, SharedMetrics};
-use super::router::{chunks, pick_batch, pick_weighted};
+use super::router::{chunks, pick_batch, pick_weighted, ArmStats, BanditConfig, BanditRouter};
 use super::variant::{Backend, VariantSpec};
+use super::watch;
+
+/// The outcome-aware router shared between the submit path (picks) and
+/// the shard worker (reward feedback); `None` = fixed-weight routing.
+type SharedBandit = Arc<Mutex<Option<BanditRouter>>>;
+
+/// How [`ModelHandle::submit_routed`] resolves a variant for each
+/// request (installed via [`ModelHandle::set_routing_policy`]).
+pub enum RoutingPolicy {
+    /// Fixed-weight routing: the installed traffic split
+    /// ([`ModelHandle::set_traffic_split`]), or `fp32` when none is set.
+    /// Installing this clears any bandit state.
+    Fixed,
+    /// Outcome-aware routing: a seeded [`BanditRouter`] over the given
+    /// arms learns per-arm rewards from live latency and shifts traffic
+    /// toward the winner, with the control arm pinned at the exploration
+    /// floor (docs/operations.md).
+    Bandit(BanditConfig),
+}
 
 /// A single inference request (one image), already resolved to a
 /// non-split variant.
@@ -251,13 +272,16 @@ impl ServerBuilder {
             let (tx, rx) = std::sync::mpsc::channel::<Msg>();
             let metrics = shared();
             let m2 = metrics.clone();
+            let bandit: SharedBandit = Arc::new(Mutex::new(None));
+            let b2 = bandit.clone();
             let worker_name = spec.name.clone();
             let scales = spec.act_scales.clone();
             let local = spec.local;
             let worker = std::thread::Builder::new()
                 .name(format!("overq-shard-{}", spec.name))
                 .spawn(move || {
-                    if let Err(e) = worker_loop(arts, worker_name, policy, scales, local, rx, m2)
+                    if let Err(e) =
+                        worker_loop(arts, worker_name, policy, scales, local, rx, m2, b2)
                     {
                         eprintln!("[coordinator] shard worker exited with error: {e:#}");
                     }
@@ -272,6 +296,7 @@ impl ServerBuilder {
                 metrics,
                 plans: Mutex::new(HashSet::new()),
                 split: Mutex::new(None),
+                bandit,
                 rng: Mutex::new(Rng::new(seed ^ (0x51AB_D001u64 + i as u64))),
             }));
         }
@@ -297,6 +322,10 @@ struct Shard {
     plans: Mutex<HashSet<String>>,
     /// Installed A/B traffic split, if any.
     split: Mutex<Option<Vec<(VariantSpec, f64)>>>,
+    /// Outcome-aware router, if installed; shared with the worker for
+    /// reward feedback. Takes precedence over `split` for routed
+    /// submits.
+    bandit: SharedBandit,
     /// Seeded router state for deterministic weighted arm picks.
     rng: Mutex<Rng>,
 }
@@ -483,17 +512,23 @@ impl ModelHandle {
         self.infer(image, &VariantSpec::parse(variant)?)
     }
 
-    /// Submit through the installed traffic split
-    /// ([`ModelHandle::set_traffic_split`]); `fp32` when none is set.
+    /// Submit through the installed routing policy: the bandit router
+    /// when one is installed ([`ModelHandle::set_routing_policy`]), else
+    /// the fixed traffic split ([`ModelHandle::set_traffic_split`]),
+    /// else `fp32`.
     pub fn submit_routed(&self, image: TensorF) -> Result<Receiver<InferResult>> {
-        let leaf = {
-            let split = self.shard.split.lock().unwrap();
-            match &*split {
-                // validated when installed by set_traffic_split_spec
-                Some(arms) => self.draw_arm(arms),
-                None => VariantSpec::Fp32 {
-                    backend: Backend::Auto,
-                },
+        let bandit_leaf = self.shard.bandit.lock().unwrap().as_mut().map(|b| b.pick());
+        let leaf = match bandit_leaf {
+            Some(leaf) => leaf,
+            None => {
+                let split = self.shard.split.lock().unwrap();
+                match &*split {
+                    // validated when installed by set_traffic_split_spec
+                    Some(arms) => self.draw_arm(arms),
+                    None => VariantSpec::Fp32 {
+                        backend: Backend::Auto,
+                    },
+                }
             }
         };
         self.submit_leaf(image, leaf)
@@ -573,6 +608,71 @@ impl ModelHandle {
         self.shard.split.lock().unwrap().clone()
     }
 
+    /// Install the routing policy behind [`ModelHandle::submit_routed`].
+    ///
+    /// `Bandit` validates every arm against this shard (same fail-fast
+    /// contract as [`ModelHandle::set_traffic_split`]), builds the
+    /// seeded [`BanditRouter`], and pins its control arm as the metrics
+    /// regret reference. `Fixed` tears the bandit down again; the plain
+    /// traffic split (if any) takes back over. In-flight requests are
+    /// unaffected either way — the policy only decides future submits.
+    pub fn set_routing_policy(&self, policy: RoutingPolicy) -> Result<()> {
+        match policy {
+            RoutingPolicy::Fixed => {
+                *self.shard.bandit.lock().unwrap() = None;
+                self.shard.metrics.lock().unwrap().control_arm = None;
+            }
+            RoutingPolicy::Bandit(cfg) => {
+                for (arm, _) in &cfg.arms {
+                    if !arm.is_split() {
+                        self.check_leaf(arm)?;
+                    }
+                }
+                // rejects splits, duplicate arms, bad floors/priors
+                let router = BanditRouter::new(cfg)?;
+                let control = router.control_key().to_string();
+                *self.shard.bandit.lock().unwrap() = Some(router);
+                self.shard.metrics.lock().unwrap().control_arm = Some(control);
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-arm bandit statistics (pulls, mean reward, control pin), or
+    /// `None` under fixed routing.
+    pub fn bandit_arms(&self) -> Option<Vec<ArmStats>> {
+        self.shard.bandit.lock().unwrap().as_ref().map(|b| b.arm_stats())
+    }
+
+    /// Watch `dir` for new/changed `*.plan.json` files and hot-swap
+    /// matching plans through the admin plane every `interval`
+    /// (docs/operations.md has the full lifecycle). Plan files already
+    /// on disk are applied synchronously before this returns, so their
+    /// `plan:<name>` variants are immediately servable. Rejected files
+    /// leave the previously served plan untouched and are surfaced via
+    /// [`MetricsSnapshot::watch_errors`]. Dropping the returned
+    /// [`watch::PlanWatcher`] stops the background poller.
+    pub fn watch_plans(
+        &self,
+        dir: impl AsRef<Path>,
+        interval: Duration,
+    ) -> Result<watch::PlanWatcher> {
+        let mut w = watch::PlanWatch::new(self.clone(), dir)?;
+        let _ = w.poll();
+        Ok(watch::spawn(w, interval))
+    }
+
+    /// Metrics hook for the plan watcher: one applied swap.
+    pub(crate) fn note_plan_swap(&self) {
+        self.shard.metrics.lock().unwrap().record_plan_swap();
+    }
+
+    /// Metrics hook for the plan watcher: one rejected plan file.
+    pub(crate) fn note_watch_error(&self, msg: &str) {
+        eprintln!("[coordinator] plan watch: {msg}");
+        self.shard.metrics.lock().unwrap().record_watch_error(msg);
+    }
+
     /// Point-in-time metrics for this shard (global + per-variant).
     pub fn metrics(&self) -> MetricsSnapshot {
         self.shard.metrics.lock().unwrap().snapshot()
@@ -616,6 +716,7 @@ struct WorkerState {
     plans: HashMap<String, DeploymentPlan>,
     scales: TensorF,
     metrics: SharedMetrics,
+    bandit: SharedBandit,
 }
 
 fn worker_loop(
@@ -626,6 +727,7 @@ fn worker_loop(
     native: Option<LoadedModel>,
     rx: std::sync::mpsc::Receiver<Msg>,
     metrics: SharedMetrics,
+    bandit: SharedBandit,
 ) -> Result<()> {
     let cache = match &arts {
         Some(a) => ExecutableCache::new(a)?,
@@ -641,6 +743,7 @@ fn worker_loop(
         plans: HashMap::new(),
         scales,
         metrics,
+        bandit,
     };
     while let Some(batch) = collect(&rx, &st.policy) {
         // apply control messages, then group inference FIFO by variant
@@ -724,6 +827,44 @@ fn run_group(st: &mut WorkerState, group: &[InferRequest]) -> Result<()> {
     }
 }
 
+/// Account one executed chunk: feed each request's e2e latency to the
+/// bandit (when outcome-aware routing is on), then record the batch,
+/// per-request latencies, and rewards under one metrics lock — batch
+/// and request counters stay mutually consistent for snapshots. The
+/// bandit and metrics locks are taken sequentially, never nested.
+fn account_chunk(
+    metrics: &SharedMetrics,
+    bandit: &SharedBandit,
+    key: &str,
+    reqs: &[InferRequest],
+    queue_start: Instant,
+    padded: usize,
+    exec: Duration,
+) {
+    let lats: Vec<(Duration, Duration)> = reqs
+        .iter()
+        .map(|r| (queue_start - r.submitted, r.submitted.elapsed()))
+        .collect();
+    let rewards: Vec<Option<f64>> = {
+        let mut guard = bandit.lock().unwrap();
+        match guard.as_mut() {
+            Some(b) => lats
+                .iter()
+                .map(|(_, e2e)| b.observe(key, e2e.as_micros() as f64))
+                .collect(),
+            None => vec![None; lats.len()],
+        }
+    };
+    let mut m = metrics.lock().unwrap();
+    m.record_batch(reqs.len(), padded, exec);
+    for ((queue, e2e), reward) in lats.iter().zip(&rewards) {
+        m.record_request(key, *queue, *e2e);
+        if let Some(r) = reward {
+            m.record_reward(key, *r);
+        }
+    }
+}
+
 /// Ensure the native model is loaded (in-process handoff or artifacts).
 fn native_model(st: &mut WorkerState) -> Result<&LoadedModel> {
     if st.native.is_none() {
@@ -744,6 +885,7 @@ fn run_group_native(
     let max_batch = st.policy.max_batch.max(1);
     let key = group[0].spec.key();
     let metrics = st.metrics.clone();
+    let bandit = st.bandit.clone();
     let model = native_model(st)?;
     if let Some(qc) = qc {
         anyhow::ensure!(
@@ -778,13 +920,15 @@ fn run_group_native(
         };
         let exec = t0.elapsed();
         let classes = logits.dims()[1];
-        {
-            let mut m = metrics.lock().unwrap();
-            m.record_batch(take, 0, exec);
-            for req in &group[done..done + take] {
-                m.record_request(&key, queue_start - req.submitted, req.submitted.elapsed());
-            }
-        }
+        account_chunk(
+            &metrics,
+            &bandit,
+            &key,
+            &group[done..done + take],
+            queue_start,
+            0,
+            exec,
+        );
         for (slot, req) in group[done..done + take].iter().enumerate() {
             let resp = InferResponse {
                 logits: logits.data[slot * classes..(slot + 1) * classes].to_vec(),
@@ -833,13 +977,15 @@ fn run_group_pjrt(
         let logits = exe.run_f32(&inputs)?;
         let exec = t0.elapsed();
         let classes = logits.dims()[1];
-        {
-            let mut m = st.metrics.lock().unwrap();
-            m.record_batch(take, exe_batch - take, exec);
-            for req in &group[done..done + take] {
-                m.record_request(&key, queue_start - req.submitted, req.submitted.elapsed());
-            }
-        }
+        account_chunk(
+            &st.metrics,
+            &st.bandit,
+            &key,
+            &group[done..done + take],
+            queue_start,
+            exe_batch - take,
+            exec,
+        );
         for (slot, req) in group[done..done + take].iter().enumerate() {
             let resp = InferResponse {
                 logits: logits.data[slot * classes..(slot + 1) * classes].to_vec(),

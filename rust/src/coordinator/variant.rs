@@ -146,6 +146,22 @@ impl VariantSpec {
 
     /// Build a split from `(variant, weight)` string pairs (the
     /// `set_traffic_split` argument shape).
+    ///
+    /// This is the fixed-weight A/B routing example from
+    /// `docs/serving.md` and `docs/operations.md`, runnable:
+    ///
+    /// ```
+    /// use overq::coordinator::VariantSpec;
+    ///
+    /// // 90% of routed traffic to the tuned plan, 10% to the control
+    /// let split = VariantSpec::split(&[("plan:a", 0.9), ("plan:b", 0.1)])?;
+    /// assert_eq!(split.to_string(), "split:plan:a@0.9,plan:b@0.1");
+    ///
+    /// // the same invariants as the parsed grammar apply
+    /// assert!(VariantSpec::split(&[]).is_err());
+    /// assert!(VariantSpec::split(&[("plan:a", -0.5)]).is_err());
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn split(pairs: &[(&str, f64)]) -> Result<VariantSpec> {
         let mut arms = Vec::with_capacity(pairs.len());
         for (v, w) in pairs {

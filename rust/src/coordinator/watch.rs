@@ -1,0 +1,269 @@
+//! Plan hot-reload: watch `plans/*.plan.json` on disk and swap plans
+//! through the admin plane, no operator in the loop.
+//!
+//! The deployment story OverQ targets (paper §1) is a service provider
+//! re-tuning customer plans offline and shipping the winners by writing
+//! plan files — the serving layer must pick them up without a restart
+//! and without an admin call. [`PlanWatch`] is the synchronous core: one
+//! [`PlanWatch::poll`] scans the directory once, loads changed files
+//! through the versioned schema loader (`policy::DeploymentPlan::load`,
+//! v1 and v2 both accepted), and applies each matching plan with
+//! [`super::ModelHandle::swap_plan`] — which the coordinator already
+//! guarantees is atomic with respect to in-flight requests. A bad file
+//! (unparseable JSON, schema violation, wrong model coverage) is
+//! *rejected with the previously served plan left untouched*; the error
+//! is counted in the shard metrics (`watch_errors`, `last_watch_error`)
+//! and returned in the [`WatchReport`].
+//!
+//! [`spawn`] (or the convenience [`super::ModelHandle::watch_plans`])
+//! wraps a `PlanWatch` in a background polling thread; dropping the
+//! returned [`PlanWatcher`] stops it. Tests drive `poll` directly so
+//! reload edge cases stay deterministic.
+//!
+//! Several shards may watch the same directory: each one applies only
+//! the plans tuned for its own model and silently skips the rest, so a
+//! single `plans/` drop-box can feed a whole multi-model coordinator.
+//! See `docs/operations.md` for the day-2 lifecycle.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, SystemTime};
+
+use anyhow::{Context, Result};
+
+use super::server::ModelHandle;
+use crate::policy::DeploymentPlan;
+
+/// Cheap change signature for one watched file. The mtime+len pair
+/// decides whether the file is re-read at all; the FNV-1a content hash
+/// then suppresses spurious re-applies when the metadata changed but
+/// the content did not (touch(1), rename-into-place of identical
+/// bytes). A rewrite that keeps both length and mtime (possible on
+/// filesystems with coarse timestamps) is not detected until either
+/// changes — writers should rename a new file into place, which always
+/// refreshes the metadata.
+#[derive(Clone, Copy, PartialEq, Eq)]
+struct FileSig {
+    mtime: SystemTime,
+    len: u64,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Outcome of one [`PlanWatch::poll`].
+#[derive(Clone, Debug, Default)]
+pub struct WatchReport {
+    /// Plan aliases swapped (or first registered) this poll.
+    pub applied: Vec<String>,
+    /// Files whose new content was rejected; the previously served plan
+    /// (if any) keeps serving. One entry per content *change*, not per
+    /// poll — an unchanged bad file is not re-reported.
+    pub errors: Vec<(PathBuf, String)>,
+    /// `*.plan.json` files seen in the directory this poll.
+    pub scanned: usize,
+    /// Files skipped because their plan targets another model.
+    pub skipped_other_model: usize,
+}
+
+/// Synchronous plan-directory watcher for one model shard. Create it
+/// with [`PlanWatch::new`], then either call [`PlanWatch::poll`]
+/// yourself (deterministic — what the tests do) or hand it to [`spawn`]
+/// for a background polling loop.
+pub struct PlanWatch {
+    handle: ModelHandle,
+    dir: PathBuf,
+    seen: HashMap<PathBuf, (FileSig, u64)>,
+    /// Last directory-level error (e.g. the directory vanished), so a
+    /// persistent condition is reported once, not once per poll.
+    dir_error: Option<String>,
+}
+
+impl PlanWatch {
+    /// Watch `dir` for the model behind `handle`. The directory must
+    /// exist; nothing is scanned until the first [`PlanWatch::poll`].
+    pub fn new(handle: ModelHandle, dir: impl AsRef<Path>) -> Result<PlanWatch> {
+        let dir = dir.as_ref().to_path_buf();
+        anyhow::ensure!(
+            dir.is_dir(),
+            "plan watch directory {} does not exist",
+            dir.display()
+        );
+        Ok(PlanWatch {
+            handle,
+            dir,
+            seen: HashMap::new(),
+            dir_error: None,
+        })
+    }
+
+    /// The watched directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Scan once: load every new/changed `*.plan.json`, swap matching
+    /// plans through the admin plane, reject bad files with the old plan
+    /// left serving. Never panics on filesystem races — a file that
+    /// vanishes mid-scan is just skipped until the next poll.
+    pub fn poll(&mut self) -> WatchReport {
+        let mut report = WatchReport::default();
+        let entries = match std::fs::read_dir(&self.dir) {
+            Ok(e) => {
+                self.dir_error = None;
+                e
+            }
+            Err(e) => {
+                // a persistent condition (directory deleted) is reported
+                // once, not on all of the following polls
+                let msg = format!("read_dir: {e}");
+                if self.dir_error.as_deref() != Some(msg.as_str()) {
+                    self.dir_error = Some(msg.clone());
+                    self.surface_error(&mut report, self.dir.clone(), msg);
+                }
+                return report;
+            }
+        };
+        let mut paths: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.ends_with(".plan.json"))
+                    .unwrap_or(false)
+            })
+            .collect();
+        // deterministic apply order regardless of readdir order
+        paths.sort();
+        // forget vanished files: the registered plan keeps serving (the
+        // admin plane has no unregister — see docs/operations.md), but a
+        // file recreated later must count as new content and re-apply
+        self.seen.retain(|p, _| paths.contains(p));
+        for path in paths {
+            report.scanned += 1;
+            let Ok(meta) = std::fs::metadata(&path) else {
+                continue; // vanished mid-scan
+            };
+            let sig = FileSig {
+                mtime: meta.modified().unwrap_or(SystemTime::UNIX_EPOCH),
+                len: meta.len(),
+            };
+            if self.seen.get(&path).map(|(s, _)| *s == sig).unwrap_or(false) {
+                continue; // fast path: metadata unchanged
+            }
+            let Ok(bytes) = std::fs::read(&path) else {
+                continue; // vanished mid-scan
+            };
+            let hash = fnv1a(&bytes);
+            if self
+                .seen
+                .get(&path)
+                .map(|(_, h)| *h == hash)
+                .unwrap_or(false)
+            {
+                // content identical (e.g. touch(1)): refresh the sig only
+                self.seen.insert(path.clone(), (sig, hash));
+                continue;
+            }
+            // record the content as seen whether or not it applies, so a
+            // bad or foreign file is diagnosed once, not every poll
+            self.seen.insert(path.clone(), (sig, hash));
+            match self.load_and_apply(&path, &bytes) {
+                Ok(Some(alias)) => report.applied.push(alias),
+                Ok(None) => report.skipped_other_model += 1,
+                Err(e) => self.surface_error(&mut report, path, format!("{e:#}")),
+            }
+        }
+        report
+    }
+
+    /// Parse + validate one plan file and swap it in if it targets this
+    /// shard's model. `Ok(None)` = valid plan for another model.
+    fn load_and_apply(&self, path: &Path, bytes: &[u8]) -> Result<Option<String>> {
+        let text = std::str::from_utf8(bytes).context("plan file is not UTF-8")?;
+        let value = crate::util::json::parse(text)
+            .map_err(|e| anyhow::anyhow!("json parse: {e}"))?;
+        let plan = DeploymentPlan::from_json(&value)
+            .with_context(|| format!("parse plan {}", path.display()))?;
+        if plan.model != self.handle.model_name() {
+            return Ok(None);
+        }
+        let alias = plan.name.clone();
+        self.handle.swap_plan(&alias, plan)?;
+        self.handle.note_plan_swap();
+        Ok(Some(alias))
+    }
+
+    fn surface_error(&self, report: &mut WatchReport, path: PathBuf, msg: String) {
+        let full = format!("{}: {msg}", path.display());
+        self.handle.note_watch_error(&full);
+        report.errors.push((path, msg));
+    }
+}
+
+/// Handle to a background plan-watch thread. Dropping it (or calling
+/// [`PlanWatcher::stop`]) stops the polling loop and joins the thread.
+pub struct PlanWatcher {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PlanWatcher {
+    /// Stop polling and join the watcher thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for PlanWatcher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Run `watch` on a background thread, polling every `interval`. The
+/// thread polls immediately on startup, but that first scan races any
+/// traffic submitted right after this returns — call
+/// [`PlanWatch::poll`] synchronously first if startup registration must
+/// be ordered before traffic (which is what
+/// [`super::ModelHandle::watch_plans`] does).
+pub fn spawn(mut watch: PlanWatch, interval: Duration) -> PlanWatcher {
+    let stop = Arc::new(AtomicBool::new(false));
+    let flag = stop.clone();
+    let thread = std::thread::Builder::new()
+        .name(format!("overq-watch-{}", watch.handle.model_name()))
+        .spawn(move || {
+            while !flag.load(Ordering::Relaxed) {
+                let _ = watch.poll();
+                // sleep in small slices so stop() returns promptly even
+                // with long poll intervals
+                let mut left = interval;
+                while !flag.load(Ordering::Relaxed) && left > Duration::ZERO {
+                    let nap = left.min(Duration::from_millis(20));
+                    std::thread::sleep(nap);
+                    left = left.saturating_sub(nap);
+                }
+            }
+        })
+        .expect("spawn plan watcher");
+    PlanWatcher {
+        stop,
+        thread: Some(thread),
+    }
+}

@@ -25,7 +25,10 @@
 //! * [`runtime`] — PJRT client (via the `xla` crate) that loads the AOT
 //!   HLO artifacts produced by `python/compile/aot.py`.
 //! * [`coordinator`] — the serving layer: request router, dynamic
-//!   batcher and worker pool over compiled executables.
+//!   batcher and worker pool over compiled executables, plus the
+//!   closed-loop plan operations: outcome-aware bandit routing
+//!   ([`coordinator::router::BanditRouter`]) and plan hot-reload from
+//!   disk ([`coordinator::watch`]).
 //! * [`harness`] — experiment drivers regenerating every table/figure of
 //!   the paper (Table 1-3, Figure 6a/6b) plus the hardware comparison.
 //! * [`util`] — offline-registry substitutes: deterministic RNG, JSON,

@@ -11,7 +11,7 @@
 use anyhow::{Context, Result};
 
 use overq::coordinator::batcher::BatchPolicy;
-use overq::coordinator::{Coordinator, VariantSpec};
+use overq::coordinator::{BanditConfig, Coordinator, RoutingPolicy, VariantSpec};
 use overq::data::shapes;
 use overq::harness::{calibrate, fig6a, fig6b, hwcmp, policy, table1, table2, table3};
 use overq::models::zoo::LoadedModel;
@@ -49,9 +49,15 @@ COMMANDS (system):
              [--models m1,m2 | --model resnet18m] [--variant full_c4]
              [--plan plans/a.plan.json,plans/b.plan.json]
              [--split plan:a@0.9,plan:b@0.1] [--requests 64 --seed 4242]
+             [--routing fixed|bandit --explore 0.05 --strategy thompson|ucb]
+             [--watch-plans plans/ --watch-interval-ms 500]
              each plan is registered on its model's shard; --split
              installs deterministic weighted A/B routing on the first
-             model and reports per-variant p50/p95 (docs/serving.md)
+             model and reports per-variant p50/p95 (docs/serving.md);
+             --routing bandit replaces the fixed weights with outcome-
+             aware ones learned from live latency (control arm pinned at
+             the exploration floor), and --watch-plans hot-reloads
+             *.plan.json changes from disk (docs/operations.md)
   eval       native-engine accuracy for one config
              [--model resnet18m --bits 4 --cascade 4 --std-t 6 --mode full|ro|base]
   info       artifact manifest summary
@@ -361,10 +367,86 @@ fn serve(args: &Args) -> Result<()> {
         coord.model(&plan.model)?.register_plan(plan.clone())?;
     }
 
-    // traffic goes to the first model: --split > --plan > --variant
+    // plan hot-reload: one watcher per hosted model on the same
+    // directory; each shard applies only its own model's plan files.
+    // Kept alive until the end of the run (dropping a watcher stops it).
+    let mut watchers = Vec::new();
+    if let Some(dir) = args.get("watch-plans") {
+        let interval =
+            std::time::Duration::from_millis(args.get_usize("watch-interval-ms", 500) as u64);
+        for name in &names {
+            watchers.push(coord.model(name)?.watch_plans(dir, interval)?);
+        }
+        println!(
+            "watching {dir} for *.plan.json changes ({} model(s), every {} ms)",
+            names.len(),
+            interval.as_millis()
+        );
+    }
+
+    // traffic goes to the first model: --routing bandit > --split >
+    // --plan > --variant
     let target = names[0].clone();
     let handle = coord.model(&target)?;
-    let spec: Option<VariantSpec> = if let Some(split) = args.get("split") {
+    let routing = args.get_or("routing", "fixed");
+    anyhow::ensure!(
+        matches!(routing, "fixed" | "bandit"),
+        "--routing expects fixed|bandit, got {routing:?}"
+    );
+    let spec: Option<VariantSpec> = if routing == "bandit" {
+        anyhow::ensure!(
+            args.get("split").is_none(),
+            "--routing bandit and --split are mutually exclusive (the bandit \
+             learns its own weights)"
+        );
+        // arms = every --plan tuned for the target model, quality prior =
+        // probe accuracy when the refinement stage ran, mean coverage
+        // otherwise; --watch-plans keeps swapping content behind these
+        // aliases while the bandit routes across them
+        let mut arms: Vec<(VariantSpec, f64)> = Vec::new();
+        for p in plans.iter().filter(|p| p.model == target) {
+            let quality = p
+                .probe
+                .map(|pr| pr.accuracy)
+                .unwrap_or(p.mean_coverage)
+                .clamp(0.0, 1.0);
+            arms.push((VariantSpec::parse(&format!("plan:{}", p.name))?, quality));
+        }
+        anyhow::ensure!(
+            !arms.is_empty(),
+            "--routing bandit needs at least one --plan for model {target:?}"
+        );
+        // pinned control arm: the global-baseline plan for synthetic
+        // models (harness::policy::baseline_plan), native fp32 otherwise
+        let control = if target.starts_with("synth") {
+            let model = synth_model(&target, 42)?;
+            let (images, _) = shapes::gen_batch(4242, 0, 32);
+            let base = policy::baseline_plan(
+                &model,
+                &images,
+                &AutotuneConfig::default(),
+                "baseline-control",
+            )?;
+            let quality = base.mean_coverage.clamp(0.0, 1.0);
+            handle.register_plan(base)?;
+            (VariantSpec::parse("plan:baseline-control")?, quality)
+        } else {
+            (VariantSpec::parse("native_fp32")?, 1.0)
+        };
+        let control_idx = arms.len();
+        arms.push(control);
+        let mut cfg = BanditConfig::new(arms, control_idx);
+        cfg.explore_floor = args.get_f64("explore", cfg.explore_floor);
+        cfg.strategy = args.get_or("strategy", "thompson").parse()?;
+        cfg.seed = seed;
+        println!(
+            "bandit routing on {target}: {} arms, control pinned at floor {}",
+            cfg.arms.len(),
+            cfg.explore_floor
+        );
+        handle.set_routing_policy(RoutingPolicy::Bandit(cfg))?;
+        None // routed through the bandit
+    } else if let Some(split) = args.get("split") {
         // `--split plan:a@0.9,plan:b@0.1` — the `split:` prefix of the
         // VariantSpec grammar is implied (but also accepted)
         let text = if split.starts_with("split:") {
@@ -389,32 +471,40 @@ fn serve(args: &Args) -> Result<()> {
     let route = spec
         .as_ref()
         .map(|s| s.to_string())
-        .unwrap_or_else(|| "split".to_string());
+        .unwrap_or_else(|| if routing == "bandit" { "bandit" } else { "split" }.to_string());
 
+    // the bandit learns from completed requests, so drive it in small
+    // closed-loop windows; fixed routing keeps the open-loop firehose
+    let window = if routing == "bandit" { 8 } else { requests };
     let mut correct = 0usize;
     let t0 = std::time::Instant::now();
-    let mut pending = Vec::new();
-    let mut labels = Vec::new();
-    for i in 0..requests {
-        let (img, label) = shapes::gen_image(seed, i as u64);
-        labels.push(label);
-        pending.push(match &spec {
-            Some(s) => handle.submit(img, s)?,
-            None => handle.submit_routed(img)?,
-        });
-    }
-    for (i, rx) in pending.into_iter().enumerate() {
-        let resp = rx.recv()?.map_err(|e| anyhow::anyhow!("{e}"))?;
-        let pred = resp
-            .logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0 as i32;
-        if pred == labels[i] {
-            correct += 1;
+    let mut done = 0usize;
+    while done < requests {
+        let take = window.min(requests - done);
+        let mut pending = Vec::with_capacity(take);
+        let mut labels = Vec::with_capacity(take);
+        for i in done..done + take {
+            let (img, label) = shapes::gen_image(seed, i as u64);
+            labels.push(label);
+            pending.push(match &spec {
+                Some(s) => handle.submit(img, s)?,
+                None => handle.submit_routed(img)?,
+            });
         }
+        for (k, rx) in pending.into_iter().enumerate() {
+            let resp = rx.recv()?.map_err(|e| anyhow::anyhow!("{e}"))?;
+            let pred = resp
+                .logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as i32;
+            if pred == labels[k] {
+                correct += 1;
+            }
+        }
+        done += take;
     }
     let wall = t0.elapsed();
     let ms = handle.metrics();
@@ -442,6 +532,34 @@ fn serve(args: &Args) -> Result<()> {
             vs.p95_e2e_us / 1e3,
         );
     }
+    if let Some(arms) = handle.bandit_arms() {
+        println!("  bandit arms (* = pinned control):");
+        for a in &arms {
+            println!(
+                "  {}{:<27} {:>6} pulls | mean reward {:.3}",
+                if a.is_control { "*" } else { " " },
+                a.key,
+                a.pulls,
+                a.mean_reward,
+            );
+        }
+        println!(
+            "  regret vs control {:.3} (negative = the bandit beat the control arm)",
+            ms.regret_vs_control
+        );
+    }
+    if ms.plan_swaps > 0 || ms.watch_errors > 0 {
+        println!(
+            "  plan watch: {} swap(s), {} rejected file(s){}",
+            ms.plan_swaps,
+            ms.watch_errors,
+            ms.last_watch_error
+                .as_ref()
+                .map(|e| format!(" — last: {e}"))
+                .unwrap_or_default(),
+        );
+    }
+    drop(watchers); // stop the pollers before joining the workers
     coord.shutdown();
     Ok(())
 }

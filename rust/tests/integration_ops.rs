@@ -1,0 +1,479 @@
+//! Plan operations end-to-end: outcome-aware bandit routing and plan
+//! hot-reload from disk (docs/operations.md).
+//!
+//! Everything runs artifact-free on the synthetic zoo. The watch tests
+//! drive `PlanWatch::poll` synchronously so reload edge cases stay
+//! deterministic; one test exercises the background poller thread with
+//! a bounded wait.
+
+use std::time::Duration;
+
+use overq::coordinator::batcher::BatchPolicy;
+use overq::coordinator::{
+    BanditConfig, Coordinator, ModelHandle, PlanWatch, RoutingPolicy, VariantSpec,
+};
+use overq::data::shapes;
+use overq::harness::policy::baseline_plan;
+use overq::models::synth_model;
+use overq::policy::{autotune, AutotuneConfig, DeploymentPlan};
+use overq::tensor::TensorF;
+use overq::util::json::Value;
+
+const IMG_SZ: usize = 16 * 16 * 3;
+
+fn img_of(src: &TensorF, i: usize) -> TensorF {
+    TensorF::from_vec(
+        &[16, 16, 3],
+        src.data[i * IMG_SZ..(i + 1) * IMG_SZ].to_vec(),
+    )
+}
+
+/// Tuned + baseline plans for `synth-tiny`, named `tuned` / `base`.
+fn tiny_plans(seed: u64) -> (DeploymentPlan, DeploymentPlan) {
+    let model = synth_model("synth-tiny", seed).unwrap();
+    let (images, _) = shapes::gen_batch(seed, 0, 8);
+    let cfg = AutotuneConfig {
+        plan_name: Some("tuned".into()),
+        ..AutotuneConfig::default()
+    };
+    let tuned = autotune(&model, &images, &cfg).unwrap().plan;
+    let base = baseline_plan(&model, &images, &cfg, "base").unwrap();
+    (tuned, base)
+}
+
+/// Fresh scratch directory under the system temp dir.
+fn fresh_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("overq_ops_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Drive `n` routed requests in closed-loop windows of 8 so the bandit
+/// receives reward feedback while it routes.
+fn drive_routed(handle: &ModelHandle, load: &TensorF, n: usize) {
+    let mut done = 0usize;
+    while done < n {
+        let take = 8.min(n - done);
+        let mut pending = Vec::with_capacity(take);
+        for i in done..done + take {
+            pending.push(handle.submit_routed(img_of(load, i)).unwrap());
+        }
+        for rx in pending {
+            rx.recv().expect("response lost").expect("routed request failed");
+        }
+        done += take;
+    }
+}
+
+/// Acceptance: with two plan arms of strictly different reward (quality
+/// priors 0.9 vs 0.2 at comparable latency), the seeded bandit shifts
+/// ≥70% of traffic to the better arm within 1000 requests, while the
+/// pinned control arm keeps receiving at least the exploration floor,
+/// and snapshot regret-vs-control goes negative (the bandit beat the
+/// control).
+#[test]
+fn bandit_shifts_traffic_and_pins_control() {
+    let (tuned, base) = tiny_plans(21);
+    let coord = Coordinator::builder()
+        .policy(BatchPolicy::default())
+        .seed(4242)
+        .model_local(synth_model("synth-tiny", 21).unwrap())
+        .build()
+        .unwrap();
+    let h = coord.model("synth-tiny").unwrap();
+    h.register_plan(tuned).unwrap();
+    h.register_plan(base).unwrap();
+
+    let mut cfg = BanditConfig::new(
+        vec![
+            (VariantSpec::parse("plan:tuned").unwrap(), 0.9),
+            (VariantSpec::parse("plan:base").unwrap(), 0.2),
+        ],
+        1, // control = plan:base
+    );
+    cfg.seed = 7;
+    let floor = cfg.explore_floor;
+    h.set_routing_policy(RoutingPolicy::Bandit(cfg)).unwrap();
+
+    let n = 1000usize;
+    let (load, _) = shapes::gen_batch(77, 0, n);
+    drive_routed(&h, &load, n);
+
+    let m = h.metrics();
+    assert_eq!(m.requests, n as u64, "metrics lost requests");
+    assert_eq!(m.control_arm.as_deref(), Some("plan:base"));
+
+    let tuned_frac = m.per_variant["plan:tuned"].requests as f64 / n as f64;
+    assert!(tuned_frac >= 0.7, "better arm only got {tuned_frac}");
+    let ctrl = m.per_variant["plan:base"].requests as f64 / n as f64;
+    assert!(
+        ctrl >= 0.5 * floor,
+        "control starved at {ctrl} (floor {floor})"
+    );
+    // every routed request fed a reward back to its arm
+    assert_eq!(
+        m.per_variant["plan:tuned"].pulls,
+        m.per_variant["plan:tuned"].requests
+    );
+    assert_eq!(
+        m.per_variant["plan:base"].pulls,
+        m.per_variant["plan:base"].requests
+    );
+    assert!(
+        m.per_variant["plan:tuned"].mean_reward > m.per_variant["plan:base"].mean_reward,
+        "reward ordering inverted"
+    );
+    assert!(
+        m.regret_vs_control < 0.0,
+        "expected negative regret (bandit beats control), got {}",
+        m.regret_vs_control
+    );
+
+    // the handle mirrors the same stats with the control pin
+    let arms = h.bandit_arms().expect("bandit installed");
+    assert_eq!(arms.len(), 2);
+    assert!(arms.iter().any(|a| a.key == "plan:base" && a.is_control));
+    coord.shutdown();
+}
+
+#[test]
+fn set_routing_policy_validates_and_clears() {
+    let (tuned, base) = tiny_plans(5);
+    let coord = Coordinator::builder()
+        .model_local(synth_model("synth-tiny", 5).unwrap())
+        .build()
+        .unwrap();
+    let h = coord.model("synth-tiny").unwrap();
+    h.register_plan(tuned).unwrap();
+    h.register_plan(base).unwrap();
+
+    let arms = |a: &str, b: &str| {
+        vec![
+            (VariantSpec::parse(a).unwrap(), 0.9),
+            (VariantSpec::parse(b).unwrap(), 0.3),
+        ]
+    };
+    // an unregistered plan arm fails fast, like set_traffic_split
+    let err = h
+        .set_routing_policy(RoutingPolicy::Bandit(BanditConfig::new(
+            arms("plan:tuned", "plan:nope"),
+            1,
+        )))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("no registered plan"), "{err:#}");
+    assert!(h.bandit_arms().is_none(), "failed install left state behind");
+
+    // a bad exploration floor is rejected by the router's validation
+    let mut cfg = BanditConfig::new(arms("plan:tuned", "plan:base"), 1);
+    cfg.explore_floor = 0.9;
+    assert!(h.set_routing_policy(RoutingPolicy::Bandit(cfg)).is_err());
+
+    // valid install → Fixed clears it and the metrics control pin
+    h.set_routing_policy(RoutingPolicy::Bandit(BanditConfig::new(
+        arms("plan:tuned", "plan:base"),
+        1,
+    )))
+    .unwrap();
+    assert!(h.bandit_arms().is_some());
+    assert_eq!(h.metrics().control_arm.as_deref(), Some("plan:base"));
+    h.set_routing_policy(RoutingPolicy::Fixed).unwrap();
+    assert!(h.bandit_arms().is_none());
+    assert_eq!(h.metrics().control_arm, None);
+
+    // with the bandit gone, routed traffic falls back to fp32
+    let resp = h.infer_routed(shapes::gen_image(1, 0).0).unwrap();
+    assert!(!resp.logits.is_empty());
+    assert_eq!(h.metrics().per_variant["fp32"].pulls, 0);
+    coord.shutdown();
+}
+
+/// Acceptance: editing a watched plan file on disk swaps the served
+/// plan without dropping any in-flight request — requests submitted
+/// before the poll all complete (on either plan), requests after it
+/// deterministically run the new plan's numerics.
+#[test]
+fn watch_swaps_edited_plan_without_dropping_inflight() {
+    let dir = fresh_dir("swap");
+    let tiny = synth_model("synth-tiny", 13).unwrap();
+    let (images, _) = shapes::gen_batch(13, 0, 8);
+    let cfg = AutotuneConfig {
+        plan_name: Some("a".into()),
+        ..AutotuneConfig::default()
+    };
+    let plan_a = autotune(&tiny, &images, &cfg).unwrap().plan;
+    // the on-disk replacement keeps the alias "a" but runs the baseline
+    let mut plan_b = baseline_plan(&tiny, &images, &cfg, "b").unwrap();
+    plan_b.name = "a".into();
+    let (qc_a, qc_b) = (plan_a.to_quant_config(), plan_b.to_quant_config());
+
+    let n = 200usize;
+    let classes = tiny.engine.num_classes().expect("classifier head");
+    let (load, _) = shapes::gen_batch(55, 0, n);
+    let ref_a = tiny.engine.forward_quant(&load, &qc_a).unwrap();
+    let ref_b = tiny.engine.forward_quant(&load, &qc_b).unwrap();
+
+    let coord = Coordinator::builder().model_local(tiny).build().unwrap();
+    let h = coord.model("synth-tiny").unwrap();
+    let path = dir.join("a.plan.json");
+    plan_a.save(&path).unwrap();
+
+    let mut watch = PlanWatch::new(h.clone(), &dir).unwrap();
+    let report = watch.poll();
+    assert_eq!(report.applied, vec!["a".to_string()], "initial registration");
+    assert!(report.errors.is_empty());
+    assert_eq!(h.metrics().plan_swaps, 1);
+
+    let spec: VariantSpec = "plan:a".parse().unwrap();
+    let half = n / 2;
+    let mut pre = Vec::new();
+    for i in 0..half {
+        pre.push(h.submit(img_of(&load, i), &spec).unwrap());
+    }
+    // edit the file while the first half is in flight, then poll
+    plan_b.save(&path).unwrap();
+    let report = watch.poll();
+    assert_eq!(report.applied, vec!["a".to_string()], "edited file swapped");
+    assert_eq!(h.metrics().plan_swaps, 2);
+    let mut post = Vec::new();
+    for i in half..n {
+        post.push(h.submit(img_of(&load, i), &spec).unwrap());
+    }
+
+    for (i, rx) in pre.into_iter().enumerate() {
+        let resp = rx.recv().expect("response lost").expect("pre-swap request failed");
+        let row_a = &ref_a.data[i * classes..(i + 1) * classes];
+        let row_b = &ref_b.data[i * classes..(i + 1) * classes];
+        assert!(
+            resp.logits == row_a || resp.logits == row_b,
+            "pre-swap request {i} matches neither plan"
+        );
+    }
+    for (k, rx) in post.into_iter().enumerate() {
+        let i = half + k;
+        let resp = rx.recv().expect("response lost").expect("post-swap request failed");
+        assert_eq!(
+            resp.logits,
+            ref_b.data[i * classes..(i + 1) * classes].to_vec(),
+            "post-swap request {i} did not run the reloaded plan"
+        );
+    }
+    // an unchanged file is not re-applied on the next poll
+    let report = watch.poll();
+    assert!(report.applied.is_empty());
+    assert_eq!(h.metrics().plan_swaps, 2);
+    coord.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A watched file replaced with invalid JSON mid-watch: the old plan
+/// keeps serving, the error is surfaced in metrics (once per content
+/// change, not once per poll), and a later fix swaps in cleanly.
+#[test]
+fn watch_rejects_bad_file_and_old_plan_keeps_serving() {
+    let dir = fresh_dir("badfile");
+    let tiny = synth_model("synth-tiny", 17).unwrap();
+    let (images, _) = shapes::gen_batch(17, 0, 8);
+    let cfg = AutotuneConfig {
+        plan_name: Some("a".into()),
+        ..AutotuneConfig::default()
+    };
+    let plan_a = autotune(&tiny, &images, &cfg).unwrap().plan;
+    let qc_a = plan_a.to_quant_config();
+    let (load, _) = shapes::gen_batch(56, 0, 8);
+    let ref_a = tiny.engine.forward_quant(&load, &qc_a).unwrap();
+    let classes = tiny.engine.num_classes().unwrap();
+
+    let coord = Coordinator::builder().model_local(tiny).build().unwrap();
+    let h = coord.model("synth-tiny").unwrap();
+    let path = dir.join("a.plan.json");
+    plan_a.save(&path).unwrap();
+    let mut watch = PlanWatch::new(h.clone(), &dir).unwrap();
+    assert_eq!(watch.poll().applied.len(), 1);
+
+    // corrupt the file: rejected, old plan untouched
+    std::fs::write(&path, "{definitely not a plan").unwrap();
+    let report = watch.poll();
+    assert!(report.applied.is_empty());
+    assert_eq!(report.errors.len(), 1, "corrupt file not reported");
+    let m = h.metrics();
+    assert_eq!(m.watch_errors, 1);
+    assert!(
+        m.last_watch_error.as_deref().unwrap_or("").contains("a.plan.json"),
+        "last_watch_error should name the file: {:?}",
+        m.last_watch_error
+    );
+    // same bad content is not re-reported every poll
+    assert!(watch.poll().errors.is_empty());
+    assert_eq!(h.metrics().watch_errors, 1);
+
+    // schema-level rejection too: valid JSON, invalid plan (bad wbits)
+    let Value::Obj(mut top) = plan_a.to_json() else { panic!("plan json") };
+    if let Some(Value::Arr(layers)) = top.get_mut("layers") {
+        if let Some(Value::Obj(l0)) = layers.first_mut() {
+            l0.insert("wbits".into(), Value::Num(1.0));
+        }
+    }
+    std::fs::write(&path, Value::Obj(top).to_json()).unwrap();
+    let report = watch.poll();
+    assert!(report.applied.is_empty());
+    assert_eq!(report.errors.len(), 1, "schema violation not reported");
+    assert_eq!(h.metrics().watch_errors, 2);
+
+    // the original plan still serves with its original numerics
+    let resp = h.infer(img_of(&load, 0), &"plan:a".parse().unwrap()).unwrap();
+    assert_eq!(resp.logits, ref_a.data[0..classes].to_vec());
+
+    // and a later good rewrite swaps in
+    plan_a.save(&path).unwrap();
+    // saving identical content is a content change vs the bad file
+    assert_eq!(watch.poll().applied, vec!["a".to_string()]);
+    coord.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A v1 plan file on disk loads (wbits defaulted), and upgrading the
+/// file in place to the v2 schema swaps without a restart.
+#[test]
+fn watch_handles_v1_file_and_v2_upgrade() {
+    let dir = fresh_dir("v1v2");
+    let tiny = synth_model("synth-tiny", 23).unwrap();
+    let (images, _) = shapes::gen_batch(23, 0, 8);
+    let cfg = AutotuneConfig {
+        plan_name: Some("a".into()),
+        ..AutotuneConfig::default()
+    };
+    let plan_v2 = autotune(&tiny, &images, &cfg).unwrap().plan;
+
+    // strip the v2 fields to produce a faithful v1-era file
+    let Value::Obj(mut top) = plan_v2.to_json() else { panic!("plan json") };
+    top.insert("version".into(), Value::Num(1.0));
+    top.remove("probe");
+    if let Some(Value::Arr(layers)) = top.get_mut("layers") {
+        for l in layers.iter_mut() {
+            if let Value::Obj(m) = l {
+                m.remove("wbits");
+            }
+        }
+    }
+    let v1_text = Value::Obj(top).to_json();
+
+    let coord = Coordinator::builder().model_local(tiny).build().unwrap();
+    let h = coord.model("synth-tiny").unwrap();
+    let path = dir.join("a.plan.json");
+    std::fs::write(&path, &v1_text).unwrap();
+    let mut watch = PlanWatch::new(h.clone(), &dir).unwrap();
+    assert_eq!(watch.poll().applied, vec!["a".to_string()], "v1 file rejected");
+    assert!(h.infer(shapes::gen_image(2, 0).0, &"plan:a".parse().unwrap()).is_ok());
+
+    // upgrade the file on disk to the v2 schema (wbits + probe present)
+    plan_v2.save(&path).unwrap();
+    let report = watch.poll();
+    assert_eq!(report.applied, vec!["a".to_string()], "v2 upgrade rejected");
+    assert!(report.errors.is_empty());
+    assert_eq!(h.metrics().plan_swaps, 2);
+    assert!(h.infer(shapes::gen_image(2, 1).0, &"plan:a".parse().unwrap()).is_ok());
+    coord.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Two models watch the same plan directory: each shard applies only
+/// its own model's plans and silently skips the rest.
+#[test]
+fn two_models_share_one_watched_directory() {
+    let dir = fresh_dir("shared");
+    let tiny = synth_model("synth-tiny", 31).unwrap();
+    let cnn = synth_model("synth-cnn", 31).unwrap();
+    let (images, _) = shapes::gen_batch(31, 0, 8);
+    let cfg_t = AutotuneConfig {
+        plan_name: Some("tiny-plan".into()),
+        ..AutotuneConfig::default()
+    };
+    let cfg_c = AutotuneConfig {
+        plan_name: Some("cnn-plan".into()),
+        ..AutotuneConfig::default()
+    };
+    let plan_tiny = autotune(&tiny, &images, &cfg_t).unwrap().plan;
+    let plan_cnn = autotune(&cnn, &images, &cfg_c).unwrap().plan;
+    plan_tiny.save(&dir.join("tiny.plan.json")).unwrap();
+    plan_cnn.save(&dir.join("cnn.plan.json")).unwrap();
+
+    let coord = Coordinator::builder()
+        .model_local(tiny)
+        .model_local(cnn)
+        .build()
+        .unwrap();
+    let h_tiny = coord.model("synth-tiny").unwrap();
+    let h_cnn = coord.model("synth-cnn").unwrap();
+
+    let mut w_tiny = PlanWatch::new(h_tiny.clone(), &dir).unwrap();
+    let mut w_cnn = PlanWatch::new(h_cnn.clone(), &dir).unwrap();
+    let rt = w_tiny.poll();
+    let rc = w_cnn.poll();
+    assert_eq!(rt.applied, vec!["tiny-plan".to_string()]);
+    assert_eq!(rt.skipped_other_model, 1);
+    assert!(rt.errors.is_empty());
+    assert_eq!(rc.applied, vec!["cnn-plan".to_string()]);
+    assert_eq!(rc.skipped_other_model, 1);
+    assert_eq!(rt.scanned, 2);
+
+    // each shard serves its own plan; the foreign alias stays unknown
+    assert!(h_tiny
+        .infer(shapes::gen_image(3, 0).0, &"plan:tiny-plan".parse().unwrap())
+        .is_ok());
+    assert!(h_cnn
+        .infer(shapes::gen_image(3, 1).0, &"plan:cnn-plan".parse().unwrap())
+        .is_ok());
+    assert!(h_tiny
+        .submit(shapes::gen_image(3, 2).0, &"plan:cnn-plan".parse().unwrap())
+        .is_err());
+    coord.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The background poller (`ModelHandle::watch_plans`) applies on-disk
+/// plans synchronously at startup and picks up edits within its poll
+/// interval.
+#[test]
+fn watch_plans_thread_applies_changes() {
+    let dir = fresh_dir("thread");
+    let tiny = synth_model("synth-tiny", 41).unwrap();
+    let (images, _) = shapes::gen_batch(41, 0, 8);
+    let cfg = AutotuneConfig {
+        plan_name: Some("a".into()),
+        ..AutotuneConfig::default()
+    };
+    let plan_a = autotune(&tiny, &images, &cfg).unwrap().plan;
+    let mut plan_b = baseline_plan(&tiny, &images, &cfg, "b").unwrap();
+    plan_b.name = "a".into();
+    let qc_b = plan_b.to_quant_config();
+    let (load, _) = shapes::gen_batch(57, 0, 4);
+    let ref_b = tiny.engine.forward_quant(&load, &qc_b).unwrap();
+    let classes = tiny.engine.num_classes().unwrap();
+
+    let coord = Coordinator::builder().model_local(tiny).build().unwrap();
+    let h = coord.model("synth-tiny").unwrap();
+    let path = dir.join("a.plan.json");
+    plan_a.save(&path).unwrap();
+
+    let watcher = h.watch_plans(&dir, Duration::from_millis(10)).unwrap();
+    // startup scan is synchronous: the plan is servable right now
+    assert_eq!(h.metrics().plan_swaps, 1);
+    assert!(h.infer(img_of(&load, 0), &"plan:a".parse().unwrap()).is_ok());
+
+    // edit on disk; the poller picks it up within its interval
+    plan_b.save(&path).unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while h.metrics().plan_swaps < 2 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "watcher never applied the edited plan"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let resp = h.infer(img_of(&load, 1), &"plan:a".parse().unwrap()).unwrap();
+    assert_eq!(resp.logits, ref_b.data[classes..2 * classes].to_vec());
+    watcher.stop();
+    coord.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
