@@ -62,6 +62,12 @@ fn main() {
             std::hint::black_box(m.rank_agreement);
         }));
         let m = autotune_measured(&model, &images, &probe, &mcfg).unwrap();
+        // lint-clean status of the emitted plan: the tuner already
+        // refuses Error-level plans, so errors here must stay 0; the
+        // warning count is tracked so accounting drift shows up in the
+        // bench history
+        let lint =
+            overq::analysis::lint_plan_with_model(&m.result.plan, &model, &images.dims()[1..]);
         let mut r = BTreeMap::new();
         r.insert("model".into(), Value::Str(name.into()));
         r.insert("candidates".into(), Value::Num(m.candidates.len() as f64));
@@ -72,6 +78,15 @@ fn main() {
             Value::Num(m.candidates[m.chosen].measured_acc),
         );
         r.insert("baseline_acc".into(), Value::Num(m.baseline_acc));
+        r.insert("lint_clean".into(), Value::Bool(lint.is_clean()));
+        r.insert(
+            "lint_errors".into(),
+            Value::Num(lint.error_count() as f64),
+        );
+        r.insert(
+            "lint_warnings".into(),
+            Value::Num(lint.warn_count() as f64),
+        );
         rankings.push(Value::Obj(r));
     }
 

@@ -1,0 +1,342 @@
+//! Diagnostics framework: stable lint codes, severities, and the
+//! [`Report`] both the CLI and the serving wiring consume.
+//!
+//! Every rule in [`super::rules`] emits [`Diagnostic`]s tagged with a
+//! stable code from [`CODES`] — codes are append-only API (CI greps
+//! them, `last_watch_error` surfaces them, docs/static_analysis.md
+//! catalogs them), so a rule may be retired but its code is never
+//! reused with a different meaning.
+
+use std::fmt;
+
+use crate::util::json::Value;
+
+/// How bad a finding is. `Error` findings make a plan unservable (the
+/// serving layer refuses it); `Warn` findings are accounting/evidence
+/// drift that serves fine but should be fixed; `Info` is advisory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warn,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// Registry entry for one lint code.
+#[derive(Clone, Copy, Debug)]
+pub struct CodeInfo {
+    /// Stable code, `OQ001..` — never reused once assigned.
+    pub code: &'static str,
+    pub severity: Severity,
+    /// Short kebab-case rule name.
+    pub name: &'static str,
+    /// The invariant the rule enforces (one line, shown in `--explain`
+    /// style listings and docs/static_analysis.md).
+    pub invariant: &'static str,
+}
+
+/// Every lint code this build knows, in code order. The catalog in
+/// `docs/static_analysis.md` is generated from the same facts.
+pub const CODES: &[CodeInfo] = &[
+    CodeInfo {
+        code: "OQ001",
+        severity: Severity::Error,
+        name: "plan-name",
+        invariant: "plan and model names are non-empty and fit the \
+                    `plan:<name>` variant charset [A-Za-z0-9_.-]",
+    },
+    CodeInfo {
+        code: "OQ002",
+        severity: Severity::Error,
+        name: "enc-dense",
+        invariant: "layer enc indices are dense 0..n with no duplicates or holes",
+    },
+    CodeInfo {
+        code: "OQ003",
+        severity: Severity::Error,
+        name: "act-bits",
+        invariant: "activation bitwidth is an integer in 2..=8",
+    },
+    CodeInfo {
+        code: "OQ004",
+        severity: Severity::Error,
+        name: "cascade-zero",
+        invariant: "cascade factor is an integer >= 1 (adjacent-only RO is cascade 1)",
+    },
+    CodeInfo {
+        code: "OQ005",
+        severity: Severity::Error,
+        name: "cascade-no-ro",
+        invariant: "cascade > 1 requires range overwrite (cascading is an RO \
+                    rescale-unit feature; per overq::state it has no effect without RO)",
+    },
+    CodeInfo {
+        code: "OQ006",
+        severity: Severity::Error,
+        name: "scale",
+        invariant: "activation scale is finite and > 0",
+    },
+    CodeInfo {
+        code: "OQ007",
+        severity: Severity::Error,
+        name: "wbits",
+        invariant: "weight bitwidth is 0 (prepared 8-bit default) or 2..=8 \
+                    (the engine's MMSE requant cache range)",
+    },
+    CodeInfo {
+        code: "OQ008",
+        severity: Severity::Warn,
+        name: "area-drift",
+        invariant: "declared per-layer PE area and total_area match the \
+                    Table-3 model (area::pe_area_w, MAC-weighted mean)",
+    },
+    CodeInfo {
+        code: "OQ009",
+        severity: Severity::Warn,
+        name: "evidence",
+        invariant: "evidence statistics (p0, outlier_rate, coverages, probe \
+                    accuracies) lie in [0,1] and the probe split is non-empty",
+    },
+    CodeInfo {
+        code: "OQ010",
+        severity: Severity::Warn,
+        name: "schema-v1",
+        invariant: "plan file uses the current schema version (v1 still loads; \
+                    re-save to stamp v2)",
+    },
+    CodeInfo {
+        code: "OQ011",
+        severity: Severity::Error,
+        name: "enc-missing",
+        invariant: "every enc point of the model graph is configured by the plan",
+    },
+    CodeInfo {
+        code: "OQ012",
+        severity: Severity::Error,
+        name: "enc-dangling",
+        invariant: "no plan layer targets an enc point beyond the model's count",
+    },
+    CodeInfo {
+        code: "OQ013",
+        severity: Severity::Warn,
+        name: "macs-drift",
+        invariant: "declared per-layer MACs match a static recompute over the \
+                    graph (OCS-expanded input channels included, as in policy::profile)",
+    },
+    CodeInfo {
+        code: "OQ014",
+        severity: Severity::Error,
+        name: "empty",
+        invariant: "a plan configures at least one enc point",
+    },
+    CodeInfo {
+        code: "OQ015",
+        severity: Severity::Error,
+        name: "dup-alias",
+        invariant: "no two files in a watched plan directory claim the same \
+                    (model, name) alias — the later apply would silently win",
+    },
+    CodeInfo {
+        code: "OQ016",
+        severity: Severity::Error,
+        name: "split",
+        invariant: "traffic splits have >= 1 non-nested arm with positive finite \
+                    weights and no duplicate arms",
+    },
+    CodeInfo {
+        code: "OQ017",
+        severity: Severity::Warn,
+        name: "control-starved",
+        invariant: "every split arm keeps a non-negligible traffic share \
+                    (>= 1% of the total weight)",
+    },
+    CodeInfo {
+        code: "OQ018",
+        severity: Severity::Error,
+        name: "unreadable",
+        invariant: "the file parses as JSON, is a plan object, and declares a \
+                    supported schema version",
+    },
+];
+
+/// Look up a code's registry entry.
+pub fn code_info(code: &str) -> Option<&'static CodeInfo> {
+    CODES.iter().find(|c| c.code == code)
+}
+
+/// One finding.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Stable code from [`CODES`].
+    pub code: &'static str,
+    pub severity: Severity,
+    /// What was linted: a plan name, a file path, or a split spec.
+    pub subject: String,
+    /// Enc-point index the finding anchors to, when layer-scoped.
+    pub enc: Option<usize>,
+    /// Human-readable statement of the violation.
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// Build a diagnostic for `code`, taking the severity from the
+    /// registry. Panics on unknown codes — rule bugs, not inputs.
+    pub fn new(code: &str, subject: &str, enc: Option<usize>, message: String) -> Diagnostic {
+        let info = code_info(code).unwrap_or_else(|| panic!("unknown lint code {code}"));
+        Diagnostic {
+            code: info.code,
+            severity: info.severity,
+            subject: subject.to_string(),
+            enc,
+            message,
+        }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} [{}] {}", self.severity, self.code, self.subject)?;
+        if let Some(e) = self.enc {
+            write!(f, " enc {e}")?;
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+/// Findings of one lint run, with the CLI/CI presentation logic.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn push(&mut self, code: &str, subject: &str, enc: Option<usize>, message: String) {
+        self.diagnostics.push(Diagnostic::new(code, subject, enc, message));
+    }
+
+    /// Append another report's findings.
+    pub fn merge(&mut self, other: Report) {
+        self.diagnostics.extend(other.diagnostics);
+    }
+
+    pub fn errors(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error)
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.errors().count()
+    }
+
+    pub fn warn_count(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warn).count()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.error_count() > 0
+    }
+
+    /// First Error-level finding — what the serving layer surfaces when
+    /// it refuses a plan.
+    pub fn first_error(&self) -> Option<&Diagnostic> {
+        self.errors().next()
+    }
+
+    /// True when nothing was found at all.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// CI exit code: 0 clean (or warnings without `deny_warn`),
+    /// 1 for lint findings that gate. Operational failures (unreadable
+    /// paths etc.) are reported as OQ018 errors, so they gate too.
+    pub fn exit_code(&self, deny_warn: bool) -> i32 {
+        if self.has_errors() || (deny_warn && self.warn_count() > 0) {
+            1
+        } else {
+            0
+        }
+    }
+
+    /// Human rendering, one line per finding plus a summary line.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&d.to_string());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "{} error(s), {} warning(s)\n",
+            self.error_count(),
+            self.warn_count()
+        ));
+        out
+    }
+
+    /// Machine rendering (`overq lint --json`).
+    pub fn to_json(&self) -> Value {
+        use std::collections::BTreeMap;
+        let diags: Vec<Value> = self
+            .diagnostics
+            .iter()
+            .map(|d| {
+                let mut m = BTreeMap::new();
+                m.insert("code".to_string(), Value::Str(d.code.to_string()));
+                m.insert("severity".to_string(), Value::Str(d.severity.to_string()));
+                m.insert("subject".to_string(), Value::Str(d.subject.clone()));
+                if let Some(e) = d.enc {
+                    m.insert("enc".to_string(), Value::Num(e as f64));
+                }
+                m.insert("message".to_string(), Value::Str(d.message.clone()));
+                Value::Obj(m)
+            })
+            .collect();
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("diagnostics".to_string(), Value::Arr(diags));
+        m.insert("errors".to_string(), Value::Num(self.error_count() as f64));
+        m.insert("warnings".to_string(), Value::Num(self.warn_count() as f64));
+        Value::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_unique_and_ordered() {
+        for w in CODES.windows(2) {
+            assert!(w[0].code < w[1].code, "{} !< {}", w[0].code, w[1].code);
+        }
+        assert!(code_info("OQ001").is_some());
+        assert!(code_info("OQ999").is_none());
+    }
+
+    #[test]
+    fn report_accounting_and_exit_codes() {
+        let mut r = Report::default();
+        assert_eq!(r.exit_code(true), 0);
+        r.push("OQ008", "p", Some(1), "area drift".into());
+        assert_eq!(r.error_count(), 0);
+        assert_eq!(r.warn_count(), 1);
+        assert_eq!(r.exit_code(false), 0);
+        assert_eq!(r.exit_code(true), 1);
+        r.push("OQ004", "p", Some(0), "cascade 0".into());
+        assert!(r.has_errors());
+        assert_eq!(r.exit_code(false), 1);
+        assert_eq!(r.first_error().unwrap().code, "OQ004");
+        let text = r.render_human();
+        assert!(text.contains("error [OQ004] p enc 0"));
+        assert!(text.contains("1 error(s), 1 warning(s)"));
+        let json = r.to_json().to_json();
+        assert!(json.contains("\"OQ008\"") && json.contains("\"OQ004\""));
+    }
+}

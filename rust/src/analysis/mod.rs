@@ -1,0 +1,255 @@
+//! Static analysis over deployment plans: the `overq lint` subsystem.
+//!
+//! Everything that serves goes through here. The linter statically
+//! checks a [`crate::policy::DeploymentPlan`] — alone, against a loaded
+//! model's `nn::graph`, or as a whole watched directory — and reports
+//! findings under stable codes (`OQ001..`) with CI-friendly exit codes:
+//!
+//! - **enc-point coverage** — every graph enc point configured exactly
+//!   once, no dangling plan layers (OQ002, OQ011, OQ012, OQ014)
+//! - **OverQ invariants** — bits within the supported range, cascade
+//!   only with range overwrite, PR/RO legality per `overq::state`
+//!   (OQ003..OQ006)
+//! - **weight-side checks** — `wbits` preparable by the engine's MMSE
+//!   requant cache, MAC accounting consistent with `policy::profile`
+//!   including OCS-expanded channels (OQ007, OQ013)
+//! - **area-budget conformance** — `area::pe_area_w` recomputed vs
+//!   declared cost, v1→v2 schema drift (OQ008, OQ010)
+//! - **serving-level checks** — duplicate aliases in a plan directory,
+//!   degenerate traffic splits, starved control arms (OQ015..OQ017)
+//!
+//! Error-level findings make a plan unservable: `register_plan`, plan
+//! watching (`PlanWatch::poll`) and the autotuner's plan emission all
+//! refuse them, surfacing the lint code in the returned error /
+//! `last_watch_error`. Warn-level findings never block serving; the
+//! `overq lint --deny-warn` CI gate is where they bite.
+
+pub mod diag;
+pub mod rules;
+pub mod view;
+
+use std::path::Path;
+
+pub use diag::{code_info, CodeInfo, Diagnostic, Report, Severity, CODES};
+pub use rules::{enc_point_macs, lint_split, DEFAULT_INPUT_DIMS};
+pub use view::PlanView;
+
+use crate::coordinator::VariantSpec;
+use crate::models::LoadedModel;
+use crate::policy::DeploymentPlan;
+use crate::util::json;
+
+/// Lint an in-memory plan without a model (the `register_plan` path).
+pub fn lint_plan(plan: &DeploymentPlan) -> Report {
+    rules::lint_view(&PlanView::from_plan(plan))
+}
+
+/// Lint an in-memory plan against a loaded model. `input_dims` is one
+/// request image's (H, W, C) for the static MAC recompute
+/// ([`DEFAULT_INPUT_DIMS`] when unknown).
+pub fn lint_plan_with_model(
+    plan: &DeploymentPlan,
+    model: &LoadedModel,
+    input_dims: &[usize],
+) -> Report {
+    rules::lint_view_with_model(&PlanView::from_plan(plan), model, input_dims)
+}
+
+/// Lint a parsed JSON document leniently (reads past violations the
+/// strict loader refuses, so each lands under its own code).
+pub fn lint_value(v: &json::Value, subject: &str, model: Option<&LoadedModel>) -> Report {
+    match PlanView::from_value(v) {
+        Ok(view) => {
+            let mut view = view;
+            if view.name.is_none() {
+                // anchor diagnostics to the file when the plan is anonymous
+                view.name = Some(subject.to_string());
+            }
+            match model {
+                Some(m) => rules::lint_view_with_model(&view, m, &DEFAULT_INPUT_DIMS),
+                None => rules::lint_view(&view),
+            }
+        }
+        Err(e) => {
+            let mut r = Report::default();
+            r.push("OQ018", subject, None, e);
+            r
+        }
+    }
+}
+
+/// Lint one plan file. Unreadable / unparseable files become OQ018.
+pub fn lint_file(path: &Path, model: Option<&LoadedModel>) -> Report {
+    let subject = path.display().to_string();
+    match json::parse_file(path) {
+        Ok(v) => lint_value(&v, &subject, model),
+        Err(e) => {
+            let mut r = Report::default();
+            r.push("OQ018", &subject, None, format!("{e:#}"));
+            r
+        }
+    }
+}
+
+/// Lint every `*.json` plan in a watched directory, plus the
+/// directory-level OQ015 duplicate-alias check: two files claiming the
+/// same (model, name) alias would race for the same serving slot, the
+/// later apply silently winning.
+pub fn lint_dir(dir: &Path, model: Option<&LoadedModel>) -> Report {
+    let mut r = Report::default();
+    let subject = dir.display().to_string();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            r.push("OQ018", &subject, None, format!("unreadable directory: {e}"));
+            return r;
+        }
+    };
+    let mut files: Vec<std::path::PathBuf> = entries
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().and_then(|x| x.to_str()) == Some("json"))
+        .collect();
+    files.sort();
+    let mut aliases: std::collections::HashMap<(String, String), String> =
+        std::collections::HashMap::new();
+    for path in &files {
+        r.merge(lint_file(path, model));
+        if let Ok(v) = json::parse_file(path) {
+            if let Ok(view) = PlanView::from_value(&v) {
+                if let (Some(m), Some(n)) = (view.model, view.name) {
+                    let here = path.display().to_string();
+                    if let Some(prev) = aliases.insert((m.clone(), n.clone()), here.clone()) {
+                        r.push(
+                            "OQ015",
+                            &here,
+                            None,
+                            format!(
+                                "duplicate alias plan:{n} for model {m:?} — also \
+                                 claimed by {prev}; the later poll apply silently wins"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+    if files.is_empty() {
+        r.push(
+            "OQ018",
+            &subject,
+            None,
+            "no *.json plan files found".to_string(),
+        );
+    }
+    r
+}
+
+/// Lint a traffic-split spec string (e.g.
+/// `split:plan:a@0.9,fp32@0.1`). Parse failures land under OQ016.
+pub fn lint_split_text(spec: &str) -> Report {
+    match VariantSpec::parse(spec) {
+        Ok(v) => rules::lint_split(&v, spec),
+        Err(e) => {
+            let mut r = Report::default();
+            r.push("OQ016", spec, None, format!("{e:#}"));
+            r
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::{DeploymentPlan, PlanLayer};
+
+    fn valid_plan(n: usize) -> DeploymentPlan {
+        let layers: Vec<PlanLayer> = (0..n)
+            .map(|e| {
+                let overq = crate::overq::OverQConfig::full(4, 1);
+                PlanLayer {
+                    enc: e,
+                    overq,
+                    scale: 0.05,
+                    wbits: 0,
+                    p0: 0.9,
+                    outlier_rate: 0.05,
+                    theory_coverage: 0.99,
+                    measured_coverage: 0.98,
+                    area: crate::policy::pe_area_w(&crate::overq::OverQConfig::full(4, 1), 0),
+                    macs: 1000,
+                }
+            })
+            .collect();
+        let base = crate::policy::pe_area_w(&crate::overq::OverQConfig::baseline(8), 0);
+        DeploymentPlan::from_layers("t", "synth2", layers, base, 1.0)
+    }
+
+    #[test]
+    fn valid_plan_is_clean() {
+        let r = lint_plan(&valid_plan(2));
+        assert!(r.is_clean(), "{}", r.render_human());
+    }
+
+    #[test]
+    fn each_broken_field_fires_its_code() {
+        let mut p = valid_plan(2);
+        p.layers[1].enc = 0; // duplicate
+        assert_eq!(lint_plan(&p).first_error().unwrap().code, "OQ002");
+
+        let mut p = valid_plan(1);
+        p.layers[0].overq.bits = 9;
+        assert!(lint_plan(&p).errors().any(|d| d.code == "OQ003"));
+
+        let mut p = valid_plan(1);
+        p.layers[0].overq.cascade = 0;
+        assert!(lint_plan(&p).errors().any(|d| d.code == "OQ004"));
+
+        let mut p = valid_plan(1);
+        p.layers[0].overq.cascade = 2;
+        p.layers[0].overq.range_overwrite = false;
+        // area changes with config, so OQ008 fires too; OQ005 must be there
+        assert!(lint_plan(&p).errors().any(|d| d.code == "OQ005"));
+
+        let mut p = valid_plan(1);
+        p.layers[0].scale = -1.0;
+        assert!(lint_plan(&p).errors().any(|d| d.code == "OQ006"));
+
+        let mut p = valid_plan(1);
+        p.layers[0].wbits = 1;
+        assert!(lint_plan(&p).errors().any(|d| d.code == "OQ007"));
+
+        let mut p = valid_plan(1);
+        p.layers[0].area *= 2.0;
+        let r = lint_plan(&p);
+        assert!(!r.has_errors());
+        assert!(r.diagnostics.iter().any(|d| d.code == "OQ008"));
+
+        let mut p = valid_plan(1);
+        p.layers[0].p0 = 1.5;
+        let r = lint_plan(&p);
+        assert!(!r.has_errors());
+        assert!(r.diagnostics.iter().any(|d| d.code == "OQ009"));
+
+        let mut p = valid_plan(1);
+        p.name = "bad name!".into();
+        assert!(lint_plan(&p).errors().any(|d| d.code == "OQ001"));
+
+        let p = valid_plan(0);
+        assert!(lint_plan(&p).errors().any(|d| d.code == "OQ014"));
+    }
+
+    #[test]
+    fn split_lint() {
+        assert!(lint_split_text("split:plan:a@0.9,fp32@0.1").is_clean());
+        // duplicate arm
+        let r = lint_split_text("split:fp32@0.5,fp32@0.5");
+        assert!(r.errors().any(|d| d.code == "OQ016"));
+        // starved control
+        let r = lint_split_text("split:plan:a@0.999,fp32@0.001");
+        assert!(!r.has_errors());
+        assert!(r.diagnostics.iter().any(|d| d.code == "OQ017"));
+        // not a split at all
+        assert!(lint_split_text("fp32").errors().any(|d| d.code == "OQ016"));
+    }
+}

@@ -1,0 +1,546 @@
+//! The lint rules: OverQ invariants, weight-side checks, area-budget
+//! conformance, model coverage, and serving-level split checks.
+//!
+//! Every rule reads the lenient [`PlanView`] so one malformed field
+//! yields one diagnostic under its stable code instead of masking the
+//! rest of the plan. Severities live in the code registry
+//! ([`super::diag::CODES`]) — rules only decide *whether* a code fires.
+
+use std::collections::HashSet;
+
+use crate::coordinator::VariantSpec;
+use crate::models::LoadedModel;
+use crate::nn::conv::same_out;
+use crate::nn::graph::Op;
+use crate::nn::WBITS_DEFAULT;
+use crate::overq::OverQConfig;
+use crate::policy::pe_area_w;
+
+use super::diag::Report;
+use super::view::{as_uint, LayerView, PlanView};
+
+/// Activation bitwidths the engine/PE model supports.
+pub const ACT_BITS_RANGE: std::ops::RangeInclusive<u64> = 2..=8;
+
+/// Weight bitwidths the engine's MMSE requant cache can prepare
+/// (besides [`WBITS_DEFAULT`] = the prepared 8-bit weights).
+pub const WBITS_RANGE: std::ops::RangeInclusive<u64> = 2..=8;
+
+/// Input image dims (H, W, C) assumed for the static MAC recompute when
+/// the caller has no batch to take them from — the synth-model and
+/// coordinator default.
+pub const DEFAULT_INPUT_DIMS: [usize; 3] = [16, 16, 3];
+
+/// Relative tolerance for OQ008/OQ013 recompute comparisons. Plan
+/// producers and the linter share the exact same formulas
+/// (`policy::pe_area_w`, `DeploymentPlan::from_layers`) and JSON
+/// round-trips f64 losslessly, so honest plans agree to the last bit;
+/// the tolerance only absorbs cross-platform libm noise.
+const RTOL: f64 = 1e-6;
+
+fn drifted(declared: f64, expected: f64) -> bool {
+    let denom = expected.abs().max(1e-12);
+    !declared.is_finite() || ((declared - expected).abs() / denom) > RTOL
+}
+
+/// Plan-only rules (no model needed): OQ001..OQ010, OQ014, OQ018.
+pub fn lint_view(v: &PlanView) -> Report {
+    let mut r = Report::default();
+    let subject = v.subject();
+
+    // OQ018: version gate — the strict loader refuses these files, so
+    // nothing downstream of lint could ever serve them
+    match v.version {
+        None => r.push(
+            "OQ018",
+            &subject,
+            None,
+            "plan declares no schema version".to_string(),
+        ),
+        Some(ver) if !v.version_supported() => r.push(
+            "OQ018",
+            &subject,
+            None,
+            format!(
+                "unsupported schema version {ver} (this build reads 1..={})",
+                crate::policy::PLAN_VERSION
+            ),
+        ),
+        Some(ver) if ver == 1.0 => r.push(
+            "OQ010",
+            &subject,
+            None,
+            "schema v1 plan: loads with default weight fields, but re-save \
+             to stamp the current schema"
+                .to_string(),
+        ),
+        _ => {}
+    }
+
+    // OQ001: names must produce a servable `plan:<name>` alias
+    for (field, value) in [("name", &v.name), ("model", &v.model)] {
+        match value {
+            None => r.push(
+                "OQ001",
+                &subject,
+                None,
+                format!("plan {field} is missing"),
+            ),
+            Some(s) if s.is_empty() => r.push(
+                "OQ001",
+                &subject,
+                None,
+                format!("plan {field} is empty"),
+            ),
+            Some(s)
+                if field == "name"
+                    && !s
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.')) =>
+            {
+                r.push(
+                    "OQ001",
+                    &subject,
+                    None,
+                    format!(
+                        "plan name {s:?} has characters outside [A-Za-z0-9_.-] — \
+                         the `plan:{s}` variant cannot be parsed"
+                    ),
+                )
+            }
+            _ => {}
+        }
+    }
+
+    // OQ014: an empty plan covers no enc point of any model
+    if v.layers.is_empty() {
+        r.push(
+            "OQ014",
+            &subject,
+            None,
+            "plan has no layers — it configures no enc point".to_string(),
+        );
+        return r;
+    }
+
+    // OQ002: enc indices dense 0..n
+    let mut encs: Vec<Option<u64>> = Vec::with_capacity(v.layers.len());
+    for (i, l) in v.layers.iter().enumerate() {
+        let e = as_uint(l.enc);
+        if e.is_none() {
+            r.push(
+                "OQ002",
+                &subject,
+                None,
+                format!("layer {i}: enc index missing or not a non-negative integer"),
+            );
+        }
+        encs.push(e);
+    }
+    {
+        let present: Vec<u64> = encs.iter().flatten().copied().collect();
+        let uniq: HashSet<u64> = present.iter().copied().collect();
+        if uniq.len() < present.len() {
+            r.push(
+                "OQ002",
+                &subject,
+                None,
+                "duplicate enc indices — one enc point configured twice".to_string(),
+            );
+        } else if present.len() == v.layers.len() {
+            for want in 0..v.layers.len() as u64 {
+                if !uniq.contains(&want) {
+                    r.push(
+                        "OQ002",
+                        &subject,
+                        Some(want as usize),
+                        format!("enc indices not dense (missing enc {want})"),
+                    );
+                }
+            }
+        }
+    }
+
+    for (i, l) in v.layers.iter().enumerate() {
+        let enc = encs[i].map(|e| e as usize);
+        lint_layer(&mut r, &subject, enc.unwrap_or(i), l);
+    }
+
+    // OQ008 (total): total_area must be the MAC-weighted mean of the
+    // declared layer areas (the `DeploymentPlan::from_layers` convention)
+    let all_declared = v
+        .layers
+        .iter()
+        .all(|l| l.area.is_some() && as_uint(l.macs).is_some());
+    if let (Some(total), true) = (v.total_area, all_declared) {
+        let total_macs: f64 = v
+            .layers
+            .iter()
+            .map(|l| l.macs.unwrap())
+            .sum::<f64>()
+            .max(1.0);
+        let expect: f64 = v
+            .layers
+            .iter()
+            .map(|l| l.area.unwrap() * l.macs.unwrap() / total_macs)
+            .sum();
+        if drifted(total, expect) {
+            r.push(
+                "OQ008",
+                &subject,
+                None,
+                format!(
+                    "total_area {total} != MAC-weighted mean of layer areas {expect} \
+                     — re-derive with DeploymentPlan::from_layers"
+                ),
+            );
+        }
+    }
+
+    // OQ009: probe evidence block
+    if let Some(p) = &v.probe {
+        match as_uint(p.images) {
+            Some(0) | None => r.push(
+                "OQ009",
+                &subject,
+                None,
+                "probe evidence with zero/invalid image count".to_string(),
+            ),
+            _ => {}
+        }
+        for (field, value) in [
+            ("probe accuracy", p.accuracy),
+            ("probe baseline_accuracy", p.baseline_accuracy),
+        ] {
+            if !matches!(value, Some(a) if (0.0..=1.0).contains(&a)) {
+                r.push(
+                    "OQ009",
+                    &subject,
+                    None,
+                    format!("{field} missing or outside [0,1]: {value:?}"),
+                );
+            }
+        }
+    }
+
+    r
+}
+
+/// Per-layer rules: OQ003..OQ009, layer-scoped OQ018.
+fn lint_layer(r: &mut Report, subject: &str, enc: usize, l: &LayerView) {
+    let e = Some(enc);
+
+    let bits = as_uint(l.bits).filter(|b| ACT_BITS_RANGE.contains(b));
+    if bits.is_none() {
+        r.push(
+            "OQ003",
+            subject,
+            e,
+            format!(
+                "activation bits {:?} outside the supported range {}..={}",
+                l.bits,
+                ACT_BITS_RANGE.start(),
+                ACT_BITS_RANGE.end()
+            ),
+        );
+    }
+
+    let cascade = as_uint(l.cascade).filter(|&c| c >= 1);
+    if cascade.is_none() {
+        r.push(
+            "OQ004",
+            subject,
+            e,
+            format!(
+                "cascade {:?} invalid — the hardware rescale unit needs an \
+                 integer >= 1 (1 = adjacent-only)",
+                l.cascade
+            ),
+        );
+    }
+
+    // missing mode flags make the plan unloadable by the strict parser
+    for (field, flag) in [("ro", l.ro), ("pr", l.pr)] {
+        if flag.is_none() {
+            r.push(
+                "OQ018",
+                subject,
+                e,
+                format!("mode flag {field:?} missing — the plan loader refuses this file"),
+            );
+        }
+    }
+    if let (Some(c), Some(false)) = (cascade, l.ro) {
+        if c > 1 {
+            r.push(
+                "OQ005",
+                subject,
+                e,
+                format!(
+                    "cascade {c} with range overwrite off — cascading only \
+                     exists in the RO rescale unit (overq::state)"
+                ),
+            );
+        }
+    }
+
+    if !matches!(l.scale, Some(s) if s.is_finite() && s > 0.0) {
+        r.push(
+            "OQ006",
+            subject,
+            e,
+            format!("activation scale {:?} is not finite-positive", l.scale),
+        );
+    }
+
+    // v1 plans omit wbits entirely (→ the default prepared weights);
+    // a present value must be preparable by the MMSE requant cache
+    let wbits_ok = match l.wbits {
+        None => Some(WBITS_DEFAULT),
+        Some(_) => match as_uint(l.wbits) {
+            Some(w) if w == WBITS_DEFAULT as u64 || WBITS_RANGE.contains(&w) => Some(w as u32),
+            _ => None,
+        },
+    };
+    if wbits_ok.is_none() {
+        r.push(
+            "OQ007",
+            subject,
+            e,
+            format!(
+                "weight bits {:?} not preparable — the engine's MMSE requant \
+                 cache serves 0 (prepared 8-bit default) or {}..={}",
+                l.wbits,
+                WBITS_RANGE.start(),
+                WBITS_RANGE.end()
+            ),
+        );
+    }
+
+    // OQ008 (layer): declared area vs the Table-3 recompute; only when
+    // the config fields above are valid enough to recompute from
+    if let (Some(b), Some(c), Some(ro), Some(pr), Some(w)) =
+        (bits, cascade, l.ro, l.pr, wbits_ok)
+    {
+        let cfg = OverQConfig {
+            bits: b as u32,
+            cascade: c as usize,
+            range_overwrite: ro,
+            precision_overwrite: pr,
+        };
+        let expect = pe_area_w(&cfg, w);
+        match l.area {
+            Some(a) if !drifted(a, expect) => {}
+            Some(a) => r.push(
+                "OQ008",
+                subject,
+                e,
+                format!(
+                    "declared PE area {a} != Table-3 model {expect} for this \
+                     config (area::pe_area_w)"
+                ),
+            ),
+            None => r.push(
+                "OQ008",
+                subject,
+                e,
+                format!("no declared PE area (Table-3 model says {expect})"),
+            ),
+        }
+    }
+
+    // OQ009: evidence statistics are probabilities
+    for (field, value) in [
+        ("p0", l.p0),
+        ("outlier_rate", l.outlier_rate),
+        ("theory_coverage", l.theory_coverage),
+        ("measured_coverage", l.measured_coverage),
+    ] {
+        if let Some(x) = value {
+            if !x.is_finite() || !(0.0..=1.0).contains(&x) {
+                r.push(
+                    "OQ009",
+                    subject,
+                    e,
+                    format!("{field} = {x} outside [0,1]"),
+                );
+            }
+        }
+    }
+}
+
+/// Static per-enc-point MAC recompute over the model graph — the same
+/// accounting as `policy::profile::profile_enc_points`, but from shape
+/// inference instead of a real forward: conv cost at the spatial size of
+/// its input tap, over the channels the hardware actually sees
+/// (OCS-expanded via `Engine::conv_in_channels`). `input_dims` is the
+/// (H, W, C) of one request image ([`DEFAULT_INPUT_DIMS`] for the synth
+/// convention).
+pub fn enc_point_macs(model: &LoadedModel, input_dims: &[usize]) -> Vec<u64> {
+    let graph = &model.engine.graph;
+    // (h, w, c) per node, walked in SSA order
+    let mut dims: Vec<(usize, usize, usize)> = Vec::with_capacity(graph.nodes.len());
+    for node in &graph.nodes {
+        let d = match &node.op {
+            Op::Input => (input_dims[0], input_dims[1], input_dims[2]),
+            Op::Conv { stride, cout, .. } => {
+                let (h, w, _) = dims[node.inputs[0]];
+                (same_out(h, *stride), same_out(w, *stride), *cout)
+            }
+            Op::Add { .. } => dims[node.inputs[0]],
+            Op::Concat => {
+                let (h, w, _) = dims[node.inputs[0]];
+                (h, w, node.inputs.iter().map(|&i| dims[i].2).sum())
+            }
+            Op::MaxPool | Op::AvgPool => {
+                let (h, w, c) = dims[node.inputs[0]];
+                (h / 2, w / 2, c)
+            }
+            Op::Gap => {
+                let (_, _, c) = dims[node.inputs[0]];
+                (1, 1, c)
+            }
+            Op::Dense { cout, .. } => (1, 1, *cout),
+        };
+        dims.push(d);
+    }
+    let mut macs = vec![0u64; graph.num_enc_points()];
+    for node in &graph.nodes {
+        if let Op::Conv {
+            kh,
+            kw,
+            stride,
+            cin,
+            cout,
+            quant: true,
+            enc: Some(e),
+            ..
+        } = &node.op
+        {
+            let (h, w, _) = dims[node.inputs[0]];
+            let (oh, ow) = (same_out(h, *stride), same_out(w, *stride));
+            let cin_eff = model.engine.conv_in_channels(node.id).unwrap_or(*cin);
+            macs[*e] += (kh * kw * cin_eff * cout * oh * ow) as u64;
+        }
+    }
+    for m in macs.iter_mut() {
+        *m = (*m).max(1);
+    }
+    macs
+}
+
+/// Model-aware rules on top of [`lint_view`]: OQ011, OQ012, OQ013.
+pub fn lint_view_with_model(
+    v: &PlanView,
+    model: &LoadedModel,
+    input_dims: &[usize],
+) -> Report {
+    let mut r = lint_view(v);
+    let subject = v.subject();
+    let n_model = model.engine.graph.num_enc_points();
+
+    let configured: HashSet<u64> = v.layers.iter().filter_map(|l| as_uint(l.enc)).collect();
+    // OQ012: dangling layers (enc beyond the model)
+    for l in &v.layers {
+        if let Some(e) = as_uint(l.enc) {
+            if e as usize >= n_model {
+                r.push(
+                    "OQ012",
+                    &subject,
+                    Some(e as usize),
+                    format!(
+                        "layer targets enc {e}, but model {:?} has only {n_model} \
+                         enc point(s)",
+                        model.name
+                    ),
+                );
+            }
+        }
+    }
+    // OQ011: model enc points the plan leaves unconfigured
+    for e in 0..n_model as u64 {
+        if !configured.contains(&e) {
+            r.push(
+                "OQ011",
+                &subject,
+                Some(e as usize),
+                format!(
+                    "model {:?} enc point {e} is not configured — \
+                     `forward_quant` would refuse this plan",
+                    model.name
+                ),
+            );
+        }
+    }
+
+    // OQ013: declared MACs vs the static recompute (OCS-expanded)
+    let expect = enc_point_macs(model, input_dims);
+    for l in &v.layers {
+        let Some(e) = as_uint(l.enc) else { continue };
+        let Some(want) = expect.get(e as usize) else { continue };
+        match as_uint(l.macs) {
+            Some(m) if m == *want => {}
+            declared => r.push(
+                "OQ013",
+                &subject,
+                Some(e as usize),
+                format!(
+                    "declared MACs {declared:?} != static recompute {want} at \
+                     input dims {input_dims:?} (policy::profile convention, \
+                     OCS-expanded channels included)"
+                ),
+            ),
+        }
+    }
+
+    r
+}
+
+/// Serving-level split checks: OQ016 (degenerate) / OQ017 (starved arm).
+/// `subject` names the split in diagnostics (e.g. the spec string).
+pub fn lint_split(spec: &VariantSpec, subject: &str) -> Report {
+    let mut r = Report::default();
+    let VariantSpec::Split(arms) = spec else {
+        r.push(
+            "OQ016",
+            subject,
+            None,
+            format!("not a traffic split: {spec}"),
+        );
+        return r;
+    };
+    if let Err(e) = VariantSpec::validate_split(arms) {
+        r.push("OQ016", subject, None, format!("{e:#}"));
+        return r;
+    }
+    let mut seen: HashSet<String> = HashSet::new();
+    for (arm, _) in arms {
+        if !seen.insert(arm.key()) {
+            r.push(
+                "OQ016",
+                subject,
+                None,
+                format!("duplicate split arm {arm} — reward/metrics keys would collide"),
+            );
+        }
+    }
+    let total: f64 = arms.iter().map(|(_, w)| w).sum();
+    if total > 0.0 {
+        for (arm, w) in arms {
+            let share = w / total;
+            if share < 0.01 {
+                r.push(
+                    "OQ017",
+                    subject,
+                    None,
+                    format!(
+                        "arm {arm} holds {:.3}% of traffic — a control/canary \
+                         this starved yields no usable comparison",
+                        share * 100.0
+                    ),
+                );
+            }
+        }
+    }
+    r
+}

@@ -1,0 +1,201 @@
+//! Lenient plan reader for the lint rules.
+//!
+//! `policy::DeploymentPlan::from_json` is strict by design — it refuses
+//! non-dense enc indices, unsupported wbits and unknown versions at load
+//! time. A linter has the opposite requirement: it must *read past* such
+//! violations so it can report each one under its stable code instead of
+//! dying on the first parse error. [`PlanView`] reads every field as an
+//! `Option` with no validation; the rules decide what each absence or
+//! out-of-range value means.
+
+use crate::policy::{DeploymentPlan, PLAN_VERSION};
+use crate::util::json::Value;
+
+/// One layer, as found (fields missing from the JSON are `None`).
+#[derive(Clone, Debug, Default)]
+pub struct LayerView {
+    pub enc: Option<f64>,
+    pub bits: Option<f64>,
+    pub cascade: Option<f64>,
+    pub ro: Option<bool>,
+    pub pr: Option<bool>,
+    pub scale: Option<f64>,
+    pub wbits: Option<f64>,
+    pub p0: Option<f64>,
+    pub outlier_rate: Option<f64>,
+    pub theory_coverage: Option<f64>,
+    pub measured_coverage: Option<f64>,
+    pub area: Option<f64>,
+    pub macs: Option<f64>,
+}
+
+/// Probe evidence, as found.
+#[derive(Clone, Debug, Default)]
+pub struct ProbeView {
+    pub images: Option<f64>,
+    pub accuracy: Option<f64>,
+    pub baseline_accuracy: Option<f64>,
+}
+
+/// A deployment plan read without validation, for the rule engine.
+#[derive(Clone, Debug, Default)]
+pub struct PlanView {
+    pub version: Option<f64>,
+    pub name: Option<String>,
+    pub model: Option<String>,
+    pub layers: Vec<LayerView>,
+    pub total_area: Option<f64>,
+    pub probe: Option<ProbeView>,
+}
+
+impl PlanView {
+    /// Read a parsed JSON document leniently. Fails only on shape
+    /// violations no rule can see past: the document is not an object,
+    /// or `layers` is present but not an array (both map to OQ018 at
+    /// the caller).
+    pub fn from_value(v: &Value) -> Result<PlanView, String> {
+        let obj = v.as_obj().ok_or("plan document is not a JSON object")?;
+        let layers_v = obj.get("layers");
+        let layers = match layers_v {
+            None => Vec::new(),
+            Some(lv) => lv
+                .as_arr()
+                .ok_or("plan `layers` is not an array")?
+                .iter()
+                .map(|l| LayerView {
+                    enc: l.at(&["enc"]).as_f64(),
+                    bits: l.at(&["bits"]).as_f64(),
+                    cascade: l.at(&["cascade"]).as_f64(),
+                    ro: l.at(&["ro"]).as_bool(),
+                    pr: l.at(&["pr"]).as_bool(),
+                    scale: l.at(&["scale"]).as_f64(),
+                    wbits: l.at(&["wbits"]).as_f64(),
+                    p0: l.at(&["p0"]).as_f64(),
+                    outlier_rate: l.at(&["outlier_rate"]).as_f64(),
+                    theory_coverage: l.at(&["theory_coverage"]).as_f64(),
+                    measured_coverage: l.at(&["measured_coverage"]).as_f64(),
+                    area: l.at(&["area"]).as_f64(),
+                    macs: l.at(&["macs"]).as_f64(),
+                })
+                .collect(),
+        };
+        let probe = match v.at(&["probe"]) {
+            Value::Null => None,
+            p => Some(ProbeView {
+                images: p.at(&["images"]).as_f64(),
+                accuracy: p.at(&["accuracy"]).as_f64(),
+                baseline_accuracy: p.at(&["baseline_accuracy"]).as_f64(),
+            }),
+        };
+        Ok(PlanView {
+            version: v.at(&["version"]).as_f64(),
+            name: v.at(&["name"]).as_str().map(str::to_string),
+            model: v.at(&["model"]).as_str().map(str::to_string),
+            layers,
+            total_area: v.at(&["total_area"]).as_f64(),
+            probe,
+        })
+    }
+
+    /// View an in-memory plan (the `register_plan` / autotuner path —
+    /// already typed, so every field is present).
+    pub fn from_plan(p: &DeploymentPlan) -> PlanView {
+        PlanView {
+            version: Some(p.version as f64),
+            name: Some(p.name.clone()),
+            model: Some(p.model.clone()),
+            layers: p
+                .layers
+                .iter()
+                .map(|l| LayerView {
+                    enc: Some(l.enc as f64),
+                    bits: Some(l.overq.bits as f64),
+                    cascade: Some(l.overq.cascade as f64),
+                    ro: Some(l.overq.range_overwrite),
+                    pr: Some(l.overq.precision_overwrite),
+                    scale: Some(l.scale as f64),
+                    wbits: Some(l.wbits as f64),
+                    p0: Some(l.p0),
+                    outlier_rate: Some(l.outlier_rate),
+                    theory_coverage: Some(l.theory_coverage),
+                    measured_coverage: Some(l.measured_coverage),
+                    area: Some(l.area),
+                    macs: Some(l.macs as f64),
+                })
+                .collect(),
+            total_area: Some(p.total_area),
+            probe: p.probe.as_ref().map(|pr| ProbeView {
+                images: Some(pr.images as f64),
+                accuracy: Some(pr.accuracy),
+                baseline_accuracy: Some(pr.baseline_accuracy),
+            }),
+        }
+    }
+
+    /// Subject string for diagnostics: the plan name when present, a
+    /// placeholder otherwise.
+    pub fn subject(&self) -> String {
+        self.name.clone().unwrap_or_else(|| "<unnamed plan>".to_string())
+    }
+
+    /// Whether the declared version is one this build can serve.
+    pub fn version_supported(&self) -> bool {
+        matches!(self.version, Some(v) if v.fract() == 0.0 && v >= 1.0 && v <= PLAN_VERSION as f64)
+    }
+}
+
+/// `Some(x)` when `x` is a non-negative integer-valued number.
+pub(crate) fn as_uint(x: Option<f64>) -> Option<u64> {
+    match x {
+        Some(v) if v.is_finite() && v.fract() == 0.0 && v >= 0.0 => Some(v as u64),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn reads_past_strict_loader_rejections() {
+        // sparse enc + wbits 12 + version 99: from_json refuses all of
+        // these; the view must read them anyway
+        let text = r#"{
+          "version": 99, "name": "x", "model": "m",
+          "layers": [
+            {"enc": 0, "bits": 4, "cascade": 2, "ro": true, "pr": false,
+             "scale": 0.1, "wbits": 12, "area": 1.0, "macs": 10},
+            {"enc": 5, "bits": 4, "cascade": 1, "ro": false, "pr": false,
+             "scale": 0.1}
+          ],
+          "total_area": 1.0
+        }"#;
+        let v = PlanView::from_value(&parse(text).unwrap()).unwrap();
+        assert!(!v.version_supported());
+        assert_eq!(v.layers.len(), 2);
+        assert_eq!(v.layers[0].wbits, Some(12.0));
+        assert_eq!(v.layers[1].enc, Some(5.0));
+        assert_eq!(v.layers[1].wbits, None);
+        assert!(v.probe.is_none());
+    }
+
+    #[test]
+    fn rejects_only_hopeless_shapes() {
+        assert!(PlanView::from_value(&parse("[1,2]").unwrap()).is_err());
+        assert!(PlanView::from_value(&parse(r#"{"layers": 3}"#).unwrap()).is_err());
+        // missing layers is a readable (empty) plan — OQ014's job
+        let v = PlanView::from_value(&parse(r#"{"name": "x"}"#).unwrap()).unwrap();
+        assert!(v.layers.is_empty());
+        assert_eq!(v.subject(), "x");
+    }
+
+    #[test]
+    fn uint_reader() {
+        assert_eq!(as_uint(Some(4.0)), Some(4));
+        assert_eq!(as_uint(Some(4.5)), None);
+        assert_eq!(as_uint(Some(-1.0)), None);
+        assert_eq!(as_uint(Some(f64::NAN)), None);
+        assert_eq!(as_uint(None), None);
+    }
+}

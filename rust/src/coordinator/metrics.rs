@@ -11,8 +11,9 @@
 //! router doing and is hot-reload healthy" (docs/operations.md).
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+use crate::util::sync::{Arc, Mutex};
 
 use crate::util::stats::Summary;
 

@@ -28,10 +28,11 @@
 use std::collections::{HashMap, HashSet};
 use std::path::Path;
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
+
+use crate::util::sync::{lock, Arc, Mutex};
 
 use crate::models::zoo::LoadedModel;
 use crate::models::Artifacts;
@@ -372,10 +373,10 @@ impl Coordinator {
 impl Drop for Coordinator {
     fn drop(&mut self) {
         for s in &self.shards {
-            drop(s.tx.lock().unwrap().take());
+            drop(lock(&s.tx).take());
         }
         for s in &self.shards {
-            let handle = s.worker.lock().unwrap().take();
+            let handle = lock(&s.worker).take();
             if let Some(w) = handle {
                 let _ = w.join();
             }
@@ -405,7 +406,7 @@ impl ModelHandle {
             }
             VariantSpec::Plan(name) => {
                 anyhow::ensure!(
-                    self.shard.plans.lock().unwrap().contains(name),
+                    lock(&self.shard.plans).contains(name),
                     "no registered plan {name:?} on model {:?}",
                     self.shard.name
                 );
@@ -445,7 +446,7 @@ impl ModelHandle {
     /// per hand-built spec (`submit`).
     fn draw_arm(&self, arms: &[(VariantSpec, f64)]) -> VariantSpec {
         let weights: Vec<f64> = arms.iter().map(|(_, w)| *w).collect();
-        let i = pick_weighted(&mut self.shard.rng.lock().unwrap(), &weights);
+        let i = pick_weighted(&mut lock(&self.shard.rng), &weights);
         arms[i].0.clone()
     }
 
@@ -464,7 +465,7 @@ impl ModelHandle {
             self.shard.input_dims
         );
         let (rtx, rrx) = sync_channel(1);
-        let guard = self.shard.tx.lock().unwrap();
+        let guard = lock(&self.shard.tx);
         let tx = guard.as_ref().context("coordinator stopped")?;
         self.check_leaf(&leaf)?;
         tx.send(Msg::Infer(InferRequest {
@@ -517,11 +518,11 @@ impl ModelHandle {
     /// the fixed traffic split ([`ModelHandle::set_traffic_split`]),
     /// else `fp32`.
     pub fn submit_routed(&self, image: TensorF) -> Result<Receiver<InferResult>> {
-        let bandit_leaf = self.shard.bandit.lock().unwrap().as_mut().map(|b| b.pick());
+        let bandit_leaf = lock(&self.shard.bandit).as_mut().map(|b| b.pick());
         let leaf = match bandit_leaf {
             Some(leaf) => leaf,
             None => {
-                let split = self.shard.split.lock().unwrap();
+                let split = lock(&self.shard.split);
                 match &*split {
                     // validated when installed by set_traffic_split_spec
                     Some(arms) => self.draw_arm(arms),
@@ -567,13 +568,20 @@ impl ModelHandle {
             plan.model,
             self.shard.name
         );
+        // static analysis gate: Error-level lint findings make a plan
+        // unservable, so refuse before anything is published. Warnings
+        // (area drift etc.) serve fine — `overq lint` is where they gate.
+        let report = crate::analysis::lint_plan(&plan);
+        if let Some(d) = report.first_error() {
+            anyhow::bail!("plan {:?} failed lint: {d}", plan.name);
+        }
         // alias-insert + control-message send happen under the queue
         // lock (same lock as submit_leaf's validate + send), so ANY
         // handle that passes the fail-fast check is guaranteed the
         // worker-side install is ahead of its request in the channel
-        let guard = self.shard.tx.lock().unwrap();
+        let guard = lock(&self.shard.tx);
         let tx = guard.as_ref().context("coordinator stopped")?;
-        self.shard.plans.lock().unwrap().insert(alias.clone());
+        lock(&self.shard.plans).insert(alias.clone());
         tx.send(Msg::InstallPlan { alias, plan })
             .ok()
             .context("worker gone")?;
@@ -599,13 +607,13 @@ impl ModelHandle {
         for (arm, _) in arms {
             self.check_leaf(arm)?;
         }
-        *self.shard.split.lock().unwrap() = Some(arms.clone());
+        *lock(&self.shard.split) = Some(arms.clone());
         Ok(())
     }
 
     /// The currently installed traffic split, if any.
     pub fn traffic_split(&self) -> Option<Vec<(VariantSpec, f64)>> {
-        self.shard.split.lock().unwrap().clone()
+        lock(&self.shard.split).clone()
     }
 
     /// Install the routing policy behind [`ModelHandle::submit_routed`].
@@ -619,8 +627,8 @@ impl ModelHandle {
     pub fn set_routing_policy(&self, policy: RoutingPolicy) -> Result<()> {
         match policy {
             RoutingPolicy::Fixed => {
-                *self.shard.bandit.lock().unwrap() = None;
-                self.shard.metrics.lock().unwrap().control_arm = None;
+                *lock(&self.shard.bandit) = None;
+                lock(&self.shard.metrics).control_arm = None;
             }
             RoutingPolicy::Bandit(cfg) => {
                 for (arm, _) in &cfg.arms {
@@ -631,8 +639,8 @@ impl ModelHandle {
                 // rejects splits, duplicate arms, bad floors/priors
                 let router = BanditRouter::new(cfg)?;
                 let control = router.control_key().to_string();
-                *self.shard.bandit.lock().unwrap() = Some(router);
-                self.shard.metrics.lock().unwrap().control_arm = Some(control);
+                *lock(&self.shard.bandit) = Some(router);
+                lock(&self.shard.metrics).control_arm = Some(control);
             }
         }
         Ok(())
@@ -641,7 +649,7 @@ impl ModelHandle {
     /// Per-arm bandit statistics (pulls, mean reward, control pin), or
     /// `None` under fixed routing.
     pub fn bandit_arms(&self) -> Option<Vec<ArmStats>> {
-        self.shard.bandit.lock().unwrap().as_ref().map(|b| b.arm_stats())
+        lock(&self.shard.bandit).as_ref().map(|b| b.arm_stats())
     }
 
     /// Watch `dir` for new/changed `*.plan.json` files and hot-swap
@@ -664,25 +672,25 @@ impl ModelHandle {
 
     /// Metrics hook for the plan watcher: one applied swap.
     pub(crate) fn note_plan_swap(&self) {
-        self.shard.metrics.lock().unwrap().record_plan_swap();
+        lock(&self.shard.metrics).record_plan_swap();
     }
 
     /// Metrics hook for the plan watcher: one rejected plan file.
     pub(crate) fn note_watch_error(&self, msg: &str) {
         eprintln!("[coordinator] plan watch: {msg}");
-        self.shard.metrics.lock().unwrap().record_watch_error(msg);
+        lock(&self.shard.metrics).record_watch_error(msg);
     }
 
     /// Point-in-time metrics for this shard (global + per-variant).
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.shard.metrics.lock().unwrap().snapshot()
+        lock(&self.shard.metrics).snapshot()
     }
 
     /// Zero this shard's metrics — e.g. to exclude warmup traffic from
     /// a measurement window, or between A/B experiment epochs. Requests
     /// already in the queue still count when they execute.
     pub fn reset_metrics(&self) {
-        self.shard.metrics.lock().unwrap().reset();
+        lock(&self.shard.metrics).reset();
     }
 
     /// Warm a variant: trigger compilation of every batch size by
@@ -846,7 +854,7 @@ fn account_chunk(
         .map(|r| (queue_start - r.submitted, r.submitted.elapsed()))
         .collect();
     let rewards: Vec<Option<f64>> = {
-        let mut guard = bandit.lock().unwrap();
+        let mut guard = lock(&bandit);
         match guard.as_mut() {
             Some(b) => lats
                 .iter()
@@ -855,7 +863,7 @@ fn account_chunk(
             None => vec![None; lats.len()],
         }
     };
-    let mut m = metrics.lock().unwrap();
+    let mut m = lock(&metrics);
     m.record_batch(reqs.len(), padded, exec);
     for ((queue, e2e), reward) in lats.iter().zip(&rewards) {
         m.record_request(key, *queue, *e2e);

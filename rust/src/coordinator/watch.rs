@@ -10,7 +10,8 @@
 //! v1 and v2 both accepted), and applies each matching plan with
 //! [`super::ModelHandle::swap_plan`] — which the coordinator already
 //! guarantees is atomic with respect to in-flight requests. A bad file
-//! (unparseable JSON, schema violation, wrong model coverage) is
+//! (unparseable JSON, schema violation, an Error-level `overq lint`
+//! finding — see `docs/static_analysis.md`) is
 //! *rejected with the previously served plan left untouched*; the error
 //! is counted in the shard metrics (`watch_errors`, `last_watch_error`)
 //! and returned in the [`WatchReport`].
@@ -28,7 +29,8 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+
+use crate::util::sync::Arc;
 use std::time::{Duration, SystemTime};
 
 use anyhow::{Context, Result};
@@ -196,6 +198,13 @@ impl PlanWatch {
             .with_context(|| format!("parse plan {}", path.display()))?;
         if plan.model != self.handle.model_name() {
             return Ok(None);
+        }
+        // static analysis gate: a plan with Error-level lint findings is
+        // rejected here — the lint code lands in `last_watch_error` and
+        // the previously served plan keeps serving untouched
+        let report = crate::analysis::lint_plan(&plan);
+        if let Some(d) = report.first_error() {
+            anyhow::bail!("lint: {d}");
         }
         let alias = plan.name.clone();
         self.handle.swap_plan(&alias, plan)?;

@@ -24,6 +24,10 @@
 //! * [`olaccel`] — OLAccel-style outlier-accelerator comparator.
 //! * [`runtime`] — PJRT client (via the `xla` crate) that loads the AOT
 //!   HLO artifacts produced by `python/compile/aot.py`.
+//! * [`analysis`] — the `overq lint` static analyzer: a diagnostics
+//!   framework with stable codes (`OQ001..`) and a rule engine that
+//!   checks deployment plans against the model graph and the hardware
+//!   model; every plan boundary (register, watch, autotune) gates on it.
 //! * [`coordinator`] — the serving layer: request router, dynamic
 //!   batcher and worker pool over compiled executables, plus the
 //!   closed-loop plan operations: outcome-aware bandit routing
@@ -37,32 +41,53 @@
 //! Python never runs on the request path: `make artifacts` AOT-compiles
 //! the models once; the rust binary is self-contained afterwards.
 
-// CI denies warnings under clippy; the numeric kernels and harnesses
-// deliberately favor explicit index loops and wide argument lists, so
-// those pedantic-adjacent lints are opted out crate-wide.
-#![allow(
+// CI denies warnings under clippy. Lint opt-outs are per-module (on the
+// `pub mod` items below) so a new module starts from a clean slate
+// instead of inheriting the numeric kernels' exemptions crate-wide.
+pub mod analysis;
+pub mod area;
+// serving plumbing: wide builder signatures, shared-state field types
+#[allow(
     clippy::needless_range_loop,
     clippy::too_many_arguments,
-    clippy::manual_memcpy,
     clippy::type_complexity,
     clippy::new_without_default,
     clippy::field_reassign_with_default
 )]
-
-pub mod area;
 pub mod coordinator;
+#[allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 pub mod data;
+// harness configs use the `cfg.field = ...` override-after-default style
+#[allow(clippy::needless_range_loop, clippy::field_reassign_with_default)]
 pub mod harness;
+#[allow(clippy::needless_range_loop, clippy::manual_memcpy)]
 pub mod io;
 pub mod models;
+// numeric kernels below deliberately favor explicit index loops and
+// wide argument lists; the lints stay scoped to them
+#[allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_memcpy,
+    clippy::type_complexity
+)]
 pub mod nn;
 pub mod olaccel;
+#[allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_memcpy
+)]
 pub mod overq;
 pub mod policy;
+#[allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 pub mod quant;
 pub mod runtime;
+#[allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 pub mod sim;
+#[allow(clippy::manual_memcpy)]
 pub mod tensor;
+#[allow(clippy::needless_range_loop, clippy::new_without_default)]
 pub mod util;
 
 /// Crate-wide result type.

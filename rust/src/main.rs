@@ -58,6 +58,16 @@ COMMANDS (system):
              aware ones learned from live latency (control arm pinned at
              the exploration floor), and --watch-plans hot-reloads
              *.plan.json changes from disk (docs/operations.md)
+  lint       static plan verifier: checks deployment plans against the
+             OverQ invariants, the hardware area model, and (with
+             --model) the model graph's enc points; also lints whole
+             plan directories (duplicate aliases) and traffic splits
+             (docs/static_analysis.md catalogs the OQ001.. codes)
+             [overq lint <plan.json | plans-dir> [--model <name>]
+              [--split <spec>] [--json] [--deny-warn]]
+             [overq lint --codes]   lists every code
+             exit codes: 0 clean, 1 findings gate (Error-level, or any
+             finding with --deny-warn), 2 usage/operational failure
   eval       native-engine accuracy for one config
              [--model resnet18m --bits 4 --cascade 4 --std-t 6 --mode full|ro|base]
   info       artifact manifest summary
@@ -121,6 +131,7 @@ fn dispatch(args: &Args) -> Result<()> {
             cfg.layer = args.get_usize("layer", cfg.layer);
             emit(hwcmp::run(&arts, &cfg)?, args)
         }
+        "lint" => lint_cmd(args),
         "policy" => policy_cmd(args),
         "serve" => serve(args),
         "eval" => eval_cmd(args),
@@ -311,6 +322,65 @@ fn policy_cmd(args: &Args) -> Result<()> {
     );
     println!("serve it: overq serve --plan {out} --model {name}");
     Ok(())
+}
+
+/// `overq lint` — the CI-facing entry of the static analyzer. Never
+/// returns: exits 0 (clean / warnings without --deny-warn), 1 (findings
+/// gate) or 2 (usage or operational failure, e.g. the model won't load).
+fn lint_cmd(args: &Args) -> Result<()> {
+    use overq::analysis;
+
+    if args.flag("codes") {
+        for c in analysis::CODES {
+            println!("{} [{}] {}: {}", c.code, c.severity, c.name, c.invariant);
+        }
+        std::process::exit(0);
+    }
+
+    let mut report = analysis::Report::default();
+    let mut linted_anything = false;
+
+    if let Some(spec) = args.get("split") {
+        let text = if spec.starts_with("split:") {
+            spec.to_string()
+        } else {
+            format!("split:{spec}")
+        };
+        report.merge(analysis::lint_split_text(&text));
+        linted_anything = true;
+    }
+
+    if let Some(path) = args.positional.first() {
+        let model = match args.get("model") {
+            Some(name) => match load_model_any(name) {
+                Ok((m, _)) => Some(m),
+                Err(e) => {
+                    eprintln!("error: load model {name:?}: {e:#}");
+                    std::process::exit(2);
+                }
+            },
+            None => None,
+        };
+        let p = std::path::Path::new(path);
+        report.merge(if p.is_dir() {
+            analysis::lint_dir(p, model.as_ref())
+        } else {
+            analysis::lint_file(p, model.as_ref())
+        });
+        linted_anything = true;
+    }
+
+    if !linted_anything {
+        eprintln!("usage: overq lint <plan.json | plans-dir> [--model <name>] [--split <spec>] [--json] [--deny-warn]");
+        std::process::exit(2);
+    }
+
+    if args.flag("json") {
+        println!("{}", report.to_json().to_json());
+    } else {
+        print!("{}", report.render_human());
+    }
+    std::process::exit(report.exit_code(args.flag("deny-warn")));
 }
 
 fn serve(args: &Args) -> Result<()> {

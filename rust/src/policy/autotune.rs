@@ -564,12 +564,25 @@ pub fn autotune(
         .clone()
         .unwrap_or_else(|| format!("{}-auto", model.name));
     let (layers, plan) = emit_plan(&st, idx, &name, &model.name, &mut CovCache::new());
+    self_lint(&plan, model, images)?;
     Ok(AutotuneResult {
         layers,
         total_area: state_area(&st, idx),
         baseline_area: st.baseline_area,
         plan,
     })
+}
+
+/// The tuner lints its own output before handing it to callers: an
+/// Error-level finding here is a tuner bug (the serving layer would
+/// refuse the plan anyway), so fail loudly at emission instead of at
+/// registration. Warnings pass through — `overq lint` reports them.
+fn self_lint(plan: &DeploymentPlan, model: &LoadedModel, images: &TensorF) -> Result<()> {
+    let report = crate::analysis::lint_plan_with_model(plan, model, &images.dims()[1..]);
+    if let Some(d) = report.first_error() {
+        anyhow::bail!("autotuner emitted a plan that fails lint (tuner bug): {d}");
+    }
+    Ok(())
 }
 
 /// Run the full two-stage autotuner: stage-1 greedy search, then
@@ -681,6 +694,7 @@ pub fn autotune_measured(
         accuracy: candidates[chosen].measured_acc,
         baseline_accuracy: baseline_acc,
     });
+    self_lint(&plan, model, images)?;
     let result = AutotuneResult {
         layers: cand_layers[chosen].clone(),
         total_area: state_area(&st, &history[win_step]),

@@ -1,0 +1,218 @@
+//! The bad-plan corpus (`rust/tests/lint_corpus/`): one fixture per
+//! lint code, each triggering exactly its intended stable code — the
+//! codes are API (docs/static_analysis.md), so a rule change that
+//! shifts a fixture onto a different code fails here. Plus the serving
+//! gates: `register_plan` and `PlanWatch::poll` refusing Error-level
+//! plans with the lint code surfaced, while the old plan keeps serving.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use overq::analysis::{self, Severity};
+use overq::coordinator::{Coordinator, PlanWatch};
+use overq::data::shapes;
+use overq::models::synth_model;
+use overq::policy::AutotuneConfig;
+use overq::tensor::TensorF;
+
+fn corpus() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/lint_corpus")
+}
+
+fn codes(r: &analysis::Report, sev: Severity) -> BTreeSet<&'static str> {
+    r.diagnostics
+        .iter()
+        .filter(|d| d.severity == sev)
+        .map(|d| d.code)
+        .collect()
+}
+
+/// Lint one fixture and assert the finding set is exactly `{code}` at
+/// `sev` with nothing else at any severity.
+fn assert_exactly(report: &analysis::Report, code: &str, sev: Severity) {
+    assert_eq!(
+        codes(report, sev),
+        BTreeSet::from([code]),
+        "fixture {code}:\n{}",
+        report.render_human()
+    );
+    let other = report
+        .diagnostics
+        .iter()
+        .filter(|d| d.severity != sev)
+        .count();
+    assert_eq!(
+        other,
+        0,
+        "fixture {code} has collateral findings:\n{}",
+        report.render_human()
+    );
+}
+
+#[test]
+fn error_fixtures_trigger_exactly_their_code() {
+    let model = synth_model("synth-tiny", 42).unwrap();
+    // (code, lint against the model graph?)
+    let fixtures = [
+        ("OQ001", false),
+        ("OQ002", false),
+        ("OQ003", false),
+        ("OQ004", false),
+        ("OQ005", false),
+        ("OQ006", false),
+        ("OQ007", false),
+        ("OQ011", true),
+        ("OQ012", true),
+        ("OQ014", false),
+        ("OQ018", false),
+    ];
+    for (code, with_model) in fixtures {
+        let path = corpus().join(format!("{code}.plan.json"));
+        let report = analysis::lint_file(&path, with_model.then_some(&model));
+        assert_exactly(&report, code, Severity::Error);
+    }
+}
+
+#[test]
+fn warn_fixtures_trigger_exactly_their_code() {
+    let model = synth_model("synth-tiny", 42).unwrap();
+    let fixtures = [("OQ008", false), ("OQ009", false), ("OQ010", false), ("OQ013", true)];
+    for (code, with_model) in fixtures {
+        let path = corpus().join(format!("{code}.plan.json"));
+        let report = analysis::lint_file(&path, with_model.then_some(&model));
+        assert_exactly(&report, code, Severity::Warn);
+    }
+}
+
+#[test]
+fn duplicate_alias_directory_fixture_triggers_oq015() {
+    let report = analysis::lint_dir(&corpus().join("OQ015_dir"), None);
+    assert_exactly(&report, "OQ015", Severity::Error);
+}
+
+#[test]
+fn split_fixtures_trigger_their_codes() {
+    let oq016 = std::fs::read_to_string(corpus().join("OQ016.split")).unwrap();
+    let report = analysis::lint_split_text(oq016.trim());
+    assert_exactly(&report, "OQ016", Severity::Error);
+
+    let oq017 = std::fs::read_to_string(corpus().join("OQ017.split")).unwrap();
+    let report = analysis::lint_split_text(oq017.trim());
+    assert_exactly(&report, "OQ017", Severity::Warn);
+}
+
+#[test]
+fn clean_fixture_is_clean_against_its_model() {
+    let model = synth_model("synth-tiny", 42).unwrap();
+    let report = analysis::lint_file(&corpus().join("clean.plan.json"), Some(&model));
+    assert!(report.is_clean(), "{}", report.render_human());
+}
+
+/// Every lint code has a corpus fixture — adding a code without a
+/// fixture (or a stale fixture for a retired code) fails here.
+#[test]
+fn corpus_covers_every_code() {
+    for c in analysis::CODES {
+        let plan = corpus().join(format!("{}.plan.json", c.code));
+        let split = corpus().join(format!("{}.split", c.code));
+        let dir = corpus().join(format!("{}_dir", c.code));
+        assert!(
+            plan.exists() || split.exists() || dir.is_dir(),
+            "lint code {} has no corpus fixture",
+            c.code
+        );
+    }
+}
+
+fn img_of(src: &TensorF, i: usize) -> TensorF {
+    let sz = 16 * 16 * 3;
+    TensorF::from_vec(&[16, 16, 3], src.data[i * sz..(i + 1) * sz].to_vec())
+}
+
+#[test]
+fn register_plan_refuses_error_lint_plans_and_keeps_serving() {
+    let tiny = synth_model("synth-tiny", 21).unwrap();
+    let (images, _) = shapes::gen_batch(21, 0, 8);
+    let plan = overq::policy::autotune(&tiny, &images, &AutotuneConfig::default())
+        .unwrap()
+        .plan;
+    let qc = plan.to_quant_config();
+    let (load, _) = shapes::gen_batch(22, 0, 2);
+    let want = tiny.engine.forward_quant(&load, &qc).unwrap();
+    let classes = tiny.engine.num_classes().unwrap();
+
+    let coord = Coordinator::builder().model_local(tiny).build().unwrap();
+    let h = coord.model("synth-tiny").unwrap();
+    h.register_plan(plan.clone()).unwrap();
+
+    // an Error-level plan (cascade 0 is unservable hardware config) is
+    // refused with the stable code in the error...
+    let mut bad = plan.clone();
+    bad.layers[0].overq.cascade = 0;
+    let err = h.register_plan(bad).unwrap_err();
+    assert!(format!("{err:#}").contains("OQ004"), "{err:#}");
+
+    // ...and the previously registered plan is untouched by the refusal
+    let resp = h
+        .infer_variant(img_of(&load, 0), &format!("plan:{}", plan.name))
+        .unwrap();
+    assert_eq!(resp.logits, want.data[0..classes].to_vec());
+    coord.shutdown();
+}
+
+/// The watch path: a plan file that parses (`cascade: 0` passes the
+/// schema loader) but fails lint is rejected exactly once per content
+/// change, the lint code lands in `last_watch_error`, and the old plan
+/// keeps serving its original numerics.
+#[test]
+fn watch_rejects_lint_error_plan_once_and_old_plan_keeps_serving() {
+    let dir = std::env::temp_dir().join(format!("overq_lint_watch_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let tiny = synth_model("synth-tiny", 17).unwrap();
+    let (images, _) = shapes::gen_batch(17, 0, 8);
+    let cfg = AutotuneConfig {
+        plan_name: Some("a".into()),
+        ..AutotuneConfig::default()
+    };
+    let plan_a = overq::policy::autotune(&tiny, &images, &cfg).unwrap().plan;
+    let qc_a = plan_a.to_quant_config();
+    let (load, _) = shapes::gen_batch(56, 0, 2);
+    let ref_a = tiny.engine.forward_quant(&load, &qc_a).unwrap();
+    let classes = tiny.engine.num_classes().unwrap();
+
+    let coord = Coordinator::builder().model_local(tiny).build().unwrap();
+    let h = coord.model("synth-tiny").unwrap();
+    let path = dir.join("a.plan.json");
+    plan_a.save(&path).unwrap();
+    let mut watch = PlanWatch::new(h.clone(), &dir).unwrap();
+    assert_eq!(watch.poll().applied, vec!["a".to_string()]);
+
+    // overwrite with a cascade-0 plan: parses, fails lint (OQ004)
+    let mut bad = plan_a.clone();
+    bad.layers[0].overq.cascade = 0;
+    bad.save(&path).unwrap();
+    let report = watch.poll();
+    assert!(report.applied.is_empty());
+    assert_eq!(report.errors.len(), 1, "lint rejection not reported");
+    let m = h.metrics();
+    assert_eq!(m.watch_errors, 1);
+    let last = m.last_watch_error.as_deref().unwrap_or("");
+    assert!(last.contains("OQ004"), "lint code missing: {last:?}");
+    assert!(last.contains("a.plan.json"), "file name missing: {last:?}");
+
+    // rejected once per content change, not once per poll
+    assert!(watch.poll().errors.is_empty());
+    assert_eq!(h.metrics().watch_errors, 1);
+
+    // the old plan keeps serving its original numerics
+    let resp = h.infer_variant(img_of(&load, 0), "plan:a").unwrap();
+    assert_eq!(resp.logits, ref_a.data[0..classes].to_vec());
+
+    // a fixed rewrite swaps in
+    plan_a.save(&path).unwrap();
+    assert_eq!(watch.poll().applied, vec!["a".to_string()]);
+    coord.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

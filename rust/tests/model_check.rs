@@ -1,0 +1,177 @@
+//! Model-checked coordinator concurrency protocols.
+//!
+//! `util::sync::model` explores *every* distinguishable thread
+//! interleaving of these small protocol models (DFS over scheduling
+//! decisions at each lock/channel/atomic operation), so the properties
+//! below are checked exhaustively, not probabilistically. Each model
+//! mirrors one protocol of `coordinator::server`:
+//!
+//! * **swap/submit publication** — `install_plan` inserts the alias
+//!   into the fail-fast set AND sends the worker's control message
+//!   under the shard queue lock; `submit_leaf` checks + sends under the
+//!   same lock. The FIFO channel then guarantees the worker sees the
+//!   install before any request that passed the check. The `_races`
+//!   twin drops the shared lock and must be caught by the checker —
+//!   that is the regression test for the checker itself.
+//! * **shutdown drain** — `Coordinator::drop` closes the queue under
+//!   the same lock that submits take, so every accepted request is
+//!   still in the channel for the worker to drain: none are lost.
+//! * **bandit/metrics ordering** — `account_chunk` and
+//!   `set_routing_policy` take the bandit and metrics locks
+//!   sequentially in the same order, never nested in reverse.
+//!
+//! The nightly ThreadSanitizer CI job runs the real coordinator tests
+//! under TSan for the complementary dynamic check (docs/static_analysis.md).
+
+use overq::util::sync::model;
+
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum Msg {
+    Install,
+    Infer,
+}
+
+/// The real protocol: alias publication and the control-message send
+/// share one critical section with the submit-side check + send.
+#[test]
+fn swap_submit_publication_protocol_holds() {
+    model::check(|| {
+        let tx_lock = model::Arc::new(model::Mutex::new(()));
+        let plans = model::Arc::new(model::Mutex::new(false));
+        let chan = model::Arc::new(model::Channel::new());
+
+        let (tl, pl, ch) = (tx_lock.clone(), plans.clone(), chan.clone());
+        let admin = model::thread::spawn(move || {
+            // install_plan: insert alias + send InstallPlan under tx lock
+            let _g = tl.lock();
+            *pl.lock() = true;
+            ch.send(Msg::Install);
+        });
+        let (tl, pl, ch) = (tx_lock.clone(), plans.clone(), chan.clone());
+        let client = model::thread::spawn(move || {
+            // submit_leaf: fail-fast check + send under the same lock
+            let _g = tl.lock();
+            if *pl.lock() {
+                ch.send(Msg::Infer);
+            }
+        });
+        admin.join().unwrap();
+        client.join().unwrap();
+
+        // worker: drains the FIFO; a request that passed the fail-fast
+        // check must find its plan already installed
+        let mut installed = false;
+        while let Some(m) = chan.try_recv() {
+            match m {
+                Msg::Install => installed = true,
+                Msg::Infer => assert!(installed, "worker saw infer before install"),
+            }
+        }
+    });
+}
+
+/// The buggy variant: the client checks + sends WITHOUT the shared
+/// queue lock. There is an interleaving where the check passes (alias
+/// already inserted) but the request overtakes the control message in
+/// the channel — the checker must find it.
+#[test]
+#[should_panic(expected = "model check failed")]
+fn swap_submit_without_the_shared_lock_races() {
+    model::check(|| {
+        let tx_lock = model::Arc::new(model::Mutex::new(()));
+        let plans = model::Arc::new(model::Mutex::new(false));
+        let chan = model::Arc::new(model::Channel::new());
+
+        let (tl, pl, ch) = (tx_lock.clone(), plans.clone(), chan.clone());
+        let admin = model::thread::spawn(move || {
+            let _g = tl.lock();
+            *pl.lock() = true;
+            ch.send(Msg::Install);
+        });
+        let (pl, ch) = (plans.clone(), chan.clone());
+        let client = model::thread::spawn(move || {
+            // BUG under test: no tx_lock around check + send
+            if *pl.lock() {
+                ch.send(Msg::Infer);
+            }
+        });
+        admin.join().unwrap();
+        client.join().unwrap();
+
+        let mut installed = false;
+        while let Some(m) = chan.try_recv() {
+            match m {
+                Msg::Install => installed = true,
+                Msg::Infer => assert!(installed, "worker saw infer before install"),
+            }
+        }
+    });
+}
+
+/// Shutdown protocol: `Coordinator::drop` takes the queue sender out
+/// under the same lock submits use, so a submit either fails fast
+/// ("coordinator stopped") or its request is in the channel before the
+/// close — the drain then sees every accepted request.
+#[test]
+fn shutdown_never_loses_accepted_requests() {
+    model::check(|| {
+        let chan = model::Arc::new(model::Channel::new());
+        let open = model::Arc::new(model::Mutex::new(true));
+        let sent = model::Arc::new(model::Mutex::new(0usize));
+
+        let (op, ch, se) = (open.clone(), chan.clone(), sent.clone());
+        let client = model::thread::spawn(move || {
+            // submit_leaf: check the queue is open and send under one lock
+            let g = op.lock();
+            if *g {
+                ch.send(Msg::Infer);
+                *se.lock() += 1;
+            }
+        });
+        // Coordinator::drop: close the queue under the same lock
+        {
+            let mut g = open.lock();
+            *g = false;
+        }
+        client.join().unwrap();
+
+        // worker drain after close: everything accepted is still there
+        let mut got = 0usize;
+        while chan.try_recv().is_some() {
+            got += 1;
+        }
+        assert_eq!(got, *sent.lock(), "accepted request lost at shutdown");
+    });
+}
+
+/// `account_chunk` (worker) and `set_routing_policy` (admin) both take
+/// the bandit lock, release it, then take the metrics lock — same
+/// order, never nested. The checker proves every interleaving of that
+/// protocol is deadlock-free and leaves the two sides consistent once
+/// both finish.
+#[test]
+fn bandit_then_metrics_sequential_locking_is_deadlock_free() {
+    model::check(|| {
+        let bandit = model::Arc::new(model::Mutex::new(None::<&'static str>));
+        let metrics = model::Arc::new(model::Mutex::new(None::<&'static str>));
+
+        let (ba, me) = (bandit.clone(), metrics.clone());
+        let admin = model::thread::spawn(move || {
+            // set_routing_policy(Bandit): install router, then pin control
+            *ba.lock() = Some("control");
+            *me.lock() = Some("control");
+        });
+        // account_chunk: observe rewards under the bandit lock, then
+        // record under the metrics lock — sequentially, never nested
+        let routed = { bandit.lock().is_some() };
+        {
+            let _m = metrics.lock();
+            // recording happens here; `routed` only decides reward rows
+            let _ = routed;
+        }
+        admin.join().unwrap();
+
+        assert_eq!(*bandit.lock(), Some("control"));
+        assert_eq!(*metrics.lock(), Some("control"));
+    });
+}
