@@ -1,0 +1,121 @@
+//! `cargo bench --bench obs` — measures the serving-path cost of the
+//! telemetry plane: identical closed-loop plan traffic with request
+//! tracing off vs on (span ring live), writing `BENCH_obs.json` with
+//! the throughput overhead fraction (target: under 5%, see
+//! docs/observability.md). Coverage counters are always on in serving
+//! workers, so both modes pay them — the delta isolates the span ring.
+//! Runs artifact-free on the synthetic zoo.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use overq::coordinator::batcher::BatchPolicy;
+use overq::coordinator::Coordinator;
+use overq::data::shapes;
+use overq::models::synth_model;
+use overq::policy::{autotune, AutotuneConfig, DeploymentPlan};
+use overq::tensor::TensorF;
+use overq::util::json::Value;
+
+const IMG_SZ: usize = 16 * 16 * 3;
+
+fn img_of(load: &TensorF, i: usize) -> TensorF {
+    let d = load.data[i * IMG_SZ..(i + 1) * IMG_SZ].to_vec();
+    TensorF::from_vec(&[16, 16, 3], d)
+}
+
+fn tuned_plan() -> anyhow::Result<DeploymentPlan> {
+    let loaded = synth_model("synth-tiny", 42)?;
+    let (images, _) = shapes::gen_batch(4242, 0, 16);
+    let cfg = AutotuneConfig {
+        plan_name: Some("tuned".into()),
+        ..AutotuneConfig::default()
+    };
+    Ok(autotune(&loaded, &images, &cfg)?.plan)
+}
+
+/// One closed-loop run: `n` requests in windows of 8 against
+/// `plan:tuned` with tracing toggled. Returns (req/s, spans drained,
+/// spans dropped by the bounded ring).
+fn run(plan: &DeploymentPlan, n: usize, tracing: bool) -> anyhow::Result<(f64, u64, u64)> {
+    let coord = Coordinator::builder()
+        .policy(BatchPolicy::default())
+        .seed(7)
+        .model_local(synth_model("synth-tiny", 42)?)
+        .build()?;
+    let handle = coord.model("synth-tiny")?;
+    handle.register_plan(plan.clone())?;
+    handle.set_tracing(tracing);
+
+    let (load, _) = shapes::gen_batch(77, 0, n);
+    // warmup the workers and the plan's encode path off the clock
+    for i in 0..8.min(n) {
+        let rx = handle.submit_variant(img_of(&load, i), "plan:tuned")?;
+        rx.recv()?.map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    let _ = handle.drain_events();
+
+    let t0 = Instant::now();
+    let mut done = 0usize;
+    while done < n {
+        let take = 8.min(n - done);
+        let mut pending = Vec::with_capacity(take);
+        for i in done..done + take {
+            pending.push(handle.submit_variant(img_of(&load, i), "plan:tuned")?);
+        }
+        for rx in pending {
+            rx.recv()?.map_err(|e| anyhow::anyhow!("{e}"))?;
+        }
+        done += take;
+    }
+    let wall = t0.elapsed();
+    let drained = handle.drain_events().len() as u64;
+    let dropped = handle.trace_dropped();
+    coord.shutdown();
+    Ok((n as f64 / wall.as_secs_f64(), drained, dropped))
+}
+
+/// Best-of-`reps` throughput for one tracing mode (best-of damps
+/// scheduler noise, which would otherwise dwarf the span-ring cost).
+fn best_of(plan: &DeploymentPlan, n: usize, reps: usize, tracing: bool) -> (f64, u64, u64) {
+    let mut best = (0.0f64, 0u64, 0u64);
+    for _ in 0..reps {
+        let r = run(plan, n, tracing).expect("bench run failed");
+        if r.0 > best.0 {
+            best = r;
+        }
+    }
+    best
+}
+
+fn main() {
+    let n = 512usize;
+    let plan = tuned_plan().expect("autotune failed");
+    let (rps_off, spans_off, _) = best_of(&plan, n, 3, false);
+    let (rps_on, spans_on, dropped_on) = best_of(&plan, n, 3, true);
+    let overhead = (rps_off - rps_on).max(0.0) / rps_off;
+    println!(
+        "{:<40} {:>8.1} req/s tracing off | {:>8.1} req/s on | overhead {:>5.2}%",
+        "serve synth-tiny plan:tuned",
+        rps_off,
+        rps_on,
+        overhead * 100.0
+    );
+    println!("  spans: off drained {spans_off} | on drained {spans_on} (dropped {dropped_on})");
+
+    let mut case = BTreeMap::new();
+    case.insert("name".into(), Value::Str("serve synth-tiny plan:tuned".into()));
+    case.insert("requests".into(), Value::Num(n as f64));
+    case.insert("req_per_s_tracing_off".into(), Value::Num(rps_off));
+    case.insert("req_per_s_tracing_on".into(), Value::Num(rps_on));
+    case.insert("tracing_overhead_frac".into(), Value::Num(overhead));
+    case.insert("spans_drained_tracing_on".into(), Value::Num(spans_on as f64));
+    case.insert("spans_dropped_tracing_on".into(), Value::Num(dropped_on as f64));
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Value::Str("obs".into()));
+    top.insert("results".into(), Value::Arr(vec![Value::Obj(case)]));
+    let json = Value::Obj(top).to_json();
+    std::fs::write("BENCH_obs.json", &json).expect("write BENCH_obs.json");
+    println!("wrote BENCH_obs.json (tracing overhead {:.2}%)", overhead * 100.0);
+}

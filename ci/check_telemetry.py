@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""CI gate for the telemetry endpoint (docs/observability.md).
+
+Validates a scraped `/metrics` body line-by-line against the Prometheus
+text exposition grammar (version 0.0.4), cross-checks `/snapshot.json`
+against the request count the bench drove, holds the live OverQ
+coverage of the Fig-6a full-configuration control plan to the paper's
+>= 0.9 line, and sanity-checks the `/trace` JSONL drain.
+
+Usage: check_telemetry.py metrics.prom snapshot.json trace.jsonl requests
+"""
+
+import json
+import re
+import sys
+
+NAME = r"[a-zA-Z_:][a-zA-Z0-9_:]*"
+LABEL = r'[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*"'
+VALUE = r"[+-]?(?:Inf|NaN|\d+(?:\.\d+)?(?:[eE][+-]?\d+)?)"
+SAMPLE = re.compile(rf"^({NAME})(?:\{{{LABEL}(?:,{LABEL})*\}})? {VALUE}$")
+HELP = re.compile(rf"^# HELP {NAME} .+$")
+TYPE = re.compile(rf"^# TYPE ({NAME}) (counter|gauge|histogram|summary|untyped)$")
+
+
+def check_metrics(path):
+    typed = set()
+    samples = 0
+    for lineno, line in enumerate(open(path).read().splitlines(), 1):
+        if not line:
+            continue
+        if line.startswith("# HELP "):
+            assert HELP.match(line), f"{path}:{lineno}: bad HELP line: {line!r}"
+            continue
+        if line.startswith("# TYPE "):
+            m = TYPE.match(line)
+            assert m, f"{path}:{lineno}: bad TYPE line: {line!r}"
+            typed.add(m.group(1))
+            continue
+        m = SAMPLE.match(line)
+        assert m, f"{path}:{lineno}: unparseable sample: {line!r}"
+        # histogram/summary series hang off the family name
+        base = re.sub(r"_(bucket|sum|count)$", "", m.group(1))
+        assert m.group(1) in typed or base in typed, (
+            f"{path}:{lineno}: sample {m.group(1)} has no # TYPE header"
+        )
+        samples += 1
+    assert samples > 0, f"{path}: no samples at all"
+    print(f"{path}: {samples} samples across {len(typed)} families — grammar OK")
+
+
+def check_snapshot(path, requests):
+    doc = json.load(open(path))
+    got = int(doc.get("requests", 0))
+    assert got == requests, f"{path}: requests {got} != expected {requests}"
+    cov = doc.get("coverage", {})
+    assert cov, f"{path}: no coverage block — counters never populated"
+    for variant, c in sorted(cov.items()):
+        print(
+            f"{path}: {variant} coverage {c['coverage']:.3f} "
+            f"({int(c['outliers'])} outliers, {int(c['dropped'])} dropped)"
+        )
+    # the bandit's pinned control arm runs the uniform full(4,4) config —
+    # the paper's Fig-6a "full" curve, which sits above 90% coverage
+    fig6a = cov.get("plan:baseline-control")
+    assert fig6a is not None, f"{path}: Fig-6a control plan saw no traffic"
+    assert fig6a["coverage"] >= 0.9, (
+        f"{path}: Fig-6a full-config coverage {fig6a['coverage']:.3f} < 0.9"
+    )
+    print(f"{path}: Fig-6a coverage gate passed ({fig6a['coverage']:.3f} >= 0.9)")
+
+
+def check_trace(path):
+    lines = [ln for ln in open(path).read().splitlines() if ln]
+    assert lines, f"{path}: tracing was on but no spans drained"
+    names = set()
+    for lineno, line in enumerate(lines, 1):
+        ev = json.loads(line)
+        assert "name" in ev and "dur_us" in ev, f"{path}:{lineno}: bad event {line!r}"
+        names.add(ev["name"])
+    assert "execute" in names, f"{path}: no execute spans among {sorted(names)}"
+    print(f"{path}: {len(lines)} events, span names {sorted(names)}")
+
+
+def main():
+    metrics, snapshot, trace, requests = sys.argv[1:5]
+    check_metrics(metrics)
+    check_snapshot(snapshot, int(requests))
+    check_trace(trace)
+
+
+if __name__ == "__main__":
+    main()

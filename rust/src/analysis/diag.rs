@@ -166,6 +166,14 @@ pub const CODES: &[CodeInfo] = &[
         invariant: "the file parses as JSON, is a plan object, and declares a \
                     supported schema version",
     },
+    CodeInfo {
+        code: "OQ019",
+        severity: Severity::Warn,
+        name: "drift-baseline",
+        invariant: "every layer stores the profile-time drift baseline \
+                    (mean/var/clip_rate) the live telemetry compares against; \
+                    re-profile plans tuned before it existed",
+    },
 ];
 
 /// Look up a code's registry entry.

@@ -178,6 +178,11 @@ mod tests {
                     measured_coverage: 0.98,
                     area: crate::policy::pe_area_w(&crate::overq::OverQConfig::full(4, 1), 0),
                     macs: 1000,
+                    drift: Some(crate::obs::counters::DriftBaseline {
+                        mean: 0.1,
+                        var: 0.04,
+                        clip_rate: 0.05,
+                    }),
                 }
             })
             .collect();
@@ -230,6 +235,12 @@ mod tests {
         let r = lint_plan(&p);
         assert!(!r.has_errors());
         assert!(r.diagnostics.iter().any(|d| d.code == "OQ009"));
+
+        let mut p = valid_plan(1);
+        p.layers[0].drift = None;
+        let r = lint_plan(&p);
+        assert!(!r.has_errors(), "missing drift baseline must not gate serving");
+        assert!(r.diagnostics.iter().any(|d| d.code == "OQ019"));
 
         let mut p = valid_plan(1);
         p.name = "bad name!".into();

@@ -367,6 +367,21 @@ fn lint_layer(r: &mut Report, subject: &str, enc: usize, l: &LayerView) {
             }
         }
     }
+
+    // OQ019: drift-detection needs the profile-time baseline; plans
+    // tuned before the telemetry subsystem serve fine but can't be
+    // watched for distribution shift until re-profiled
+    if !l.has_drift {
+        r.push(
+            "OQ019",
+            subject,
+            e,
+            "no drift baseline block — live mean/var/clip-rate telemetry \
+             has nothing to compare against; re-run the autotuner to \
+             store profile-time statistics"
+                .to_string(),
+        );
+    }
 }
 
 /// Static per-enc-point MAC recompute over the model graph — the same

@@ -27,6 +27,9 @@ pub struct LayerView {
     pub measured_coverage: Option<f64>,
     pub area: Option<f64>,
     pub macs: Option<f64>,
+    /// Whether the layer carries a `drift` baseline block (OQ019 checks
+    /// presence; the strict loader validates its contents).
+    pub has_drift: bool,
 }
 
 /// Probe evidence, as found.
@@ -76,6 +79,7 @@ impl PlanView {
                     measured_coverage: l.at(&["measured_coverage"]).as_f64(),
                     area: l.at(&["area"]).as_f64(),
                     macs: l.at(&["macs"]).as_f64(),
+                    has_drift: !matches!(l.at(&["drift"]), Value::Null),
                 })
                 .collect(),
         };
@@ -121,6 +125,7 @@ impl PlanView {
                     measured_coverage: Some(l.measured_coverage),
                     area: Some(l.area),
                     macs: Some(l.macs as f64),
+                    has_drift: l.drift.is_some(),
                 })
                 .collect(),
             total_area: Some(p.total_area),

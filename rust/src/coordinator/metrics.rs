@@ -15,6 +15,8 @@ use std::time::Duration;
 
 use crate::util::sync::{Arc, Mutex};
 
+use crate::obs::counters::{EncSnapshot, VariantObsSnapshot};
+use crate::util::json::Value;
 use crate::util::stats::Summary;
 
 /// Per-variant latency accounting.
@@ -82,6 +84,7 @@ pub struct VariantSnapshot {
     pub mean_e2e_us: f64,
     pub p50_e2e_us: f64,
     pub p95_e2e_us: f64,
+    pub p99_e2e_us: f64,
     /// Bandit pulls observed on this variant (0 under fixed routing).
     pub pulls: u64,
     /// Mean bandit reward (0.0 before the first pull).
@@ -102,9 +105,16 @@ pub struct MetricsSnapshot {
     pub mean_e2e_us: f64,
     pub p50_e2e_us: f64,
     pub p95_e2e_us: f64,
+    pub p99_e2e_us: f64,
     pub p_max_e2e_us: f64,
     pub mean_exec_us: f64,
     pub mean_batch: f64,
+    /// Occupied end-to-end latency buckets as `(upper_us, count)`,
+    /// non-cumulative (see [`crate::obs::hist::Hist::buckets`]); the
+    /// Prometheus renderer accumulates them into the `le` convention.
+    pub e2e_buckets: Vec<(f64, u64)>,
+    /// Sum of all end-to-end latencies (µs), for the histogram `_sum`.
+    pub e2e_sum_us: f64,
     /// Keyed by the resolved variant string (e.g. `plan:a`, `fp32`).
     pub per_variant: BTreeMap<String, VariantSnapshot>,
     /// The bandit's pinned control arm, when outcome-aware routing is
@@ -171,15 +181,23 @@ impl Metrics {
         self.last_watch_error = Some(msg.to_string());
     }
 
-    /// Zero all counters and summaries — e.g. to drop warmup traffic
-    /// before a measurement window, or between A/B experiment epochs.
-    /// The control-arm pin survives: it is routing configuration, and a
-    /// fresh measurement window still needs to know which arm regret is
-    /// computed against.
+    /// Zero all traffic counters and summaries — e.g. to drop warmup
+    /// traffic before a measurement window, or between A/B experiment
+    /// epochs. Configuration and lifecycle state survive: the
+    /// control-arm pin (a fresh window still needs to know which arm
+    /// regret is computed against) and the plan-watcher counters
+    /// (`plan_swaps` / `watch_errors` / `last_watch_error` describe
+    /// hot-reload health over the process lifetime, not traffic —
+    /// zeroing them each window would hide a flapping watcher).
     pub fn reset(&mut self) {
         let control = self.control_arm.take();
+        let (swaps, werrs) = (self.plan_swaps, self.watch_errors);
+        let last = self.last_watch_error.take();
         *self = Metrics::default();
         self.control_arm = control;
+        self.plan_swaps = swaps;
+        self.watch_errors = werrs;
+        self.last_watch_error = last;
     }
 
     /// Point-in-time copy with derived means/percentiles.
@@ -210,9 +228,12 @@ impl Metrics {
             mean_e2e_us: self.e2e_us.mean(),
             p50_e2e_us: self.e2e_us.percentile(50.0),
             p95_e2e_us: self.e2e_us.percentile(95.0),
+            p99_e2e_us: self.e2e_us.percentile(99.0),
             p_max_e2e_us: self.e2e_us.max,
             mean_exec_us: self.exec_us.mean(),
             mean_batch: self.batch_size.mean(),
+            e2e_buckets: self.e2e_us.hist().buckets(),
+            e2e_sum_us: self.e2e_us.sum,
             per_variant: self
                 .per_variant
                 .iter()
@@ -225,6 +246,7 @@ impl Metrics {
                             mean_e2e_us: v.e2e_us.mean(),
                             p50_e2e_us: v.e2e_us.percentile(50.0),
                             p95_e2e_us: v.e2e_us.percentile(95.0),
+                            p99_e2e_us: v.e2e_us.percentile(99.0),
                             pulls: v.pulls,
                             mean_reward: if v.pulls > 0 {
                                 v.reward_sum / v.pulls as f64
@@ -240,6 +262,443 @@ impl Metrics {
             plan_swaps: self.plan_swaps,
             watch_errors: self.watch_errors,
             last_watch_error: self.last_watch_error.clone(),
+        }
+    }
+}
+
+/// `# HELP` / `# TYPE` header for one exposition metric family.
+fn head(o: &mut String, name: &str, kind: &str, help: &str) {
+    o.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+/// Prometheus sample value: integral floats print without a fraction,
+/// non-finite values in the spelling the text format requires.
+fn pnum(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v.is_infinite() {
+        if v > 0.0 { "+Inf" } else { "-Inf" }.to_string()
+    } else if v == v.trunc() && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// One family with a sample per served variant.
+fn obs_family(
+    o: &mut String,
+    obs: &[VariantObsSnapshot],
+    name: &str,
+    kind: &str,
+    help: &str,
+    f: impl Fn(&VariantObsSnapshot) -> f64,
+) {
+    head(o, name, kind, help);
+    for v in obs {
+        o.push_str(&format!("{name}{{variant=\"{}\"}} {}\n", v.variant, pnum(f(v))));
+    }
+}
+
+impl MetricsSnapshot {
+    /// Render this snapshot, the per-variant OverQ counter snapshot and
+    /// the tracing drop count in the Prometheus text exposition format
+    /// — what `overq serve --telemetry-addr` serves at `/metrics`. The
+    /// full metric catalog lives in docs/observability.md.
+    pub fn render_prometheus(&self, obs: &[VariantObsSnapshot], trace_dropped: u64) -> String {
+        let mut o = String::new();
+        head(
+            &mut o,
+            "overq_requests_total",
+            "counter",
+            "Requests executed (all variants)",
+        );
+        o.push_str(&format!("overq_requests_total {}\n", self.requests));
+        head(
+            &mut o,
+            "overq_batches_total",
+            "counter",
+            "Batches executed",
+        );
+        o.push_str(&format!("overq_batches_total {}\n", self.batches));
+        head(
+            &mut o,
+            "overq_padded_slots_total",
+            "counter",
+            "Padded batch slots wasted",
+        );
+        o.push_str(&format!("overq_padded_slots_total {}\n", self.padded_slots));
+        head(
+            &mut o,
+            "overq_plan_swaps_total",
+            "counter",
+            "Plans swapped in by the watcher",
+        );
+        o.push_str(&format!("overq_plan_swaps_total {}\n", self.plan_swaps));
+        head(
+            &mut o,
+            "overq_watch_errors_total",
+            "counter",
+            "Plan files the watcher rejected",
+        );
+        o.push_str(&format!("overq_watch_errors_total {}\n", self.watch_errors));
+        head(
+            &mut o,
+            "overq_trace_dropped_total",
+            "counter",
+            "Trace events dropped by the ring",
+        );
+        o.push_str(&format!("overq_trace_dropped_total {trace_dropped}\n"));
+
+        head(
+            &mut o,
+            "overq_e2e_us",
+            "gauge",
+            "End-to-end latency quantiles (us)",
+        );
+        let qs = [
+            ("0.5", self.p50_e2e_us),
+            ("0.95", self.p95_e2e_us),
+            ("0.99", self.p99_e2e_us),
+            ("max", self.p_max_e2e_us),
+        ];
+        for (q, x) in qs {
+            o.push_str(&format!("overq_e2e_us{{quantile=\"{q}\"}} {}\n", pnum(x)));
+        }
+
+        head(
+            &mut o,
+            "overq_e2e_latency_us",
+            "histogram",
+            "End-to-end latency histogram (us)",
+        );
+        let mut cum = 0u64;
+        for &(ub, c) in &self.e2e_buckets {
+            cum += c;
+            let le = pnum(ub);
+            o.push_str(&format!("overq_e2e_latency_us_bucket{{le=\"{le}\"}} {cum}\n"));
+        }
+        o.push_str(&format!("overq_e2e_latency_us_bucket{{le=\"+Inf\"}} {cum}\n"));
+        o.push_str(&format!("overq_e2e_latency_us_sum {}\n", pnum(self.e2e_sum_us)));
+        o.push_str(&format!("overq_e2e_latency_us_count {cum}\n"));
+
+        head(
+            &mut o,
+            "overq_variant_requests_total",
+            "counter",
+            "Requests served per variant",
+        );
+        for (k, v) in &self.per_variant {
+            let n = v.requests;
+            o.push_str(&format!("overq_variant_requests_total{{variant=\"{k}\"}} {n}\n"));
+        }
+        head(
+            &mut o,
+            "overq_variant_e2e_us",
+            "gauge",
+            "Per-variant e2e latency quantiles (us)",
+        );
+        for (k, v) in &self.per_variant {
+            let qs = [
+                ("0.5", v.p50_e2e_us),
+                ("0.95", v.p95_e2e_us),
+                ("0.99", v.p99_e2e_us),
+            ];
+            for (q, x) in qs {
+                o.push_str(&format!(
+                    "overq_variant_e2e_us{{variant=\"{k}\",quantile=\"{q}\"}} {}\n",
+                    pnum(x)
+                ));
+            }
+        }
+        head(
+            &mut o,
+            "overq_bandit_pulls_total",
+            "counter",
+            "Bandit pulls observed per arm",
+        );
+        for (k, v) in &self.per_variant {
+            let n = v.pulls;
+            o.push_str(&format!("overq_bandit_pulls_total{{variant=\"{k}\"}} {n}\n"));
+        }
+        head(
+            &mut o,
+            "overq_bandit_mean_reward",
+            "gauge",
+            "Mean bandit reward per arm",
+        );
+        for (k, v) in &self.per_variant {
+            o.push_str(&format!(
+                "overq_bandit_mean_reward{{variant=\"{k}\"}} {}\n",
+                pnum(v.mean_reward)
+            ));
+        }
+        head(
+            &mut o,
+            "overq_regret_vs_control",
+            "gauge",
+            "Cumulative regret vs the control arm",
+        );
+        let regret = pnum(self.regret_vs_control);
+        o.push_str(&format!("overq_regret_vs_control {regret}\n"));
+
+        obs_family(
+            &mut o,
+            obs,
+            "overq_coverage",
+            "gauge",
+            "Live outlier coverage per variant (covered_ro / outliers; 1 when none seen)",
+            |v| v.coverage,
+        );
+        obs_family(
+            &mut o,
+            obs,
+            "overq_outliers_total",
+            "counter",
+            "Outlier activations seen per variant",
+            |v| v.outliers as f64,
+        );
+        obs_family(
+            &mut o,
+            obs,
+            "overq_covered_ro_total",
+            "counter",
+            "Outliers handled via range overwrite per variant",
+            |v| v.covered_ro as f64,
+        );
+        obs_family(
+            &mut o,
+            obs,
+            "overq_covered_pr_total",
+            "counter",
+            "Precision-overwrite LSB parks per variant",
+            |v| v.covered_pr as f64,
+        );
+        obs_family(
+            &mut o,
+            obs,
+            "overq_dropped_outliers_total",
+            "counter",
+            "Outliers clamped to qmax per variant",
+            |v| v.dropped as f64,
+        );
+        obs_family(
+            &mut o,
+            obs,
+            "overq_zero_availability",
+            "gauge",
+            "Exact-zero fraction of activation slots per variant",
+            |v| v.zero_availability,
+        );
+
+        head(
+            &mut o,
+            "overq_cascade_depth",
+            "histogram",
+            "Cascade depth of covered outliers",
+        );
+        for v in obs {
+            let key = &v.variant;
+            let mut depths: BTreeMap<usize, u64> = BTreeMap::new();
+            for e in &v.enc {
+                for &(d, c) in &e.cascade {
+                    *depths.entry(d).or_insert(0) += c;
+                }
+            }
+            let (mut dcum, mut dsum) = (0u64, 0u64);
+            for (d, c) in &depths {
+                dcum += c;
+                dsum += *d as u64 * c;
+                o.push_str(&format!(
+                    "overq_cascade_depth_bucket{{variant=\"{key}\",le=\"{d}\"}} {dcum}\n"
+                ));
+            }
+            o.push_str(&format!(
+                "overq_cascade_depth_bucket{{variant=\"{key}\",le=\"+Inf\"}} {dcum}\n"
+            ));
+            o.push_str(&format!("overq_cascade_depth_sum{{variant=\"{key}\"}} {dsum}\n"));
+            o.push_str(&format!("overq_cascade_depth_count{{variant=\"{key}\"}} {dcum}\n"));
+        }
+
+        enc_family(
+            &mut o,
+            obs,
+            "overq_enc_coverage",
+            "Live outlier coverage per enc point",
+            |e| Some(e.coverage),
+        );
+        enc_family(
+            &mut o,
+            obs,
+            "overq_act_mean",
+            "Live raw-activation mean per enc point",
+            |e| Some(e.act_mean),
+        );
+        enc_family(
+            &mut o,
+            obs,
+            "overq_act_var",
+            "Live raw-activation variance per enc point",
+            |e| Some(e.act_var),
+        );
+        enc_family(
+            &mut o,
+            obs,
+            "overq_clip_rate",
+            "Live clip rate (outliers / values) per enc point",
+            |e| Some(e.clip_rate),
+        );
+        enc_family(
+            &mut o,
+            obs,
+            "overq_baseline_act_mean",
+            "Profile-time activation mean from the plan drift block",
+            |e| e.baseline.map(|b| b.mean),
+        );
+        enc_family(
+            &mut o,
+            obs,
+            "overq_baseline_act_var",
+            "Profile-time activation variance from the plan drift block",
+            |e| e.baseline.map(|b| b.var),
+        );
+        enc_family(
+            &mut o,
+            obs,
+            "overq_baseline_clip_rate",
+            "Profile-time clip rate from the plan drift block",
+            |e| e.baseline.map(|b| b.clip_rate),
+        );
+        o
+    }
+
+    /// Machine-readable rendering of this snapshot plus the OverQ
+    /// counters — what `--telemetry-addr` serves at `/snapshot.json`
+    /// and `overq stats` consumes.
+    pub fn stats_json(&self, obs: &[VariantObsSnapshot], trace_dropped: u64) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("requests".to_string(), Value::Num(self.requests as f64));
+        m.insert("batches".to_string(), Value::Num(self.batches as f64));
+        m.insert(
+            "padded_slots".to_string(),
+            Value::Num(self.padded_slots as f64),
+        );
+        m.insert("mean_queue_us".to_string(), Value::Num(self.mean_queue_us));
+        m.insert("mean_e2e_us".to_string(), Value::Num(self.mean_e2e_us));
+        m.insert("p50_e2e_us".to_string(), Value::Num(self.p50_e2e_us));
+        m.insert("p95_e2e_us".to_string(), Value::Num(self.p95_e2e_us));
+        m.insert("p99_e2e_us".to_string(), Value::Num(self.p99_e2e_us));
+        m.insert("p_max_e2e_us".to_string(), Value::Num(self.p_max_e2e_us));
+        m.insert("mean_exec_us".to_string(), Value::Num(self.mean_exec_us));
+        m.insert("mean_batch".to_string(), Value::Num(self.mean_batch));
+        m.insert(
+            "regret_vs_control".to_string(),
+            Value::Num(self.regret_vs_control),
+        );
+        m.insert("plan_swaps".to_string(), Value::Num(self.plan_swaps as f64));
+        m.insert(
+            "watch_errors".to_string(),
+            Value::Num(self.watch_errors as f64),
+        );
+        m.insert(
+            "trace_dropped".to_string(),
+            Value::Num(trace_dropped as f64),
+        );
+        if let Some(c) = &self.control_arm {
+            m.insert("control_arm".to_string(), Value::Str(c.clone()));
+        }
+        if let Some(e) = &self.last_watch_error {
+            m.insert("last_watch_error".to_string(), Value::Str(e.clone()));
+        }
+        let pv: BTreeMap<String, Value> = self
+            .per_variant
+            .iter()
+            .map(|(k, v)| (k.clone(), variant_json(v)))
+            .collect();
+        m.insert("per_variant".to_string(), Value::Obj(pv));
+        let cov: BTreeMap<String, Value> = obs
+            .iter()
+            .map(|v| (v.variant.clone(), coverage_json(v)))
+            .collect();
+        m.insert("coverage".to_string(), Value::Obj(cov));
+        Value::Obj(m)
+    }
+}
+
+/// JSON view of one variant's serving metrics (for [`MetricsSnapshot::stats_json`]).
+fn variant_json(v: &VariantSnapshot) -> Value {
+    let mut vm = BTreeMap::new();
+    vm.insert("requests".to_string(), Value::Num(v.requests as f64));
+    vm.insert("mean_queue_us".to_string(), Value::Num(v.mean_queue_us));
+    vm.insert("mean_e2e_us".to_string(), Value::Num(v.mean_e2e_us));
+    vm.insert("p50_e2e_us".to_string(), Value::Num(v.p50_e2e_us));
+    vm.insert("p95_e2e_us".to_string(), Value::Num(v.p95_e2e_us));
+    vm.insert("p99_e2e_us".to_string(), Value::Num(v.p99_e2e_us));
+    vm.insert("pulls".to_string(), Value::Num(v.pulls as f64));
+    vm.insert("mean_reward".to_string(), Value::Num(v.mean_reward));
+    Value::Obj(vm)
+}
+
+/// JSON view of one variant's OverQ counters (for [`MetricsSnapshot::stats_json`]).
+fn coverage_json(v: &VariantObsSnapshot) -> Value {
+    let mut vm = BTreeMap::new();
+    vm.insert("coverage".to_string(), Value::Num(v.coverage));
+    vm.insert("outliers".to_string(), Value::Num(v.outliers as f64));
+    vm.insert("covered_ro".to_string(), Value::Num(v.covered_ro as f64));
+    vm.insert("covered_pr".to_string(), Value::Num(v.covered_pr as f64));
+    vm.insert("dropped".to_string(), Value::Num(v.dropped as f64));
+    vm.insert(
+        "zero_availability".to_string(),
+        Value::Num(v.zero_availability),
+    );
+    let enc: Vec<Value> = v
+        .enc
+        .iter()
+        .map(|e| {
+            let mut em = BTreeMap::new();
+            em.insert("enc".to_string(), Value::Num(e.enc as f64));
+            em.insert("coverage".to_string(), Value::Num(e.coverage));
+            em.insert(
+                "zero_availability".to_string(),
+                Value::Num(e.zero_availability),
+            );
+            em.insert("act_mean".to_string(), Value::Num(e.act_mean));
+            em.insert("act_var".to_string(), Value::Num(e.act_var));
+            em.insert("clip_rate".to_string(), Value::Num(e.clip_rate));
+            if let Some(b) = e.baseline {
+                let mut bm = BTreeMap::new();
+                bm.insert("mean".to_string(), Value::Num(b.mean));
+                bm.insert("var".to_string(), Value::Num(b.var));
+                bm.insert("clip_rate".to_string(), Value::Num(b.clip_rate));
+                em.insert("baseline".to_string(), Value::Obj(bm));
+            }
+            Value::Obj(em)
+        })
+        .collect();
+    vm.insert("enc".to_string(), Value::Arr(enc));
+    Value::Obj(vm)
+}
+
+/// One gauge family with a sample per (variant, enc point). `f`
+/// returning `None` skips the sample (e.g. no stored baseline).
+fn enc_family(
+    o: &mut String,
+    obs: &[VariantObsSnapshot],
+    name: &str,
+    help: &str,
+    f: impl Fn(&EncSnapshot) -> Option<f64>,
+) {
+    head(o, name, "gauge", help);
+    for v in obs {
+        for e in &v.enc {
+            if let Some(x) = f(e) {
+                o.push_str(&format!(
+                    "{name}{{variant=\"{}\",enc=\"{}\"}} {}\n",
+                    v.variant,
+                    e.enc,
+                    pnum(x)
+                ));
+            }
         }
     }
 }
@@ -292,10 +751,12 @@ mod tests {
         assert!((49.0..=52.0).contains(&s.p50_e2e_us), "{}", s.p50_e2e_us);
         assert!((94.0..=96.0).contains(&s.p95_e2e_us), "{}", s.p95_e2e_us);
         assert_eq!(s.p_max_e2e_us, 100.0);
-        // plan:b saw 10, 20, ..., 100
+        // plan:b saw 10, 20, ..., 100 — the histogram reports the
+        // owning bucket's midpoint, within one 2^(1/8) growth factor
         let b = &s.per_variant["plan:b"];
-        assert!(b.p50_e2e_us >= 40.0 && b.p50_e2e_us <= 60.0, "{}", b.p50_e2e_us);
+        assert!(b.p50_e2e_us >= 40.0 && b.p50_e2e_us <= 65.0, "{}", b.p50_e2e_us);
         assert_eq!(b.p95_e2e_us, 100.0);
+        assert_eq!(b.p99_e2e_us, 100.0);
     }
 
     #[test]
@@ -333,12 +794,17 @@ mod tests {
     }
 
     #[test]
-    fn reset_keeps_control_arm_and_zeros_watch_counters() {
+    fn reset_keeps_control_arm_and_watch_counters() {
         let m = shared();
         {
             let mut g = m.lock().unwrap();
             g.control_arm = Some("plan:base".into());
             g.record_reward("plan:base", 0.5);
+            g.record_request(
+                "plan:base",
+                Duration::from_micros(5),
+                Duration::from_micros(50),
+            );
             g.record_plan_swap();
             g.record_watch_error("plans/bad.plan.json: parse error");
             assert_eq!(g.plan_swaps, 1);
@@ -346,10 +812,107 @@ mod tests {
             g.reset();
         }
         let s = m.lock().unwrap().snapshot();
-        assert_eq!(s.control_arm.as_deref(), Some("plan:base"));
-        assert_eq!(s.plan_swaps, 0);
-        assert_eq!(s.watch_errors, 0);
-        assert_eq!(s.last_watch_error, None);
+        // traffic zeroes...
+        assert_eq!(s.requests, 0);
         assert!(s.per_variant.is_empty());
+        assert!(s.e2e_buckets.is_empty());
+        // ...but configuration and lifecycle state survive
+        assert_eq!(s.control_arm.as_deref(), Some("plan:base"));
+        assert_eq!(s.plan_swaps, 1);
+        assert_eq!(s.watch_errors, 1);
+        assert_eq!(s.last_watch_error.as_deref(), Some("plans/bad.plan.json: parse error"));
+    }
+
+    /// 50 requests on `plan:p` plus one enc point's OverQ counters
+    /// (coverage 95/100) — shared by the exporter tests.
+    fn telemetry_fixture() -> (MetricsSnapshot, Vec<VariantObsSnapshot>) {
+        use crate::obs::counters::{record, set_ctx, EncSample, Registry};
+        let m = shared();
+        {
+            let mut g = m.lock().unwrap();
+            g.control_arm = Some("plan:p".into());
+            g.record_batch(50, 2, Duration::from_micros(900));
+            g.record_reward("plan:p", 0.5);
+            for i in 1..=50u64 {
+                g.record_request(
+                    "plan:p",
+                    Duration::from_micros(2),
+                    Duration::from_micros(i * 10),
+                );
+            }
+        }
+        let reg = Registry::new();
+        {
+            let _g = set_ctx(reg.variant("plan:p"));
+            let mut s = EncSample {
+                values: 1000,
+                zeros: 400,
+                outliers: 100,
+                covered_ro: 95,
+                covered_pr: 10,
+                dropped: 5,
+                act_n: 1000,
+                act_mean: 0.1,
+                act_m2: 10.0,
+                ..EncSample::default()
+            };
+            s.cascade[0] = 80;
+            s.cascade[1] = 15;
+            record(0, &s);
+        }
+        let snap = m.lock().unwrap().snapshot();
+        (snap, reg.snapshot())
+    }
+
+    #[test]
+    fn prometheus_exposition_is_well_formed() {
+        let (snap, obs) = telemetry_fixture();
+        let text = snap.render_prometheus(&obs, 3);
+
+        assert!(text.contains("# TYPE overq_e2e_latency_us histogram"));
+        assert!(text.contains("overq_requests_total 50"));
+        assert!(text.contains("overq_trace_dropped_total 3"));
+        assert!(text.contains("overq_coverage{variant=\"plan:p\"} 0.95"));
+        assert!(text.contains("overq_cascade_depth_bucket{variant=\"plan:p\",le=\"+Inf\"} 95"));
+        assert!(text.contains("overq_e2e_latency_us_count 50"));
+        assert!(text.contains("overq_clip_rate{variant=\"plan:p\",enc=\"0\"} 0.1"));
+
+        // every sample line obeys the text exposition grammar:
+        // metric_name[{labels}] value, with a parseable value
+        for line in text.lines() {
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (series, value) = line.rsplit_once(' ').unwrap();
+            assert!(value.parse::<f64>().is_ok(), "bad value in {line}");
+            let name = &series[..series.find('{').unwrap_or(series.len())];
+            assert!(
+                name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+                "bad metric name in {line}"
+            );
+        }
+
+        // histogram bucket counts are cumulative (monotone in le order)
+        let cums: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("overq_e2e_latency_us_bucket"))
+            .map(|l| l.rsplit_once(' ').unwrap().1.parse().unwrap())
+            .collect();
+        assert!(!cums.is_empty());
+        assert!(cums.windows(2).all(|w| w[0] <= w[1]), "{cums:?}");
+        assert_eq!(*cums.last().unwrap(), 50);
+    }
+
+    #[test]
+    fn stats_json_roundtrips_through_the_parser() {
+        let (snap, obs) = telemetry_fixture();
+        let text = snap.stats_json(&obs, 7).to_json();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.at(&["trace_dropped"]).as_f64(), Some(7.0));
+        assert_eq!(v.at(&["control_arm"]).as_str(), Some("plan:p"));
+        assert_eq!(v.at(&["coverage", "plan:p", "coverage"]).as_f64(), Some(0.95));
+        assert_eq!(v.at(&["per_variant", "plan:p", "requests"]).as_f64(), Some(50.0));
+        let p99 = v.at(&["per_variant", "plan:p", "p99_e2e_us"]).as_f64();
+        assert!(p99.unwrap() > 400.0, "{p99:?}");
     }
 }

@@ -19,13 +19,19 @@
 //! reloads retuned `*.plan.json` files from disk through the same
 //! admin plane — no operator in the loop for either.
 //!
-//! See `docs/serving.md` for the full API walkthrough and
-//! `docs/operations.md` for the operations handbook.
+//! The telemetry plane rides on the same handles: request spans and
+//! OverQ coverage counters aggregate per shard, and [`telemetry`]
+//! exports them over HTTP (Prometheus text + JSON + JSONL traces).
+//!
+//! See `docs/serving.md` for the full API walkthrough,
+//! `docs/operations.md` for the operations handbook and
+//! `docs/observability.md` for the telemetry plane.
 
 pub mod batcher;
 pub mod metrics;
 pub mod router;
 pub mod server;
+pub mod telemetry;
 pub mod variant;
 pub mod watch;
 
@@ -35,5 +41,6 @@ pub use server::{
     Coordinator, InferRequest, InferResponse, InferResult, ModelHandle, RoutingPolicy,
     ServerBuilder,
 };
+pub use telemetry::TelemetryServer;
 pub use variant::{Backend, VariantSpec};
 pub use watch::{PlanWatch, PlanWatcher, WatchReport};

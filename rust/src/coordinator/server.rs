@@ -24,6 +24,13 @@
 //! (deterministic seeded A/B routing), [`ModelHandle::set_routing_policy`]
 //! (outcome-aware bandit routing), [`ModelHandle::watch_plans`] (plan
 //! hot-reload from disk), and per-variant [`MetricsSnapshot`]s.
+//!
+//! So does the telemetry plane: each shard owns a trace ring
+//! ([`ModelHandle::set_tracing`] / [`ModelHandle::drain_events`]) and an
+//! OverQ coverage/drift counter registry fed by the worker's quantized
+//! forward passes ([`ModelHandle::obs_snapshot`]); both export through
+//! [`ModelHandle::prometheus`] / [`ModelHandle::stats_json`]
+//! (docs/observability.md).
 
 use std::collections::{HashMap, HashSet};
 use std::path::Path;
@@ -37,6 +44,8 @@ use crate::util::sync::{lock, Arc, Mutex};
 use crate::models::zoo::LoadedModel;
 use crate::models::Artifacts;
 use crate::nn::QuantConfig;
+use crate::obs::counters::{self, Registry, VariantObsSnapshot};
+use crate::obs::span::{self, Event, Ring};
 use crate::policy::DeploymentPlan;
 use crate::runtime::artifacts::ExecutableCache;
 use crate::runtime::pjrt::Input;
@@ -52,6 +61,11 @@ use super::watch;
 /// The outcome-aware router shared between the submit path (picks) and
 /// the shard worker (reward feedback); `None` = fixed-weight routing.
 type SharedBandit = Arc<Mutex<Option<BanditRouter>>>;
+
+/// Per-shard trace ring capacity (events). Beyond it the oldest events
+/// are dropped and counted ([`ModelHandle::trace_dropped`]), never
+/// blocking the request path.
+const TRACE_RING_CAPACITY: usize = 4096;
 
 /// How [`ModelHandle::submit_routed`] resolves a variant for each
 /// request (installed via [`ModelHandle::set_routing_policy`]).
@@ -272,9 +286,15 @@ impl ServerBuilder {
                 .unwrap_or_default();
             let (tx, rx) = std::sync::mpsc::channel::<Msg>();
             let metrics = shared();
-            let m2 = metrics.clone();
             let bandit: SharedBandit = Arc::new(Mutex::new(None));
-            let b2 = bandit.clone();
+            let ring = Ring::new(TRACE_RING_CAPACITY);
+            let obs = Registry::new();
+            let telemetry = WorkerShared {
+                metrics: metrics.clone(),
+                bandit: bandit.clone(),
+                ring: ring.clone(),
+                obs: obs.clone(),
+            };
             let worker_name = spec.name.clone();
             let scales = spec.act_scales.clone();
             let local = spec.local;
@@ -282,7 +302,7 @@ impl ServerBuilder {
                 .name(format!("overq-shard-{}", spec.name))
                 .spawn(move || {
                     if let Err(e) =
-                        worker_loop(arts, worker_name, policy, scales, local, rx, m2, b2)
+                        worker_loop(arts, worker_name, policy, scales, local, rx, telemetry)
                     {
                         eprintln!("[coordinator] shard worker exited with error: {e:#}");
                     }
@@ -295,6 +315,8 @@ impl ServerBuilder {
                 tx: Mutex::new(Some(tx)),
                 worker: Mutex::new(Some(worker)),
                 metrics,
+                ring,
+                obs,
                 plans: Mutex::new(HashSet::new()),
                 split: Mutex::new(None),
                 bandit,
@@ -316,6 +338,12 @@ struct Shard {
     tx: Mutex<Option<Sender<Msg>>>,
     worker: Mutex<Option<std::thread::JoinHandle<()>>>,
     metrics: SharedMetrics,
+    /// Per-shard trace ring; disabled (one relaxed atomic load per span
+    /// site) until [`ModelHandle::set_tracing`] turns it on.
+    ring: Arc<Ring>,
+    /// Per-shard OverQ coverage/drift counters, fed by the worker's
+    /// quantized forward passes and the plans' stored drift baselines.
+    obs: Arc<Registry>,
     /// Registered plan aliases — the submit-time fail-fast view of the
     /// worker's plan map. Kept in step with `install_plan` (inserted
     /// before the control message is sent), so a client's own
@@ -518,6 +546,7 @@ impl ModelHandle {
     /// the fixed traffic split ([`ModelHandle::set_traffic_split`]),
     /// else `fp32`.
     pub fn submit_routed(&self, image: TensorF) -> Result<Receiver<InferResult>> {
+        let t0 = self.shard.ring.enabled().then(Instant::now);
         let bandit_leaf = lock(&self.shard.bandit).as_mut().map(|b| b.pick());
         let leaf = match bandit_leaf {
             Some(leaf) => leaf,
@@ -532,6 +561,10 @@ impl ModelHandle {
                 }
             }
         };
+        if let Some(t0) = t0 {
+            let d = format!("variant={}", leaf.key());
+            self.shard.ring.record("route", d, t0, Instant::now());
+        }
         self.submit_leaf(image, leaf)
     }
 
@@ -581,6 +614,11 @@ impl ModelHandle {
         // worker-side install is ahead of its request in the channel
         let guard = lock(&self.shard.tx);
         let tx = guard.as_ref().context("coordinator stopped")?;
+        // publish the plan's profile-time drift baselines before the
+        // install becomes visible, so coverage snapshots can compare
+        // live activation stats from the first request onward
+        let drift = plan.layers.iter().map(|l| l.drift).collect();
+        self.shard.obs.set_baselines(&format!("plan:{alias}"), drift);
         lock(&self.shard.plans).insert(alias.clone());
         tx.send(Msg::InstallPlan { alias, plan })
             .ok()
@@ -686,11 +724,58 @@ impl ModelHandle {
         lock(&self.shard.metrics).snapshot()
     }
 
-    /// Zero this shard's metrics — e.g. to exclude warmup traffic from
-    /// a measurement window, or between A/B experiment epochs. Requests
-    /// already in the queue still count when they execute.
+    /// Zero this shard's metrics and OverQ coverage counters — e.g. to
+    /// exclude warmup traffic from a measurement window, or between A/B
+    /// experiment epochs. Requests already in the queue still count
+    /// when they execute. Configuration and lifecycle state survive:
+    /// the control-arm pin, the plan-watcher health counters
+    /// (`plan_swaps` / `watch_errors` / `last_watch_error`), and the
+    /// plans' stored drift baselines.
     pub fn reset_metrics(&self) {
         lock(&self.shard.metrics).reset();
+        self.shard.obs.reset();
+    }
+
+    /// Turn request tracing for this shard on or off. While off a span
+    /// site costs one relaxed atomic load; buffered events survive a
+    /// disable and wait for [`ModelHandle::drain_events`].
+    pub fn set_tracing(&self, on: bool) {
+        self.shard.ring.set_enabled(on);
+    }
+
+    /// Drain this shard's buffered trace events, oldest first. `overq
+    /// trace` renders them as JSONL
+    /// ([`crate::obs::span::events_jsonl`]).
+    pub fn drain_events(&self) -> Vec<Event> {
+        self.shard.ring.drain()
+    }
+
+    /// Trace events dropped to the ring bound so far (process
+    /// lifetime; exported as `overq_trace_dropped_total`).
+    pub fn trace_dropped(&self) -> u64 {
+        self.shard.ring.dropped()
+    }
+
+    /// Point-in-time OverQ coverage/drift counters for this shard, one
+    /// entry per observed variant, sorted by variant key.
+    pub fn obs_snapshot(&self) -> Vec<VariantObsSnapshot> {
+        self.shard.obs.snapshot()
+    }
+
+    /// Prometheus text exposition of this shard's serving metrics plus
+    /// the OverQ coverage counters — the body served by `overq serve
+    /// --telemetry-addr` under `/metrics` (docs/observability.md).
+    pub fn prometheus(&self) -> String {
+        let snap = self.metrics();
+        snap.render_prometheus(&self.obs_snapshot(), self.trace_dropped())
+    }
+
+    /// One JSON document with serving metrics, per-variant coverage and
+    /// trace health — what `overq stats` tabulates and the telemetry
+    /// listener serves under `/snapshot.json`.
+    pub fn stats_json(&self) -> crate::util::json::Value {
+        let snap = self.metrics();
+        snap.stats_json(&self.obs_snapshot(), self.trace_dropped())
     }
 
     /// Warm a variant: trigger compilation of every batch size by
@@ -714,6 +799,15 @@ impl ModelHandle {
     }
 }
 
+/// The shared state a shard worker and its client-side [`Shard`] both
+/// hold: metrics, the bandit router, and the telemetry sinks.
+struct WorkerShared {
+    metrics: SharedMetrics,
+    bandit: SharedBandit,
+    ring: Arc<Ring>,
+    obs: Arc<Registry>,
+}
+
 /// Worker-side state shared across batches of one shard.
 struct WorkerState {
     model_name: String,
@@ -725,6 +819,8 @@ struct WorkerState {
     scales: TensorF,
     metrics: SharedMetrics,
     bandit: SharedBandit,
+    ring: Arc<Ring>,
+    obs: Arc<Registry>,
 }
 
 fn worker_loop(
@@ -734,14 +830,19 @@ fn worker_loop(
     act_scales: Vec<f32>,
     native: Option<LoadedModel>,
     rx: std::sync::mpsc::Receiver<Msg>,
-    metrics: SharedMetrics,
-    bandit: SharedBandit,
+    telemetry: WorkerShared,
 ) -> Result<()> {
     let cache = match &arts {
         Some(a) => ExecutableCache::new(a)?,
         None => ExecutableCache::empty(),
     };
     let scales = TensorF::from_vec(&[act_scales.len()], act_scales);
+    let WorkerShared {
+        metrics,
+        bandit,
+        ring,
+        obs,
+    } = telemetry;
     let mut st = WorkerState {
         model_name,
         policy,
@@ -752,6 +853,8 @@ fn worker_loop(
         scales,
         metrics,
         bandit,
+        ring,
+        obs,
     };
     while let Some(batch) = collect(&rx, &st.policy) {
         // apply control messages, then group inference FIFO by variant
@@ -894,6 +997,12 @@ fn run_group_native(
     let key = group[0].spec.key();
     let metrics = st.metrics.clone();
     let bandit = st.bandit.clone();
+    let ring = st.ring.clone();
+    // pin the trace ring and this variant's counter slot to the worker
+    // thread, so deep engine code (forward_quant's encode sites) can
+    // record spans and coverage without seeing the shard
+    let _sink = span::set_sink(ring.clone());
+    let _ctx = counters::set_ctx(st.obs.variant(&key));
     let model = native_model(st)?;
     if let Some(qc) = qc {
         anyhow::ensure!(
@@ -921,10 +1030,20 @@ fn run_group_native(
             xb.data[slot * img_sz..(slot + 1) * img_sz].copy_from_slice(&req.image.data);
         }
         let queue_start = Instant::now();
+        if ring.enabled() {
+            let qd = format!("variant={key}");
+            for req in &group[done..done + take] {
+                ring.record("queue", qd.clone(), req.submitted, queue_start);
+            }
+        }
+        let _batch = ring.span("batch", format!("variant={key} batch={take}"));
         let t0 = Instant::now();
-        let logits = match qc {
-            Some(qc) => model.engine.forward_quant(&xb, qc)?,
-            None => model.engine.forward_f32(&xb, &[])?.0,
+        let logits = {
+            let _exec = ring.span("execute", format!("variant={key} batch={take}"));
+            match qc {
+                Some(qc) => model.engine.forward_quant(&xb, qc)?,
+                None => model.engine.forward_f32(&xb, &[])?.0,
+            }
         };
         let exec = t0.elapsed();
         let classes = logits.dims()[1];
@@ -937,6 +1056,7 @@ fn run_group_native(
             0,
             exec,
         );
+        let _decode = ring.span("decode", format!("variant={key} batch={take}"));
         for (slot, req) in group[done..done + take].iter().enumerate() {
             let resp = InferResponse {
                 logits: logits.data[slot * classes..(slot + 1) * classes].to_vec(),
@@ -961,6 +1081,7 @@ fn run_group_pjrt(
         anyhow::bail!("no executable for {}/{}", st.model_name, variant);
     };
     let key = group[0].spec.key();
+    let ring = st.ring.clone();
     let dims = group[0].image.dims().to_vec(); // (H, W, C)
     let img_sz: usize = dims.iter().product();
     let needs_scales = variant != "fp32";
@@ -975,6 +1096,12 @@ fn run_group_pjrt(
             xb.data[slot * img_sz..(slot + 1) * img_sz].copy_from_slice(&req.image.data);
         }
         let queue_start = Instant::now();
+        if ring.enabled() {
+            let qd = format!("variant={key}");
+            for req in &group[done..done + take] {
+                ring.record("queue", qd.clone(), req.submitted, queue_start);
+            }
+        }
         let exe = st.cache.get(&st.model_name, variant, exe_batch)?;
         let inputs: Vec<Input> = if needs_scales {
             vec![Input::F32(xb), Input::F32(st.scales.clone())]
@@ -982,7 +1109,10 @@ fn run_group_pjrt(
             vec![Input::F32(xb)]
         };
         let t0 = Instant::now();
-        let logits = exe.run_f32(&inputs)?;
+        let logits = {
+            let _exec = ring.span("execute", format!("variant={key} batch={exe_batch}"));
+            exe.run_f32(&inputs)?
+        };
         let exec = t0.elapsed();
         let classes = logits.dims()[1];
         account_chunk(

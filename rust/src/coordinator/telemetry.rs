@@ -1,0 +1,157 @@
+//! Dependency-free telemetry endpoint: a one-thread blocking HTTP/1.0
+//! listener exporting a [`ModelHandle`]'s telemetry planes —
+//! `/metrics` (Prometheus text exposition, version 0.0.4),
+//! `/snapshot.json` (the machine-readable stats document) and `/trace`
+//! (drains the shard's span ring as JSONL). One thread and one
+//! connection at a time is deliberate: a scrape must never compete with
+//! the serving workers for anything beyond a snapshot lock, and a
+//! half-open client can at worst stall the scraper, never serving.
+//!
+//! The matching client side ([`http_get`]) backs `overq stats` and
+//! `overq trace`, plus the integration tests.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::obs::span::events_jsonl;
+use crate::util::sync::Arc;
+
+use super::server::ModelHandle;
+
+/// Accept-loop poll interval while checking the stop flag.
+const POLL: Duration = Duration::from_millis(25);
+
+/// A running telemetry listener; dropping it stops the thread.
+pub struct TelemetryServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TelemetryServer {
+    /// The bound address (resolves a `:0` request to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for TelemetryServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:9185`, port 0 for ephemeral) and serve
+/// the handle's telemetry until the returned server is dropped.
+pub fn spawn(handle: ModelHandle, addr: &str) -> Result<TelemetryServer> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding telemetry listener on {addr}"))?;
+    let local = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let flag = stop.clone();
+    let join = std::thread::Builder::new()
+        .name("overq-telemetry".into())
+        .spawn(move || accept_loop(listener, handle, flag))?;
+    Ok(TelemetryServer {
+        addr: local,
+        stop,
+        join: Some(join),
+    })
+}
+
+fn accept_loop(listener: TcpListener, handle: ModelHandle, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            // per-connection errors (timeouts, resets) only lose that
+            // one scrape; the listener keeps going
+            Ok((stream, _)) => {
+                let _ = serve_one(stream, &handle);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL);
+            }
+            Err(_) => std::thread::sleep(POLL),
+        }
+    }
+}
+
+fn serve_one(mut stream: TcpStream, handle: &ModelHandle) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    let path = read_request_path(&mut stream)?;
+    let (status, ctype, body) = match path.as_str() {
+        "/metrics" => ("200 OK", "text/plain; version=0.0.4", handle.prometheus()),
+        "/snapshot.json" => {
+            let doc = handle.stats_json();
+            ("200 OK", "application/json", doc.to_json())
+        }
+        "/trace" => {
+            let events = handle.drain_events();
+            ("200 OK", "application/x-ndjson", events_jsonl(&events))
+        }
+        _ => (
+            "404 Not Found",
+            "text/plain",
+            "unknown path; try /metrics /snapshot.json /trace\n".to_string(),
+        ),
+    };
+    let head = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: {ctype}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+fn read_request_path(stream: &mut TcpStream) -> std::io::Result<String> {
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 512];
+    loop {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 8192 {
+            break;
+        }
+    }
+    let text = String::from_utf8_lossy(&buf);
+    let line = text.lines().next().unwrap_or("");
+    let mut parts = line.split_whitespace();
+    let _method = parts.next();
+    Ok(parts.next().unwrap_or("/").to_string())
+}
+
+/// Minimal HTTP/1.0 GET returning the response body. `addr` is
+/// `host:port`, no scheme. The client half of [`spawn`]'s listener.
+pub fn http_get(addr: &str, path: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to telemetry endpoint {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    let req = format!("GET {path} HTTP/1.0\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes())?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp)?;
+    let (head, body) = resp
+        .split_once("\r\n\r\n")
+        .with_context(|| format!("malformed HTTP response from {addr}"))?;
+    let status = head.lines().next().unwrap_or("");
+    anyhow::ensure!(
+        status.contains(" 200 "),
+        "telemetry endpoint {addr}{path} returned {status:?}"
+    );
+    Ok(body.to_string())
+}

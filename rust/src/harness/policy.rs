@@ -11,6 +11,7 @@ use anyhow::Result;
 
 use crate::models::zoo::LoadedModel;
 use crate::nn::WBITS_DEFAULT;
+use crate::obs::counters::DriftBaseline;
 use crate::overq::{coverage_stats, OverQConfig};
 use crate::policy::{
     autotune, autotune_measured, profile_enc_points, AutotuneConfig, AutotuneResult,
@@ -67,6 +68,11 @@ pub fn baseline_plan(
             measured_coverage: measured,
             area: sc.area,
             macs: p.macs,
+            drift: Some(DriftBaseline {
+                mean: p.stats.mean as f64,
+                var: (p.stats.std as f64).powi(2),
+                clip_rate: sc.outlier_rate,
+            }),
         });
     }
     // the baseline is its own control: baseline_{area,coverage} mirror

@@ -24,6 +24,10 @@
 //! * [`olaccel`] — OLAccel-style outlier-accelerator comparator.
 //! * [`runtime`] — PJRT client (via the `xla` crate) that loads the AOT
 //!   HLO artifacts produced by `python/compile/aot.py`.
+//! * [`obs`] — dependency-free telemetry: structured tracing spans,
+//!   OverQ-native coverage/drift counters, and exact log-bucketed
+//!   histograms; exported as Prometheus text and JSONL traces
+//!   (docs/observability.md).
 //! * [`analysis`] — the `overq lint` static analyzer: a diagnostics
 //!   framework with stable codes (`OQ001..`) and a rule engine that
 //!   checks deployment plans against the model graph and the hardware
@@ -72,6 +76,7 @@ pub mod models;
     clippy::type_complexity
 )]
 pub mod nn;
+pub mod obs;
 pub mod olaccel;
 #[allow(
     clippy::needless_range_loop,

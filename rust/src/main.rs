@@ -51,13 +51,25 @@ COMMANDS (system):
              [--split plan:a@0.9,plan:b@0.1] [--requests 64 --seed 4242]
              [--routing fixed|bandit --explore 0.05 --strategy thompson|ucb]
              [--watch-plans plans/ --watch-interval-ms 500]
+             [--telemetry-addr 127.0.0.1:9185 --telemetry-linger-ms 0]
+             [--tracing] [--trace-out trace.jsonl]
              each plan is registered on its model's shard; --split
              installs deterministic weighted A/B routing on the first
              model and reports per-variant p50/p95 (docs/serving.md);
              --routing bandit replaces the fixed weights with outcome-
              aware ones learned from live latency (control arm pinned at
              the exploration floor), and --watch-plans hot-reloads
-             *.plan.json changes from disk (docs/operations.md)
+             *.plan.json changes from disk (docs/operations.md);
+             --telemetry-addr serves /metrics (Prometheus text),
+             /snapshot.json and /trace over HTTP for the run (linger
+             keeps it up after the traffic drains), and --tracing
+             records queue/route/batch/execute/encode/decode spans
+             (docs/observability.md)
+  stats      one-screen serving + coverage summary from a live
+             --telemetry-addr endpoint or a saved snapshot.json
+             [overq stats <host:port | snapshot.json> [--drift]]
+  trace      drain a live endpoint's span ring as JSONL on stdout
+             [overq trace <host:port>]
   lint       static plan verifier: checks deployment plans against the
              OverQ invariants, the hardware area model, and (with
              --model) the model graph's enc points; also lints whole
@@ -134,6 +146,8 @@ fn dispatch(args: &Args) -> Result<()> {
         "lint" => lint_cmd(args),
         "policy" => policy_cmd(args),
         "serve" => serve(args),
+        "stats" => stats_cmd(args),
+        "trace" => trace_cmd(args),
         "eval" => eval_cmd(args),
         "info" => info(),
         _ => {
@@ -383,6 +397,114 @@ fn lint_cmd(args: &Args) -> Result<()> {
     std::process::exit(report.exit_code(args.flag("deny-warn")));
 }
 
+/// `overq stats` — one-screen serving + coverage summary from a live
+/// `--telemetry-addr` endpoint or a saved `/snapshot.json` document.
+fn stats_cmd(args: &Args) -> Result<()> {
+    use overq::util::json::{parse, Value};
+
+    let src = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .context("usage: overq stats <host:port | snapshot.json> [--drift]")?;
+    let text = if std::path::Path::new(src).is_file() {
+        std::fs::read_to_string(src).with_context(|| format!("reading {src}"))?
+    } else {
+        overq::coordinator::telemetry::http_get(src, "/snapshot.json")?
+    };
+    let v = parse(&text).map_err(|e| anyhow::anyhow!("parsing snapshot: {e}"))?;
+
+    let num = |p: &[&str]| v.at(p).as_f64().unwrap_or(0.0);
+    println!(
+        "requests {} | batches {} (mean {:.2}) | e2e p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms",
+        num(&["requests"]),
+        num(&["batches"]),
+        num(&["mean_batch"]),
+        num(&["p50_e2e_us"]) / 1e3,
+        num(&["p95_e2e_us"]) / 1e3,
+        num(&["p99_e2e_us"]) / 1e3,
+    );
+    println!(
+        "{:<28} {:>8} {:>9} {:>9} {:>9} {:>9} {:>7} {:>7}",
+        "variant", "requests", "p50 ms", "p95 ms", "p99 ms", "coverage", "pulls", "reward"
+    );
+    if let Value::Obj(pv) = v.at(&["per_variant"]) {
+        for (key, vv) in pv {
+            let f = |k: &str| vv.at(&[k]).as_f64().unwrap_or(0.0);
+            let cv = v.at(&["coverage", key.as_str()]);
+            let cov = if cv.at(&["outliers"]).as_f64().unwrap_or(0.0) > 0.0 {
+                let c = cv.at(&["coverage"]).as_f64().unwrap_or(1.0);
+                format!("{:.1}%", c * 100.0)
+            } else {
+                "-".to_string()
+            };
+            println!(
+                "{key:<28} {:>8} {:>9.2} {:>9.2} {:>9.2} {cov:>9} {:>7} {:>7.3}",
+                f("requests"),
+                f("p50_e2e_us") / 1e3,
+                f("p95_e2e_us") / 1e3,
+                f("p99_e2e_us") / 1e3,
+                f("pulls"),
+                f("mean_reward"),
+            );
+        }
+    }
+    if args.flag("drift") {
+        if let Value::Obj(cov) = v.at(&["coverage"]) {
+            for (key, cv) in cov {
+                let Value::Arr(enc) = cv.at(&["enc"]) else {
+                    continue;
+                };
+                for e in enc {
+                    let g = |k: &str| e.at(&[k]).as_f64().unwrap_or(0.0);
+                    let base = e.at(&["baseline"]);
+                    let b = |k: &str| base.at(&[k]).as_f64();
+                    println!(
+                        "  {key} enc {}: mean {:.4}{} var {:.4}{} clip {:.4}{}",
+                        g("enc"),
+                        g("act_mean"),
+                        drift_baseline(b("mean")),
+                        g("act_var"),
+                        drift_baseline(b("var")),
+                        g("clip_rate"),
+                        drift_baseline(b("clip_rate")),
+                    );
+                }
+            }
+        }
+    }
+    if let Some(arm) = v.at(&["control_arm"]).as_str() {
+        println!("control arm: {arm}");
+    }
+    println!(
+        "plan swaps {} | watch errors {}{} | trace dropped {}",
+        num(&["plan_swaps"]),
+        num(&["watch_errors"]),
+        v.at(&["last_watch_error"])
+            .as_str()
+            .map(|e| format!(" (last: {e})"))
+            .unwrap_or_default(),
+        num(&["trace_dropped"]),
+    );
+    Ok(())
+}
+
+/// Render a profile-time baseline next to its live drift value.
+fn drift_baseline(b: Option<f64>) -> String {
+    b.map(|x| format!(" (profile {x:.4})")).unwrap_or_default()
+}
+
+/// `overq trace` — drain a live endpoint's span ring to stdout (JSONL).
+fn trace_cmd(args: &Args) -> Result<()> {
+    let addr = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .context("usage: overq trace <host:port>")?;
+    print!("{}", overq::coordinator::telemetry::http_get(addr, "/trace")?);
+    Ok(())
+}
+
 fn serve(args: &Args) -> Result<()> {
     let requests = args.get_usize("requests", 64);
     let seed = args.get_usize("seed", 4242) as u64;
@@ -543,6 +665,20 @@ fn serve(args: &Args) -> Result<()> {
         .map(|s| s.to_string())
         .unwrap_or_else(|| if routing == "bandit" { "bandit" } else { "split" }.to_string());
 
+    // telemetry plane: spans on request, HTTP exporter on request
+    if args.flag("tracing") {
+        handle.set_tracing(true);
+    }
+    let telemetry = match args.get("telemetry-addr") {
+        Some(addr) => {
+            let t = overq::coordinator::telemetry::spawn(handle.clone(), addr)?;
+            let at = t.addr();
+            println!("telemetry on http://{at} — /metrics /snapshot.json /trace");
+            Some(t)
+        }
+        None => None,
+    };
+
     // the bandit learns from completed requests, so drive it in small
     // closed-loop windows; fixed routing keeps the open-loop firehose
     let window = if routing == "bandit" { 8 } else { requests };
@@ -602,6 +738,19 @@ fn serve(args: &Args) -> Result<()> {
             vs.p95_e2e_us / 1e3,
         );
     }
+    for v in handle.obs_snapshot() {
+        if v.outliers == 0 {
+            continue;
+        }
+        println!(
+            "  {:<28} coverage {:.1}% ({} outliers, {} dropped) | zero avail {:.1}%",
+            v.variant,
+            v.coverage * 100.0,
+            v.outliers,
+            v.dropped,
+            v.zero_availability * 100.0,
+        );
+    }
     if let Some(arms) = handle.bandit_arms() {
         println!("  bandit arms (* = pinned control):");
         for a in &arms {
@@ -629,6 +778,19 @@ fn serve(args: &Args) -> Result<()> {
                 .unwrap_or_default(),
         );
     }
+    if let Some(t) = &telemetry {
+        let linger = args.get_usize("telemetry-linger-ms", 0);
+        if linger > 0 {
+            println!("  telemetry lingering {linger} ms on http://{}", t.addr());
+            std::thread::sleep(std::time::Duration::from_millis(linger as u64));
+        }
+    }
+    if let Some(path) = args.get("trace-out") {
+        let events = handle.drain_events();
+        std::fs::write(path, overq::obs::span::events_jsonl(&events))?;
+        println!("  trace: {} event(s) → {path}", events.len());
+    }
+    drop(telemetry); // stop the exporter before the shards go away
     drop(watchers); // stop the pollers before joining the workers
     coord.shutdown();
     Ok(())

@@ -6,7 +6,9 @@ use std::sync::{Arc, Mutex};
 use anyhow::{Context, Result};
 
 use crate::io::tensorfile::TensorMap;
-use crate::overq::{self, encode_tensor, Encoded, OverQConfig};
+use crate::obs::counters::{self, EncSample, CASCADE_BUCKETS};
+use crate::obs::span;
+use crate::overq::{self, encode_tensor, Encoded, OverQConfig, LSB, MSB, SHIFT};
 use crate::quant::uniform::{quantize_weights_mmse, QuantWeights};
 use crate::tensor::{TensorF, TensorI};
 
@@ -439,6 +441,8 @@ impl Engine {
                 Op::Conv { relu, quant: true, enc, .. } => {
                     let pc = &self.convs[&node.id];
                     let e = enc.context("quant conv without enc")?;
+                    let d = format!("node={} enc={e}", node.id);
+                    let _layer = span::here("execute.layer", d);
                     let src = vals[node.inputs[0]].as_ref().unwrap();
                     let n = src.dims()[0];
                     let lq = qc.layers[e];
@@ -448,19 +452,33 @@ impl Engine {
                         // encode the expanded stream (hardware sees the
                         // duplicated channels as real channels).
                         let exp = expand_channels(src, gather);
-                        let encx = encode_tensor(&exp, scale, &lq.overq);
+                        let encx = {
+                            let _s = span::here("encode", format!("enc={e} ocs=1"));
+                            encode_tensor(&exp, scale, &lq.overq)
+                        };
+                        if counters::active() {
+                            counters::record(e, &observe_encode(&exp, &encx, &lq.overq));
+                        }
                         let (cc, oh, ow) = im2col(&encx.codes, pc.kh, pc.kw, pc.stride);
                         let (sc, _, _) = im2col(&encx.state, pc.kh, pc.kw, pc.stride);
                         let k = pc.kh * pc.kw * gather.len();
                         (cc, sc, oh, ow, k)
                     } else {
                         let encx = encoded.entry(e).or_insert_with(|| {
-                            encode_tensor(src, scale, &lq.overq)
+                            let _s = span::here("encode", format!("enc={e} ocs=0"));
+                            let encx = encode_tensor(src, scale, &lq.overq);
+                            if counters::active() {
+                                counters::record(e, &observe_encode(src, &encx, &lq.overq));
+                            }
+                            encx
                         });
                         let (cc, oh, ow) = im2col(&encx.codes, pc.kh, pc.kw, pc.stride);
                         let (sc, _, _) = im2col(&encx.state, pc.kh, pc.kw, pc.stride);
                         (cc, sc, oh, ow, pc.kh * pc.kw * pc.cin)
                     };
+                    if counters::active() {
+                        counters::record_mac_slots(e, overq::dotprod::slot_histogram(&scols));
+                    }
                     let m = n * oh * ow;
                     let prepared = if lq.wbits != WBITS_DEFAULT {
                         Some(self.prepared_weights(node.id, pc, lq.wbits)?)
@@ -639,6 +657,70 @@ fn gap(x: &TensorF) -> TensorF {
         }
     }
     out
+}
+
+/// Reconstruct what the encoder saw at one enc point: zero/outlier
+/// classification (re-deriving the integer codes exactly as
+/// [`encode_tensor`] does), the RO cascade depths read back off the
+/// state lane, and single-pass Welford moments of the raw activations
+/// for drift tracking. Telemetry only — never on the numeric path; the
+/// quant forward calls it solely when [`counters::active`] says a
+/// serving worker pinned a counter context to this thread.
+fn observe_encode(x: &TensorF, encx: &Encoded, cfg: &OverQConfig) -> EncSample {
+    let qmax = cfg.qmax();
+    let inv = 1.0f32 / encx.scale;
+    let (mut zeros, mut outliers) = (0u64, 0u64);
+    let (mut act_n, mut act_mean, mut act_m2) = (0u64, 0f64, 0f64);
+    for &xv in &x.data {
+        let v = (xv * inv + 0.5).floor() as i32;
+        if v == 0 {
+            zeros += 1;
+        } else if v > qmax {
+            outliers += 1;
+        }
+        act_n += 1;
+        let d = xv as f64 - act_mean;
+        act_mean += d / act_n as f64;
+        act_m2 += d * (xv as f64 - act_mean);
+    }
+    // The state lane records what the encoder did with them: each MSB
+    // heads one covered outlier's chain, depth = 1 + trailing SHIFTs;
+    // each LSB is one precision-overwrite park. Chains never span the
+    // encoder's row boundary, so one flat scan suffices.
+    let st = &encx.state.data;
+    let (mut covered_ro, mut covered_pr) = (0u64, 0u64);
+    let mut cascade = [0u64; CASCADE_BUCKETS];
+    let mut i = 0;
+    while i < st.len() {
+        match st[i] {
+            MSB => {
+                let mut t = 0usize;
+                while i + 1 + t < st.len() && st[i + 1 + t] == SHIFT {
+                    t += 1;
+                }
+                covered_ro += 1;
+                cascade[(t + 1).min(CASCADE_BUCKETS) - 1] += 1;
+                i += t + 1;
+            }
+            LSB => {
+                covered_pr += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    EncSample {
+        values: x.numel() as u64,
+        zeros,
+        outliers,
+        covered_ro,
+        covered_pr,
+        dropped: outliers.saturating_sub(covered_ro),
+        cascade,
+        act_n,
+        act_mean,
+        act_m2,
+    }
 }
 
 /// Duplicate channels of an (N,H,W,C) tensor according to a gather index.
@@ -948,6 +1030,38 @@ mod tests {
         assert!(m8 > 0.0);
         // nothing consumes enc 7 → no weight-side error term
         assert_eq!(e.weight_quant_rel_mse(7, 4), 0.0);
+    }
+
+    #[test]
+    fn forward_quant_feeds_pinned_counters() {
+        use crate::obs::counters::{set_ctx, Registry};
+        let e = toy_engine(true);
+        let x = rand_input(3, 4);
+        let (_, taps) = e.forward_f32(&x, &[1]).unwrap();
+        let std = taps[0].std();
+        let scale = 2.0 * std / 15.0; // aggressive clip → many outliers
+        let qc = QuantConfig::uniform(OverQConfig::full(4, 4), vec![scale]);
+        let reg = Registry::new();
+        {
+            let _g = set_ctx(reg.variant("plan:t"));
+            e.forward_quant(&x, &qc).unwrap();
+        }
+        let snaps = reg.snapshot();
+        assert_eq!(snaps.len(), 1);
+        let v = &snaps[0];
+        assert!(v.outliers > 0, "aggressive clip must produce outliers");
+        assert!(v.covered_ro > 0, "RO with zeros around must cover some");
+        assert_eq!(v.outliers, v.covered_ro + v.dropped);
+        let enc0 = &v.enc[0];
+        assert!(enc0.totals.values > 0);
+        assert!(enc0.totals.zeros > 0, "post-ReLU input must have zeros");
+        assert!(enc0.mac_slots[1] > 0, "MSB lanes must reach the GEMM");
+        let depths: u64 = enc0.cascade.iter().map(|&(_, c)| c).sum();
+        assert_eq!(depths, v.covered_ro, "every covered outlier has a depth");
+        // without a pinned context the same forward records nothing
+        let reg2 = Registry::new();
+        e.forward_quant(&x, &qc).unwrap();
+        assert!(reg2.snapshot().is_empty());
     }
 
     #[test]

@@ -1,0 +1,447 @@
+//! OverQ-native serving counters: live outlier coverage, cascade
+//! depths, zero availability and activation-drift statistics,
+//! aggregated per (variant, enc point).
+//!
+//! The paper's headline claim — "with modest cascading we handle over
+//! 90% of outliers" — is checked offline by `overq::coverage`; these
+//! counters make the same quantities observable on *live traffic*, per
+//! deployed plan. The engine cannot see the serving layer (and its
+//! signatures must not grow a metrics parameter), so the worker pins a
+//! [`VariantObs`] handle to its thread with [`set_ctx`] around each
+//! batch; [`record`] then merges encode-level samples into it (and is
+//! a no-op on any thread without a context — offline autotuning and
+//! accuracy loops pay one thread-local read, nothing else).
+//!
+//! A [`Registry`] is owned per model shard by the coordinator, so
+//! counters never leak between coordinators (or between tests). It is
+//! lock-sharded by variant key; per-variant state is behind its own
+//! mutex, so two workers serving different variants never contend.
+//!
+//! Drift: each enc point keeps a running mean/variance (Welford) of the
+//! raw pre-quantization activations plus the live clip rate
+//! (outliers / values). A deployment plan tuned after this subsystem
+//! landed stores the matching profile-time numbers per layer
+//! ([`DriftBaseline`], `drift` block in the plan JSON; lint OQ019 nudges
+//! plans that lack it) — the exporter reports both sides, which is the
+//! trigger signal for ROADMAP item 5's retune daemon.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use crate::util::sync::{lock, Arc, Mutex};
+
+/// Number of mutex shards in a [`Registry`].
+const SHARDS: usize = 8;
+
+/// Cascade-depth histogram buckets: depth `d` (1 = adjacent zero) is
+/// counted at index `min(d, CASCADE_BUCKETS) - 1`.
+pub const CASCADE_BUCKETS: usize = 16;
+
+/// Profile-time activation statistics stored in a deployment plan
+/// (per layer) for drift detection against the live counters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftBaseline {
+    /// Mean of the raw (pre-quantization) activations at profile time.
+    pub mean: f64,
+    /// Variance of the raw activations at profile time.
+    pub var: f64,
+    /// Fraction of values whose integer code exceeded `qmax` (the
+    /// plan's `outlier_rate` at its chosen scale).
+    pub clip_rate: f64,
+}
+
+/// One batch worth of encode-level observations at one enc point —
+/// built by the engine from the raw tensor and the encoder's state
+/// lane, then merged into the registry via [`record`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EncSample {
+    /// Activation slots seen.
+    pub values: u64,
+    /// Exact-zero slots (the overwrite opportunity supply).
+    pub zeros: u64,
+    /// Slots whose integer code exceeded `qmax` (outliers seen).
+    pub outliers: u64,
+    /// Outliers whose MSBs landed in a claimed zero (range overwrite).
+    pub covered_ro: u64,
+    /// In-range values that parked extra LSBs in a neighboring zero
+    /// (precision overwrite).
+    pub covered_pr: u64,
+    /// Outliers clamped to `qmax` (no zero inside the cascade window).
+    pub dropped: u64,
+    /// Cascade-depth histogram of the covered outliers.
+    pub cascade: [u64; CASCADE_BUCKETS],
+    /// Welford state over the raw activations: count, mean, M2.
+    pub act_n: u64,
+    /// Mean of the raw activations in this sample.
+    pub act_mean: f64,
+    /// Sum of squared deviations (M2) in this sample.
+    pub act_m2: f64,
+}
+
+/// Running totals for one enc point of one variant.
+#[derive(Clone, Debug, Default)]
+pub struct EncObs {
+    /// Encode-level totals (see [`EncSample`] for field meanings).
+    pub sample: EncSample,
+    /// MAC-lane slot occupancy from the overwrite GEMM:
+    /// `[NORM, MSB, SHIFT, LSB]` counts over the im2col'd state lane.
+    pub mac_slots: [u64; 4],
+}
+
+impl EncObs {
+    fn merge_sample(&mut self, s: &EncSample) {
+        let t = &mut self.sample;
+        t.values += s.values;
+        t.zeros += s.zeros;
+        t.outliers += s.outliers;
+        t.covered_ro += s.covered_ro;
+        t.covered_pr += s.covered_pr;
+        t.dropped += s.dropped;
+        for (a, b) in t.cascade.iter_mut().zip(&s.cascade) {
+            *a += b;
+        }
+        // Chan et al. parallel Welford merge
+        if s.act_n > 0 {
+            let (na, nb) = (t.act_n as f64, s.act_n as f64);
+            let delta = s.act_mean - t.act_mean;
+            let n = na + nb;
+            t.act_mean += delta * nb / n;
+            t.act_m2 += s.act_m2 + delta * delta * na * nb / n;
+            t.act_n += s.act_n;
+        }
+    }
+}
+
+/// Live counters for every enc point of one served variant.
+#[derive(Clone, Debug, Default)]
+pub struct VariantObs {
+    /// Indexed by enc-point id (grown on first touch).
+    pub enc: Vec<EncObs>,
+}
+
+impl VariantObs {
+    fn at(&mut self, enc: usize) -> &mut EncObs {
+        if enc >= self.enc.len() {
+            self.enc.resize(enc + 1, EncObs::default());
+        }
+        &mut self.enc[enc]
+    }
+}
+
+/// Point-in-time view of one enc point (see [`Registry::snapshot`]).
+#[derive(Clone, Debug)]
+pub struct EncSnapshot {
+    /// Enc-point id.
+    pub enc: usize,
+    /// Encode-level totals.
+    pub totals: EncSample,
+    /// Live outlier coverage: `covered_ro / outliers` (1 when no
+    /// outliers were seen — nothing needed covering).
+    pub coverage: f64,
+    /// Exact-zero fraction of all slots (the overwrite supply).
+    pub zero_availability: f64,
+    /// Occupied cascade-depth buckets as `(depth, count)`.
+    pub cascade: Vec<(usize, u64)>,
+    /// MAC-lane slot occupancy `[NORM, MSB, SHIFT, LSB]`.
+    pub mac_slots: [u64; 4],
+    /// Live mean of the raw activations.
+    pub act_mean: f64,
+    /// Live variance of the raw activations.
+    pub act_var: f64,
+    /// Live clip rate (`outliers / values`).
+    pub clip_rate: f64,
+    /// Profile-time baseline from the plan's `drift` block, if stored.
+    pub baseline: Option<DriftBaseline>,
+}
+
+/// Point-in-time view of one variant's counters.
+#[derive(Clone, Debug)]
+pub struct VariantObsSnapshot {
+    /// Variant key (matches the per-variant serving metrics).
+    pub variant: String,
+    /// Aggregate outlier coverage across enc points
+    /// (`Σ covered_ro / Σ outliers`; 1 when no outliers were seen).
+    pub coverage: f64,
+    /// Total outliers seen across enc points.
+    pub outliers: u64,
+    /// Total outliers covered via range overwrite.
+    pub covered_ro: u64,
+    /// Total precision-overwrite LSB parks.
+    pub covered_pr: u64,
+    /// Total outliers clamped.
+    pub dropped: u64,
+    /// Aggregate zero availability across enc points.
+    pub zero_availability: f64,
+    /// Per-enc-point detail, in enc order.
+    pub enc: Vec<EncSnapshot>,
+}
+
+/// Per-shard counter registry: variant key → live counters, plus the
+/// drift baselines installed with each plan.
+#[derive(Default)]
+pub struct Registry {
+    shards: Vec<Mutex<HashMap<String, Arc<Mutex<VariantObs>>>>>,
+    baselines: Mutex<HashMap<String, Vec<Option<DriftBaseline>>>>,
+}
+
+fn shard_of(key: &str) -> usize {
+    // FNV-1a over the key, folded into the shard count
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h as usize) % SHARDS
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Arc<Registry> {
+        Arc::new(Registry {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            baselines: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The live-counter handle for `variant`, created on first use.
+    /// The handle is what workers pin to their thread ([`set_ctx`]).
+    pub fn variant(&self, key: &str) -> Arc<Mutex<VariantObs>> {
+        let mut shard = lock(&self.shards[shard_of(key)]);
+        shard
+            .entry(key.to_string())
+            .or_insert_with(|| Arc::new(Mutex::new(VariantObs::default())))
+            .clone()
+    }
+
+    /// Install per-enc drift baselines for `variant` (what
+    /// `register_plan`/`swap_plan` do with a plan's `drift` blocks).
+    /// Baselines are configuration, not counters: they survive
+    /// [`Registry::reset`].
+    pub fn set_baselines(&self, variant: &str, per_enc: Vec<Option<DriftBaseline>>) {
+        lock(&self.baselines).insert(variant.to_string(), per_enc);
+    }
+
+    /// Zero every counter; keep installed drift baselines.
+    pub fn reset(&self) {
+        for s in &self.shards {
+            // handles may be pinned by worker threads — zero in place
+            for v in lock(s).values() {
+                lock(v).enc.clear();
+            }
+        }
+    }
+
+    /// Snapshot every variant's counters, sorted by variant key.
+    pub fn snapshot(&self) -> Vec<VariantObsSnapshot> {
+        let baselines = lock(&self.baselines);
+        let mut out = Vec::new();
+        for s in &self.shards {
+            for (key, v) in lock(s).iter() {
+                let v = lock(v);
+                let base = baselines.get(key);
+                let mut enc_snaps = Vec::with_capacity(v.enc.len());
+                let (mut outliers, mut ro, mut pr, mut dropped) = (0u64, 0u64, 0u64, 0u64);
+                let (mut values, mut zeros) = (0u64, 0u64);
+                for (i, e) in v.enc.iter().enumerate() {
+                    let t = e.sample;
+                    outliers += t.outliers;
+                    ro += t.covered_ro;
+                    pr += t.covered_pr;
+                    dropped += t.dropped;
+                    values += t.values;
+                    zeros += t.zeros;
+                    enc_snaps.push(EncSnapshot {
+                        enc: i,
+                        totals: t,
+                        coverage: ratio_or_one(t.covered_ro, t.outliers),
+                        zero_availability: ratio_or_zero(t.zeros, t.values),
+                        cascade: t
+                            .cascade
+                            .iter()
+                            .enumerate()
+                            .filter(|&(_, &c)| c > 0)
+                            .map(|(d, &c)| (d + 1, c))
+                            .collect(),
+                        mac_slots: e.mac_slots,
+                        act_mean: t.act_mean,
+                        act_var: if t.act_n > 1 {
+                            t.act_m2 / (t.act_n - 1) as f64
+                        } else {
+                            0.0
+                        },
+                        clip_rate: ratio_or_zero(t.outliers, t.values),
+                        baseline: base.and_then(|b| b.get(i).copied().flatten()),
+                    });
+                }
+                out.push(VariantObsSnapshot {
+                    variant: key.clone(),
+                    coverage: ratio_or_one(ro, outliers),
+                    outliers,
+                    covered_ro: ro,
+                    covered_pr: pr,
+                    dropped,
+                    zero_availability: ratio_or_zero(zeros, values),
+                    enc: enc_snaps,
+                });
+            }
+        }
+        out.sort_by(|a, b| a.variant.cmp(&b.variant));
+        out
+    }
+}
+
+fn ratio_or_one(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        1.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+fn ratio_or_zero(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Arc<Mutex<VariantObs>>>> = const { RefCell::new(None) };
+}
+
+/// Pin `obs` as this thread's counter sink for the guard's lifetime.
+/// The worker wraps each batch execution in one of these; everything
+/// the engine [`record`]s in between lands on the right variant.
+pub fn set_ctx(obs: Arc<Mutex<VariantObs>>) -> CtxGuard {
+    let prev = CTX.with(|c| c.replace(Some(obs)));
+    CtxGuard { prev }
+}
+
+/// Guard from [`set_ctx`]; restores the previous context on drop.
+pub struct CtxGuard {
+    prev: Option<Arc<Mutex<VariantObs>>>,
+}
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        CTX.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
+/// Is a counter context pinned to this thread? The engine checks this
+/// before doing any observation work, so offline paths (autotune
+/// probes, accuracy sweeps, tests) skip the scan entirely.
+#[inline]
+pub fn active() -> bool {
+    CTX.with(|c| c.borrow().is_some())
+}
+
+/// Merge one encode-level sample into the pinned variant's counters.
+/// No-op without a pinned context.
+pub fn record(enc: usize, sample: &EncSample) {
+    CTX.with(|c| {
+        if let Some(obs) = &*c.borrow() {
+            lock(obs).at(enc).merge_sample(sample);
+        }
+    });
+}
+
+/// Add MAC-lane slot occupancy (`[NORM, MSB, SHIFT, LSB]`) for one enc
+/// point. No-op without a pinned context.
+pub fn record_mac_slots(enc: usize, slots: [u64; 4]) {
+    CTX.with(|c| {
+        if let Some(obs) = &*c.borrow() {
+            let mut v = lock(obs);
+            let dst = &mut v.at(enc).mac_slots;
+            for (a, b) in dst.iter_mut().zip(&slots) {
+                *a += b;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_is_inert_without_ctx() {
+        assert!(!active());
+        record(0, &EncSample::default()); // must not panic or allocate state anywhere visible
+    }
+
+    #[test]
+    fn ctx_routes_samples_and_reset_keeps_baselines() {
+        let reg = Registry::new();
+        reg.set_baselines(
+            "plan:p",
+            vec![Some(DriftBaseline {
+                mean: 1.0,
+                var: 2.0,
+                clip_rate: 0.01,
+            })],
+        );
+        {
+            let _g = set_ctx(reg.variant("plan:p"));
+            assert!(active());
+            let mut s = EncSample {
+                values: 100,
+                zeros: 40,
+                outliers: 10,
+                covered_ro: 9,
+                covered_pr: 5,
+                dropped: 1,
+                act_n: 100,
+                act_mean: 0.5,
+                act_m2: 25.0,
+                ..EncSample::default()
+            };
+            s.cascade[0] = 6;
+            s.cascade[2] = 3;
+            record(0, &s);
+            record(0, &s);
+            record_mac_slots(0, [90, 9, 3, 5]);
+        }
+        assert!(!active());
+
+        let snaps = reg.snapshot();
+        assert_eq!(snaps.len(), 1);
+        let v = &snaps[0];
+        assert_eq!(v.variant, "plan:p");
+        assert_eq!(v.outliers, 20);
+        assert_eq!(v.covered_ro, 18);
+        assert!((v.coverage - 0.9).abs() < 1e-12);
+        let e = &v.enc[0];
+        assert_eq!(e.totals.values, 200);
+        assert!((e.zero_availability - 0.4).abs() < 1e-12);
+        assert_eq!(e.cascade, vec![(1, 12), (3, 6)]);
+        assert_eq!(e.mac_slots, [90, 9, 3, 5]);
+        // two identical Welford halves merge to the same mean
+        assert!((e.act_mean - 0.5).abs() < 1e-12);
+        assert_eq!(e.baseline.unwrap().clip_rate, 0.01);
+
+        reg.reset();
+        let snaps = reg.snapshot();
+        assert_eq!(snaps[0].outliers, 0, "counters must zero");
+        // baselines survive reset (they are plan config, not traffic)
+        assert!(lock(&reg.baselines).contains_key("plan:p"));
+    }
+
+    #[test]
+    fn no_outliers_means_full_coverage() {
+        let reg = Registry::new();
+        {
+            let _g = set_ctx(reg.variant("fp32"));
+            record(
+                0,
+                &EncSample {
+                    values: 10,
+                    ..EncSample::default()
+                },
+            );
+        }
+        assert_eq!(reg.snapshot()[0].coverage, 1.0);
+    }
+}

@@ -1,0 +1,344 @@
+//! Exact log-bucketed histograms — the percentile substrate for
+//! serving metrics.
+//!
+//! [`Hist`] replaces the capped reservoir that used to live inside
+//! [`crate::util::stats::Summary`]: a reservoir under-weights the tail
+//! once it caps (a p99 over 4096 retained samples of a million-sample
+//! stream is a p99 of the *reservoir*, not the stream), while a
+//! log-bucketed histogram is exact within its bucket for every sample
+//! ever added, at constant memory per occupied bucket.
+//!
+//! Buckets grow geometrically with [`SUB_BUCKETS`] sub-buckets per
+//! octave (factor `2^(1/8)` ≈ 1.09), so any reported percentile is
+//! within ~4.4% of the true sample value — and the representative
+//! value is clamped into the observed `[min, max]`, so extreme ranks
+//! (p0, p100) are exact. Histograms from different shards [`Hist::merge`]
+//! losslessly: the bucket lattice is global (anchored at 1.0), not
+//! per-instance.
+
+/// Sub-buckets per octave (power of two). 8 gives a worst-case
+/// relative error of `2^(1/16) - 1` ≈ 4.4% at the geometric midpoint.
+pub const SUB_BUCKETS: u32 = 8;
+
+/// Lattice indices are clamped to this many sub-buckets on either side
+/// of 1.0 (covers `2^-64 .. 2^64` — far beyond any latency in µs).
+const MAX_IDX: i64 = 64 * SUB_BUCKETS as i64;
+
+/// Lattice bucket index of a positive value: bucket `i` covers
+/// `[2^(i/8), 2^((i+1)/8))`.
+#[inline]
+fn lattice_idx(v: f64) -> i64 {
+    let i = (v.log2() * SUB_BUCKETS as f64).floor() as i64;
+    i.clamp(-MAX_IDX, MAX_IDX)
+}
+
+/// Geometric midpoint of lattice bucket `i` (the representative value
+/// reported for ranks that land in it).
+#[inline]
+fn lattice_mid(i: i64) -> f64 {
+    ((i as f64 + 0.5) / SUB_BUCKETS as f64).exp2()
+}
+
+/// Upper bound of lattice bucket `i` (exclusive; the Prometheus `le`).
+#[inline]
+fn lattice_upper(i: i64) -> f64 {
+    ((i as f64 + 1.0) / SUB_BUCKETS as f64).exp2()
+}
+
+/// An exact log-bucketed histogram over non-negative samples.
+///
+/// Exact count/sum/min/max; percentiles are nearest-rank over the
+/// bucket counts, reported at the bucket's geometric midpoint clamped
+/// into `[min, max]`. Values `<= 0` (and non-finite values) land in a
+/// dedicated zero bucket whose representative is 0.
+#[derive(Clone, Debug, Default)]
+pub struct Hist {
+    /// Lattice index of `counts[0]`.
+    base: i64,
+    counts: Vec<u64>,
+    /// Values `<= 0` or non-finite.
+    zeros: u64,
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Hist {
+    /// An empty histogram.
+    pub fn new() -> Hist {
+        Hist::default()
+    }
+
+    /// Add one sample.
+    pub fn add(&mut self, v: f64) {
+        self.n += 1;
+        if v.is_finite() {
+            self.sum += v;
+            if self.n == 1 {
+                self.min = v;
+                self.max = v;
+            } else {
+                if v < self.min {
+                    self.min = v;
+                }
+                if v > self.max {
+                    self.max = v;
+                }
+            }
+        }
+        if !(v > 0.0 && v.is_finite()) {
+            self.zeros += 1;
+            return;
+        }
+        let idx = lattice_idx(v);
+        if self.counts.is_empty() {
+            self.base = idx;
+            self.counts.push(1);
+            return;
+        }
+        if idx < self.base {
+            let pad = (self.base - idx) as usize;
+            let mut grown = vec![0u64; pad + self.counts.len()];
+            grown[pad..].copy_from_slice(&self.counts);
+            self.counts = grown;
+            self.base = idx;
+        } else if (idx - self.base) as usize >= self.counts.len() {
+            self.counts.resize((idx - self.base) as usize + 1, 0);
+        }
+        self.counts[(idx - self.base) as usize] += 1;
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Sum of all (finite) samples.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Smallest sample seen (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest sample seen (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Mean of all samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Nearest-rank percentile (`p` in 0..=100), reported at the
+    /// owning bucket's geometric midpoint clamped into `[min, max]`.
+    /// 0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = ((p.clamp(0.0, 100.0) / 100.0) * (self.n - 1) as f64).round() as u64;
+        if rank < self.zeros {
+            return self.clamp_rep(0.0);
+        }
+        let mut cum = self.zeros;
+        for (k, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if rank < cum {
+                return self.clamp_rep(lattice_mid(self.base + k as i64));
+            }
+        }
+        self.max
+    }
+
+    #[inline]
+    fn clamp_rep(&self, rep: f64) -> f64 {
+        rep.clamp(self.min, self.max)
+    }
+
+    /// Merge another histogram into this one. Lossless: both share the
+    /// global bucket lattice.
+    pub fn merge(&mut self, other: &Hist) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        self.sum += other.sum;
+        self.n += other.n;
+        self.zeros += other.zeros;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for (k, &c) in other.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let idx = other.base + k as i64;
+            if self.counts.is_empty() {
+                self.base = idx;
+                self.counts.push(c);
+                continue;
+            }
+            if idx < self.base {
+                let pad = (self.base - idx) as usize;
+                let mut grown = vec![0u64; pad + self.counts.len()];
+                grown[pad..].copy_from_slice(&self.counts);
+                self.counts = grown;
+                self.base = idx;
+            } else if (idx - self.base) as usize >= self.counts.len() {
+                self.counts.resize((idx - self.base) as usize + 1, 0);
+            }
+            self.counts[(idx - self.base) as usize] += c;
+        }
+    }
+
+    /// Occupied buckets as `(upper_bound, count)` pairs in increasing
+    /// bound order — the zero bucket (bound 0) first when occupied.
+    /// This is the non-cumulative form; exporters accumulate for the
+    /// Prometheus `le` convention.
+    pub fn buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        if self.zeros > 0 {
+            out.push((0.0, self.zeros));
+        }
+        for (k, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                out.push((lattice_upper(self.base + k as i64), c));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn empty_is_zeroes() {
+        let h = Hist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn uniform_stream_percentiles_land_in_bucket() {
+        let mut h = Hist::new();
+        for v in 1..=100 {
+            h.add(v as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 100.0);
+        // exact-within-bucket: the true p50 of 1..=100 is 50/51; the
+        // owning bucket's midpoint is within the 2^(1/16) error bound
+        let p50 = h.percentile(50.0);
+        assert!((49.0..=53.0).contains(&p50), "p50={p50}");
+        let p95 = h.percentile(95.0);
+        assert!((91.0..=99.0).contains(&p95), "p95={p95}");
+        // rank 100 falls in the top bucket, clamped to the exact max
+        assert_eq!(h.percentile(100.0), 100.0);
+        assert_eq!(h.percentile(0.0), 1.0);
+    }
+
+    #[test]
+    fn zero_and_subunit_values() {
+        let mut h = Hist::new();
+        h.add(0.0);
+        h.add(0.0);
+        h.add(0.25);
+        h.add(4.0);
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.percentile(0.0), 0.0);
+        assert_eq!(h.percentile(100.0), 4.0);
+        // rank 1 (of 0..=3) is still a zero
+        assert_eq!(h.percentile(34.0), 0.0);
+    }
+
+    #[test]
+    fn buckets_cover_every_sample() {
+        let mut h = Hist::new();
+        for v in [0.0, 0.5, 1.0, 3.0, 3.1, 1000.0] {
+            h.add(v);
+        }
+        let total: u64 = h.buckets().iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, h.count());
+        // bounds strictly increase
+        let bounds: Vec<f64> = h.buckets().iter().map(|&(b, _)| b).collect();
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "{bounds:?}");
+    }
+
+    #[test]
+    fn prop_merge_equals_single_stream_and_percentile_bounded() {
+        check("hist merge/percentile", 200, |rng: &mut Rng| {
+            let n = 1 + rng.index(400);
+            let mut all = Vec::with_capacity(n);
+            let (mut a, mut b, mut whole) = (Hist::new(), Hist::new(), Hist::new());
+            for i in 0..n {
+                // spread over ~6 orders of magnitude plus exact zeros
+                let v = if rng.bool(0.1) {
+                    0.0
+                } else {
+                    rng.f64() * 10f64.powi(rng.index(6) as i32)
+                };
+                all.push(v);
+                whole.add(v);
+                if i % 2 == 0 {
+                    a.add(v);
+                } else {
+                    b.add(v);
+                }
+            }
+            a.merge(&b);
+            assert_eq!(a.count(), whole.count());
+            assert_eq!(a.min(), whole.min());
+            assert_eq!(a.max(), whole.max());
+            assert!((a.sum() - whole.sum()).abs() <= 1e-9 * whole.sum().abs().max(1.0));
+
+            all.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            for &p in &[0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+                let got_merged = a.percentile(p);
+                let got_whole = whole.percentile(p);
+                // merged and single-stream histograms agree exactly
+                assert_eq!(got_merged, got_whole, "p{p} merged vs whole");
+                // exact-within-bucket: within one bucket growth factor
+                // of the true nearest-rank sample
+                let rank = ((p / 100.0) * (n - 1) as f64).round() as usize;
+                let truth = all[rank];
+                if truth <= 0.0 {
+                    assert_eq!(got_whole, 0.0, "p{p} of zero sample");
+                } else {
+                    let ratio = got_whole / truth;
+                    let tol = 2f64.powf(1.0 / SUB_BUCKETS as f64) + 1e-12;
+                    assert!(
+                        (1.0 / tol..=tol).contains(&ratio),
+                        "p{p}: got {got_whole}, true {truth}, ratio {ratio}"
+                    );
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,28 @@
+//! Telemetry subsystem: structured tracing, OverQ-native serving
+//! counters, and exact log-bucketed histograms.
+//!
+//! Three dependency-free pieces, each usable on its own:
+//!
+//! * [`span`] — lightweight request tracing. The coordinator owns a
+//!   [`span::Ring`] per model shard; the serving path records
+//!   `queue → route → batch → execute → execute.layer → encode/decode`
+//!   stage spans into it, exportable as JSONL (`overq trace`,
+//!   `ModelHandle::drain_events`).
+//! * [`counters`] — per-(variant, enc point) live outlier coverage,
+//!   cascade-depth histograms, zero availability and activation-drift
+//!   statistics, emitted from the engine's quantized forward pass and
+//!   compared against the profile-time [`counters::DriftBaseline`]
+//!   stored in each deployment plan.
+//! * [`hist`] — the exact log-bucketed [`hist::Hist`] backing every
+//!   latency percentile in [`crate::util::stats::Summary`] and the
+//!   Prometheus histogram exposition.
+//!
+//! The exporters live with the data they export:
+//! `coordinator::metrics::MetricsSnapshot::render_prometheus` renders
+//! the Prometheus text format, `overq serve --telemetry-addr` serves
+//! it. docs/observability.md catalogs the metric names and the span
+//! taxonomy.
+
+pub mod counters;
+pub mod hist;
+pub mod span;

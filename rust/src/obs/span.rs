@@ -1,0 +1,244 @@
+//! Dependency-free structured tracing: spans into a lock-sharded
+//! bounded ring buffer.
+//!
+//! A [`Ring`] is owned by whoever wants a trace (the coordinator keeps
+//! one per model shard); [`Ring::span`] hands out an RAII [`Span`] that
+//! measures wall time between creation and drop and records one
+//! [`Event`] — but only while the ring is enabled, so an idle ring
+//! costs one relaxed atomic load per span site. Events land in one of
+//! a few mutex-sharded bounded deques (shard picked by thread, so
+//! worker threads never contend); when a shard is full the oldest
+//! event is dropped and counted, never blocking the request path.
+//!
+//! The serving path names its stages `queue`, `route`, `batch`,
+//! `execute`, `execute.layer`, `encode` and `decode`
+//! (docs/observability.md has the full taxonomy). Deep code like
+//! [`crate::nn::Engine::forward_quant`] can't see the shard's ring, so
+//! the worker pins it to the thread with [`set_sink`]; [`here`] then
+//! records into whatever ring is pinned (or does nothing).
+//!
+//! # Example
+//!
+//! ```
+//! use overq::obs::span::Ring;
+//!
+//! let ring = Ring::new(256);
+//! ring.set_enabled(true);
+//! {
+//!     let _span = ring.span("execute", "variant=fp32");
+//!     // ... the traced stage runs here ...
+//! }
+//! let events = ring.drain();
+//! assert_eq!(events.len(), 1);
+//! assert_eq!(events[0].name, "execute");
+//! println!("{}", events[0].to_jsonl());
+//! ```
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::json::Value;
+use crate::util::sync::{lock, Arc, Mutex};
+
+/// Number of mutex shards in a ring. Power of two; small, because a
+/// shard is only contended when two threads hash onto it.
+const SHARDS: usize = 8;
+
+/// One recorded span.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Microseconds since the ring was created (monotonic).
+    pub ts_us: u64,
+    /// Span duration in microseconds.
+    pub dur_us: u64,
+    /// Stage name (`queue`, `batch`, `execute`, `execute.layer`, ...).
+    pub name: String,
+    /// Free-form context: variant, enc point, batch size.
+    pub detail: String,
+}
+
+impl Event {
+    /// One JSONL line (no trailing newline).
+    pub fn to_jsonl(&self) -> String {
+        Value::Obj(
+            [
+                ("ts_us".to_string(), Value::Num(self.ts_us as f64)),
+                ("dur_us".to_string(), Value::Num(self.dur_us as f64)),
+                ("name".to_string(), Value::Str(self.name.clone())),
+                ("detail".to_string(), Value::Str(self.detail.clone())),
+            ]
+            .into_iter()
+            .collect(),
+        )
+        .to_json()
+    }
+}
+
+/// Render a batch of events as JSONL (one event per line).
+pub fn events_jsonl(events: &[Event]) -> String {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&e.to_jsonl());
+        out.push('\n');
+    }
+    out
+}
+
+/// A lock-sharded bounded ring buffer of trace [`Event`]s.
+pub struct Ring {
+    epoch: Instant,
+    enabled: AtomicBool,
+    shards: Vec<Mutex<VecDeque<Event>>>,
+    cap_per_shard: usize,
+    dropped: AtomicU64,
+}
+
+impl Ring {
+    /// A disabled ring holding at most `capacity` events (split across
+    /// the internal shards; at least one slot per shard).
+    pub fn new(capacity: usize) -> Arc<Ring> {
+        Arc::new(Ring {
+            epoch: Instant::now(),
+            enabled: AtomicBool::new(false),
+            shards: (0..SHARDS).map(|_| Mutex::new(VecDeque::new())).collect(),
+            cap_per_shard: capacity.div_ceil(SHARDS).max(1),
+            dropped: AtomicU64::new(0),
+        })
+    }
+
+    /// Is tracing on? One relaxed load — this is the entire cost of a
+    /// span site while tracing is off.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Turn tracing on or off. Buffered events survive a disable.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Events dropped to the bound so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Record one finished span. Callers normally go through
+    /// [`Ring::span`]; this is the low-level entry for spans whose
+    /// start predates the call site (e.g. queue time measured from a
+    /// request's enqueue timestamp).
+    pub fn record(&self, name: &str, detail: String, start: Instant, end: Instant) {
+        if !self.enabled() {
+            return;
+        }
+        let ts_us = start
+            .saturating_duration_since(self.epoch)
+            .as_micros()
+            .min(u64::MAX as u128) as u64;
+        let dur_us = end
+            .saturating_duration_since(start)
+            .as_micros()
+            .min(u64::MAX as u128) as u64;
+        let ev = Event {
+            ts_us,
+            dur_us,
+            name: name.to_string(),
+            detail,
+        };
+        // shard by thread so concurrent workers don't contend
+        let tid = std::thread::current().id();
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        std::hash::Hash::hash(&tid, &mut h);
+        let shard = (std::hash::Hasher::finish(&h) as usize) % SHARDS;
+        let mut q = lock(&self.shards[shard]);
+        if q.len() >= self.cap_per_shard {
+            q.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(ev);
+    }
+
+    /// Start a span; it records itself into this ring on drop. When
+    /// tracing is off the guard is inert (no clock read).
+    pub fn span(self: &Arc<Self>, name: &'static str, detail: impl Into<String>) -> Span {
+        if !self.enabled() {
+            return Span { active: None };
+        }
+        Span {
+            active: Some(SpanInner {
+                ring: self.clone(),
+                name,
+                detail: detail.into(),
+                start: Instant::now(),
+            }),
+        }
+    }
+
+    /// Drain all buffered events, oldest first.
+    pub fn drain(&self) -> Vec<Event> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            out.extend(lock(s).drain(..));
+        }
+        out.sort_by_key(|e| e.ts_us);
+        out
+    }
+}
+
+struct SpanInner {
+    ring: Arc<Ring>,
+    name: &'static str,
+    detail: String,
+    start: Instant,
+}
+
+/// RAII span guard from [`Ring::span`] or [`here`]. Records one
+/// [`Event`] when dropped (if the ring was enabled at creation).
+pub struct Span {
+    active: Option<SpanInner>,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(s) = self.active.take() {
+            let end = Instant::now();
+            s.ring.record(s.name, s.detail, s.start, end);
+        }
+    }
+}
+
+thread_local! {
+    static SINK: RefCell<Option<Arc<Ring>>> = const { RefCell::new(None) };
+}
+
+/// Pin `ring` as this thread's span sink for the guard's lifetime, so
+/// code that can't see the ring ([`here`]) still records into it.
+/// Nesting restores the previous sink on drop.
+pub fn set_sink(ring: Arc<Ring>) -> SinkGuard {
+    let prev = SINK.with(|s| s.replace(Some(ring)));
+    SinkGuard { prev }
+}
+
+/// Guard from [`set_sink`]; restores the previous sink on drop.
+pub struct SinkGuard {
+    prev: Option<Arc<Ring>>,
+}
+
+impl Drop for SinkGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        SINK.with(|s| *s.borrow_mut() = prev);
+    }
+}
+
+/// Start a span against the thread's pinned sink (see [`set_sink`]).
+/// Inert — not even a clock read — when no sink is pinned or tracing
+/// is off.
+pub fn here(name: &'static str, detail: impl Into<String>) -> Span {
+    SINK.with(|s| match &*s.borrow() {
+        Some(ring) => ring.span(name, detail),
+        None => Span { active: None },
+    })
+}

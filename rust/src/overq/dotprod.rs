@@ -88,6 +88,19 @@ pub fn gemm_overq(
     }
 }
 
+/// MAC-lane slot occupancy of a state tensor: counts indexed by state
+/// value, i.e. `[NORM, MSB, SHIFT, LSB]`. Telemetry only — the engine
+/// feeds the im2col'd state lane through this so the serving counters
+/// can export what fraction of MAC slots ran in each overwrite mode
+/// ([`crate::obs::counters::EncObs::mac_slots`]).
+pub fn slot_histogram(state: &Tensor<SlotState>) -> [u64; 4] {
+    let mut h = [0u64; 4];
+    for &s in &state.data {
+        h[(s & 3) as usize] += 1;
+    }
+    h
+}
+
 /// Build the 1-rolled weight matrix (row 0 zeroed) used by [`gemm_overq`].
 pub fn roll_weights(w: &TensorI) -> TensorI {
     let (k, n) = (w.dims()[0], w.dims()[1]);
@@ -191,5 +204,18 @@ mod tests {
         let w = TensorI::from_vec(&[3, 2], vec![1, 2, 3, 4, 5, 6]);
         let r = roll_weights(&w);
         assert_eq!(r.data, vec![0, 0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn slot_histogram_counts_states() {
+        // same stream as encode::known_chain: v = [20, 3, 5, 0, 2] at
+        // 4 bits → states NORM, MSB, SHIFT, SHIFT, NORM
+        let cfg = OverQConfig::ro(4, 3);
+        let x = TensorF::from_vec(&[1, 5], vec![4.0, 0.6, 1.0, 0.0, 0.4]);
+        let enc = encode_tensor(&x, 0.2, &cfg);
+        assert_eq!(slot_histogram(&enc.state), [2, 1, 2, 0]);
+        // baseline encodes never leave NORM
+        let enc = encode_tensor(&x, 0.2, &OverQConfig::baseline(4));
+        assert_eq!(slot_histogram(&enc.state), [5, 0, 0, 0]);
     }
 }

@@ -530,7 +530,8 @@ fn emit_plan(
         model_name,
         layers
             .iter()
-            .map(|lc| PlanLayer {
+            .zip(&st.profiles)
+            .map(|(lc, p)| PlanLayer {
                 enc: lc.enc,
                 overq: lc.chosen.cfg,
                 scale: lc.chosen.scale,
@@ -541,6 +542,13 @@ fn emit_plan(
                 measured_coverage: lc.measured_cov,
                 area: lc.chosen.area,
                 macs: lc.macs,
+                // profile-time drift baseline: what the live telemetry
+                // compares per-enc mean/var/clip-rate against
+                drift: Some(crate::obs::counters::DriftBaseline {
+                    mean: p.stats.mean as f64,
+                    var: (p.stats.std as f64).powi(2),
+                    clip_rate: lc.chosen.outlier_rate,
+                }),
             })
             .collect(),
         st.baseline_area,

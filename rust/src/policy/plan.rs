@@ -13,6 +13,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::nn::{LayerQuant, QuantConfig, WBITS_DEFAULT};
+use crate::obs::counters::DriftBaseline;
 use crate::overq::OverQConfig;
 use crate::util::json::{parse_file, Value};
 
@@ -59,6 +60,11 @@ pub struct PlanLayer {
     pub area: f64,
     /// MACs per image through this enc point (cost weight).
     pub macs: u64,
+    /// Profile-time activation statistics (mean/var/clip rate) the live
+    /// telemetry compares against for drift detection. Absent in plans
+    /// tuned before the telemetry subsystem existed (lint OQ019 nudges
+    /// a re-profile).
+    pub drift: Option<DriftBaseline>,
 }
 
 /// A per-layer mixed-precision deployment plan for one model.
@@ -148,7 +154,7 @@ impl DeploymentPlan {
             .layers
             .iter()
             .map(|l| {
-                obj(&[
+                let mut lfields = vec![
                     ("enc", Value::Num(l.enc as f64)),
                     ("bits", Value::Num(l.overq.bits as f64)),
                     ("cascade", Value::Num(l.overq.cascade as f64)),
@@ -162,7 +168,18 @@ impl DeploymentPlan {
                     ("measured_coverage", Value::Num(l.measured_coverage)),
                     ("area", Value::Num(l.area)),
                     ("macs", Value::Num(l.macs as f64)),
-                ])
+                ];
+                if let Some(d) = l.drift {
+                    lfields.push((
+                        "drift",
+                        obj(&[
+                            ("mean", Value::Num(d.mean)),
+                            ("var", Value::Num(d.var)),
+                            ("clip_rate", Value::Num(d.clip_rate)),
+                        ]),
+                    ));
+                }
+                obj(&lfields)
             })
             .collect();
         let mut fields = vec![
@@ -238,6 +255,20 @@ impl DeploymentPlan {
                 measured_coverage: l.at(&["measured_coverage"]).as_f64().unwrap_or(0.0),
                 area: l.at(&["area"]).as_f64().unwrap_or(0.0),
                 macs: l.at(&["macs"]).as_f64().unwrap_or(0.0) as u64,
+                // absent in plans tuned before the telemetry subsystem;
+                // a *present* block must be complete — a drift baseline
+                // with silently-zeroed fields would fire false alarms
+                drift: match l.at(&["drift"]) {
+                    Value::Null => None,
+                    d => Some(DriftBaseline {
+                        mean: d.at(&["mean"]).as_f64().context("drift mean")?,
+                        var: d.at(&["var"]).as_f64().context("drift var")?,
+                        clip_rate: d
+                            .at(&["clip_rate"])
+                            .as_f64()
+                            .context("drift clip_rate")?,
+                    }),
+                },
             });
         }
         layers.sort_by_key(|l| l.enc);
@@ -316,6 +347,11 @@ mod tests {
                     measured_coverage: 0.81,
                     area: 350.25,
                     macs: 884_736,
+                    drift: Some(DriftBaseline {
+                        mean: 0.42,
+                        var: 1.3,
+                        clip_rate: 0.013,
+                    }),
                 },
                 PlanLayer {
                     enc: 1,
@@ -328,6 +364,7 @@ mod tests {
                     measured_coverage: 1.0,
                     area: 410.5,
                     macs: 442_368,
+                    drift: None,
                 },
             ],
             total_area: 370.3,
@@ -439,6 +476,24 @@ mod tests {
         assert!(!text.contains("probe"));
         let back = DeploymentPlan::from_json(&parse(&text).unwrap()).unwrap();
         assert_eq!(back.probe, None);
+    }
+
+    #[test]
+    fn drift_baseline_roundtrips_and_stays_optional() {
+        // layer 0 carries a drift block, layer 1 does not — both
+        // round-trip (json_roundtrip covers equality; check the shape)
+        let plan = sample_plan();
+        let text = plan.to_json().to_json();
+        assert!(text.contains("\"drift\""));
+        assert!(text.contains("\"clip_rate\""));
+        let back = DeploymentPlan::from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(back.layers[0].drift, plan.layers[0].drift);
+        assert_eq!(back.layers[1].drift, None);
+
+        // an incomplete drift block is rejected at load time
+        let text = text.replace("\"clip_rate\":0.013,", "");
+        assert!(!text.contains("clip_rate"), "splice missed: {text}");
+        assert!(DeploymentPlan::from_json(&parse(&text).unwrap()).is_err());
     }
 
     #[test]

@@ -6,8 +6,8 @@
 
 /// One splitmix64 step (Steele, Lea & Flood; public domain reference
 /// algorithm): advance `state` and return the next 64-bit output. Used
-/// to seed [`Rng`] and as the lightweight single-u64 generator behind
-/// `util::stats::Summary`'s reservoir.
+/// to seed [`Rng`] and wherever a lightweight single-u64 generator is
+/// enough.
 pub fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E3779B97F4A7C15);
     let mut z = *state;

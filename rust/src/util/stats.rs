@@ -1,13 +1,12 @@
 //! Small statistics helpers shared by harnesses, benches and the batcher.
 
-use super::rng::splitmix64;
+use crate::obs::hist::Hist;
 
-/// Sample cap for [`Summary`]'s percentile reservoir.
-const RESERVOIR_CAP: usize = 4096;
-
-/// Online mean/variance/min/max accumulator (Welford), plus a bounded
-/// deterministic reservoir so percentiles stay available at O(1) memory
-/// however long the stream runs.
+/// Online mean/variance/min/max accumulator (Welford), with percentiles
+/// backed by an exact log-bucketed [`Hist`] — every sample ever added
+/// is counted, so tail percentiles stay unbiased however long the
+/// stream runs (the old capped reservoir under-weighted the tail once
+/// it filled; see `obs::hist` for the error bound, ~4.4% worst case).
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
     pub n: u64,
@@ -16,11 +15,9 @@ pub struct Summary {
     pub min: f64,
     pub max: f64,
     pub sum: f64,
-    /// Uniform sample of the stream (algorithm R), capped at
-    /// [`RESERVOIR_CAP`]. Deterministic in insertion order.
-    samples: Vec<f64>,
-    /// splitmix64 state driving reservoir replacement.
-    rstate: u64,
+    /// Exact log-bucketed histogram of the stream (percentile substrate,
+    /// mergeable across shards via [`Hist::merge`]).
+    hist: Hist,
 }
 
 impl Summary {
@@ -40,25 +37,20 @@ impl Summary {
         self.m2 += d * (x - self.mean);
         self.min = self.min.min(x);
         self.max = self.max.max(x);
-        if self.samples.len() < RESERVOIR_CAP {
-            self.samples.push(x);
-        } else {
-            // algorithm R; a full Rng would bloat every Summary, one
-            // splitmix64 u64 of state is enough
-            let j = (splitmix64(&mut self.rstate) % self.n) as usize;
-            if j < RESERVOIR_CAP {
-                self.samples[j] = x;
-            }
-        }
+        self.hist.add(x);
     }
 
-    /// Percentile estimate from the reservoir (exact while the stream is
-    /// under the cap). `p` in [0, 100]; 0.0 for an empty summary.
+    /// Percentile from the histogram: exact within one log bucket for
+    /// every sample ever added. `p` in [0, 100]; 0.0 for an empty
+    /// summary.
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.samples.is_empty() {
-            return 0.0;
-        }
-        percentile(&self.samples, p)
+        self.hist.percentile(p)
+    }
+
+    /// The backing histogram (bucket export for exporters; merge across
+    /// shards with [`Hist::merge`]).
+    pub fn hist(&self) -> &Hist {
+        &self.hist
     }
 
     pub fn mean(&self) -> f64 {
@@ -106,33 +98,44 @@ mod tests {
     }
 
     #[test]
-    fn summary_percentiles_exact_under_cap() {
+    fn summary_percentiles_within_bucket_error() {
         let mut s = Summary::new();
         for i in 0..101 {
             s.add(i as f64);
         }
+        // extreme ranks are exact (clamped to observed min/max)
         assert_eq!(s.percentile(0.0), 0.0);
-        assert_eq!(s.percentile(50.0), 50.0);
-        assert_eq!(s.percentile(95.0), 95.0);
         assert_eq!(s.percentile(100.0), 100.0);
+        // interior ranks are exact within one log bucket (~±9%)
+        let p50 = s.percentile(50.0);
+        assert!((45.0..=55.0).contains(&p50), "p50 {p50}");
+        let p95 = s.percentile(95.0);
+        assert!((87.0..=100.0).contains(&p95), "p95 {p95}");
         assert_eq!(Summary::new().percentile(50.0), 0.0);
     }
 
     #[test]
-    fn summary_reservoir_caps_and_stays_deterministic() {
-        let run = || {
-            let mut s = Summary::new();
-            for i in 0..20_000 {
-                s.add((i % 1000) as f64);
-            }
-            s
-        };
-        let (a, b) = (run(), run());
-        assert!(a.samples.len() <= super::RESERVOIR_CAP);
-        assert_eq!(a.samples, b.samples, "reservoir is not deterministic");
-        // the sample of a uniform 0..1000 stream should put p50 mid-range
-        let p50 = a.percentile(50.0);
-        assert!((300.0..700.0).contains(&p50), "p50 {p50}");
+    fn summary_histogram_counts_every_sample() {
+        // the histogram never caps: a long stream keeps exact counts,
+        // and the percentile reflects the whole stream (the reservoir
+        // this replaced degraded to a sample once past its cap)
+        let mut s = Summary::new();
+        let n = 20_000usize;
+        for i in 0..n {
+            s.add((i % 1000) as f64);
+        }
+        assert_eq!(s.n, n as u64);
+        assert_eq!(s.hist().count(), n as u64);
+        let total: u64 = s.hist().buckets().iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, n as u64, "histogram dropped samples");
+        let p50 = s.percentile(50.0);
+        assert!((450.0..=550.0).contains(&p50), "p50 {p50}");
+        // deterministic: same stream, same answer
+        let mut t = Summary::new();
+        for i in 0..n {
+            t.add((i % 1000) as f64);
+        }
+        assert_eq!(s.percentile(95.0), t.percentile(95.0));
     }
 
     #[test]

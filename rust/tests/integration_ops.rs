@@ -1,5 +1,7 @@
-//! Plan operations end-to-end: outcome-aware bandit routing and plan
-//! hot-reload from disk (docs/operations.md).
+//! Plan operations end-to-end: outcome-aware bandit routing, plan
+//! hot-reload from disk (docs/operations.md), and the telemetry plane
+//! — metrics lifecycle across `reset_metrics` and the
+//! `--telemetry-addr` HTTP endpoint (docs/observability.md).
 //!
 //! Everything runs artifact-free on the synthetic zoo. The watch tests
 //! drive `PlanWatch::poll` synchronously so reload edge cases stay
@@ -17,7 +19,7 @@ use overq::harness::policy::baseline_plan;
 use overq::models::synth_model;
 use overq::policy::{autotune, AutotuneConfig, DeploymentPlan};
 use overq::tensor::TensorF;
-use overq::util::json::Value;
+use overq::util::json::{parse, Value};
 
 const IMG_SZ: usize = 16 * 16 * 3;
 
@@ -429,6 +431,174 @@ fn two_models_share_one_watched_directory() {
         .is_err());
     coord.shutdown();
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Total activation slots seen across every variant's live counters.
+fn total_values(h: &ModelHandle) -> u64 {
+    h.obs_snapshot()
+        .iter()
+        .flat_map(|v| v.enc.iter())
+        .map(|e| e.totals.values)
+        .sum()
+}
+
+/// Telemetry lifecycle with the bandit installed: traffic populates the
+/// coverage counters and latency histograms, `reset_metrics` zeroes
+/// both but keeps the control-arm pin, the watcher counters, and the
+/// plans' drift baselines.
+#[test]
+fn reset_metrics_keeps_control_and_watch_state_with_bandit() {
+    let dir = fresh_dir("resetband");
+    let (tuned, base) = tiny_plans(61);
+    let coord = Coordinator::builder()
+        .model_local(synth_model("synth-tiny", 61).unwrap())
+        .build()
+        .unwrap();
+    let h = coord.model("synth-tiny").unwrap();
+    h.register_plan(tuned).unwrap();
+    h.register_plan(base).unwrap();
+
+    // bump the watcher counters with a rejected file
+    std::fs::write(dir.join("w.plan.json"), "{not a plan").unwrap();
+    let mut watch = PlanWatch::new(h.clone(), &dir).unwrap();
+    assert_eq!(watch.poll().errors.len(), 1);
+    assert_eq!(h.metrics().watch_errors, 1);
+
+    let mut cfg = BanditConfig::new(
+        vec![
+            (VariantSpec::parse("plan:tuned").unwrap(), 0.9),
+            (VariantSpec::parse("plan:base").unwrap(), 0.2),
+        ],
+        1,
+    );
+    cfg.seed = 3;
+    h.set_routing_policy(RoutingPolicy::Bandit(cfg)).unwrap();
+    let (load, _) = shapes::gen_batch(91, 0, 64);
+    drive_routed(&h, &load, 64);
+
+    let m = h.metrics();
+    assert_eq!(m.requests, 64);
+    assert!(m.p50_e2e_us > 0.0, "latency histogram empty");
+    assert!(total_values(&h) > 0, "coverage counters never populated");
+    let swaps = m.plan_swaps;
+
+    h.reset_metrics();
+    let m = h.metrics();
+    assert_eq!(m.requests, 0, "requests must zero");
+    assert_eq!(m.p50_e2e_us, 0.0, "latency histogram must zero");
+    assert!(m.per_variant.is_empty(), "per-variant metrics must zero");
+    assert_eq!(m.control_arm.as_deref(), Some("plan:base"), "control pin lost");
+    assert_eq!(m.watch_errors, 1, "watcher counters must survive reset");
+    assert_eq!(m.plan_swaps, swaps, "plan_swaps must survive reset");
+    assert!(m.last_watch_error.is_some());
+    assert_eq!(total_values(&h), 0, "coverage counters must zero");
+    for v in h.obs_snapshot() {
+        assert_eq!(v.outliers, 0);
+        assert!(v.enc.is_empty());
+    }
+
+    // drift baselines survive: fresh traffic sees them again
+    h.infer(img_of(&load, 0), &"plan:tuned".parse().unwrap()).unwrap();
+    let obs = h.obs_snapshot();
+    let tunedv = obs.iter().find(|v| v.variant == "plan:tuned").unwrap();
+    assert!(
+        tunedv.enc.iter().any(|e| e.baseline.is_some()),
+        "plan drift baselines must survive reset_metrics"
+    );
+    coord.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Telemetry lifecycle without the bandit: fixed-spec traffic fills the
+/// counters, `reset_metrics` zeroes them with no control pin involved,
+/// and fresh traffic repopulates from zero.
+#[test]
+fn reset_metrics_zeroes_counters_without_bandit() {
+    let (tuned, _) = tiny_plans(67);
+    let coord = Coordinator::builder()
+        .model_local(synth_model("synth-tiny", 67).unwrap())
+        .build()
+        .unwrap();
+    let h = coord.model("synth-tiny").unwrap();
+    h.register_plan(tuned).unwrap();
+    let spec: VariantSpec = "plan:tuned".parse().unwrap();
+    let (load, _) = shapes::gen_batch(92, 0, 16);
+    for i in 0..16 {
+        h.infer(img_of(&load, i), &spec).unwrap();
+    }
+    assert_eq!(h.metrics().requests, 16);
+    assert_eq!(h.metrics().control_arm, None);
+    assert!(total_values(&h) > 0);
+
+    h.reset_metrics();
+    assert_eq!(h.metrics().requests, 0);
+    assert_eq!(h.metrics().control_arm, None);
+    assert_eq!(total_values(&h), 0);
+
+    // counters come back cleanly after the reset
+    h.infer(img_of(&load, 0), &spec).unwrap();
+    assert_eq!(h.metrics().requests, 1);
+    let obs = h.obs_snapshot();
+    let v = obs.iter().find(|v| v.variant == "plan:tuned").unwrap();
+    assert!(v.enc.iter().any(|e| e.totals.values > 0));
+    coord.shutdown();
+}
+
+/// The telemetry endpoint end-to-end: spans on, traffic in, then scrape
+/// /metrics (Prometheus text), /snapshot.json and /trace (JSONL drain)
+/// over real HTTP and cross-check them against the in-process state.
+#[test]
+fn telemetry_endpoint_serves_metrics_snapshot_and_trace() {
+    use overq::coordinator::telemetry;
+
+    let (tuned, _) = tiny_plans(71);
+    let coord = Coordinator::builder()
+        .model_local(synth_model("synth-tiny", 71).unwrap())
+        .build()
+        .unwrap();
+    let h = coord.model("synth-tiny").unwrap();
+    h.register_plan(tuned).unwrap();
+    h.set_tracing(true);
+
+    let server = telemetry::spawn(h.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+
+    let spec: VariantSpec = "plan:tuned".parse().unwrap();
+    let (load, _) = shapes::gen_batch(93, 0, 24);
+    for i in 0..24 {
+        h.infer(img_of(&load, i), &spec).unwrap();
+    }
+
+    let text = telemetry::http_get(&addr, "/metrics").unwrap();
+    assert!(text.contains("# TYPE overq_requests_total counter"));
+    assert!(text.contains("overq_requests_total 24"));
+    assert!(text.contains("# TYPE overq_coverage gauge"));
+    assert!(text.contains("variant=\"plan:tuned\""));
+
+    let snap = telemetry::http_get(&addr, "/snapshot.json").unwrap();
+    let v = parse(&snap).unwrap();
+    assert_eq!(v.at(&["requests"]).as_f64(), Some(24.0));
+    assert!(v.at(&["coverage", "plan:tuned", "coverage"]).as_f64().is_some());
+
+    let trace = telemetry::http_get(&addr, "/trace").unwrap();
+    assert!(!trace.is_empty(), "tracing on + traffic must produce spans");
+    let mut names = std::collections::HashSet::new();
+    for line in trace.lines() {
+        let ev = parse(line).unwrap();
+        assert!(ev.at(&["dur_us"]).as_f64().is_some(), "bad event: {line}");
+        names.insert(ev.at(&["name"]).as_str().unwrap().to_string());
+    }
+    for want in ["queue", "batch", "execute", "execute.layer", "encode", "decode"] {
+        assert!(names.contains(want), "span {want:?} missing from {names:?}");
+    }
+    // the drain emptied the ring
+    let again = telemetry::http_get(&addr, "/trace").unwrap();
+    assert!(again.is_empty());
+
+    // unknown path → 404 surfaces as an error client-side
+    assert!(telemetry::http_get(&addr, "/nope").is_err());
+    drop(server);
+    coord.shutdown();
 }
 
 /// The background poller (`ModelHandle::watch_plans`) applies on-disk
