@@ -78,6 +78,13 @@ fn main() {
             Value::Num(m.candidates[m.chosen].measured_acc),
         );
         r.insert("baseline_acc".into(), Value::Num(m.baseline_acc));
+        // candidates the abstract interpreter pruned as provably
+        // saturating before any proxy scoring (tentpole: static bounds
+        // feeding the tuner, not just the linter)
+        r.insert(
+            "static_pruned".into(),
+            Value::Num(m.result.pruned_static as f64),
+        );
         r.insert("lint_clean".into(), Value::Bool(lint.is_clean()));
         r.insert(
             "lint_errors".into(),

@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""CI gate: the diagnostics registry and the docs catalog never drift.
+
+The lint/verify codes (``analysis::CODES`` in
+``rust/src/analysis/diag.rs``) are stable API, and
+``docs/static_analysis.md`` is their human-facing catalog. This check
+asserts the two stay in lockstep, in both directions:
+
+* every registered code appears somewhere in the docs (so a new rule
+  cannot ship undocumented), and
+* every ``| OQxxx |`` catalog-table row names a registered code (so a
+  retired rule cannot linger in the docs as if it still fired).
+
+Run from the repo root: ``python3 ci/check_diag_catalog.py``.
+"""
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+REGISTRY = ROOT / "rust" / "src" / "analysis" / "diag.rs"
+DOCS = ROOT / "docs" / "static_analysis.md"
+
+
+def main() -> int:
+    registry_src = REGISTRY.read_text(encoding="utf-8")
+    docs_src = DOCS.read_text(encoding="utf-8")
+
+    registered = set(re.findall(r'code:\s*"(OQ\d+)"', registry_src))
+    if not registered:
+        print(f"error: no codes parsed from {REGISTRY} — pattern drift?")
+        return 1
+
+    documented = set(re.findall(r"OQ\d+", docs_src))
+    # catalog table rows: "| OQxxx | severity | ..."
+    table_rows = set(re.findall(r"^\|\s*(OQ\d+)\s*\|", docs_src, flags=re.M))
+
+    missing_docs = sorted(registered - documented)
+    missing_rows = sorted(registered - table_rows)
+    stale_rows = sorted(table_rows - registered)
+
+    ok = True
+    if missing_docs:
+        ok = False
+        print(f"undocumented codes (absent from {DOCS.name}): {missing_docs}")
+    if missing_rows:
+        ok = False
+        print(f"codes missing a catalog-table row in {DOCS.name}: {missing_rows}")
+    if stale_rows:
+        ok = False
+        print(f"catalog-table rows for unregistered codes: {stale_rows}")
+
+    if ok:
+        print(
+            f"diag catalog in sync: {len(registered)} codes registered, "
+            f"all documented with catalog rows, no stale rows"
+        )
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,142 @@
+//! The abstract domain: closed `f64` intervals plus a worst-case
+//! accumulated quantization-error bound.
+//!
+//! An abstract value tracks two facts about every element of a tensor:
+//! the interval `[lo, hi]` it provably lies in, and an upper bound on
+//! how far the quantized execution can have drifted from the fp32
+//! reference at that point (the static analogue of the paper's Eq. (1)
+//! error proxy — rounding half-steps plus worst-case clipping, pushed
+//! through each layer's induced L∞ norm).
+
+/// Closed interval `[lo, hi]` over `f64`. Invariant: `lo <= hi`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Interval {
+    /// Lower bound (inclusive).
+    pub lo: f64,
+    /// Upper bound (inclusive).
+    pub hi: f64,
+}
+
+impl Interval {
+    /// Build an interval; panics when `lo > hi` (analyzer bug, not input).
+    pub fn new(lo: f64, hi: f64) -> Interval {
+        assert!(lo <= hi, "empty interval [{lo}, {hi}]");
+        Interval { lo, hi }
+    }
+
+    /// Least upper bound: the hull of both intervals (concat / join).
+    pub fn join(self, other: Interval) -> Interval {
+        Interval {
+            lo: self.lo.min(other.lo),
+            hi: self.hi.max(other.hi),
+        }
+    }
+
+    /// Minkowski sum — the residual-add transfer function.
+    pub fn add(self, other: Interval) -> Interval {
+        Interval {
+            lo: self.lo + other.lo,
+            hi: self.hi + other.hi,
+        }
+    }
+
+    /// ReLU transfer: meet with `[0, inf)`, i.e. max-with-0 on both ends.
+    pub fn relu(self) -> Interval {
+        Interval {
+            lo: self.lo.max(0.0),
+            hi: self.hi.max(0.0),
+        }
+    }
+
+    /// Widen to include 0. SAME-padded convs read genuine zeros at the
+    /// border (see `nn::conv::im2col`), so the value stream entering the
+    /// GEMM is the input interval hulled with `{0}`.
+    pub fn with_zero(self) -> Interval {
+        Interval {
+            lo: self.lo.min(0.0),
+            hi: self.hi.max(0.0),
+        }
+    }
+
+    /// Clamp into `[-bound, bound]` — what an enc point's representable
+    /// range does to every value flowing past it on the quant track.
+    pub fn clamp_abs(self, bound: f64) -> Interval {
+        Interval {
+            lo: self.lo.clamp(-bound, bound),
+            hi: self.hi.clamp(-bound, bound),
+        }
+    }
+
+    /// Largest magnitude contained in the interval.
+    pub fn abs_max(self) -> f64 {
+        self.lo.abs().max(self.hi.abs())
+    }
+
+    /// Membership with relative slack: the engine accumulates in `f32`
+    /// while the analyzer tracks `f64`, so soundness checks allow
+    /// `tol`-relative rounding headroom.
+    pub fn contains(self, v: f64, tol: f64) -> bool {
+        let slack = tol * self.abs_max().max(1.0);
+        v >= self.lo - slack && v <= self.hi + slack
+    }
+}
+
+/// Abstract value: value interval plus the accumulated per-element
+/// L∞ error bound of the quant track relative to fp32.
+#[derive(Clone, Copy, Debug)]
+pub struct AbsVal {
+    /// Proven value interval.
+    pub iv: Interval,
+    /// Worst-case accumulated quantization error (`>= 0`).
+    pub err: f64,
+}
+
+/// Input domain assumed when the caller doesn't state one
+/// (`overq verify --input-range` overrides it). Generously covers the
+/// normalized pixel range of `data::shapes` (mean 0.28 / std 0.27 over
+/// clamped `[0, 1]` pixels lands in roughly `[-1.04, 2.67]`).
+pub const DEFAULT_INPUT_RANGE: Interval = Interval { lo: -4.0, hi: 4.0 };
+
+/// Thresholds for the static-certification rules (OQ020–OQ025).
+#[derive(Clone, Copy, Debug)]
+pub struct AbsintConfig {
+    /// OQ020 fires (Error) when `capacity / proven quant-track bound`
+    /// falls below this — essentially every in-range input saturates.
+    pub saturation_ratio: f64,
+    /// OQ021 fires (Warn) when `qmax * scale` exceeds this factor times
+    /// the proven fp32 bound — most codes can provably never be used.
+    pub coarse_factor: f64,
+    /// OQ025 fires (Warn) when the relative propagated error bound at an
+    /// enc point exceeds this budget; `None` disables the check.
+    pub error_budget: Option<f64>,
+}
+
+impl Default for AbsintConfig {
+    fn default() -> AbsintConfig {
+        AbsintConfig {
+            saturation_ratio: 1e-3,
+            coarse_factor: 16.0,
+            error_budget: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interval_algebra() {
+        let a = Interval::new(-1.0, 2.0);
+        let b = Interval::new(0.5, 3.0);
+        assert_eq!(a.join(b), Interval::new(-1.0, 3.0));
+        assert_eq!(a.add(b), Interval::new(-0.5, 5.0));
+        assert_eq!(a.relu(), Interval::new(0.0, 2.0));
+        assert_eq!(Interval::new(-3.0, -2.0).relu(), Interval::new(0.0, 0.0));
+        assert_eq!(Interval::new(1.0, 2.0).with_zero(), Interval::new(0.0, 2.0));
+        assert_eq!(a.clamp_abs(0.5), Interval::new(-0.5, 0.5));
+        assert_eq!(a.abs_max(), 2.0);
+        assert!(a.contains(2.0, 0.0) && !a.contains(2.1, 1e-6));
+        assert!(a.contains(2.0001, 1e-3), "relative slack not applied");
+    }
+}

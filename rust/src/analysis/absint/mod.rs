@@ -1,0 +1,579 @@
+//! Abstract interpretation over the model graph: static range & error
+//! certification.
+//!
+//! The linter ([`super::rules`]) checks a plan's *declared* facts; this
+//! module proves facts about the *execution* without running a single
+//! input. A dataflow walk propagates abstract values — intervals
+//! `[lo, hi]` plus a worst-case accumulated quantization-error bound
+//! (the paper's Eq. (1) proxy, statically evaluated) — through
+//! [`crate::nn::Graph`] node by node:
+//!
+//! * **conv / dense** — per-output-channel weight-column L1 bounds
+//!   ([`crate::nn::AffineBounds`]): with input elements in `[lo, hi]`,
+//!   channel `j` lands in `[pos_j·lo + neg_j·hi + b_j,
+//!   pos_j·hi + neg_j·lo + b_j]` (a BN folded into the weights is just
+//!   another affine transform and needs no special case). Errors grow
+//!   by the induced L∞ norm `max_j (pos_j - neg_j)`. SAME padding
+//!   widens the input with `{0}` first — the im2col stream reads real
+//!   zeros at the border.
+//! * **ReLU** — meet with `[0, ∞)`; non-expansive for the error track.
+//! * **residual add** — interval (Minkowski) sum; errors add.
+//! * **concat** — interval join; errors take the max.
+//! * **max/avg pool, global average pool** — outputs are means/maxima
+//!   of genuine input values (`nn::engine::pool2` pads nothing), so the
+//!   interval passes through unchanged; non-expansive for errors.
+//!
+//! Two tracks run over the same graph. The **fp32 track** ignores the
+//! plan and bounds the reference [`crate::nn::Engine::forward_f32`]
+//! execution — its per-enc-point [`StaticRange`] certificates are what
+//! the soundness harness (`rust/tests/integration_absint.rs`) holds
+//! profiled activations against. The **quant track** additionally
+//! clamps at every enc point to the plan's representable range and
+//! accrues rounding/clipping error, which is what saturation (OQ020)
+//! and error budgets (OQ025) must be judged on — a saturating upstream
+//! layer otherwise poisons every downstream bound.
+//!
+//! [`verify_plan`] runs both tracks and the OQ020–OQ025 rules,
+//! returning a [`Certification`] whose [`Report`] shares the lint
+//! exit-code contract. The same gate runs inside
+//! `ModelHandle::register_plan` / `swap_plan` / `PlanWatch`, and
+//! `policy::autotune` prunes provably-saturating candidates with
+//! [`GraphBounds::quant_track_hi`] before spending proxy budget.
+
+use anyhow::{bail, Result};
+
+use super::diag::Report;
+use crate::models::zoo::LoadedModel;
+use crate::nn::{AffineBounds, Engine, Op};
+use crate::policy::plan::DeploymentPlan;
+use crate::util::json::Value;
+
+mod domain;
+mod rules;
+
+pub use domain::{AbsVal, AbsintConfig, Interval, DEFAULT_INPUT_RANGE};
+
+/// Transfer function of one graph node, with everything the abstract
+/// walk needs pre-extracted from the engine.
+#[derive(Clone, Debug)]
+enum Transfer {
+    /// The input placeholder: takes the declared input domain.
+    Input,
+    /// Conv or dense. `enc` is the consumed enc point for quantized
+    /// convs; `pad_zero` marks SAME-padded convs whose im2col stream
+    /// includes border zeros; `l1_max` is the induced L∞ norm.
+    Affine {
+        ab: AffineBounds,
+        relu: bool,
+        enc: Option<usize>,
+        pad_zero: bool,
+        l1_max: f64,
+    },
+    /// Elementwise residual add over all inputs.
+    Add { relu: bool },
+    /// Channel concatenation.
+    Concat,
+    /// Max or average pooling (2×2, unpadded).
+    Pool,
+    /// Global average pool.
+    Gap,
+}
+
+#[derive(Clone, Debug)]
+struct NodeBounds {
+    inputs: Vec<usize>,
+    transfer: Transfer,
+}
+
+/// Plan-independent abstract summary of one model graph: everything the
+/// analyzer needs, extracted once from the [`Engine`] so repeated
+/// verifications (serving gates, autotune pruning) don't re-walk the
+/// weights.
+#[derive(Clone, Debug)]
+pub struct GraphBounds {
+    /// Model name the bounds were extracted from.
+    pub model: String,
+    nodes: Vec<NodeBounds>,
+    /// Per enc point: the node id producing the quantized tensor
+    /// (`None` for holes a malformed graph might leave — lint OQ011's
+    /// business, skipped here).
+    enc_src: Vec<Option<usize>>,
+}
+
+/// Statically proven facts about one enc point under the fp32 reference
+/// execution — the certificate the soundness harness checks profiled
+/// activations against.
+#[derive(Clone, Copy, Debug)]
+pub struct StaticRange {
+    /// Enc-point index.
+    pub enc: usize,
+    /// Graph node id producing the enc tensor.
+    pub src: usize,
+    /// Proven lower bound on every element of the enc tensor.
+    pub lo: f64,
+    /// Proven upper bound on every element of the enc tensor.
+    pub hi: f64,
+    /// Output channels of the source conv proven identically zero
+    /// (pre-ReLU upper bound `<= 0`); 0 when the source is not a
+    /// ReLU conv.
+    pub dead_channels: usize,
+    /// Output-channel count of the source conv (0 when not a conv).
+    pub channels: usize,
+}
+
+/// Quant-track facts for one enc point under a concrete plan.
+#[derive(Clone, Copy, Debug)]
+struct EncQuant {
+    /// Pre-clamp magnitude bound of the tensor reaching the encoder.
+    hi: f64,
+    /// Accumulated error bound after encoding (rounding + clipping +
+    /// propagated upstream error).
+    err: f64,
+}
+
+/// One enc point's combined certificate: fp32-track range plus
+/// quant-track capacity/error facts under the verified plan.
+#[derive(Clone, Copy, Debug)]
+pub struct EncCertificate {
+    /// fp32-track range certificate.
+    pub range: StaticRange,
+    /// Pre-clamp magnitude bound under the plan's quantized execution.
+    pub quant_hi: f64,
+    /// Representable activation max of the plan layer
+    /// (`(B²-1)·scale` with range overwrite, `qmax·scale` without).
+    pub capacity: f64,
+    /// Worst-case accumulated quantization error entering the
+    /// consuming convs.
+    pub err_bound: f64,
+    /// `err_bound` relative to the representable signal magnitude —
+    /// what [`AbsintConfig::error_budget`] (OQ025) is compared against.
+    pub rel_err: f64,
+}
+
+/// Result of statically verifying one plan against one model: per-enc
+/// certificates plus the OQ020–OQ025 findings.
+#[derive(Clone, Debug)]
+pub struct Certification {
+    /// Model the plan was verified against.
+    pub model: String,
+    /// Per-enc-point certificates, in plan-layer order.
+    pub encs: Vec<EncCertificate>,
+    /// Findings; shares the lint exit-code contract.
+    pub report: Report,
+}
+
+impl Certification {
+    /// Machine rendering (`overq verify --json`): the certificate array
+    /// plus the report's sorted diagnostics, one stable object.
+    pub fn to_json(&self) -> Value {
+        use std::collections::BTreeMap;
+        let encs: Vec<Value> = self
+            .encs
+            .iter()
+            .map(|c| {
+                let mut m = BTreeMap::new();
+                m.insert("enc".to_string(), Value::Num(c.range.enc as f64));
+                m.insert("src".to_string(), Value::Num(c.range.src as f64));
+                m.insert("lo".to_string(), Value::Num(c.range.lo));
+                m.insert("hi".to_string(), Value::Num(c.range.hi));
+                m.insert(
+                    "dead_channels".to_string(),
+                    Value::Num(c.range.dead_channels as f64),
+                );
+                m.insert("quant_hi".to_string(), Value::Num(c.quant_hi));
+                m.insert("capacity".to_string(), Value::Num(c.capacity));
+                m.insert("err_bound".to_string(), Value::Num(c.err_bound));
+                m.insert("rel_err".to_string(), Value::Num(c.rel_err));
+                Value::Obj(m)
+            })
+            .collect();
+        let mut m = match self.report.to_json() {
+            Value::Obj(m) => m,
+            _ => BTreeMap::new(),
+        };
+        m.insert("model".to_string(), Value::Str(self.model.clone()));
+        m.insert("certificate".to_string(), Value::Arr(encs));
+        Value::Obj(m)
+    }
+}
+
+/// Per-output-channel affine transfer: hull over channels plus the
+/// count of channels whose upper bound is `<= 0` (dead after ReLU).
+fn affine_iv(ab: &AffineBounds, x: Interval) -> (Interval, usize) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    let mut dead = 0usize;
+    for ((&p, &n), &b) in ab.pos.iter().zip(&ab.neg).zip(&ab.bias) {
+        let lo_j = p * x.lo + n * x.hi + b;
+        let hi_j = p * x.hi + n * x.lo + b;
+        if hi_j <= 0.0 {
+            dead += 1;
+        }
+        lo = lo.min(lo_j);
+        hi = hi.max(hi_j);
+    }
+    if lo > hi {
+        // zero output channels — degenerate but not unsound
+        return (Interval::new(0.0, 0.0), 0);
+    }
+    (Interval::new(lo, hi), dead)
+}
+
+impl GraphBounds {
+    /// Extract bounds from a loaded model's engine.
+    pub fn from_model(model: &LoadedModel) -> Result<GraphBounds> {
+        GraphBounds::from_engine(&model.engine)
+    }
+
+    /// Extract bounds from an engine: one [`Transfer`] per graph node.
+    /// Fails only when a conv/dense node has no prepared weights —
+    /// impossible for engines built through [`Engine::new`].
+    pub fn from_engine(engine: &Engine) -> Result<GraphBounds> {
+        let graph = &engine.graph;
+        let mut nodes = Vec::with_capacity(graph.nodes.len());
+        for node in &graph.nodes {
+            let transfer = match &node.op {
+                Op::Input => Transfer::Input,
+                Op::Conv { relu, enc, .. } => {
+                    let Some(ab) = engine.affine_bounds(node.id) else {
+                        bail!("conv node {} has no prepared weights", node.id);
+                    };
+                    let l1_max = l1_max_of(&ab);
+                    Transfer::Affine {
+                        ab,
+                        relu: *relu,
+                        enc: *enc,
+                        pad_zero: true,
+                        l1_max,
+                    }
+                }
+                Op::Dense { .. } => {
+                    let Some(ab) = engine.affine_bounds(node.id) else {
+                        bail!("dense node {} has no prepared weights", node.id);
+                    };
+                    let l1_max = l1_max_of(&ab);
+                    Transfer::Affine {
+                        ab,
+                        relu: false,
+                        enc: None,
+                        pad_zero: false,
+                        l1_max,
+                    }
+                }
+                Op::Add { relu } => Transfer::Add { relu: *relu },
+                Op::Concat => Transfer::Concat,
+                Op::MaxPool | Op::AvgPool => Transfer::Pool,
+                Op::Gap => Transfer::Gap,
+            };
+            nodes.push(NodeBounds {
+                inputs: node.inputs.clone(),
+                transfer,
+            });
+        }
+        let enc_src = graph
+            .enc_point_sources()
+            .into_iter()
+            .map(|s| if s == usize::MAX { None } else { Some(s) })
+            .collect();
+        Ok(GraphBounds {
+            model: graph.name.clone(),
+            nodes,
+            enc_src,
+        })
+    }
+
+    /// Number of enc points the graph declares.
+    pub fn num_enc_points(&self) -> usize {
+        self.enc_src.len()
+    }
+
+    /// fp32 track: proven per-enc-point ranges under `input` for the
+    /// reference [`Engine::forward_f32`] execution. Entries appear in
+    /// enc order; enc points without a resolvable source are omitted.
+    pub fn analyze(&self, input: Interval) -> Vec<StaticRange> {
+        let n = self.nodes.len();
+        let mut vals: Vec<Interval> = Vec::with_capacity(n);
+        let mut dead = vec![0usize; n];
+        let mut channels = vec![0usize; n];
+        for (id, node) in self.nodes.iter().enumerate() {
+            let out = match &node.transfer {
+                Transfer::Input => input,
+                Transfer::Affine {
+                    ab, relu, pad_zero, ..
+                } => {
+                    let mut x = vals[node.inputs[0]];
+                    if *pad_zero {
+                        x = x.with_zero();
+                    }
+                    let (iv, d) = affine_iv(ab, x);
+                    channels[id] = ab.bias.len();
+                    if *relu {
+                        dead[id] = d;
+                    }
+                    if *relu {
+                        iv.relu()
+                    } else {
+                        iv
+                    }
+                }
+                Transfer::Add { relu } => {
+                    let mut iv = vals[node.inputs[0]];
+                    for &i in &node.inputs[1..] {
+                        iv = iv.add(vals[i]);
+                    }
+                    if *relu {
+                        iv.relu()
+                    } else {
+                        iv
+                    }
+                }
+                Transfer::Concat => {
+                    let mut iv = vals[node.inputs[0]];
+                    for &i in &node.inputs[1..] {
+                        iv = iv.join(vals[i]);
+                    }
+                    iv
+                }
+                Transfer::Pool | Transfer::Gap => vals[node.inputs[0]],
+            };
+            vals.push(out);
+        }
+        self.enc_src
+            .iter()
+            .enumerate()
+            .filter_map(|(e, src)| {
+                let src = (*src)?;
+                Some(StaticRange {
+                    enc: e,
+                    src,
+                    lo: vals[src].lo,
+                    hi: vals[src].hi,
+                    dead_channels: dead[src],
+                    channels: channels[src],
+                })
+            })
+            .collect()
+    }
+
+    /// Quant track: walk with per-enc clamping at `caps[e] = (capacity,
+    /// scale)` and error accrual. Returns one [`EncQuant`] per enc
+    /// point (zeros for unresolvable ones), recorded at the first
+    /// consuming conv.
+    fn quant_walk(&self, input: Interval, caps: &[Option<(f64, f64)>]) -> Vec<EncQuant> {
+        let mut facts: Vec<Option<EncQuant>> = vec![None; self.enc_src.len()];
+        let mut vals: Vec<AbsVal> = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let out = match &node.transfer {
+                Transfer::Input => AbsVal { iv: input, err: 0.0 },
+                Transfer::Affine {
+                    ab,
+                    relu,
+                    enc,
+                    pad_zero,
+                    l1_max,
+                } => {
+                    let mut x = vals[node.inputs[0]];
+                    if *pad_zero {
+                        x.iv = x.iv.with_zero();
+                    }
+                    if let Some(e) = enc {
+                        let hi_in = x.iv.abs_max();
+                        if let Some(Some((cap, scale))) = caps.get(*e).copied() {
+                            // encoding at this point: half-step rounding
+                            // plus worst-case clipping at the capacity
+                            let err = x.err + 0.5 * scale + (hi_in - cap).max(0.0);
+                            if facts[*e].is_none() {
+                                facts[*e] = Some(EncQuant { hi: hi_in, err });
+                            }
+                            x = AbsVal {
+                                iv: x.iv.clamp_abs(cap),
+                                err,
+                            };
+                        } else if let Some(f) = facts.get_mut(*e) {
+                            if f.is_none() {
+                                *f = Some(EncQuant { hi: hi_in, err: x.err });
+                            }
+                        }
+                    }
+                    let (iv, _) = affine_iv(ab, x.iv);
+                    AbsVal {
+                        iv: if *relu { iv.relu() } else { iv },
+                        err: l1_max * x.err,
+                    }
+                }
+                Transfer::Add { relu } => {
+                    let mut iv = vals[node.inputs[0]].iv;
+                    let mut err = vals[node.inputs[0]].err;
+                    for &i in &node.inputs[1..] {
+                        iv = iv.add(vals[i].iv);
+                        err += vals[i].err;
+                    }
+                    AbsVal {
+                        iv: if *relu { iv.relu() } else { iv },
+                        err,
+                    }
+                }
+                Transfer::Concat => {
+                    let mut iv = vals[node.inputs[0]].iv;
+                    let mut err = vals[node.inputs[0]].err;
+                    for &i in &node.inputs[1..] {
+                        iv = iv.join(vals[i].iv);
+                        err = err.max(vals[i].err);
+                    }
+                    AbsVal { iv, err }
+                }
+                Transfer::Pool | Transfer::Gap => vals[node.inputs[0]],
+            };
+            vals.push(out);
+        }
+        facts
+            .into_iter()
+            .map(|f| f.unwrap_or(EncQuant { hi: 0.0, err: 0.0 }))
+            .collect()
+    }
+
+    /// Quant-track magnitude bound per enc point when each enc clamps
+    /// at `caps[e]` — the scaffolding `policy::autotune` prunes
+    /// candidate configs with: a candidate whose representable range is
+    /// a vanishing fraction of this bound provably saturates, so its
+    /// proxy score never needs computing. Entries of `caps` may be
+    /// `f64::INFINITY` for "no clamp".
+    pub fn quant_track_hi(&self, input: Interval, caps: &[f64]) -> Vec<f64> {
+        let caps: Vec<Option<(f64, f64)>> = caps.iter().map(|&c| Some((c, 0.0))).collect();
+        self.quant_walk(input, &caps).into_iter().map(|q| q.hi).collect()
+    }
+}
+
+/// Induced L∞ matrix norm from the per-channel bounds:
+/// `max_j Σ_i |w_ij|`.
+fn l1_max_of(ab: &AffineBounds) -> f64 {
+    ab.pos
+        .iter()
+        .zip(&ab.neg)
+        .map(|(&p, &n)| p - n)
+        .fold(0.0f64, f64::max)
+}
+
+/// Statically verify `plan` against `model` over the declared `input`
+/// domain: run both abstract tracks and the OQ020–OQ025 rules.
+pub fn verify_plan(
+    plan: &DeploymentPlan,
+    model: &LoadedModel,
+    input: Interval,
+    cfg: &AbsintConfig,
+) -> Result<Certification> {
+    let gb = GraphBounds::from_model(model)?;
+    Ok(verify_plan_with_bounds(&gb, plan, input, cfg))
+}
+
+/// [`verify_plan`] against pre-extracted [`GraphBounds`] — the serving
+/// gates keep bounds per shard and call this on every
+/// register/swap/watch apply.
+pub fn verify_plan_with_bounds(
+    gb: &GraphBounds,
+    plan: &DeploymentPlan,
+    input: Interval,
+    cfg: &AbsintConfig,
+) -> Certification {
+    let ranges = gb.analyze(input);
+    // capacity/scale per enc point, from the plan's layer configs;
+    // degenerate scales (lint OQ006's domain) leave the point unclamped
+    let mut caps: Vec<Option<(f64, f64)>> = vec![None; gb.num_enc_points()];
+    for l in &plan.layers {
+        let scale = l.scale as f64;
+        if l.enc < caps.len() && scale.is_finite() && scale > 0.0 {
+            caps[l.enc] = Some((rules::capacity(l), scale));
+        }
+    }
+    let quant = gb.quant_walk(input, &caps);
+
+    let mut report = Report::default();
+    let mut encs = Vec::new();
+    for layer in &plan.layers {
+        let Some(range) = ranges.iter().find(|r| r.enc == layer.enc).copied() else {
+            continue; // dangling enc — lint OQ012's business
+        };
+        let Some((capacity, _)) = caps[layer.enc] else {
+            continue; // degenerate scale — lint OQ006's business
+        };
+        let q = quant[layer.enc];
+        let cert = EncCertificate {
+            range,
+            quant_hi: q.hi,
+            capacity,
+            err_bound: q.err,
+            rel_err: q.err / q.hi.min(capacity).max(1e-12),
+        };
+        rules::check_enc(&mut report, &plan.name, cfg, layer, &cert);
+        encs.push(cert);
+    }
+    Certification {
+        model: plan.model.clone(),
+        encs,
+        report,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::synth_model;
+
+    #[test]
+    fn affine_transfer_is_exact_on_a_known_matrix() {
+        // bounds of w = [[1, -2], [3, 0.5]] (K=2 inputs, 2 channels),
+        // bias [0, 1]: pos/neg are the column-wise signed sums
+        let ab = crate::nn::AffineBounds {
+            pos: vec![4.0, 0.5],
+            neg: vec![0.0, -2.0],
+            bias: vec![0.0, 1.0],
+        };
+        let (iv, dead) = affine_iv(&ab, Interval::new(-1.0, 2.0));
+        // ch0: [4*-1+0, 4*2+0] = [-4, 8]; ch1: [0.5*-1 + -2*2 + 1,
+        // 0.5*2 + -2*-1 + 1] = [-4.5, 4]; hull = [-4.5, 8]
+        assert_eq!(iv, Interval::new(-4.5, 8.0));
+        assert_eq!(dead, 0);
+        assert!((l1_max_of(&ab) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn synth_models_analyze_with_finite_positive_ranges() {
+        for name in ["synth-tiny", "synth-cnn"] {
+            let model = synth_model(name, 42).unwrap();
+            let gb = GraphBounds::from_model(&model).unwrap();
+            let ranges = gb.analyze(DEFAULT_INPUT_RANGE);
+            assert_eq!(ranges.len(), gb.num_enc_points(), "{name}: missing enc ranges");
+            for r in &ranges {
+                assert!(r.lo <= r.hi && r.hi.is_finite(), "{name} enc {}: bad range", r.enc);
+                assert!(r.hi > 0.0, "{name} enc {}: dead enc in a live model", r.enc);
+                assert_eq!(r.dead_channels, 0, "{name} enc {}: false dead channels", r.enc);
+            }
+        }
+    }
+
+    #[test]
+    fn quant_track_clamps_downstream_growth() {
+        let model = synth_model("synth-tiny", 42).unwrap();
+        let gb = GraphBounds::from_model(&model).unwrap();
+        let n = gb.num_enc_points();
+        let unclamped = vec![f64::INFINITY; n];
+        let tight = vec![1.0; n];
+        let free = gb.quant_track_hi(DEFAULT_INPUT_RANGE, &unclamped);
+        let clamped = gb.quant_track_hi(DEFAULT_INPUT_RANGE, &tight);
+        // enc 0 sees the same (unclamped upstream) bound either way
+        assert!((free[0] - clamped[0]).abs() < 1e-9);
+        // a tight clamp at enc 0 must shrink what reaches enc 1
+        assert!(
+            clamped[1] < free[1],
+            "clamp at enc 0 did not propagate: {} !< {}",
+            clamped[1],
+            free[1]
+        );
+        // and the fp32 track agrees with the unclamped quant track
+        let ranges = gb.analyze(DEFAULT_INPUT_RANGE);
+        for r in &ranges {
+            let m = r.lo.abs().max(r.hi.abs());
+            assert!((free[r.enc] - m).abs() <= 1e-9 * m.max(1.0));
+        }
+    }
+}

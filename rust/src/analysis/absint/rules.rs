@@ -1,0 +1,150 @@
+//! The static-certification rules (OQ020–OQ025), judged per enc point
+//! from the two abstract tracks computed in [`super`].
+//!
+//! Rule ordering matters in two places: OQ020 (certain saturation)
+//! suppresses the range-sizing warnings — a layer that clips everything
+//! has no meaningful "coarse scale" story — and OQ022 (wasted cascade)
+//! suppresses OQ021 (coarse scale), because when the proven range
+//! already fits base-bit codes, dropping the cascade is the sharper
+//! advice than shaving the scale.
+
+use super::{AbsintConfig, EncCertificate};
+use crate::analysis::diag::Report;
+use crate::policy::plan::PlanLayer;
+
+/// Representable activation max of one plan layer: `(B²-1)·scale` when
+/// range overwrite lets codes cascade into a neighbor, `qmax·scale`
+/// otherwise.
+pub(super) fn capacity(l: &PlanLayer) -> f64 {
+    let scale = l.scale as f64;
+    if l.overq.range_overwrite {
+        let b = l.overq.b() as f64;
+        (b * b - 1.0) * scale
+    } else {
+        l.overq.qmax() as f64 * scale
+    }
+}
+
+/// Run every static rule for one enc point and push the findings.
+pub(super) fn check_enc(
+    report: &mut Report,
+    subject: &str,
+    cfg: &AbsintConfig,
+    layer: &PlanLayer,
+    cert: &EncCertificate,
+) {
+    let e = layer.enc;
+    let scale = layer.scale as f64;
+    let qmax = layer.overq.qmax() as f64;
+    let r = &cert.range;
+
+    // OQ020 — statically certain saturation: the representable range is
+    // a vanishing fraction of what provably reaches the encoder.
+    if cert.quant_hi > 0.0 && cert.capacity / cert.quant_hi < cfg.saturation_ratio {
+        report.push(
+            "OQ020",
+            subject,
+            Some(e),
+            format!(
+                "representable max {:.3e} is {:.1e}x the proven activation bound \
+                 {:.3e} — essentially every in-range input saturates past the \
+                 cascade capacity (raise scale or bits)",
+                cert.capacity,
+                cert.capacity / cert.quant_hi,
+                cert.quant_hi
+            ),
+        );
+    } else if layer.overq.range_overwrite && r.hi > 0.0 && r.hi <= (qmax + 0.5) * scale {
+        // OQ022 — the proven fp32 range already rounds into base-bit
+        // codes, so the RO cascade hardware is provably idle.
+        report.push(
+            "OQ022",
+            subject,
+            Some(e),
+            format!(
+                "proven range [{:.4}, {:.4}] fits base-bit codes (qmax*scale = \
+                 {:.4}) — range overwrite (cascade {}) is provably idle; \
+                 disable ro and reclaim the PE area",
+                r.lo,
+                r.hi,
+                qmax * scale,
+                layer.overq.cascade
+            ),
+        );
+    } else if r.hi > 0.0 && qmax * scale > cfg.coarse_factor * r.hi {
+        // OQ021 — the code range overshoots the proven range so far
+        // that most codes can never fire.
+        report.push(
+            "OQ021",
+            subject,
+            Some(e),
+            format!(
+                "qmax*scale = {:.4} exceeds {:.0}x the proven activation bound \
+                 {:.4} — the top codes can provably never fire; lower the scale",
+                qmax * scale,
+                cfg.coarse_factor,
+                r.hi
+            ),
+        );
+    }
+
+    // OQ023 — statically dead enc point or provably-zero source channels.
+    if r.hi <= 0.0 {
+        report.push(
+            "OQ023",
+            subject,
+            Some(e),
+            format!(
+                "enc tensor is proven identically <= 0 under the declared input \
+                 domain (range [{:.4}, {:.4}]) — this layer quantizes zeros",
+                r.lo, r.hi
+            ),
+        );
+    } else if r.dead_channels > 0 {
+        report.push(
+            "OQ023",
+            subject,
+            Some(e),
+            format!(
+                "{}/{} source channels are proven identically zero (pre-ReLU \
+                 upper bound <= 0) — dead channels spend PE area on zeros",
+                r.dead_channels, r.channels
+            ),
+        );
+    }
+
+    // OQ024 — a declared drift baseline outside the provable interval
+    // cannot have come from this model on this input domain.
+    if let Some(d) = &layer.drift {
+        if !(r.lo..=r.hi).contains(&d.mean) {
+            report.push(
+                "OQ024",
+                subject,
+                Some(e),
+                format!(
+                    "declared drift baseline mean {:.4} lies outside the proven \
+                     activation interval [{:.4}, {:.4}] — re-profile; the live \
+                     telemetry would compare against an impossible baseline",
+                    d.mean, r.lo, r.hi
+                ),
+            );
+        }
+    }
+
+    // OQ025 — configurable budget on the propagated Eq.(1) error bound.
+    if let Some(budget) = cfg.error_budget {
+        if cert.rel_err > budget {
+            report.push(
+                "OQ025",
+                subject,
+                Some(e),
+                format!(
+                    "worst-case accumulated quantization error {:.3e} is {:.3e} \
+                     of the representable signal — over the configured budget \
+                     {budget:.3e}; spend more bits here or upstream",
+                    cert.err_bound, cert.rel_err
+                ),
+            );
+        }
+    }
+}

@@ -42,6 +42,10 @@ pub struct CodeInfo {
     /// The invariant the rule enforces (one line, shown in `--explain`
     /// style listings and docs/static_analysis.md).
     pub invariant: &'static str,
+    /// The canonical remediation (one line). `overq lint --explain
+    /// <code>` prints it, and the docs catalog's "example fix" column
+    /// mirrors it — this registry is the single source of truth.
+    pub fix: &'static str,
 }
 
 /// Every lint code this build knows, in code order. The catalog in
@@ -53,24 +57,31 @@ pub const CODES: &[CodeInfo] = &[
         name: "plan-name",
         invariant: "plan and model names are non-empty and fit the \
                     `plan:<name>` variant charset [A-Za-z0-9_.-]",
+        fix: "rename the plan (`overq policy --name my-plan.v2`); spaces \
+              and `!` cannot be routed to",
     },
     CodeInfo {
         code: "OQ002",
         severity: Severity::Error,
         name: "enc-dense",
         invariant: "layer enc indices are dense 0..n with no duplicates or holes",
+        fix: "regenerate the plan; hand-edited files usually hit this by \
+              deleting a layer without renumbering",
     },
     CodeInfo {
         code: "OQ003",
         severity: Severity::Error,
         name: "act-bits",
         invariant: "activation bitwidth is an integer in 2..=8",
+        fix: "clamp `bits` to the supported range; 1-bit and >8-bit \
+              activations have no PE datapath",
     },
     CodeInfo {
         code: "OQ004",
         severity: Severity::Error,
         name: "cascade-zero",
         invariant: "cascade factor is an integer >= 1 (adjacent-only RO is cascade 1)",
+        fix: "set `cascade: 1` — zero would mean \"overwrite into no neighbor\"",
     },
     CodeInfo {
         code: "OQ005",
@@ -78,12 +89,14 @@ pub const CODES: &[CodeInfo] = &[
         name: "cascade-no-ro",
         invariant: "cascade > 1 requires range overwrite (cascading is an RO \
                     rescale-unit feature; per overq::state it has no effect without RO)",
+        fix: "enable `ro: true` or drop `cascade` to 1",
     },
     CodeInfo {
         code: "OQ006",
         severity: Severity::Error,
         name: "scale",
         invariant: "activation scale is finite and > 0",
+        fix: "recalibrate; a zero/NaN scale quantizes everything to 0",
     },
     CodeInfo {
         code: "OQ007",
@@ -91,6 +104,8 @@ pub const CODES: &[CodeInfo] = &[
         name: "wbits",
         invariant: "weight bitwidth is 0 (prepared 8-bit default) or 2..=8 \
                     (the engine's MMSE requant cache range)",
+        fix: "pick a `wbits` the engine can prepare; 1-bit weights are \
+              outside the requant cache",
     },
     CodeInfo {
         code: "OQ008",
@@ -98,6 +113,7 @@ pub const CODES: &[CodeInfo] = &[
         name: "area-drift",
         invariant: "declared per-layer PE area and total_area match the \
                     Table-3 model (area::pe_area_w, MAC-weighted mean)",
+        fix: "re-save the plan with the current area model (re-run `overq policy`)",
     },
     CodeInfo {
         code: "OQ009",
@@ -105,6 +121,8 @@ pub const CODES: &[CodeInfo] = &[
         name: "evidence",
         invariant: "evidence statistics (p0, outlier_rate, coverages, probe \
                     accuracies) lie in [0,1] and the probe split is non-empty",
+        fix: "re-profile; out-of-range evidence means the stats were edited \
+              or mis-merged",
     },
     CodeInfo {
         code: "OQ010",
@@ -112,18 +130,24 @@ pub const CODES: &[CodeInfo] = &[
         name: "schema-v1",
         invariant: "plan file uses the current schema version (v1 still loads; \
                     re-save to stamp v2)",
+        fix: "load + `save()` once to migrate; v1 files serve with \
+              backward-compatible defaults",
     },
     CodeInfo {
         code: "OQ011",
         severity: Severity::Error,
         name: "enc-missing",
         invariant: "every enc point of the model graph is configured by the plan",
+        fix: "retune against this model; a partial plan would serve some \
+              layers unconfigured",
     },
     CodeInfo {
         code: "OQ012",
         severity: Severity::Error,
         name: "enc-dangling",
         invariant: "no plan layer targets an enc point beyond the model's count",
+        fix: "the plan was tuned for a different (larger) model — check the \
+              `model` field",
     },
     CodeInfo {
         code: "OQ013",
@@ -131,12 +155,15 @@ pub const CODES: &[CodeInfo] = &[
         name: "macs-drift",
         invariant: "declared per-layer MACs match a static recompute over the \
                     graph (OCS-expanded input channels included, as in policy::profile)",
+        fix: "re-profile; drifted MACs skew the MAC-weighted area/coverage \
+              accounting",
     },
     CodeInfo {
         code: "OQ014",
         severity: Severity::Error,
         name: "empty",
         invariant: "a plan configures at least one enc point",
+        fix: "an empty `layers` array serves nothing; regenerate",
     },
     CodeInfo {
         code: "OQ015",
@@ -144,6 +171,8 @@ pub const CODES: &[CodeInfo] = &[
         name: "dup-alias",
         invariant: "no two files in a watched plan directory claim the same \
                     (model, name) alias — the later apply would silently win",
+        fix: "rename one plan; otherwise the later poll apply silently wins \
+              the serving slot",
     },
     CodeInfo {
         code: "OQ016",
@@ -151,6 +180,8 @@ pub const CODES: &[CodeInfo] = &[
         name: "split",
         invariant: "traffic splits have >= 1 non-nested arm with positive finite \
                     weights and no duplicate arms",
+        fix: "deduplicate arms / fix weights; a degenerate split makes A/B \
+              metrics unattributable",
     },
     CodeInfo {
         code: "OQ017",
@@ -158,6 +189,8 @@ pub const CODES: &[CodeInfo] = &[
         name: "control-starved",
         invariant: "every split arm keeps a non-negligible traffic share \
                     (>= 1% of the total weight)",
+        fix: "raise the starved arm's weight; a starved control arm cannot \
+              anchor the comparison (see docs/operations.md)",
     },
     CodeInfo {
         code: "OQ018",
@@ -165,6 +198,8 @@ pub const CODES: &[CodeInfo] = &[
         name: "unreadable",
         invariant: "the file parses as JSON, is a plan object, and declares a \
                     supported schema version",
+        fix: "fix truncation/corruption; OQ018 also covers unreadable paths \
+              and empty watch dirs",
     },
     CodeInfo {
         code: "OQ019",
@@ -173,6 +208,72 @@ pub const CODES: &[CodeInfo] = &[
         invariant: "every layer stores the profile-time drift baseline \
                     (mean/var/clip_rate) the live telemetry compares against; \
                     re-profile plans tuned before it existed",
+        fix: "re-run `overq policy` — plans tuned before the telemetry \
+              subsystem serve fine but cannot be watched for distribution \
+              shift until re-profiled",
+    },
+    // OQ020.. are the static-certification rules (analysis::absint):
+    // abstract interpretation over the model graph proves them from
+    // weights and the declared input domain alone — no profile data.
+    CodeInfo {
+        code: "OQ020",
+        severity: Severity::Error,
+        name: "static-saturation",
+        invariant: "the representable activation range at each enc point \
+                    covers a non-negligible fraction of the statically \
+                    proven activation bound (capacity/bound >= 1e-3)",
+        fix: "raise the activation scale or bits — abstract interpretation \
+              proves essentially every in-range input saturates this \
+              layer's cascade capacity",
+    },
+    CodeInfo {
+        code: "OQ021",
+        severity: Severity::Warn,
+        name: "static-coarse-scale",
+        invariant: "the quantization range is not provably oversized: \
+                    qmax*scale stays within 16x the statically proven \
+                    activation bound",
+        fix: "lower the scale (recalibrate); codes above the proven range \
+              can never fire, so the layer wastes resolution",
+    },
+    CodeInfo {
+        code: "OQ022",
+        severity: Severity::Warn,
+        name: "static-wasted-cascade",
+        invariant: "range overwrite is only enabled where the statically \
+                    proven range can exceed base-bit codes (otherwise the \
+                    cascade hardware is provably idle)",
+        fix: "disable `ro`/cascade for this layer and reclaim the PE area — \
+              the proven range already fits base-bit codes",
+    },
+    CodeInfo {
+        code: "OQ023",
+        severity: Severity::Warn,
+        name: "static-dead",
+        invariant: "no enc point or source channel is statically proven \
+                    identically zero under the declared input domain",
+        fix: "strip provably-dead channels from the model (or widen \
+              `--input-range`); dead enc points spend PE area quantizing zeros",
+    },
+    CodeInfo {
+        code: "OQ024",
+        severity: Severity::Warn,
+        name: "static-drift-domain",
+        invariant: "every declared drift-baseline mean lies inside the \
+                    statically proven activation interval",
+        fix: "re-profile — a baseline mean outside the provable interval can \
+              only come from a different model, input domain, or a stats bug",
+    },
+    CodeInfo {
+        code: "OQ025",
+        severity: Severity::Warn,
+        name: "static-error-budget",
+        invariant: "the worst-case accumulated quantization error (the \
+                    Eq.(1) proxy propagated through the graph) stays within \
+                    the configured per-layer relative budget",
+        fix: "spend more bits on this layer or its upstream layers (raise \
+              `bits`, enable `pr`) to bring the propagated error bound \
+              under budget",
     },
 ];
 
@@ -289,12 +390,19 @@ impl Report {
         out
     }
 
-    /// Machine rendering (`overq lint --json`).
+    /// Machine rendering (`overq lint --json`). Diagnostics are sorted
+    /// by (code, enc, subject, message) so the output is byte-stable
+    /// across runs and diffable in CI artifacts regardless of rule
+    /// evaluation order. The human rendering keeps push order (it reads
+    /// as a narrative of what each rule saw).
     pub fn to_json(&self) -> Value {
         use std::collections::BTreeMap;
-        let diags: Vec<Value> = self
-            .diagnostics
-            .iter()
+        let mut sorted: Vec<&Diagnostic> = self.diagnostics.iter().collect();
+        sorted.sort_by(|a, b| {
+            (a.code, a.enc, &a.subject, &a.message).cmp(&(b.code, b.enc, &b.subject, &b.message))
+        });
+        let diags: Vec<Value> = sorted
+            .into_iter()
             .map(|d| {
                 let mut m = BTreeMap::new();
                 m.insert("code".to_string(), Value::Str(d.code.to_string()));
@@ -346,5 +454,39 @@ mod tests {
         assert!(text.contains("1 error(s), 1 warning(s)"));
         let json = r.to_json().to_json();
         assert!(json.contains("\"OQ008\"") && json.contains("\"OQ004\""));
+    }
+
+    #[test]
+    fn every_code_carries_a_fix() {
+        for c in CODES {
+            assert!(!c.fix.trim().is_empty(), "{} has no fix text", c.code);
+            assert!(!c.invariant.trim().is_empty(), "{} has no invariant", c.code);
+        }
+        // the static-certification family is registered
+        for code in ["OQ020", "OQ021", "OQ022", "OQ023", "OQ024", "OQ025"] {
+            assert!(code_info(code).is_some(), "{code} missing from CODES");
+        }
+        assert_eq!(code_info("OQ020").unwrap().severity, Severity::Error);
+    }
+
+    #[test]
+    fn json_output_is_sorted_and_push_order_independent() {
+        let mut a = Report::default();
+        a.push("OQ013", "p", Some(1), "macs".into());
+        a.push("OQ004", "p", Some(1), "cascade".into());
+        a.push("OQ004", "p", Some(0), "cascade".into());
+        a.push("OQ004", "p", None, "cascade".into());
+        let mut b = Report::default();
+        b.push("OQ004", "p", Some(0), "cascade".into());
+        b.push("OQ004", "p", None, "cascade".into());
+        b.push("OQ013", "p", Some(1), "macs".into());
+        b.push("OQ004", "p", Some(1), "cascade".into());
+        let (ja, jb) = (a.to_json().to_json(), b.to_json().to_json());
+        assert_eq!(ja, jb, "JSON output depends on rule evaluation order");
+        let first = ja.find("\"OQ004\"").unwrap();
+        let last = ja.rfind("\"OQ013\"").unwrap();
+        assert!(first < last, "diagnostics not sorted by code");
+        // human rendering still narrates in push order
+        assert!(a.render_human().starts_with("warn [OQ013]"));
     }
 }

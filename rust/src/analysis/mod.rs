@@ -23,13 +23,25 @@
 //! refuse them, surfacing the lint code in the returned error /
 //! `last_watch_error`. Warn-level findings never block serving; the
 //! `overq lint --deny-warn` CI gate is where they bite.
+//!
+//! A second static layer sits underneath the linter: [`absint`] runs
+//! abstract interpretation over the model graph itself — intervals plus
+//! a propagated Eq.(1) error bound — and certifies per-enc-point
+//! activation ranges without any profile data. Its rules (OQ020–OQ025,
+//! the `overq verify` subcommand) share this module's diagnostics
+//! framework, codes, and exit-code contract.
 
+pub mod absint;
 pub mod diag;
 pub mod rules;
 pub mod view;
 
 use std::path::Path;
 
+pub use absint::{
+    verify_plan, AbsintConfig, Certification, EncCertificate, GraphBounds, Interval, StaticRange,
+    DEFAULT_INPUT_RANGE,
+};
 pub use diag::{code_info, CodeInfo, Diagnostic, Report, Severity, CODES};
 pub use rules::{enc_point_macs, lint_split, DEFAULT_INPUT_DIMS};
 pub use view::PlanView;

@@ -297,6 +297,15 @@ impl ServerBuilder {
             };
             let worker_name = spec.name.clone();
             let scales = spec.act_scales.clone();
+            // plan-independent abstract weight bounds for the static
+            // certification gate, extracted before the model moves into
+            // the worker (artifact-backed shards have no in-process
+            // engine and skip that gate)
+            let bounds = spec
+                .local
+                .as_ref()
+                .and_then(|m| crate::analysis::absint::GraphBounds::from_model(m).ok())
+                .map(Arc::new);
             let local = spec.local;
             let worker = std::thread::Builder::new()
                 .name(format!("overq-shard-{}", spec.name))
@@ -321,6 +330,7 @@ impl ServerBuilder {
                 split: Mutex::new(None),
                 bandit,
                 rng: Mutex::new(Rng::new(seed ^ (0x51AB_D001u64 + i as u64))),
+                bounds,
             }));
         }
         Ok(Coordinator { shards })
@@ -357,6 +367,10 @@ struct Shard {
     bandit: SharedBandit,
     /// Seeded router state for deterministic weighted arm picks.
     rng: Mutex<Rng>,
+    /// Abstract weight bounds of the in-process engine, for the static
+    /// certification gate on `install_plan` (`None` for artifact-backed
+    /// shards, which skip that gate).
+    bounds: Option<Arc<crate::analysis::absint::GraphBounds>>,
 }
 
 /// Handle to a running multi-model coordinator. Owns one worker thread
@@ -607,6 +621,23 @@ impl ModelHandle {
         let report = crate::analysis::lint_plan(&plan);
         if let Some(d) = report.first_error() {
             anyhow::bail!("plan {:?} failed lint: {d}", plan.name);
+        }
+        // second static gate: abstract interpretation over the model
+        // graph (`analysis::absint`). A plan whose scales provably
+        // saturate the cascade capacity on every input (OQ020) is
+        // refused before anything is published; warnings pass, same
+        // contract as lint. Covers `register_plan`, `swap_plan` and the
+        // `PlanWatch` hot-reload path, which all land here.
+        if let Some(gb) = &self.shard.bounds {
+            let cert = crate::analysis::absint::verify_plan_with_bounds(
+                gb,
+                &plan,
+                crate::analysis::absint::DEFAULT_INPUT_RANGE,
+                &crate::analysis::absint::AbsintConfig::default(),
+            );
+            if let Some(d) = cert.report.first_error() {
+                anyhow::bail!("plan {:?} failed static certification: {d}", plan.name);
+            }
         }
         // alias-insert + control-message send happen under the queue
         // lock (same lock as submit_leaf's validate + send), so ANY

@@ -78,8 +78,20 @@ COMMANDS (system):
              [overq lint <plan.json | plans-dir> [--model <name>]
               [--split <spec>] [--json] [--deny-warn]]
              [overq lint --codes]   lists every code
+             [overq lint --explain <code>]   one code's catalog entry
              exit codes: 0 clean, 1 findings gate (Error-level, or any
              finding with --deny-warn), 2 usage/operational failure
+  verify     static range & error certification: abstract interpretation
+             over the model graph proves per-enc-point activation
+             intervals and a worst-case Eq.(1) error bound from the
+             weights alone (no profile data), then judges the plan's
+             scales, cascades and drift baselines against the proof —
+             the OQ020..OQ025 codes (docs/static_analysis.md)
+             [overq verify <plan.json> --model <name>
+              [--input-range lo:hi] [--error-budget <f>]
+              [--json] [--deny-warn] [--explain <code>]]
+             exit codes match lint: 0 clean, 1 findings gate, 2 usage/
+             operational failure
   eval       native-engine accuracy for one config
              [--model resnet18m --bits 4 --cascade 4 --std-t 6 --mode full|ro|base]
   info       artifact manifest summary
@@ -144,6 +156,7 @@ fn dispatch(args: &Args) -> Result<()> {
             emit(hwcmp::run(&arts, &cfg)?, args)
         }
         "lint" => lint_cmd(args),
+        "verify" => verify_cmd(args),
         "policy" => policy_cmd(args),
         "serve" => serve(args),
         "stats" => stats_cmd(args),
@@ -351,6 +364,10 @@ fn lint_cmd(args: &Args) -> Result<()> {
         std::process::exit(0);
     }
 
+    if let Some(code) = args.get("explain") {
+        explain_code(code);
+    }
+
     let mut report = analysis::Report::default();
     let mut linted_anything = false;
 
@@ -395,6 +412,110 @@ fn lint_cmd(args: &Args) -> Result<()> {
         print!("{}", report.render_human());
     }
     std::process::exit(report.exit_code(args.flag("deny-warn")));
+}
+
+/// `overq verify` — the static-certification entry (`analysis::absint`).
+/// Shares lint's exit-code contract: 0 clean (or warnings without
+/// `--deny-warn`), 1 findings gate, 2 usage or operational failure.
+fn verify_cmd(args: &Args) -> Result<()> {
+    use overq::analysis::absint;
+
+    if let Some(code) = args.get("explain") {
+        explain_code(code);
+    }
+    let usage = "usage: overq verify <plan.json> --model <name> \
+                 [--input-range lo:hi] [--error-budget <f>] [--json] [--deny-warn]";
+    let Some(path) = args.positional.first() else {
+        eprintln!("{usage}");
+        std::process::exit(2);
+    };
+    let Some(name) = args.get("model") else {
+        eprintln!("{usage}");
+        std::process::exit(2);
+    };
+    let model = match load_model_any(name) {
+        Ok((m, _)) => m,
+        Err(e) => {
+            eprintln!("error: load model {name:?}: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let plan = match DeploymentPlan::load(std::path::Path::new(path)) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: load plan {path:?}: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let input = match args.get("input-range") {
+        Some(s) => match parse_input_range(s) {
+            Ok(iv) => iv,
+            Err(e) => {
+                eprintln!("error: --input-range: {e:#}");
+                std::process::exit(2);
+            }
+        },
+        None => absint::DEFAULT_INPUT_RANGE,
+    };
+    let mut cfg = absint::AbsintConfig::default();
+    if let Some(b) = args.get("error-budget") {
+        match b.parse::<f64>() {
+            Ok(v) if v > 0.0 && v.is_finite() => cfg.error_budget = Some(v),
+            _ => {
+                eprintln!("error: --error-budget expects a positive number, got {b:?}");
+                std::process::exit(2);
+            }
+        }
+    }
+    let cert = match absint::verify_plan(&plan, &model, input, &cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("json") {
+        println!("{}", cert.to_json().to_json());
+    } else {
+        for c in &cert.encs {
+            println!(
+                "enc {}: fp32 range [{:.4}, {:.4}] | quant bound {:.4} vs capacity {:.4} | err <= {:.3e}",
+                c.range.enc, c.range.lo, c.range.hi, c.quant_hi, c.capacity, c.err_bound
+            );
+        }
+        print!("{}", cert.report.render_human());
+    }
+    std::process::exit(cert.report.exit_code(args.flag("deny-warn")));
+}
+
+/// Shared `--explain <code>` path of `lint` and `verify`: print one
+/// code's catalog entry from the in-build registry (the single source
+/// of truth the docs catalog mirrors) and exit.
+fn explain_code(code: &str) -> ! {
+    match overq::analysis::code_info(code) {
+        Some(c) => {
+            println!("{} [{}] {}", c.code, c.severity, c.name);
+            println!("  invariant: {}", c.invariant);
+            println!("  fix: {}", c.fix);
+            std::process::exit(0);
+        }
+        None => {
+            eprintln!("error: unknown diagnostic code {code:?} (see `overq lint --codes`)");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Parse `--input-range lo:hi` into an interval.
+fn parse_input_range(s: &str) -> Result<overq::analysis::Interval> {
+    let (lo, hi) = s.split_once(':').context("expected lo:hi, e.g. -4.0:4.0")?;
+    let lo: f64 = lo.trim().parse().context("bad lower bound")?;
+    let hi: f64 = hi.trim().parse().context("bad upper bound")?;
+    anyhow::ensure!(
+        lo <= hi && lo.is_finite() && hi.is_finite(),
+        "need finite lo <= hi, got {lo}:{hi}"
+    );
+    Ok(overq::analysis::Interval::new(lo, hi))
 }
 
 /// `overq stats` — one-screen serving + coverage summary from a live

@@ -105,6 +105,47 @@ struct PDense {
     bias: Vec<f32>,
 }
 
+/// Per-output-channel interval-arithmetic summary of one affine
+/// (conv/dense) layer, consumed by the static analyzer
+/// (`crate::analysis::absint`). For output channel `j`, `pos[j]` and
+/// `neg[j]` sum the positive and negative weight entries of column `j`,
+/// so an input with every element in `[lo, hi]` yields channel-`j`
+/// outputs inside `[pos[j]*lo + neg[j]*hi + bias[j],
+/// pos[j]*hi + neg[j]*lo + bias[j]]`.
+#[derive(Clone, Debug)]
+pub struct AffineBounds {
+    /// Sum of positive weights per output channel (`>= 0`).
+    pub pos: Vec<f64>,
+    /// Sum of negative weights per output channel (`<= 0`).
+    pub neg: Vec<f64>,
+    /// Bias per output channel.
+    pub bias: Vec<f64>,
+}
+
+impl AffineBounds {
+    /// Summarize a flattened `(K, cout)` weight matrix + bias.
+    fn from_matrix(w: &TensorF, bias: &[f32]) -> AffineBounds {
+        let (k, n) = (w.dims()[0], w.dims()[1]);
+        let mut pos = vec![0.0f64; n];
+        let mut neg = vec![0.0f64; n];
+        for i in 0..k {
+            for (j, (p, q)) in pos.iter_mut().zip(neg.iter_mut()).enumerate() {
+                let v = w.data[i * n + j] as f64;
+                if v >= 0.0 {
+                    *p += v;
+                } else {
+                    *q += v;
+                }
+            }
+        }
+        AffineBounds {
+            pos,
+            neg,
+            bias: bias.iter().map(|&b| b as f64).collect(),
+        }
+    }
+}
+
 /// The inference engine for one loaded model.
 pub struct Engine {
     pub graph: Graph,
@@ -361,6 +402,19 @@ impl Engine {
                 Op::Dense { cout, .. } => Some(*cout),
                 _ => None,
             })
+    }
+
+    /// Interval-arithmetic weight summary of a conv/dense node (`None`
+    /// for other ops). Built from the same fp32 weights the reference
+    /// [`Engine::forward_f32`] path multiplies by, so bounds derived
+    /// from it are sound for that path.
+    pub fn affine_bounds(&self, node_id: usize) -> Option<AffineBounds> {
+        if let Some(pc) = self.convs.get(&node_id) {
+            return Some(AffineBounds::from_matrix(&pc.wf, &pc.bias));
+        }
+        self.denses
+            .get(&node_id)
+            .map(|pd| AffineBounds::from_matrix(&pd.w, &pd.bias))
     }
 
     /// fp32 forward. Returns logits (N, classes); if `taps` is non-empty,

@@ -17,5 +17,5 @@ pub mod engine;
 pub mod gemm;
 pub mod graph;
 
-pub use engine::{Engine, LayerQuant, QuantConfig, WBITS_DEFAULT};
+pub use engine::{AffineBounds, Engine, LayerQuant, QuantConfig, WBITS_DEFAULT};
 pub use graph::{Graph, Node, Op};

@@ -35,6 +35,8 @@ use crate::overq::{coverage_stats, theory_coverage, OverQConfig};
 use crate::quant::clip::ClipMethod;
 use crate::tensor::TensorF;
 
+use crate::analysis::absint::{AbsintConfig, GraphBounds, Interval};
+
 use super::candidates::{effective_wbits, pe_area_w, CandidateSpace};
 use super::plan::{DeploymentPlan, PlanLayer, ProbeEvidence};
 use super::profile::{profile_enc_points, EncPointProfile};
@@ -163,6 +165,12 @@ pub struct AutotuneResult {
     pub total_area: f64,
     /// MAC-weighted mean PE area of the global baseline.
     pub baseline_area: f64,
+    /// Candidates discarded by the static-range prune before any proxy
+    /// scoring: configs whose representable max the abstract interpreter
+    /// ([`crate::analysis::absint`]) proves saturated against the
+    /// certified activation bound. 0 when the model's bounds were
+    /// unavailable.
+    pub pruned_static: usize,
     /// The emitted deployment plan.
     pub plan: DeploymentPlan,
 }
@@ -284,15 +292,40 @@ pub fn score_candidate_w(
 /// they provably produce no outliers on the whole tap (the profiled max
 /// rounds inside the code range), or RO is on with theory coverage ≥
 /// the baseline's at this layer.
+///
+/// When `static_hi` carries the analyzer's certified activation bound
+/// for this enc point, configs whose representable max falls below
+/// `saturation_ratio` of that bound (the same OQ020 threshold the
+/// serving gate enforces) are dropped *before* sample scoring — the
+/// plan they'd produce would be refused at `register_plan` anyway, so
+/// scoring them wastes the proxy/probe budget. Every skipped
+/// (config × wbits) pair is counted into `pruned`.
 fn frontier(
     prof: &EncPointProfile,
     space: &CandidateSpace,
     clip: ClipMethod,
     baseline: &ScoredCandidate,
     wterm: &[(u32, f64)],
+    static_hi: Option<f64>,
+    pruned: &mut usize,
 ) -> Vec<ScoredCandidate> {
+    let sat_ratio = AbsintConfig::default().saturation_ratio;
     let mut scored: Vec<ScoredCandidate> = Vec::new();
     for c in space.enumerate() {
+        if let Some(hi) = static_hi {
+            let qmax = c.qmax() as f32;
+            let scale = clip.clip(&prof.samples, prof.stats, c.bits).max(1e-6) / qmax;
+            let b = c.b() as f32;
+            let rmax = if c.range_overwrite {
+                (b * b - 1.0) * scale
+            } else {
+                qmax * scale
+            };
+            if hi > 0.0 && (rmax as f64) < sat_ratio * hi {
+                *pruned += wterm.len();
+                continue;
+            }
+        }
         for &(w, mse) in wterm {
             let s = score_candidate_w(prof, &c, clip, w, mse);
             let outlier_free = prof.stats.max < (s.cfg.qmax() as f32 + 0.5) * s.scale;
@@ -334,6 +367,8 @@ struct SearchState {
     baseline_cov: Vec<f64>,
     baseline_area: f64,
     budget: f64,
+    /// (config × wbits) pairs the static-range prune discarded.
+    pruned_static: usize,
 }
 
 /// Memo of measured coverage per (layer, frontier index), so emitting
@@ -399,13 +434,55 @@ fn search(
             )
         })
         .collect();
+    // static prune input: the analyzer's quant-track activation bound
+    // per enc point, walked under the *baseline* capacities (the plan
+    // the tuner must beat). Models without affine bounds — or with an
+    // enc-point count the profiles disagree on — just skip the prune.
+    let static_hi: Option<Vec<f64>> = GraphBounds::from_model(model)
+        .ok()
+        .filter(|gb| gb.num_enc_points() == profiles.len())
+        .map(|gb| {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for &x in &images.data {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+            let input = if lo.is_finite() && hi.is_finite() && lo <= hi {
+                Interval::new(lo.min(0.0) as f64, hi as f64)
+            } else {
+                crate::analysis::absint::DEFAULT_INPUT_RANGE
+            };
+            let caps: Vec<f64> = baselines
+                .iter()
+                .map(|b| {
+                    let r = if b.cfg.range_overwrite {
+                        let bb = b.cfg.b() as f64;
+                        bb * bb - 1.0
+                    } else {
+                        b.cfg.qmax() as f64
+                    };
+                    r * b.scale as f64
+                })
+                .collect();
+            gb.quant_track_hi(input, &caps)
+        });
+
+    let mut pruned_static = 0usize;
     let fronts: Vec<Vec<ScoredCandidate>> = profiles
         .iter()
         .enumerate()
         .map(|(i, p)| {
             let wterm: Vec<(u32, f64)> =
                 wlist.iter().map(|&w| (w, wterm_at(i, w))).collect();
-            frontier(p, &cfg.space, cfg.clip, &baselines[i], &wterm)
+            frontier(
+                p,
+                &cfg.space,
+                cfg.clip,
+                &baselines[i],
+                &wterm,
+                static_hi.as_ref().map(|v| v[i]),
+                &mut pruned_static,
+            )
         })
         .collect();
 
@@ -463,6 +540,7 @@ fn search(
             baseline_cov,
             baseline_area,
             budget,
+            pruned_static,
         },
         history,
     ))
@@ -577,6 +655,7 @@ pub fn autotune(
         layers,
         total_area: state_area(&st, idx),
         baseline_area: st.baseline_area,
+        pruned_static: st.pruned_static,
         plan,
     })
 }
@@ -707,6 +786,7 @@ pub fn autotune_measured(
         layers: cand_layers[chosen].clone(),
         total_area: state_area(&st, &history[win_step]),
         baseline_area: st.baseline_area,
+        pruned_static: st.pruned_static,
         plan,
     };
     Ok(MeasuredAutotune {

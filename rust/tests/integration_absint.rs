@@ -1,0 +1,305 @@
+//! The static-certification harness (`analysis::absint`): soundness of
+//! the proven intervals against real executions, exact-code fixtures
+//! for OQ020–OQ025 (`rust/tests/lint_corpus/`), clean certificates for
+//! every plan the tuner ships, and the serving gate refusing a
+//! statically-unsound plan while the old plan keeps serving.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use overq::analysis::{self, AbsintConfig, GraphBounds, Interval, Severity, DEFAULT_INPUT_RANGE};
+use overq::coordinator::Coordinator;
+use overq::data::shapes;
+use overq::io::tensorfile::{AnyTensor, TensorMap};
+use overq::models::{synth_model, LoadedModel};
+use overq::nn::{Engine, Graph};
+use overq::policy::{AutotuneConfig, DeploymentPlan};
+use overq::tensor::TensorF;
+use overq::util::json::parse;
+use overq::util::rng::Rng;
+
+fn corpus() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/lint_corpus")
+}
+
+fn codes(r: &analysis::Report, sev: Severity) -> BTreeSet<&'static str> {
+    r.diagnostics
+        .iter()
+        .filter(|d| d.severity == sev)
+        .map(|d| d.code)
+        .collect()
+}
+
+/// Assert the finding set is exactly `{code}` at `sev` with nothing
+/// else at any severity.
+fn assert_exactly(report: &analysis::Report, code: &str, sev: Severity) {
+    assert_eq!(
+        codes(report, sev),
+        BTreeSet::from([code]),
+        "fixture {code}:\n{}",
+        report.render_human()
+    );
+    let other = report
+        .diagnostics
+        .iter()
+        .filter(|d| d.severity != sev)
+        .count();
+    assert_eq!(
+        other,
+        0,
+        "fixture {code} has collateral findings:\n{}",
+        report.render_human()
+    );
+}
+
+/// Every value the reference execution actually produces at an enc
+/// point must fall inside that enc point's proven interval (up to f32
+/// vs f64 accumulation-order slack).
+fn assert_sound(model: &LoadedModel, images: &TensorF, input: Interval) {
+    let gb = GraphBounds::from_model(model).unwrap();
+    let ranges = gb.analyze(input);
+    assert_eq!(ranges.len(), gb.num_enc_points(), "{}: missing ranges", model.name);
+    let srcs = model.engine.graph.enc_point_sources();
+    let (_, taps) = model.engine.forward_f32(images, &srcs).unwrap();
+    for r in &ranges {
+        let iv = Interval::new(r.lo, r.hi);
+        for &v in &taps[r.enc].data {
+            assert!(
+                iv.contains(v as f64, 1e-4),
+                "{} enc {}: activation {v} escapes proven [{}, {}]",
+                model.name,
+                r.enc,
+                r.lo,
+                r.hi
+            );
+        }
+    }
+}
+
+#[test]
+fn soundness_synth_zoo() {
+    for name in ["synth-tiny", "synth-cnn"] {
+        let model = synth_model(name, 42).unwrap();
+        let (images, _) = shapes::gen_batch(42, 0, 16);
+        assert_sound(&model, &images, DEFAULT_INPUT_RANGE);
+    }
+}
+
+/// Build a model from a graph JSON with He-random weights — the same
+/// recipe as the synthetic zoo, but over topologies the zoo doesn't
+/// ship. `doctor` gets each (node id, bias tensor) before the engine is
+/// built, so tests can plant provable pathologies.
+fn random_model(
+    name: &str,
+    graph_json: &str,
+    seed: u64,
+    doctor: impl Fn(usize, &mut TensorF),
+) -> LoadedModel {
+    let graph = Graph::from_json(&parse(graph_json).unwrap()).unwrap();
+    let mut rng = Rng::new(seed ^ 0x5F37_59DF);
+    let mut weights = TensorMap::new();
+    for node in &graph.nodes {
+        use overq::nn::graph::Op;
+        let (wdims, bdim): (Vec<usize>, usize) = match &node.op {
+            Op::Conv {
+                kh, kw, cin, cout, ..
+            } => (vec![*kh, *kw, *cin, *cout], *cout),
+            Op::Dense { cin, cout } => (vec![*cin, *cout], *cout),
+            _ => continue,
+        };
+        let fan_in: usize = wdims[..wdims.len() - 1].iter().product();
+        let std = (2.0 / fan_in as f32).sqrt();
+        let mut w = TensorF::zeros(&wdims);
+        for v in w.data.iter_mut() {
+            *v = rng.normal() * std;
+        }
+        let mut b = TensorF::zeros(&[bdim]);
+        for v in b.data.iter_mut() {
+            *v = rng.normal() * 0.05;
+        }
+        doctor(node.id, &mut b);
+        weights.insert(format!("n{}.w", node.id), AnyTensor::F32(w));
+        weights.insert(format!("n{}.b", node.id), AnyTensor::F32(b));
+    }
+    LoadedModel {
+        name: name.to_string(),
+        engine: Engine::new(graph, &weights).unwrap(),
+        enc_stats: Vec::new(),
+        fp32_acc: 0.0,
+    }
+}
+
+/// Property test: random weights, a topology exercising every transfer
+/// function (affine, residual add, concat, max/avg pool, gap), random
+/// inputs inside the declared domain — no activation may escape its
+/// proven interval.
+#[test]
+fn soundness_random_graphs() {
+    let graph_json = r#"{
+      "name": "absint-prop",
+      "nodes": [
+        {"id": 0, "op": "input", "in": []},
+        {"id": 1, "op": "conv", "in": [0], "kh": 3, "kw": 3, "stride": 1,
+         "cin": 3, "cout": 6, "relu": true, "quant": false},
+        {"id": 2, "op": "conv", "in": [1], "kh": 3, "kw": 3, "stride": 1,
+         "cin": 6, "cout": 6, "relu": true, "quant": true, "enc": 0},
+        {"id": 3, "op": "add", "in": [1, 2], "relu": true},
+        {"id": 4, "op": "maxpool", "in": [3]},
+        {"id": 5, "op": "conv", "in": [4], "kh": 3, "kw": 3, "stride": 2,
+         "cin": 6, "cout": 8, "relu": true, "quant": true, "enc": 1},
+        {"id": 6, "op": "avgpool", "in": [5]},
+        {"id": 7, "op": "concat", "in": [6, 6]},
+        {"id": 8, "op": "gap", "in": [7]},
+        {"id": 9, "op": "dense", "in": [8], "cin": 16, "cout": 10}
+      ]
+    }"#;
+    for seed in 0..5u64 {
+        let model = random_model("absint-prop", graph_json, seed, |_, _| {});
+        let mut rng = Rng::new(seed.wrapping_mul(77) ^ 0xA5A5);
+        let mut images = TensorF::zeros(&[2, 8, 8, 3]);
+        for v in images.data.iter_mut() {
+            *v = rng.f32() * 4.0 - 2.0;
+        }
+        assert_sound(&model, &images, Interval::new(-2.0, 2.0));
+    }
+}
+
+/// Every plan the tuner ships must certify clean — the serving gate
+/// (`register_plan`) runs this exact check, so a warning here is a
+/// tuner/analyzer disagreement and an error would brick deployment.
+#[test]
+fn autotuned_plans_certify_clean() {
+    for name in ["synth-tiny", "synth-cnn"] {
+        let model = synth_model(name, 42).unwrap();
+        let (images, _) = shapes::gen_batch(42, 0, 16);
+        let plan = overq::policy::autotune(&model, &images, &AutotuneConfig::default())
+            .unwrap()
+            .plan;
+        let cert =
+            analysis::verify_plan(&plan, &model, DEFAULT_INPUT_RANGE, &AbsintConfig::default())
+                .unwrap();
+        assert!(
+            cert.report.is_clean(),
+            "{name} autotuned plan:\n{}",
+            cert.report.render_human()
+        );
+        assert_eq!(cert.encs.len(), plan.layers.len());
+        for c in &cert.encs {
+            assert!(c.quant_hi > 0.0 && c.capacity > 0.0 && c.err_bound >= 0.0);
+        }
+    }
+}
+
+/// synth-tiny with one provably dead channel in the enc-0 source conv
+/// (node 1): channel 0's bias is forced to -1e3, so its pre-ReLU upper
+/// bound is `<= 0` under any input bounded by the declared domain. The
+/// OQ023 fixture is judged against this model.
+fn dead_channel_tiny() -> LoadedModel {
+    let graph_json = r#"{
+      "name": "synth-tiny",
+      "nodes": [
+        {"id": 0, "op": "input", "in": []},
+        {"id": 1, "op": "conv", "in": [0], "kh": 3, "kw": 3, "stride": 1,
+         "cin": 3, "cout": 8, "relu": true, "quant": false},
+        {"id": 2, "op": "conv", "in": [1], "kh": 3, "kw": 3, "stride": 2,
+         "cin": 8, "cout": 12, "relu": true, "quant": true, "enc": 0},
+        {"id": 3, "op": "conv", "in": [2], "kh": 3, "kw": 3, "stride": 2,
+         "cin": 12, "cout": 16, "relu": true, "quant": true, "enc": 1},
+        {"id": 4, "op": "gap", "in": [3]},
+        {"id": 5, "op": "dense", "in": [4], "cin": 16, "cout": 10}
+      ]
+    }"#;
+    random_model("synth-tiny", graph_json, 42, |id, b| {
+        if id == 1 {
+            b.data[0] = -1e3;
+        }
+    })
+}
+
+/// Each OQ020–OQ025 fixture triggers exactly its code at its severity
+/// under `overq verify` semantics.
+#[test]
+fn verify_fixtures_trigger_exactly_their_code() {
+    let model = synth_model("synth-tiny", 42).unwrap();
+    let cases: [(&str, Severity, Option<f64>); 5] = [
+        ("OQ020", Severity::Error, None),
+        ("OQ021", Severity::Warn, None),
+        ("OQ022", Severity::Warn, None),
+        ("OQ024", Severity::Warn, None),
+        ("OQ025", Severity::Warn, Some(1e-9)),
+    ];
+    for (code, sev, budget) in cases {
+        let plan = DeploymentPlan::load(&corpus().join(format!("{code}.plan.json"))).unwrap();
+        let cfg = AbsintConfig {
+            error_budget: budget,
+            ..AbsintConfig::default()
+        };
+        let cert = analysis::verify_plan(&plan, &model, DEFAULT_INPUT_RANGE, &cfg).unwrap();
+        assert_exactly(&cert.report, code, sev);
+    }
+
+    // the clean fixture certifies clean under the same defaults
+    let plan = DeploymentPlan::load(&corpus().join("clean.plan.json")).unwrap();
+    let cert =
+        analysis::verify_plan(&plan, &model, DEFAULT_INPUT_RANGE, &AbsintConfig::default())
+            .unwrap();
+    assert!(cert.report.is_clean(), "{}", cert.report.render_human());
+}
+
+/// OQ023 needs a model with a provably dead channel; the stock zoo has
+/// none (and must keep having none — that's asserted by the soundness
+/// tests), so the fixture is judged against a doctored synth-tiny.
+#[test]
+fn verify_oq023_fixture_on_dead_channel_model() {
+    let model = dead_channel_tiny();
+    let gb = GraphBounds::from_model(&model).unwrap();
+    let ranges = gb.analyze(DEFAULT_INPUT_RANGE);
+    assert!(
+        ranges[0].dead_channels > 0,
+        "doctored model has no dead channel (got {:?})",
+        ranges[0]
+    );
+    let plan = DeploymentPlan::load(&corpus().join("OQ023.plan.json")).unwrap();
+    let cert = analysis::verify_plan(&plan, &model, DEFAULT_INPUT_RANGE, &AbsintConfig::default())
+        .unwrap();
+    assert_exactly(&cert.report, "OQ023", Severity::Warn);
+}
+
+fn img_of(src: &TensorF, i: usize) -> TensorF {
+    let sz = 16 * 16 * 3;
+    TensorF::from_vec(&[16, 16, 3], src.data[i * sz..(i + 1) * sz].to_vec())
+}
+
+/// The serving gate: a statically-unsound plan (seeded overflow — the
+/// OQ020 fixture) is refused at `register_plan` with the stable code in
+/// the error, and the previously registered plan keeps serving its
+/// exact numerics.
+#[test]
+fn register_plan_refuses_statically_unsound_plan() {
+    let tiny = synth_model("synth-tiny", 42).unwrap();
+    let (images, _) = shapes::gen_batch(42, 0, 8);
+    let plan = overq::policy::autotune(&tiny, &images, &AutotuneConfig::default())
+        .unwrap()
+        .plan;
+    let qc = plan.to_quant_config();
+    let (load, _) = shapes::gen_batch(43, 0, 2);
+    let want = tiny.engine.forward_quant(&load, &qc).unwrap();
+    let classes = tiny.engine.num_classes().unwrap();
+
+    let coord = Coordinator::builder().model_local(tiny).build().unwrap();
+    let h = coord.model("synth-tiny").unwrap();
+    h.register_plan(plan.clone()).unwrap();
+
+    // the OQ020 corpus plan parses and passes the schema loader — only
+    // the static certification gate can catch it
+    let bad = DeploymentPlan::load(&corpus().join("OQ020.plan.json")).unwrap();
+    let err = h.register_plan(bad).unwrap_err();
+    assert!(format!("{err:#}").contains("OQ020"), "{err:#}");
+
+    // ...and the refusal leaves the registered plan untouched
+    let resp = h
+        .infer_variant(img_of(&load, 0), &format!("plan:{}", plan.name))
+        .unwrap();
+    assert_eq!(resp.logits, want.data[0..classes].to_vec());
+    coord.shutdown();
+}

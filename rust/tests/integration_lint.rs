@@ -76,7 +76,13 @@ fn error_fixtures_trigger_exactly_their_code() {
 #[test]
 fn warn_fixtures_trigger_exactly_their_code() {
     let model = synth_model("synth-tiny", 42).unwrap();
-    let fixtures = [("OQ008", false), ("OQ009", false), ("OQ010", false), ("OQ013", true)];
+    let fixtures = [
+        ("OQ008", false),
+        ("OQ009", false),
+        ("OQ010", false),
+        ("OQ013", true),
+        ("OQ019", false),
+    ];
     for (code, with_model) in fixtures {
         let path = corpus().join(format!("{code}.plan.json"));
         let report = analysis::lint_file(&path, with_model.then_some(&model));
