@@ -1,11 +1,14 @@
 //! `cargo bench --bench gemm` — the L3 hot-path microbenches driving the
-//! §Perf optimization loop: OverQ encode, OverQ integer GEMM, f32 GEMM,
-//! and im2col, with GOPS numbers.
+//! §Perf optimization loop: OverQ encode, OverQ integer GEMM
+//! (value-at-a-time and bit-packed), f32 GEMM (scalar reference vs the
+//! blocked-parallel kernel, with thread scaling), and im2col, with GOPS
+//! numbers. The JSON-emitting speedup metrics live in
+//! `cargo bench --bench runtime` (BENCH_runtime.json).
 
 use overq::nn::conv::im2col;
-use overq::nn::gemm::gemm_f32;
-use overq::overq::dotprod::{gemm_overq, roll_weights};
-use overq::overq::{encode_tensor, OverQConfig};
+use overq::nn::gemm::{gemm_f32_threads, reference};
+use overq::overq::dotprod::{gemm_overq, gemm_overq_packed_threads, roll_weights};
+use overq::overq::{encode_tensor, pack_slots, OverQConfig};
 use overq::tensor::{TensorF, TensorI};
 use overq::util::bench::bench;
 use overq::util::rng::Rng;
@@ -44,20 +47,44 @@ fn main() {
         2.0 * (m * k * n) as f64 / r.mean_ns
     );
 
+    // same product over the bit-packed wire format
+    let p = pack_slots(&enc.codes, &enc.state, cfg.bits);
+    for t in [1usize, 2, 4] {
+        let r = bench(&format!("gemm_overq_packed 4096x144x16 t{t}"), || {
+            gemm_overq_packed_threads(&p, &w, &wroll, &cfg, &mut out, t);
+            std::hint::black_box(out.data[0]);
+        });
+        println!(
+            "  -> {:.2} GOPS (2*M*K*N)",
+            2.0 * (m * k * n) as f64 / r.mean_ns
+        );
+    }
+
     let mut wf = TensorF::zeros(&[k, n]);
     for v in wf.data.iter_mut() {
         *v = rng.normal();
     }
     let mut outf = TensorF::zeros(&[m, n]);
-    let r = bench("gemm_f32 4096x144x16", || {
+    let r = bench("gemm_f32 reference 4096x144x16", || {
         outf.data.fill(0.0);
-        gemm_f32(&x, &wf, &mut outf);
+        reference::gemm_f32(&x, &wf, &mut outf);
         std::hint::black_box(outf.data[0]);
     });
     println!(
         "  -> {:.2} GFLOP/s (2*M*K*N)",
         2.0 * (m * k * n) as f64 / r.mean_ns
     );
+    for t in [1usize, 2, 4] {
+        let r = bench(&format!("gemm_f32 blocked 4096x144x16 t{t}"), || {
+            outf.data.fill(0.0);
+            gemm_f32_threads(&x, &wf, &mut outf, t);
+            std::hint::black_box(outf.data[0]);
+        });
+        println!(
+            "  -> {:.2} GFLOP/s (2*M*K*N)",
+            2.0 * (m * k * n) as f64 / r.mean_ns
+        );
+    }
 
     let img = TensorF::zeros(&[8, 16, 16, 16]);
     bench("im2col 8x16x16x16 k3 s1", || {

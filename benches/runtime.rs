@@ -1,48 +1,232 @@
-//! `cargo bench --bench runtime` — PJRT executable latency (kernel +
-//! model artifacts) and the native engine's layer pipeline, i.e. the
-//! end-to-end hot path L3 drives.
+//! `cargo bench --bench runtime` — the native hot path: blocked-parallel
+//! GEMM vs the scalar reference (single-thread speedup + thread
+//! scaling), the bit-packed OverQ GEMM vs the value-at-a-time kernel,
+//! and planned vs unplanned engine forwards on the synthetic zoo. All of
+//! that runs artifact-free, so `BENCH_runtime.json` is **always**
+//! written; the PJRT executable latencies (kernel + model artifacts) are
+//! appended when `make artifacts` has run. See `docs/runtime.md` for how
+//! to read the derived metrics.
 
+use std::collections::BTreeMap;
+
+use overq::data::shapes;
 use overq::harness::calibrate::{scales_from_stats, subset};
-use overq::models::Artifacts;
+use overq::models::{synth_model, Artifacts};
 use overq::nn::engine::QuantConfig;
-use overq::overq::OverQConfig;
-use overq::runtime::artifacts::ExecutableCache;
-use overq::runtime::pjrt::Input;
+use overq::nn::gemm;
+use overq::nn::Arena;
+use overq::overq::dotprod::{gemm_overq, gemm_overq_packed_threads, roll_weights};
+use overq::overq::{encode_tensor, pack_slots, OverQConfig};
 use overq::tensor::{TensorF, TensorI};
-use overq::util::bench::bench;
+use overq::util::bench::{bench, BenchResult};
+use overq::util::json::Value;
 use overq::util::rng::Rng;
 
+fn result_json(r: &BenchResult) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("name".into(), Value::Str(r.name.clone()));
+    m.insert("iters".into(), Value::Num(r.iters as f64));
+    m.insert("mean_ns".into(), Value::Num(r.mean_ns));
+    m.insert("std_ns".into(), Value::Num(r.std_ns));
+    m.insert("min_ns".into(), Value::Num(r.min_ns));
+    Value::Obj(m)
+}
+
 fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut derived: BTreeMap<String, Value> = BTreeMap::new();
+    let mut rng = Rng::new(1);
+
+    // ---- blocked GEMM vs the scalar reference -------------------------
+    // representative mid-network conv shape (batch 8, 3x3 conv, 32ch)
+    let (m, k, n) = (768usize, 288usize, 64usize);
+    let mut a_dense = TensorF::zeros(&[m, k]);
+    for v in a_dense.data.iter_mut() {
+        *v = rng.normal().abs() + 0.01; // no zeros: worst case for the
+                                        // reference's zero-skip
+    }
+    let mut a_sparse = TensorF::zeros(&[m, k]);
+    for v in a_sparse.data.iter_mut() {
+        *v = if rng.bool(0.5) { 0.0 } else { rng.normal().abs() };
+    }
+    let mut w = TensorF::zeros(&[k, n]);
+    for v in w.data.iter_mut() {
+        *v = rng.normal();
+    }
+    let mut out = TensorF::zeros(&[m, n]);
+    let shape = format!("{m}x{k}x{n}");
+
+    let r_ref = bench(&format!("gemm_f32 reference {shape} dense"), || {
+        out.data.fill(0.0);
+        gemm::reference::gemm_f32(&a_dense, &w, &mut out);
+        std::hint::black_box(out.data[0]);
+    });
+    results.push(r_ref.clone());
+    let mut by_threads = BTreeMap::new();
+    for t in [1usize, 2, 4] {
+        let r = bench(&format!("gemm_f32 blocked {shape} dense t{t}"), || {
+            out.data.fill(0.0);
+            gemm::gemm_f32_threads(&a_dense, &w, &mut out, t);
+            std::hint::black_box(out.data[0]);
+        });
+        results.push(r.clone());
+        by_threads.insert(t, r);
+    }
+    derived.insert(
+        "gemm_speedup_1t".into(),
+        Value::Num(r_ref.min_ns / by_threads[&1].min_ns),
+    );
+    derived.insert(
+        "gemm_scaling_2t".into(),
+        Value::Num(by_threads[&1].min_ns / by_threads[&2].min_ns),
+    );
+    derived.insert(
+        "gemm_scaling_4t".into(),
+        Value::Num(by_threads[&1].min_ns / by_threads[&4].min_ns),
+    );
+
+    let r_ref_sp = bench(&format!("gemm_f32 reference {shape} relu-sparse"), || {
+        out.data.fill(0.0);
+        gemm::reference::gemm_f32(&a_sparse, &w, &mut out);
+        std::hint::black_box(out.data[0]);
+    });
+    results.push(r_ref_sp.clone());
+    let r_b_sp = bench(&format!("gemm_f32 blocked {shape} relu-sparse t1"), || {
+        out.data.fill(0.0);
+        gemm::gemm_f32_threads(&a_sparse, &w, &mut out, 1);
+        std::hint::black_box(out.data[0]);
+    });
+    results.push(r_b_sp.clone());
+    derived.insert(
+        "gemm_speedup_sparse_1t".into(),
+        Value::Num(r_ref_sp.min_ns / r_b_sp.min_ns),
+    );
+
+    // ---- packed OverQ GEMM vs value-at-a-time -------------------------
+    let (qm, qk, qn) = (4096usize, 144usize, 16usize);
+    let mut x = TensorF::zeros(&[qm, qk]);
+    for v in x.data.iter_mut() {
+        *v = if rng.bool(0.5) { 0.0 } else { rng.normal().abs() };
+    }
+    let cfg = OverQConfig::full(4, 4);
+    let enc = encode_tensor(&x, 0.25, &cfg);
+    let packed = pack_slots(&enc.codes, &enc.state, cfg.bits);
+    let mut wq = TensorI::zeros(&[qk, qn]);
+    for v in wq.data.iter_mut() {
+        *v = rng.range(-127, 128) as i32;
+    }
+    let wroll = roll_weights(&wq);
+    let mut outq = TensorI::zeros(&[qm, qn]);
+    let r_val = bench(&format!("gemm_overq value-at-a-time {qm}x{qk}x{qn}"), || {
+        gemm_overq(&enc.codes, &enc.state, &wq, &wroll, &cfg, &mut outq);
+        std::hint::black_box(outq.data[0]);
+    });
+    results.push(r_val.clone());
+    let mut packed_1t = 0.0;
+    for t in [1usize, 4] {
+        let r = bench(&format!("gemm_overq packed {qm}x{qk}x{qn} t{t}"), || {
+            gemm_overq_packed_threads(&packed, &wq, &wroll, &cfg, &mut outq, t);
+            std::hint::black_box(outq.data[0]);
+        });
+        if t == 1 {
+            packed_1t = r.min_ns;
+        }
+        results.push(r);
+    }
+    derived.insert(
+        "overq_packed_speedup_1t".into(),
+        Value::Num(r_val.min_ns / packed_1t),
+    );
+
+    // ---- planned vs unplanned engine forwards (synthetic zoo) ---------
+    for name in overq::models::synth::names() {
+        let model = synth_model(name, 42).expect("synth model");
+        let (xb, _) = shapes::gen_batch(42, 0, 8);
+        let scales = scales_from_stats(&model.enc_stats, 6.0, 4);
+        let qc = QuantConfig::uniform(OverQConfig::full(4, 4), scales);
+
+        results.push(bench(&format!("native {name} fp32 planned b8"), || {
+            let (o, _) = model.engine.forward_f32(&xb, &[]).unwrap();
+            std::hint::black_box(o.data[0]);
+        }));
+        results.push(bench(&format!("native {name} fp32 unplanned b8"), || {
+            let (o, _) = model.engine.forward_f32_unplanned(&xb, &[]).unwrap();
+            std::hint::black_box(o.data[0]);
+        }));
+        results.push(bench(&format!("native {name} quant planned b8"), || {
+            let o = model.engine.forward_quant(&xb, &qc).unwrap();
+            std::hint::black_box(o.data[0]);
+        }));
+        results.push(bench(&format!("native {name} quant unplanned b8"), || {
+            let o = model.engine.forward_quant_unplanned(&xb, &qc).unwrap();
+            std::hint::black_box(o.data[0]);
+        }));
+
+        // arena footprint vs the naive per-layer allocation
+        let plan = model.engine.plan_for(xb.dims()).unwrap();
+        let mut arena = Arena::new();
+        model
+            .engine
+            .forward_f32_planned(&xb, &[], &plan, &mut arena)
+            .unwrap();
+        derived.insert(
+            format!("arena_peak_ratio_{name}"),
+            Value::Num(arena.peak_bytes() as f64 / plan.naive_bytes as f64),
+        );
+    }
+
+    // ---- PJRT executables (artifact-gated) ----------------------------
+    pjrt_benches(&mut results);
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Value::Str("runtime".into()));
+    top.insert(
+        "results".into(),
+        Value::Arr(results.iter().map(result_json).collect()),
+    );
+    top.insert("derived".into(), Value::Obj(derived));
+    let json = Value::Obj(top).to_json();
+    std::fs::write("BENCH_runtime.json", &json).expect("write BENCH_runtime.json");
+    println!("wrote BENCH_runtime.json ({} cases)", results.len());
+}
+
+/// PJRT latency benches — only when `make artifacts` has run (and the
+/// `pjrt` feature links a real runtime; otherwise ExecutableCache errors
+/// and this section is skipped too).
+fn pjrt_benches(results: &mut Vec<BenchResult>) {
+    use overq::runtime::artifacts::ExecutableCache;
+    use overq::runtime::pjrt::Input;
+
     let Ok(arts) = Artifacts::locate() else {
-        eprintln!("artifacts not built — run `make artifacts`");
+        eprintln!("artifacts not built — native section only");
         return;
     };
-    let mut cache = ExecutableCache::new(&arts).unwrap();
+    let Ok(mut cache) = ExecutableCache::new(&arts) else {
+        eprintln!("pjrt runtime unavailable — native section only");
+        return;
+    };
     let ev = arts.load_dataset("evalset").unwrap();
     let (x8, _) = subset(&ev, 8);
     let model = arts.load_model("resnet18m").unwrap();
     let scales = scales_from_stats(&model.enc_stats, 6.0, 4);
     let scales_t = TensorF::from_vec(&[scales.len()], scales.clone());
 
-    // PJRT: fp32 model
     {
         let exe = cache.get("resnet18m", "fp32", 8).unwrap();
-        bench("pjrt resnet18m fp32 b8", || {
+        results.push(bench("pjrt resnet18m fp32 b8", || {
             let out = exe.run_f32(&[Input::F32(x8.clone())]).unwrap();
             std::hint::black_box(out.data[0]);
-        });
+        }));
     }
-    // PJRT: quantized OverQ model
     {
         let exe = cache.get("resnet18m", "full_c4", 8).unwrap();
-        bench("pjrt resnet18m full_c4 b8", || {
+        results.push(bench("pjrt resnet18m full_c4 b8", || {
             let out = exe
                 .run_f32(&[Input::F32(x8.clone()), Input::F32(scales_t.clone())])
                 .unwrap();
             std::hint::black_box(out.data[0]);
-        });
+        }));
     }
-    // PJRT: standalone OverQ-matmul kernel (the L1 artifact)
     {
         let mut rng = Rng::new(9);
         let codes = TensorI::from_vec(
@@ -55,7 +239,7 @@ fn main() {
             *v = rng.range(-127, 128) as i32;
         }
         let exe = cache.get("kernel", "overq_matmul", 256).unwrap();
-        bench("pjrt kernel overq_matmul 256x72x16", || {
+        results.push(bench("pjrt kernel overq_matmul 256x72x16", || {
             let out = exe
                 .run_i32(&[
                     Input::I32(codes.clone()),
@@ -64,18 +248,16 @@ fn main() {
                 ])
                 .unwrap();
             std::hint::black_box(out.data[0]);
-        });
+        }));
     }
-    // native engine quant forward on the same batch
-    {
-        let qc = QuantConfig::uniform(OverQConfig::full(4, 4), scales);
-        bench("native resnet18m full-overq b8", || {
-            let out = model.engine.forward_quant(&x8, &qc).unwrap();
-            std::hint::black_box(out.data[0]);
-        });
-        bench("native resnet18m fp32 b8", || {
-            let (out, _) = model.engine.forward_f32(&x8, &[]).unwrap();
-            std::hint::black_box(out.data[0]);
-        });
-    }
+    // native engine on the same artifact batch, for the JSON history
+    let qc = QuantConfig::uniform(OverQConfig::full(4, 4), scales);
+    results.push(bench("native resnet18m full-overq b8", || {
+        let out = model.engine.forward_quant(&x8, &qc).unwrap();
+        std::hint::black_box(out.data[0]);
+    }));
+    results.push(bench("native resnet18m fp32 b8", || {
+        let (out, _) = model.engine.forward_f32(&x8, &[]).unwrap();
+        std::hint::black_box(out.data[0]);
+    }));
 }

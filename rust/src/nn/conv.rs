@@ -23,6 +23,25 @@ pub fn im2col<T: Copy + Default>(
     kw: usize,
     stride: usize,
 ) -> (Tensor<T>, usize, usize) {
+    let (n, h, w) = (x.dims()[0], x.dims()[1], x.dims()[2]);
+    let oh = same_out(h, stride);
+    let ow = same_out(w, stride);
+    let k = kh * kw * x.dims()[3];
+    let mut out = Tensor::<T>::zeros(&[n * oh * ow, k]);
+    im2col_into(x, kh, kw, stride, &mut out);
+    (out, oh, ow)
+}
+
+/// [`im2col`] into a caller-provided `(N*OH*OW, kh*kw*C)` tensor — the
+/// arena-backed engine path. Padding taps are written explicitly, so
+/// `out` does not need to be pre-zeroed (it may be a recycled buffer).
+pub fn im2col_into<T: Copy + Default>(
+    x: &Tensor<T>,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    out: &mut Tensor<T>,
+) -> (usize, usize) {
     let (n, h, w, c) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
     let oh = same_out(h, stride);
     let ow = same_out(w, stride);
@@ -30,7 +49,8 @@ pub fn im2col<T: Copy + Default>(
     let ptw = ((ow - 1) * stride + kw).saturating_sub(w);
     let (ph, pw) = (pth / 2, ptw / 2);
     let k = kh * kw * c;
-    let mut out = Tensor::<T>::zeros(&[n * oh * ow, k]);
+    assert_eq!(out.dims(), &[n * oh * ow, k], "im2col_into out dims");
+    let zero = T::default();
     for img in 0..n {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -44,47 +64,34 @@ pub fn im2col<T: Copy + Default>(
                         if iy >= 0 && iy < h as i64 && ix >= 0 && ix < w as i64 {
                             let src = ((img * h + iy as usize) * w + ix as usize) * c;
                             out.data[off..off + c].copy_from_slice(&x.data[src..src + c]);
+                        } else {
+                            out.data[off..off + c].fill(zero);
                         }
-                        // else: stays default() (zero padding)
                     }
                 }
             }
         }
     }
-    (out, oh, ow)
+    (oh, ow)
 }
 
-/// Gather columns of an im2col matrix by a per-channel index (OCS):
-/// expands the channel dimension inside every (dy, dx) tap.
-pub fn gather_channels<T: Copy + Default>(
-    cols: &Tensor<T>,
-    c: usize,
-    taps: usize,
-    gather: &[usize],
-) -> Tensor<T> {
-    let m = cols.dims()[0];
-    let cg = gather.len();
-    let mut out = Tensor::<T>::zeros(&[m, taps * cg]);
-    for r in 0..m {
-        let src = cols.row(r);
-        let dst = out.row_mut(r);
-        for t in 0..taps {
-            for (gi, &g) in gather.iter().enumerate() {
-                dst[t * cg + gi] = src[t * c + g];
-            }
-        }
-    }
-    out
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
+/// Direct (non-im2col) convolution oracles for the differential harness.
+pub mod reference {
+    use super::same_out;
     use crate::tensor::TensorF;
-    use crate::util::rng::Rng;
 
-    /// Naive direct convolution for cross-checking.
-    fn conv_naive(x: &TensorF, w: &[f32], kh: usize, kw: usize, cin: usize, cout: usize, stride: usize) -> TensorF {
+    /// Naive direct SAME convolution over (N, H, W, Cin) with a
+    /// (kh·kw·cin, cout)-flattened weight — the test oracle for the
+    /// im2col + blocked-GEMM lowering.
+    pub fn conv2d(
+        x: &TensorF,
+        w: &[f32],
+        kh: usize,
+        kw: usize,
+        cin: usize,
+        cout: usize,
+        stride: usize,
+    ) -> TensorF {
         let (n, h, wd, _) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
         let oh = same_out(h, stride);
         let ow = same_out(wd, stride);
@@ -117,6 +124,36 @@ mod tests {
         }
         out
     }
+}
+
+/// Gather columns of an im2col matrix by a per-channel index (OCS):
+/// expands the channel dimension inside every (dy, dx) tap.
+pub fn gather_channels<T: Copy + Default>(
+    cols: &Tensor<T>,
+    c: usize,
+    taps: usize,
+    gather: &[usize],
+) -> Tensor<T> {
+    let m = cols.dims()[0];
+    let cg = gather.len();
+    let mut out = Tensor::<T>::zeros(&[m, taps * cg]);
+    for r in 0..m {
+        let src = cols.row(r);
+        let dst = out.row_mut(r);
+        for t in 0..taps {
+            for (gi, &g) in gather.iter().enumerate() {
+                dst[t * cg + gi] = src[t * c + g];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::TensorF;
+    use crate::util::rng::Rng;
 
     #[test]
     fn im2col_matmul_matches_naive_conv() {
@@ -131,7 +168,7 @@ mod tests {
             for v in w.iter_mut() {
                 *v = rng.normal();
             }
-            let want = conv_naive(&x, &w, kh, kh, cin, cout, stride);
+            let want = reference::conv2d(&x, &w, kh, kh, cin, cout, stride);
             let (cols, oh, ow) = im2col(&x, kh, kh, stride);
             let k = kh * kh * cin;
             let mut got = TensorF::zeros(&[n, oh, ow, cout]);
@@ -148,6 +185,24 @@ mod tests {
                 got.allclose(&want, 1e-5, 1e-5),
                 "mismatch h={h} stride={stride} kh={kh}"
             );
+        }
+    }
+
+    #[test]
+    fn im2col_into_overwrites_dirty_buffer() {
+        // a recycled arena buffer full of garbage must come out identical
+        // to the fresh-allocation path, padding included
+        let mut rng = Rng::new(9);
+        for &(h, stride, kh) in &[(7usize, 2usize, 3usize), (8, 1, 3)] {
+            let mut x = TensorF::zeros(&[2, h, h, 3]);
+            for v in x.data.iter_mut() {
+                *v = rng.normal();
+            }
+            let (want, oh, ow) = im2col(&x, kh, kh, stride);
+            let mut dirty = TensorF::full(want.dims(), f32::NAN);
+            let (oh2, ow2) = im2col_into(&x, kh, kh, stride, &mut dirty);
+            assert_eq!((oh, ow), (oh2, ow2));
+            assert_eq!(dirty.data, want.data, "h={h} stride={stride} kh={kh}");
         }
     }
 

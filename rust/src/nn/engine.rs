@@ -1,4 +1,10 @@
 //! The graph executor: fp32 reference path + OverQ hardware path.
+//!
+//! Both paths run through a per-(model, input-shape) [`ExecPlan`] with a
+//! pooled [`Arena`] of recycled buffers; the `_unplanned`
+//! allocate-per-layer variants are kept as differential oracles. The
+//! quant path bit-packs the im2col'd (codes, state) lanes and runs
+//! `overq::dotprod::gemm_overq_packed`; see `docs/runtime.md`.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -12,9 +18,10 @@ use crate::overq::{self, encode_tensor, Encoded, OverQConfig, LSB, MSB, SHIFT};
 use crate::quant::uniform::{quantize_weights_mmse, QuantWeights};
 use crate::tensor::{TensorF, TensorI};
 
-use super::conv::im2col;
+use super::conv::{im2col, im2col_into, same_out};
 use super::gemm::gemm_f32;
 use super::graph::{Graph, Node, Op};
+use super::plan::{Arena, ExecPlan};
 
 /// Weight bitwidth sentinel: use the engine's prepared weights (the
 /// artifact-exported 8-bit codes, or whatever a prior global
@@ -154,6 +161,11 @@ pub struct Engine {
     /// Per-(conv, wbits) quantized-weight cache for plans that pin
     /// explicit weight bitwidths; cleared when OCS rewrites the weights.
     wq_cache: Mutex<HashMap<(usize, u32), Arc<PreparedW>>>,
+    /// Per-input-shape execution plans, computed once and shared.
+    plan_cache: Mutex<HashMap<Vec<usize>, Arc<ExecPlan>>>,
+    /// Idle request arenas — steady-state forwards recycle these instead
+    /// of allocating tensors.
+    arena_pool: Mutex<Vec<Arena>>,
 }
 
 impl Engine {
@@ -246,7 +258,29 @@ impl Engine {
             convs,
             denses,
             wq_cache: Mutex::new(HashMap::new()),
+            plan_cache: Mutex::new(HashMap::new()),
+            arena_pool: Mutex::new(Vec::new()),
         })
+    }
+
+    /// The cached [`ExecPlan`] for this graph at input shape `in_dims`
+    /// (built on first use).
+    pub fn plan_for(&self, in_dims: &[usize]) -> Result<Arc<ExecPlan>> {
+        let mut cache = self.plan_cache.lock().unwrap();
+        if let Some(p) = cache.get(in_dims) {
+            return Ok(p.clone());
+        }
+        let p = Arc::new(ExecPlan::build(&self.graph, in_dims)?);
+        cache.insert(in_dims.to_vec(), p.clone());
+        Ok(p)
+    }
+
+    fn arena_take(&self) -> Arena {
+        self.arena_pool.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn arena_put(&self, arena: Arena) {
+        self.arena_pool.lock().unwrap().push(arena);
     }
 
     /// Apply OCS channel splitting to every quantized conv: duplicate the
@@ -419,7 +453,64 @@ impl Engine {
 
     /// fp32 forward. Returns logits (N, classes); if `taps` is non-empty,
     /// also collects those node outputs (for profiling / Fig. 6b).
+    ///
+    /// Runs through the cached [`ExecPlan`] with a pooled [`Arena`];
+    /// numerically identical to [`Engine::forward_f32_unplanned`] (same
+    /// kernels, same evaluation order — the plan only schedules buffer
+    /// reuse), which `tests/kernel_diff.rs` pins exactly.
     pub fn forward_f32(&self, x: &TensorF, taps: &[usize]) -> Result<(TensorF, Vec<TensorF>)> {
+        let plan = self.plan_for(x.dims())?;
+        let mut arena = self.arena_take();
+        let r = self.forward_f32_planned(x, taps, &plan, &mut arena);
+        self.arena_put(arena);
+        r
+    }
+
+    /// [`Engine::forward_f32`] against an explicit plan + arena (the
+    /// serving path holds its own arena across requests).
+    pub fn forward_f32_planned(
+        &self,
+        x: &TensorF,
+        taps: &[usize],
+        plan: &ExecPlan,
+        arena: &mut Arena,
+    ) -> Result<(TensorF, Vec<TensorF>)> {
+        anyhow::ensure!(plan.in_dims == x.dims(), "plan input shape mismatch");
+        let mut vals: Vec<Option<TensorF>> = vec![None; self.graph.nodes.len()];
+        let mut tap_out: Vec<Option<TensorF>> = vec![None; taps.len()];
+        for (step, &nid) in plan.order.iter().enumerate() {
+            let node = &self.graph.nodes[nid];
+            let out = self.eval_f32_arena(node, &vals, x, arena)?;
+            vals[nid] = Some(out);
+            // snapshot tapped outputs before their buffers can flush
+            for (ti, &t) in taps.iter().enumerate() {
+                if t == nid {
+                    tap_out[ti] = Some(vals[nid].as_ref().unwrap().clone());
+                }
+            }
+            for &dead in &plan.flush[step] {
+                if let Some(t) = vals[dead].take() {
+                    arena.put_f32(t);
+                }
+            }
+        }
+        let logits_id = *plan.order.last().context("empty graph")?;
+        let logits = vals[logits_id].as_ref().context("missing logits")?.clone();
+        for v in vals.iter_mut() {
+            if let Some(t) = v.take() {
+                arena.put_f32(t);
+            }
+        }
+        Ok((logits, tap_out.into_iter().map(|t| t.unwrap()).collect()))
+    }
+
+    /// The original allocate-per-layer fp32 forward, kept as the
+    /// differential oracle for the planned path.
+    pub fn forward_f32_unplanned(
+        &self,
+        x: &TensorF,
+        taps: &[usize],
+    ) -> Result<(TensorF, Vec<TensorF>)> {
         let mut vals: Vec<Option<TensorF>> = vec![None; self.graph.nodes.len()];
         for node in &self.graph.nodes {
             let out = self.eval_f32(node, &vals, x)?;
@@ -436,6 +527,9 @@ impl Engine {
         Ok((logits, tap_out))
     }
 
+    /// One node on the per-layer-allocation path (fresh `TensorF::zeros`
+    /// outputs). Must stay numerically identical to
+    /// [`Engine::eval_f32_arena`] — both call the same `_into` kernels.
     fn eval_f32(&self, node: &Node, vals: &[Option<TensorF>], x: &TensorF) -> Result<TensorF> {
         let input = |i: usize| -> &TensorF { vals[node.inputs[i]].as_ref().unwrap() };
         Ok(match &node.op {
@@ -454,19 +548,29 @@ impl Engine {
             Op::Add { relu } => {
                 let (a, b) = (input(0), input(1));
                 anyhow::ensure!(a.dims() == b.dims(), "add dims");
-                let mut out = a.clone();
-                for (o, &bv) in out.data.iter_mut().zip(&b.data) {
-                    *o += bv;
-                    if *relu && *o < 0.0 {
-                        *o = 0.0;
-                    }
-                }
+                let mut out = TensorF::zeros(a.dims());
+                add_into(a, b, *relu, &mut out);
                 out
             }
-            Op::Concat => concat_channels(&node.inputs.iter().map(|&i| vals[i].as_ref().unwrap()).collect::<Vec<_>>()),
-            Op::MaxPool => pool2(input(0), true),
-            Op::AvgPool => pool2(input(0), false),
-            Op::Gap => gap(input(0)),
+            Op::Concat => {
+                let inputs: Vec<&TensorF> =
+                    node.inputs.iter().map(|&i| vals[i].as_ref().unwrap()).collect();
+                let mut out = TensorF::zeros(&concat_dims(&inputs));
+                concat_into(&inputs, &mut out);
+                out
+            }
+            Op::MaxPool | Op::AvgPool => {
+                let src = input(0);
+                let mut out = TensorF::zeros(&pool2_dims(src));
+                pool2_into(src, matches!(node.op, Op::MaxPool), &mut out);
+                out
+            }
+            Op::Gap => {
+                let src = input(0);
+                let mut out = TensorF::zeros(&[src.dims()[0], src.dims()[3]]);
+                gap_into(src, &mut out);
+                out
+            }
             Op::Dense { .. } => {
                 let pd = &self.denses[&node.id];
                 let src = input(0);
@@ -479,105 +583,264 @@ impl Engine {
         })
     }
 
-    /// OverQ hardware-path forward: encode at enc points, integer GEMM,
-    /// dequant. Bit-exact (codes/states) with the AOT JAX model.
+    /// One node on the arena path: identical kernels and evaluation
+    /// order to [`Engine::eval_f32`], only the output storage comes from
+    /// (and the im2col scratch returns to) the arena.
+    fn eval_f32_arena(
+        &self,
+        node: &Node,
+        vals: &[Option<TensorF>],
+        x: &TensorF,
+        arena: &mut Arena,
+    ) -> Result<TensorF> {
+        Ok(match &node.op {
+            Op::Input => {
+                let mut out = arena.take_f32(x.dims());
+                out.data.copy_from_slice(&x.data);
+                out
+            }
+            Op::Conv { relu, .. } => {
+                let pc = &self.convs[&node.id];
+                let src = vals[node.inputs[0]].as_ref().unwrap();
+                let (n, h, w, c) = (src.dims()[0], src.dims()[1], src.dims()[2], src.dims()[3]);
+                let (oh, ow) = (same_out(h, pc.stride), same_out(w, pc.stride));
+                let m = n * oh * ow;
+                let mut cols = arena.take_f32(&[m, pc.kh * pc.kw * c]);
+                im2col_into(src, pc.kh, pc.kw, pc.stride, &mut cols);
+                let mut out = arena.take_f32(&[m, pc.cout]);
+                gemm_f32(&cols, &pc.wf, &mut out);
+                arena.put_f32(cols);
+                add_bias_relu(&mut out, &pc.bias, *relu);
+                out.reshape(&[n, oh, ow, pc.cout])
+            }
+            Op::Add { relu } => {
+                let (a, b) = (
+                    vals[node.inputs[0]].as_ref().unwrap(),
+                    vals[node.inputs[1]].as_ref().unwrap(),
+                );
+                anyhow::ensure!(a.dims() == b.dims(), "add dims");
+                let mut out = arena.take_f32(a.dims());
+                add_into(a, b, *relu, &mut out);
+                out
+            }
+            Op::Concat => {
+                let inputs: Vec<&TensorF> =
+                    node.inputs.iter().map(|&i| vals[i].as_ref().unwrap()).collect();
+                let mut out = arena.take_f32(&concat_dims(&inputs));
+                concat_into(&inputs, &mut out);
+                out
+            }
+            Op::MaxPool | Op::AvgPool => {
+                let src = vals[node.inputs[0]].as_ref().unwrap();
+                let mut out = arena.take_f32(&pool2_dims(src));
+                pool2_into(src, matches!(node.op, Op::MaxPool), &mut out);
+                out
+            }
+            Op::Gap => {
+                let src = vals[node.inputs[0]].as_ref().unwrap();
+                let mut out = arena.take_f32(&[src.dims()[0], src.dims()[3]]);
+                gap_into(src, &mut out);
+                out
+            }
+            Op::Dense { .. } => {
+                let pd = &self.denses[&node.id];
+                let src = vals[node.inputs[0]].as_ref().unwrap();
+                let m = src.dims()[0];
+                let mut out = arena.take_f32(&[m, pd.w.dims()[1]]);
+                gemm_f32(src, &pd.w, &mut out);
+                add_bias_relu(&mut out, &pd.bias, false);
+                out
+            }
+        })
+    }
+
+    /// OverQ hardware-path forward: encode at enc points, bit-pack, run
+    /// the packed integer GEMM, dequant. Bit-exact (codes/states) with
+    /// the AOT JAX model.
+    ///
+    /// Planned + arena-pooled by default; logits are bit-identical to
+    /// [`Engine::forward_quant_unplanned`] (same kernels either way —
+    /// `tests/kernel_diff.rs` pins the equality).
     pub fn forward_quant(&self, x: &TensorF, qc: &QuantConfig) -> Result<TensorF> {
+        let plan = self.plan_for(x.dims())?;
+        let mut arena = self.arena_take();
+        let r = self.forward_quant_planned(x, qc, &plan, &mut arena);
+        self.arena_put(arena);
+        r
+    }
+
+    /// [`Engine::forward_quant`] against an explicit plan + arena.
+    pub fn forward_quant_planned(
+        &self,
+        x: &TensorF,
+        qc: &QuantConfig,
+        plan: &ExecPlan,
+        arena: &mut Arena,
+    ) -> Result<TensorF> {
         anyhow::ensure!(
             qc.layers.len() >= self.graph.num_enc_points(),
             "need {} enc-point configs, got {}",
             self.graph.num_enc_points(),
             qc.layers.len()
         );
+        anyhow::ensure!(plan.in_dims == x.dims(), "plan input shape mismatch");
+        let mut vals: Vec<Option<TensorF>> = vec![None; self.graph.nodes.len()];
+        let mut encoded: HashMap<usize, Encoded> = HashMap::new();
+        for (step, &nid) in plan.order.iter().enumerate() {
+            let node = &self.graph.nodes[nid];
+            let out = match &node.op {
+                Op::Conv { relu, quant: true, enc, .. } => {
+                    self.eval_conv_quant(node, *relu, enc, &vals, qc, &mut encoded, arena)?
+                }
+                _ => self.eval_f32_arena(node, &vals, x, arena)?,
+            };
+            vals[nid] = Some(out);
+            for &dead in &plan.flush[step] {
+                if let Some(t) = vals[dead].take() {
+                    arena.put_f32(t);
+                }
+            }
+        }
+        let logits_id = *plan.order.last().context("empty graph")?;
+        let logits = vals[logits_id].as_ref().context("missing logits")?.clone();
+        for v in vals.iter_mut() {
+            if let Some(t) = v.take() {
+                arena.put_f32(t);
+            }
+        }
+        Ok(logits)
+    }
+
+    /// The original allocate-per-layer quant forward — the differential
+    /// oracle for the planned path (one throwaway arena per call, so the
+    /// conv kernels themselves are shared and identical).
+    pub fn forward_quant_unplanned(&self, x: &TensorF, qc: &QuantConfig) -> Result<TensorF> {
+        anyhow::ensure!(
+            qc.layers.len() >= self.graph.num_enc_points(),
+            "need {} enc-point configs, got {}",
+            self.graph.num_enc_points(),
+            qc.layers.len()
+        );
+        let mut arena = Arena::new();
         let mut vals: Vec<Option<TensorF>> = vec![None; self.graph.nodes.len()];
         let mut encoded: HashMap<usize, Encoded> = HashMap::new();
         for node in &self.graph.nodes {
             let out = match &node.op {
                 Op::Conv { relu, quant: true, enc, .. } => {
-                    let pc = &self.convs[&node.id];
-                    let e = enc.context("quant conv without enc")?;
-                    let d = format!("node={} enc={e}", node.id);
-                    let _layer = span::here("execute.layer", d);
-                    let src = vals[node.inputs[0]].as_ref().unwrap();
-                    let n = src.dims()[0];
-                    let lq = qc.layers[e];
-                    let scale = lq.scale;
-                    let (ccols, scols, oh, ow, kdim) = if let Some(gather) = &pc.gather {
-                        // OCS: expand channels on the raw tensor, then
-                        // encode the expanded stream (hardware sees the
-                        // duplicated channels as real channels).
-                        let exp = expand_channels(src, gather);
-                        let encx = {
-                            let _s = span::here("encode", format!("enc={e} ocs=1"));
-                            encode_tensor(&exp, scale, &lq.overq)
-                        };
-                        if counters::active() {
-                            counters::record(e, &observe_encode(&exp, &encx, &lq.overq));
-                        }
-                        let (cc, oh, ow) = im2col(&encx.codes, pc.kh, pc.kw, pc.stride);
-                        let (sc, _, _) = im2col(&encx.state, pc.kh, pc.kw, pc.stride);
-                        let k = pc.kh * pc.kw * gather.len();
-                        (cc, sc, oh, ow, k)
-                    } else {
-                        let encx = encoded.entry(e).or_insert_with(|| {
-                            let _s = span::here("encode", format!("enc={e} ocs=0"));
-                            let encx = encode_tensor(src, scale, &lq.overq);
-                            if counters::active() {
-                                counters::record(e, &observe_encode(src, &encx, &lq.overq));
-                            }
-                            encx
-                        });
-                        let (cc, oh, ow) = im2col(&encx.codes, pc.kh, pc.kw, pc.stride);
-                        let (sc, _, _) = im2col(&encx.state, pc.kh, pc.kw, pc.stride);
-                        (cc, sc, oh, ow, pc.kh * pc.kw * pc.cin)
-                    };
-                    if counters::active() {
-                        counters::record_mac_slots(e, overq::dotprod::slot_histogram(&scols));
-                    }
-                    let m = n * oh * ow;
-                    let prepared = if lq.wbits != WBITS_DEFAULT {
-                        Some(self.prepared_weights(node.id, pc, lq.wbits)?)
-                    } else {
-                        None
-                    };
-                    let (qw, wroll) = match &prepared {
-                        Some(p) => (&p.qw, &p.wroll),
-                        None => (
-                            pc.qw.as_ref().context("quant conv missing qweights")?,
-                            pc.wroll.as_ref().unwrap(),
-                        ),
-                    };
-                    anyhow::ensure!(qw.codes.dims()[0] == kdim, "n{} K mismatch", node.id);
-                    let mut acc = TensorI::zeros(&[m, pc.cout]);
-                    overq::dotprod::gemm_overq(
-                        &ccols.reshape(&[m, kdim]),
-                        &scols.reshape(&[m, kdim]),
-                        &qw.codes,
-                        wroll,
-                        &lq.overq,
-                        &mut acc,
-                    );
-                    // dequant: acc * act_scale * w_scale / B + bias (+relu)
-                    let inv_b = 1.0f32 / lq.overq.b() as f32;
-                    let mut out = TensorF::zeros(&[m, pc.cout]);
-                    for i in 0..m {
-                        let arow = &acc.data[i * pc.cout..(i + 1) * pc.cout];
-                        let orow = &mut out.data[i * pc.cout..(i + 1) * pc.cout];
-                        for j in 0..pc.cout {
-                            let mut v =
-                                arow[j] as f32 * (scale * qw.scales[j] * inv_b) + pc.bias[j];
-                            if *relu && v < 0.0 {
-                                v = 0.0;
-                            }
-                            orow[j] = v;
-                        }
-                    }
-                    out.reshape(&[n, oh, ow, pc.cout])
+                    self.eval_conv_quant(node, *relu, enc, &vals, qc, &mut encoded, &mut arena)?
                 }
                 _ => self.eval_f32(node, &vals, x)?,
             };
             vals[node.id] = Some(out);
         }
         vals.last().and_then(|v| v.clone()).context("empty graph")
+    }
+
+    /// One quantized conv: encode (cached per enc point), im2col the
+    /// (codes, state) lanes, bit-pack, packed OverQ GEMM, dequant.
+    /// Shared by the planned and unplanned paths, so their numerics are
+    /// identical by construction; spans and counters fire exactly as the
+    /// pre-plan engine did (`execute.layer` per conv, `encode` per
+    /// encode, enc/mac-slot counters when a registry is pinned).
+    fn eval_conv_quant(
+        &self,
+        node: &Node,
+        relu: bool,
+        enc: &Option<usize>,
+        vals: &[Option<TensorF>],
+        qc: &QuantConfig,
+        encoded: &mut HashMap<usize, Encoded>,
+        arena: &mut Arena,
+    ) -> Result<TensorF> {
+        let pc = &self.convs[&node.id];
+        let e = enc.context("quant conv without enc")?;
+        let d = format!("node={} enc={e}", node.id);
+        let _layer = span::here("execute.layer", d);
+        let src = vals[node.inputs[0]].as_ref().unwrap();
+        let (n, h, w) = (src.dims()[0], src.dims()[1], src.dims()[2]);
+        let (oh, ow) = (same_out(h, pc.stride), same_out(w, pc.stride));
+        let m = n * oh * ow;
+        let lq = qc.layers[e];
+        let scale = lq.scale;
+        let kdim = pc.kh * pc.kw * pc.gather.as_ref().map(|g| g.len()).unwrap_or(pc.cin);
+        let mut ccols = arena.take_i32(&[m, kdim]);
+        let mut scols = arena.take_u8(&[m, kdim]);
+        if let Some(gather) = &pc.gather {
+            // OCS: expand channels on the raw tensor, then encode the
+            // expanded stream (hardware sees the duplicated channels as
+            // real channels).
+            let exp = expand_channels(src, gather);
+            let encx = {
+                let _s = span::here("encode", format!("enc={e} ocs=1"));
+                encode_tensor(&exp, scale, &lq.overq)
+            };
+            if counters::active() {
+                counters::record(e, &observe_encode(&exp, &encx, &lq.overq));
+            }
+            im2col_into(&encx.codes, pc.kh, pc.kw, pc.stride, &mut ccols);
+            im2col_into(&encx.state, pc.kh, pc.kw, pc.stride, &mut scols);
+        } else {
+            let encx = encoded.entry(e).or_insert_with(|| {
+                let _s = span::here("encode", format!("enc={e} ocs=0"));
+                let encx = encode_tensor(src, scale, &lq.overq);
+                if counters::active() {
+                    counters::record(e, &observe_encode(src, &encx, &lq.overq));
+                }
+                encx
+            });
+            im2col_into(&encx.codes, pc.kh, pc.kw, pc.stride, &mut ccols);
+            im2col_into(&encx.state, pc.kh, pc.kw, pc.stride, &mut scols);
+        }
+        // bit-pack the im2col'd lanes into the u64 wire format
+        let bits = lq.overq.bits;
+        let words = {
+            let mut words = arena.take_u64(overq::encode::packed_len(m, kdim, bits));
+            overq::encode::pack_slots_into(&ccols.data, &scols.data, m, kdim, bits, &mut words);
+            words
+        };
+        let packed = overq::encode::PackedSlots {
+            words,
+            rows: m,
+            cols: kdim,
+            bits,
+        };
+        if counters::active() {
+            counters::record_mac_slots(e, overq::dotprod::slot_histogram_packed(&packed));
+        }
+        let prepared = if lq.wbits != WBITS_DEFAULT {
+            Some(self.prepared_weights(node.id, pc, lq.wbits)?)
+        } else {
+            None
+        };
+        let (qw, wroll) = match &prepared {
+            Some(p) => (&p.qw, &p.wroll),
+            None => (
+                pc.qw.as_ref().context("quant conv missing qweights")?,
+                pc.wroll.as_ref().unwrap(),
+            ),
+        };
+        anyhow::ensure!(qw.codes.dims()[0] == kdim, "n{} K mismatch", node.id);
+        let mut acc = arena.take_i32(&[m, pc.cout]);
+        overq::dotprod::gemm_overq_packed(&packed, &qw.codes, wroll, &lq.overq, &mut acc);
+        // dequant: acc * act_scale * w_scale / B + bias (+relu)
+        let inv_b = 1.0f32 / lq.overq.b() as f32;
+        let mut out = arena.take_f32(&[m, pc.cout]);
+        for i in 0..m {
+            let arow = &acc.data[i * pc.cout..(i + 1) * pc.cout];
+            let orow = &mut out.data[i * pc.cout..(i + 1) * pc.cout];
+            for j in 0..pc.cout {
+                let mut v = arow[j] as f32 * (scale * qw.scales[j] * inv_b) + pc.bias[j];
+                if relu && v < 0.0 {
+                    v = 0.0;
+                }
+                orow[j] = v;
+            }
+        }
+        arena.put_i32(ccols);
+        arena.put_u8(scols);
+        arena.put_u64(packed.words);
+        arena.put_i32(acc);
+        Ok(out.reshape(&[n, oh, ow, pc.cout]))
     }
 
     /// Classification accuracy over a labeled batch (fp32 path).
@@ -648,14 +911,30 @@ fn add_bias_relu(out: &mut TensorF, bias: &[f32], relu: bool) {
     }
 }
 
-fn concat_channels(inputs: &[&TensorF]) -> TensorF {
+/// `out = a + b` (optionally ReLU-clamped), written fully — safe for
+/// recycled buffers.
+fn add_into(a: &TensorF, b: &TensorF, relu: bool, out: &mut TensorF) {
+    for ((o, &av), &bv) in out.data.iter_mut().zip(&a.data).zip(&b.data) {
+        let mut v = av + bv;
+        if relu && v < 0.0 {
+            v = 0.0;
+        }
+        *o = v;
+    }
+}
+
+fn concat_dims(inputs: &[&TensorF]) -> Vec<usize> {
+    let d = inputs[0].dims();
+    let ctotal: usize = inputs.iter().map(|t| t.dims()[3]).sum();
+    vec![d[0], d[1], d[2], ctotal]
+}
+
+fn concat_into(inputs: &[&TensorF], out: &mut TensorF) {
     let (n, h, w) = (
         inputs[0].dims()[0],
         inputs[0].dims()[1],
         inputs[0].dims()[2],
     );
-    let ctotal: usize = inputs.iter().map(|t| t.dims()[3]).sum();
-    let mut out = TensorF::zeros(&[n, h, w, ctotal]);
     let rows = n * h * w;
     for r in 0..rows {
         let dst = out.row_mut(r);
@@ -666,13 +945,16 @@ fn concat_channels(inputs: &[&TensorF]) -> TensorF {
             off += c;
         }
     }
-    out
 }
 
-fn pool2(x: &TensorF, is_max: bool) -> TensorF {
+fn pool2_dims(x: &TensorF) -> Vec<usize> {
+    let d = x.dims();
+    vec![d[0], d[1] / 2, d[2] / 2, d[3]]
+}
+
+fn pool2_into(x: &TensorF, is_max: bool, out: &mut TensorF) {
     let (n, h, w, c) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
     let (oh, ow) = (h / 2, w / 2);
-    let mut out = TensorF::zeros(&[n, oh, ow, c]);
     for img in 0..n {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -692,12 +974,11 @@ fn pool2(x: &TensorF, is_max: bool) -> TensorF {
             }
         }
     }
-    out
 }
 
-fn gap(x: &TensorF) -> TensorF {
+fn gap_into(x: &TensorF, out: &mut TensorF) {
     let (n, h, w, c) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
-    let mut out = TensorF::zeros(&[n, c]);
+    out.data.fill(0.0);
     for img in 0..n {
         for y in 0..h {
             for xx in 0..w {
@@ -710,7 +991,6 @@ fn gap(x: &TensorF) -> TensorF {
             out.data[img * c + ch] /= (h * w) as f32;
         }
     }
-    out
 }
 
 /// Reconstruct what the encoder saw at one enc point: zero/outlier
@@ -1116,6 +1396,27 @@ mod tests {
         let reg2 = Registry::new();
         e.forward_quant(&x, &qc).unwrap();
         assert!(reg2.snapshot().is_empty());
+    }
+
+    #[test]
+    fn planned_matches_unplanned_exactly() {
+        let e = toy_engine(true);
+        let x = rand_input(11, 3);
+        let (f1, t1) = e.forward_f32(&x, &[1, 2]).unwrap();
+        let (f2, t2) = e.forward_f32_unplanned(&x, &[1, 2]).unwrap();
+        assert_eq!(f1.data, f2.data, "planned f32 logits diverged");
+        for (a, b) in t1.iter().zip(&t2) {
+            assert_eq!(a.data, b.data, "planned f32 taps diverged");
+        }
+        let scale = t1[0].max_abs() / 15.0;
+        let qc = QuantConfig::uniform(OverQConfig::full(4, 3), vec![scale]);
+        let q1 = e.forward_quant(&x, &qc).unwrap();
+        let q2 = e.forward_quant_unplanned(&x, &qc).unwrap();
+        assert_eq!(q1.data, q2.data, "planned quant logits diverged");
+        // a second planned run reuses the pooled arena and plan cache —
+        // recycled buffers must not leak state into the result
+        assert_eq!(e.forward_quant(&x, &qc).unwrap().data, q1.data);
+        assert_eq!(e.forward_f32(&x, &[]).unwrap().0.data, f1.data);
     }
 
     #[test]

@@ -1,28 +1,155 @@
 //! f32 GEMM for the fp32 path (convs via im2col, the final dense layer).
 //!
-//! Row-major `out(M,N) = A(M,K) · W(K,N)`, i-k-j loop order so the inner
-//! loop is a contiguous axpy over W rows (auto-vectorizes well), with a
-//! zero-skip on A that exploits ReLU sparsity.
+//! `out += A(M,K) · W(K,N)` (row-major) as a cache-blocked, packed-panel
+//! kernel parallelized over row blocks with [`crate::util::threadpool`]:
+//!
+//! * `W` is packed once per call into column panels of [`NR`] columns,
+//!   laid out `[panel][k][NR]` and zero-padded, so the microkernel reads
+//!   one contiguous `NR`-wide stripe per k step.
+//! * Each `MC`-row block packs `A` into [`MR`]-row micro-panels laid out
+//!   `[panel][k][MR]` at full k depth, so the microkernel reads one
+//!   contiguous `MR`-wide stripe per k step.
+//! * The [`microkernel`] holds an `MR × NR` accumulator tile in registers
+//!   across the **entire** k dimension — the classic GotoBLAS/BLIS shape
+//!   — and the fixed tile bounds let the compiler fully unroll and
+//!   vectorize it. Summing all of k in one register tile (no partial
+//!   writebacks) is what makes the result **bit-identical to
+//!   [`reference::gemm_f32`]** on zero-initialized outputs: both are the
+//!   same ascending-k running sum, so every intermediate rounding step
+//!   matches.
+//! * Row blocks write disjoint `out` ranges, so threads never share a
+//!   cache line, and the k order never depends on the thread count —
+//!   results are **bit-identical across 1..N threads**. The differential
+//!   harness in `rust/tests/kernel_diff.rs` pins both properties.
+//!
+//! The old scalar i-k-j kernel is kept verbatim in [`reference`] as the
+//! test oracle; see `docs/runtime.md` for the blocking scheme and the
+//! measured speedups (BENCH_runtime.json).
 
 use crate::tensor::TensorF;
+use crate::util::threadpool;
+
+/// Microkernel tile rows (micro-panel height of packed A).
+pub const MR: usize = 6;
+/// Microkernel tile columns (panel width of packed W).
+pub const NR: usize = 8;
+/// Rows per parallel block (one unit of thread work; multiple of MR).
+pub const MC: usize = 96;
+
+/// Below this many multiply-adds the scoped-thread spawn cost dominates
+/// and [`gemm_f32`] stays sequential.
+const PAR_MIN_MACS: usize = 1 << 18;
 
 /// out += A @ W. `out` must be zeroed by the caller if accumulation
-/// isn't wanted.
+/// isn't wanted. Parallelizes over row blocks when the problem is large
+/// enough to amortize thread spawn ([`crate::util::threadpool::configured_threads`]
+/// workers); numerics do not depend on the thread count.
 pub fn gemm_f32(a: &TensorF, w: &TensorF, out: &mut TensorF) {
+    let macs = a.numel().saturating_mul(w.dims()[1]);
+    let threads = if macs < PAR_MIN_MACS {
+        1
+    } else {
+        threadpool::configured_threads()
+    };
+    gemm_f32_threads(a, w, out, threads);
+}
+
+/// [`gemm_f32`] with an explicit worker count (1 = sequential). The
+/// result is bit-identical for every `threads` value.
+pub fn gemm_f32_threads(a: &TensorF, w: &TensorF, out: &mut TensorF, threads: usize) {
     let (m, k) = (a.dims()[0], a.dims()[1]);
     let n = w.dims()[1];
     assert_eq!(w.dims()[0], k, "inner dims");
     assert_eq!(out.dims(), &[m, n]);
-    for i in 0..m {
-        let arow = &a.data[i * k..(i + 1) * k];
-        let orow = &mut out.data[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue; // ReLU sparsity
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    // pack W once: [jp][kk][NR], zero-padded to a full NR columns
+    let npan = n.div_ceil(NR);
+    let mut bpack = vec![0f32; npan * k * NR];
+    for jp in 0..npan {
+        let jn = (n - jp * NR).min(NR);
+        for kk in 0..k {
+            let dst = &mut bpack[(jp * k + kk) * NR..(jp * k + kk) * NR + jn];
+            dst.copy_from_slice(&w.data[kk * n + jp * NR..kk * n + jp * NR + jn]);
+        }
+    }
+    let a_data = &a.data[..];
+    let bpack = &bpack[..];
+    threadpool::parallel_chunks_mut(&mut out.data, MC * n, threads, |bi, ochunk| {
+        let i0 = bi * MC;
+        let mc = (m - i0).min(MC);
+        let mpan = mc.div_ceil(MR);
+        // pack the whole MC × K block once: [ip][kk][MR], edge rows
+        // zero-padded (the vec init covers them)
+        let mut apack = vec![0f32; mpan * k * MR];
+        for ip in 0..mpan {
+            let rows = (mc - ip * MR).min(MR);
+            let panel = &mut apack[ip * k * MR..(ip + 1) * k * MR];
+            for kk in 0..k {
+                for r in 0..rows {
+                    panel[kk * MR + r] = a_data[(i0 + ip * MR + r) * k + kk];
+                }
             }
-            let wrow = &w.data[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                orow[j] += av * wrow[j];
+        }
+        for jp in 0..npan {
+            let jn = (n - jp * NR).min(NR);
+            let bp = &bpack[jp * k * NR..(jp + 1) * k * NR];
+            for ip in 0..mpan {
+                let ap = &apack[ip * k * MR..(ip + 1) * k * MR];
+                let acc = microkernel(ap, bp);
+                // masked writeback of the valid MR × NR corner
+                let rows = (mc - ip * MR).min(MR);
+                for (r, arow) in acc.iter().enumerate().take(rows) {
+                    let base = (ip * MR + r) * n + jp * NR;
+                    for (o, &v) in ochunk[base..base + jn].iter_mut().zip(arow) {
+                        *o += v;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// The MR×NR register tile: `acc[r][q] += ap[kk][r] * bp[kk][q]` over the
+/// packed micro-panels. Fixed bounds so the two inner loops unroll.
+#[inline]
+fn microkernel(ap: &[f32], bp: &[f32]) -> [[f32; NR]; MR] {
+    let mut acc = [[0f32; NR]; MR];
+    for (a, b) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        for r in 0..MR {
+            let ar = a[r];
+            for q in 0..NR {
+                acc[r][q] += ar * b[q];
+            }
+        }
+    }
+    acc
+}
+
+/// The original scalar kernel, kept as the differential-test oracle.
+pub mod reference {
+    use crate::tensor::TensorF;
+
+    /// out += A @ W, i-k-j loop order: the inner loop is a contiguous
+    /// axpy over W rows, with a zero-skip on A that exploits ReLU
+    /// sparsity. Single-threaded by construction.
+    pub fn gemm_f32(a: &TensorF, w: &TensorF, out: &mut TensorF) {
+        let (m, k) = (a.dims()[0], a.dims()[1]);
+        let n = w.dims()[1];
+        assert_eq!(w.dims()[0], k, "inner dims");
+        assert_eq!(out.dims(), &[m, n]);
+        for i in 0..m {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue; // ReLU sparsity
+                }
+                let wrow = &w.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * wrow[j];
+                }
             }
         }
     }
@@ -55,5 +182,50 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn prop_blocked_matches_reference_bitexact() {
+        // same k summation order => identical rounding; the fuller shape
+        // matrix (block-edge shapes, 1..8 threads) lives in
+        // tests/kernel_diff.rs
+        check("blocked == scalar reference", 40, |rng: &mut Rng| {
+            let (m, k, n) = (1 + rng.index(40), 1 + rng.index(70), 1 + rng.index(20));
+            let mut a = TensorF::zeros(&[m, k]);
+            let mut w = TensorF::zeros(&[k, n]);
+            for v in a.data.iter_mut() {
+                *v = if rng.bool(0.4) { 0.0 } else { rng.normal() };
+            }
+            for v in w.data.iter_mut() {
+                *v = rng.normal();
+            }
+            let mut want = TensorF::zeros(&[m, n]);
+            reference::gemm_f32(&a, &w, &mut want);
+            for threads in [1usize, 3] {
+                let mut got = TensorF::zeros(&[m, n]);
+                gemm_f32_threads(&a, &w, &mut got, threads);
+                assert_eq!(got.data, want.data, "threads={threads} m={m} k={k} n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn accumulates_into_out() {
+        let a = TensorF::from_vec(&[1, 2], vec![1.0, 2.0]);
+        let w = TensorF::from_vec(&[2, 1], vec![3.0, 4.0]);
+        let mut out = TensorF::from_vec(&[1, 1], vec![100.0]);
+        gemm_f32(&a, &w, &mut out);
+        assert_eq!(out.data, vec![111.0]);
+    }
+
+    #[test]
+    fn empty_shapes_are_noops() {
+        for (m, k, n) in [(0usize, 4usize, 4usize), (4, 0, 4), (4, 4, 0)] {
+            let a = TensorF::zeros(&[m, k]);
+            let w = TensorF::zeros(&[k, n]);
+            let mut out = TensorF::zeros(&[m, n]);
+            gemm_f32_threads(&a, &w, &mut out, 4);
+            assert!(out.data.iter().all(|&v| v == 0.0));
+        }
     }
 }

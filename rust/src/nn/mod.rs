@@ -3,19 +3,28 @@
 //!
 //! Two execution paths over the same graph:
 //! * **fp32** — folded conv+bias forward (reference accuracy, activation
-//!   profiling taps).
+//!   profiling taps) lowered to im2col + the blocked-parallel
+//!   [`gemm::gemm_f32`].
 //! * **quant** — the hardware path: OverQ-encode each enc-point tensor,
-//!   im2col the (codes, state) planes, run the OverQ integer GEMM
-//!   (`overq::dotprod::gemm_overq`, numerically identical to the Pallas
+//!   im2col the (codes, state) planes, bit-pack them
+//!   ([`crate::overq::encode::PackedSlots`]), run the packed OverQ
+//!   integer GEMM (`overq::dotprod::gemm_overq_packed`, bit-identical to
+//!   the value-at-a-time kernel and numerically identical to the Pallas
 //!   kernel), dequantize, bias, ReLU.
 //!
-//! Codes and states are bit-exact with the JAX path (verified against
-//! dumped test vectors in `tests/integration_crosslang.rs`).
+//! Both run through a precomputed [`plan::ExecPlan`] with a recycled
+//! [`plan::Arena`] by default; `forward_*_unplanned` keep the
+//! allocate-per-layer originals as differential oracles (see
+//! `docs/runtime.md`). Codes and states are bit-exact with the JAX path
+//! (verified against dumped test vectors in
+//! `tests/integration_crosslang.rs`).
 
 pub mod conv;
 pub mod engine;
 pub mod gemm;
 pub mod graph;
+pub mod plan;
 
 pub use engine::{AffineBounds, Engine, LayerQuant, QuantConfig, WBITS_DEFAULT};
 pub use graph::{Graph, Node, Op};
+pub use plan::{Arena, ExecPlan};

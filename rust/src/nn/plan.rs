@@ -1,0 +1,359 @@
+//! Precomputed execution plan + reusable buffer arena for the native
+//! engine — the tract-style "plan once, run many" split.
+//!
+//! [`ExecPlan::build`] walks a graph once per (model, input-shape) pair
+//! and records everything the per-request loop would otherwise recompute:
+//! the topological step order, every node's output shape, and per-step
+//! *flush lists* — the nodes whose buffers die after that step (their
+//! last reader just ran) and can go back to the [`Arena`].
+//!
+//! The [`Arena`] is a per-request pool of typed buffers (f32 / i32 / u8
+//! slot-state / u64 packed-word). Buffers are recycled best-fit by
+//! capacity and zero-filled on take, so kernels keep their "caller
+//! zeroes the output" contract; `peak_bytes` tracks the high-water mark,
+//! which the plan tests bound by [`ExecPlan::naive_bytes`] (what
+//! per-layer allocation would have touched). Engines keep a pool of
+//! arenas, so steady-state serving does no tensor allocation at all.
+//! See `docs/runtime.md` for the lifecycle diagram.
+
+use anyhow::{ensure, Result};
+
+use crate::tensor::{Tensor, TensorF, TensorI};
+
+use super::conv::same_out;
+use super::graph::{Graph, Op};
+
+/// One model × input-shape execution schedule.
+#[derive(Clone, Debug)]
+pub struct ExecPlan {
+    /// Input dims (N, H, W, C) this plan was built for.
+    pub in_dims: Vec<usize>,
+    /// Node ids in execution order. Graphs are dense SSA, so Kahn's
+    /// algorithm with a min-id tie-break yields the identity order —
+    /// preserving the span/counter emission order of the unplanned path.
+    pub order: Vec<usize>,
+    /// `flush[step]` = node ids whose output buffer is dead once the
+    /// node at `step` has run (its last reader). The logits node is
+    /// never flushed; readerless interior nodes flush at their own step.
+    pub flush: Vec<Vec<usize>>,
+    /// Inferred output dims per node id.
+    pub dims: Vec<Vec<usize>>,
+    /// f32 bytes the unplanned per-layer-allocation path touches for one
+    /// request: every node output plus every conv's im2col matrix. The
+    /// arena's `peak_bytes` must stay at or below this.
+    pub naive_bytes: usize,
+}
+
+impl ExecPlan {
+    /// Build the schedule for `graph` at input shape `in_dims` (N,H,W,C).
+    pub fn build(graph: &Graph, in_dims: &[usize]) -> Result<ExecPlan> {
+        let nn = graph.nodes.len();
+        ensure!(nn > 0, "empty graph");
+        ensure!(in_dims.len() == 4, "input must be (N, H, W, C)");
+        let mut indeg = vec![0usize; nn];
+        let mut readers: Vec<Vec<usize>> = vec![Vec::new(); nn];
+        for node in &graph.nodes {
+            indeg[node.id] = node.inputs.len();
+            for &s in &node.inputs {
+                readers[s].push(node.id); // multiplicity kept (Add x+x)
+            }
+        }
+        let mut ready: Vec<usize> = (0..nn).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(nn);
+        while !ready.is_empty() {
+            let nid = ready.remove(0); // smallest ready id
+            order.push(nid);
+            for &r in &readers[nid] {
+                indeg[r] -= 1;
+                if indeg[r] == 0 {
+                    let pos = ready.partition_point(|&x| x < r);
+                    ready.insert(pos, r);
+                }
+            }
+        }
+        ensure!(order.len() == nn, "graph has a cycle");
+
+        // shape inference along the order
+        let mut dims: Vec<Vec<usize>> = vec![Vec::new(); nn];
+        for &nid in &order {
+            let node = &graph.nodes[nid];
+            let d = match &node.op {
+                Op::Input => in_dims.to_vec(),
+                Op::Conv { stride, cout, .. } => {
+                    let s = &dims[node.inputs[0]];
+                    ensure!(s.len() == 4, "conv input rank");
+                    vec![s[0], same_out(s[1], *stride), same_out(s[2], *stride), *cout]
+                }
+                Op::Add { .. } => {
+                    let (a, b) = (&dims[node.inputs[0]], &dims[node.inputs[1]]);
+                    ensure!(a == b, "add operand dims");
+                    a.clone()
+                }
+                Op::Concat => {
+                    let s0 = &dims[node.inputs[0]];
+                    ensure!(s0.len() == 4, "concat input rank");
+                    let c = node.inputs.iter().map(|&i| dims[i][3]).sum();
+                    vec![s0[0], s0[1], s0[2], c]
+                }
+                Op::MaxPool | Op::AvgPool => {
+                    let s = &dims[node.inputs[0]];
+                    ensure!(s.len() == 4, "pool input rank");
+                    vec![s[0], s[1] / 2, s[2] / 2, s[3]]
+                }
+                Op::Gap => {
+                    let s = &dims[node.inputs[0]];
+                    vec![s[0], *s.last().unwrap()]
+                }
+                Op::Dense { cout, .. } => vec![dims[node.inputs[0]][0], *cout],
+            };
+            dims[nid] = d;
+        }
+
+        // flush lists: each buffer dies at its last reader's step
+        let mut step_of = vec![0usize; nn];
+        for (s, &nid) in order.iter().enumerate() {
+            step_of[nid] = s;
+        }
+        let logits = *order.last().unwrap();
+        let mut flush: Vec<Vec<usize>> = vec![Vec::new(); nn];
+        for v in 0..nn {
+            if v == logits {
+                continue; // the result must outlive the plan run
+            }
+            let fs = readers[v]
+                .iter()
+                .map(|&r| step_of[r])
+                .max()
+                .unwrap_or(step_of[v]);
+            flush[fs].push(v);
+        }
+
+        // what the per-layer-allocation path would touch (f32 path)
+        let mut naive = 0usize;
+        for node in &graph.nodes {
+            naive += dims[node.id].iter().product::<usize>();
+            if let Op::Conv { kh, kw, cin, .. } = &node.op {
+                let d = &dims[node.id];
+                naive += d[0] * d[1] * d[2] * kh * kw * cin;
+            }
+        }
+        let naive_bytes = naive * std::mem::size_of::<f32>();
+
+        Ok(ExecPlan {
+            in_dims: in_dims.to_vec(),
+            order,
+            flush,
+            dims,
+            naive_bytes,
+        })
+    }
+}
+
+/// Recycle a free-listed buffer: best fit by capacity (the smallest one
+/// that already holds `len`), else grow the largest, else allocate.
+/// Always returns a zero-filled (`T::default()`) buffer of exactly `len`.
+fn take_vec<T: Copy + Default>(free: &mut Vec<Vec<T>>, len: usize) -> Vec<T> {
+    let mut best: Option<usize> = None;
+    for i in 0..free.len() {
+        let cap = free[i].capacity();
+        let better = match best {
+            None => true,
+            Some(b) => free[b].capacity() > cap,
+        };
+        if cap >= len && better {
+            best = Some(i);
+        }
+    }
+    let mut v = match best {
+        Some(i) => free.swap_remove(i),
+        None if free.is_empty() => Vec::with_capacity(len),
+        None => {
+            let mut bi = 0;
+            for i in 1..free.len() {
+                if free[i].capacity() > free[bi].capacity() {
+                    bi = i;
+                }
+            }
+            free.swap_remove(bi)
+        }
+    };
+    v.clear();
+    v.resize(len, T::default());
+    v
+}
+
+/// Typed buffer pool for one in-flight request.
+#[derive(Default)]
+pub struct Arena {
+    f32_free: Vec<Vec<f32>>,
+    i32_free: Vec<Vec<i32>>,
+    u8_free: Vec<Vec<u8>>,
+    u64_free: Vec<Vec<u64>>,
+    live_bytes: usize,
+    peak_bytes: usize,
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena::default()
+    }
+
+    fn note_take(&mut self, bytes: usize) {
+        self.live_bytes += bytes;
+        if self.live_bytes > self.peak_bytes {
+            self.peak_bytes = self.live_bytes;
+        }
+    }
+
+    fn note_put(&mut self, bytes: usize) {
+        self.live_bytes = self.live_bytes.saturating_sub(bytes);
+    }
+
+    /// Bytes currently checked out.
+    pub fn live_bytes(&self) -> usize {
+        self.live_bytes
+    }
+
+    /// High-water mark of [`Arena::live_bytes`] over the arena's life.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    /// Zero-filled f32 tensor of the given dims (recycled storage).
+    pub fn take_f32(&mut self, dims: &[usize]) -> TensorF {
+        let len = dims.iter().product::<usize>();
+        self.note_take(len * std::mem::size_of::<f32>());
+        TensorF::from_vec(dims, take_vec(&mut self.f32_free, len))
+    }
+
+    pub fn put_f32(&mut self, t: TensorF) {
+        self.note_put(t.data.len() * std::mem::size_of::<f32>());
+        self.f32_free.push(t.data);
+    }
+
+    /// Zero-filled i32 tensor (codes, integer accumulators).
+    pub fn take_i32(&mut self, dims: &[usize]) -> TensorI {
+        let len = dims.iter().product::<usize>();
+        self.note_take(len * std::mem::size_of::<i32>());
+        TensorI::from_vec(dims, take_vec(&mut self.i32_free, len))
+    }
+
+    pub fn put_i32(&mut self, t: TensorI) {
+        self.note_put(t.data.len() * std::mem::size_of::<i32>());
+        self.i32_free.push(t.data);
+    }
+
+    /// Zero-filled u8 tensor (slot-state lanes).
+    pub fn take_u8(&mut self, dims: &[usize]) -> Tensor<u8> {
+        let len = dims.iter().product::<usize>();
+        self.note_take(len);
+        Tensor::from_vec(dims, take_vec(&mut self.u8_free, len))
+    }
+
+    pub fn put_u8(&mut self, t: Tensor<u8>) {
+        self.note_put(t.data.len());
+        self.u8_free.push(t.data);
+    }
+
+    /// Zero-filled u64 word buffer (bit-packed OverQ planes).
+    pub fn take_u64(&mut self, len: usize) -> Vec<u64> {
+        self.note_take(len * std::mem::size_of::<u64>());
+        take_vec(&mut self.u64_free, len)
+    }
+
+    pub fn put_u64(&mut self, v: Vec<u64>) {
+        self.note_put(v.len() * std::mem::size_of::<u64>());
+        self.u64_free.push(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn graph(src: &str) -> Graph {
+        Graph::from_json(&parse(src).unwrap()).unwrap()
+    }
+
+    fn diamond() -> Graph {
+        // input → two convs → add → gap → dense (node 1 read twice)
+        graph(
+            r#"{
+          "name": "diamond",
+          "nodes": [
+            {"id": 0, "op": "input", "in": []},
+            {"id": 1, "op": "conv", "in": [0], "kh": 3, "kw": 3, "stride": 1,
+             "cin": 3, "cout": 8, "relu": true, "quant": false},
+            {"id": 2, "op": "conv", "in": [1], "kh": 3, "kw": 3, "stride": 1,
+             "cin": 8, "cout": 8, "relu": false, "quant": false},
+            {"id": 3, "op": "add", "in": [1, 2], "relu": true},
+            {"id": 4, "op": "gap", "in": [3]},
+            {"id": 5, "op": "dense", "in": [4], "cin": 8, "cout": 10}
+          ]
+        }"#,
+        )
+    }
+
+    #[test]
+    fn order_is_identity_on_ssa_graphs() {
+        let g = diamond();
+        let p = ExecPlan::build(&g, &[2, 8, 8, 3]).unwrap();
+        assert_eq!(p.order, (0..g.nodes.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shapes_and_flush_points() {
+        let g = diamond();
+        let p = ExecPlan::build(&g, &[2, 8, 8, 3]).unwrap();
+        assert_eq!(p.dims[1], vec![2, 8, 8, 8]);
+        assert_eq!(p.dims[3], vec![2, 8, 8, 8]);
+        assert_eq!(p.dims[4], vec![2, 8]);
+        assert_eq!(p.dims[5], vec![2, 10]);
+        // node 1 is read by 2 AND 3 → flushes at step 3, not step 2
+        assert!(p.flush[3].contains(&1));
+        assert!(!p.flush[2].contains(&1));
+        // logits never flush
+        assert!(p.flush.iter().all(|f| !f.contains(&5)));
+        // everything except the logits flushes exactly once
+        let total: usize = p.flush.iter().map(|f| f.len()).sum();
+        assert_eq!(total, g.nodes.len() - 1);
+        assert!(p.naive_bytes > 0);
+    }
+
+    #[test]
+    fn arena_recycles_and_tracks_peak() {
+        let mut a = Arena::new();
+        let t1 = a.take_f32(&[4, 8]);
+        assert_eq!(a.live_bytes(), 4 * 8 * 4);
+        let ptr = t1.data.as_ptr();
+        a.put_f32(t1);
+        assert_eq!(a.live_bytes(), 0);
+        // same-or-smaller request reuses the same storage
+        let t2 = a.take_f32(&[2, 8]);
+        assert_eq!(t2.data.as_ptr(), ptr);
+        assert!(t2.data.iter().all(|&v| v == 0.0));
+        a.put_f32(t2);
+        assert_eq!(a.peak_bytes(), 4 * 8 * 4);
+        // peak is a high-water mark across concurrent holds
+        let x = a.take_i32(&[16]);
+        let y = a.take_i32(&[16]);
+        assert_eq!(a.live_bytes(), 2 * 16 * 4);
+        a.put_i32(x);
+        a.put_i32(y);
+        let w = a.take_u64(7);
+        assert_eq!(w.len(), 7);
+        a.put_u64(w);
+        assert_eq!(a.live_bytes(), 0);
+    }
+
+    #[test]
+    fn dirty_buffers_come_back_zeroed() {
+        let mut a = Arena::new();
+        let mut t = a.take_i32(&[8]);
+        t.data.fill(-7);
+        a.put_i32(t);
+        let t2 = a.take_i32(&[8]);
+        assert!(t2.data.iter().all(|&v| v == 0));
+    }
+}

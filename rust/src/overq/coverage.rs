@@ -90,6 +90,36 @@ pub fn coverage_stats(x: &TensorF, scale: f32, cfg: &OverQConfig) -> CoverageSta
     s
 }
 
+/// [`coverage_stats`] computed from the bit-packed encode — the
+/// outlier/zero pre-counts are identical scalar passes, but the
+/// MSB/LSB tallies come from [`super::dotprod::slot_histogram_packed`]
+/// over the packed words instead of the state lane. Must agree exactly
+/// with [`coverage_stats`]; the property suite pins it.
+pub fn coverage_stats_packed(x: &TensorF, scale: f32, cfg: &OverQConfig) -> CoverageStats {
+    let mut s = CoverageStats {
+        total: x.numel(),
+        ..Default::default()
+    };
+    let inv = 1.0f32 / scale;
+    let bf = cfg.b() as f32;
+    let qmax = cfg.qmax();
+    for &v in &x.data {
+        let (code, _) = int_codes(v, inv, bf);
+        if code > qmax {
+            s.outliers += 1;
+        }
+        if code == 0 {
+            s.zeros += 1;
+        }
+    }
+    let enc = encode_tensor(x, scale, cfg);
+    let p = super::encode::pack_slots(&enc.codes, &enc.state, cfg.bits);
+    let h = super::dotprod::slot_histogram_packed(&p);
+    s.covered = h[MSB as usize] as usize;
+    s.pr_slots = h[super::state::LSB as usize] as usize;
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,6 +181,26 @@ mod tests {
         assert!((theory_coverage(0.5, 6) - 0.984375).abs() < 1e-9);
         assert_eq!(theory_coverage(0.0, 5), 0.0);
         assert_eq!(theory_coverage(1.0, 1), 1.0);
+    }
+
+    #[test]
+    fn prop_packed_stats_match_unpacked() {
+        check("coverage_stats_packed == coverage_stats", 80, |rng: &mut Rng| {
+            let cfg = OverQConfig {
+                bits: 2 + rng.index(7) as u32,
+                cascade: 1 + rng.index(4),
+                range_overwrite: rng.bool(0.8),
+                precision_overwrite: rng.bool(0.5),
+            };
+            let x = synth(rng, 1 + rng.index(20), 1 + rng.index(40), 0.45, 0.06);
+            let a = coverage_stats(&x, 0.3, &cfg);
+            let b = coverage_stats_packed(&x, 0.3, &cfg);
+            assert_eq!(
+                (a.total, a.outliers, a.covered, a.zeros, a.pr_slots),
+                (b.total, b.outliers, b.covered, b.zeros, b.pr_slots),
+                "cfg={cfg:?}"
+            );
+        });
     }
 
     #[test]

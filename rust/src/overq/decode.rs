@@ -6,6 +6,7 @@
 
 use crate::tensor::{Tensor, TensorF, TensorI};
 
+use super::encode::PackedSlots;
 use super::state::{OverQConfig, SlotState, LSB, MSB, NORM, SHIFT};
 
 /// Decode one row of slot codes to effective values at ORIGINAL indices.
@@ -60,6 +61,93 @@ pub fn decode_rows(
             cfg,
             &mut out.data[r * c..(r + 1) * c],
         );
+    }
+    out
+}
+
+/// Unpack a [`PackedSlots`] plane back into (codes, state) tensors of
+/// shape `(rows, cols)` — the exact inverse of
+/// [`super::encode::pack_slots`] (pack→unpack is lossless; the property
+/// suite pins it).
+pub fn unpack_slots(p: &PackedSlots) -> (TensorI, Tensor<SlotState>) {
+    let mut codes = TensorI::zeros(&[p.rows, p.cols]);
+    let mut state = Tensor::<SlotState>::zeros(&[p.rows, p.cols]);
+    if p.cols == 0 || p.rows == 0 {
+        return (codes, state);
+    }
+    let sw = p.slot_width();
+    let spw = p.slots_per_word();
+    let wpr = p.words_per_row();
+    let cmask = (1u64 << p.bits) - 1;
+    for r in 0..p.rows {
+        let crow = &mut codes.data[r * p.cols..(r + 1) * p.cols];
+        let srow = &mut state.data[r * p.cols..(r + 1) * p.cols];
+        for (wi, &w0) in p.words[r * wpr..(r + 1) * wpr].iter().enumerate() {
+            let mut word = w0;
+            let base = wi * spw;
+            for s in 0..(p.cols - base).min(spw) {
+                crow[base + s] = (word & cmask) as i32;
+                srow[base + s] = ((word >> p.bits) & 3) as SlotState;
+                word >>= sw;
+            }
+        }
+    }
+    (codes, state)
+}
+
+/// Effective value of the slot `cur` given its successor `nxt` — the
+/// scalar decode rule of [`decode_channels`], shared by the streaming
+/// packed decoder.
+#[inline]
+fn decode_slot(cur: (i32, SlotState), nxt: (i32, SlotState), b: f32) -> f32 {
+    if nxt.1 == SHIFT {
+        nxt.0 as f32
+    } else if cur.1 != NORM {
+        0.0
+    } else {
+        match nxt.1 {
+            MSB => cur.0 as f32 + nxt.0 as f32 * b,
+            LSB => cur.0 as f32 + nxt.0 as f32 / b,
+            _ => cur.0 as f32,
+        }
+    }
+}
+
+/// Word-at-a-time decode of a packed plane to the fake-quant view —
+/// numerically identical to unpacking and calling [`decode_rows`], but
+/// each u64 is loaded once and slots stream out of a register (the slot
+/// at `k` is emitted as soon as its successor `k+1` is extracted).
+pub fn decode_packed(p: &PackedSlots, scale: f32, cfg: &OverQConfig) -> TensorF {
+    assert_eq!(p.bits, cfg.bits, "packed bits != config bits");
+    let (rows, cols) = (p.rows, p.cols);
+    let mut out = TensorF::zeros(&[rows, cols]);
+    if cols == 0 || rows == 0 {
+        return out;
+    }
+    let sw = p.slot_width();
+    let spw = p.slots_per_word();
+    let wpr = p.words_per_row();
+    let cmask = (1u64 << p.bits) - 1;
+    let b = cfg.b() as f32;
+    for r in 0..rows {
+        let orow = &mut out.data[r * cols..(r + 1) * cols];
+        let mut prev: (i32, SlotState) = (0, NORM);
+        let mut k = 0usize;
+        for (wi, &w0) in p.words[r * wpr..(r + 1) * wpr].iter().enumerate() {
+            let mut word = w0;
+            let base = wi * spw;
+            for _ in 0..(cols - base).min(spw) {
+                let cur = ((word & cmask) as i32, ((word >> p.bits) & 3) as SlotState);
+                word >>= sw;
+                if k > 0 {
+                    orow[k - 1] = decode_slot(prev, cur, b) * scale;
+                }
+                prev = cur;
+                k += 1;
+            }
+        }
+        // last slot of the row: no successor (treated as a NORM zero)
+        orow[cols - 1] = decode_slot(prev, (0, NORM), b) * scale;
     }
     out
 }
@@ -260,6 +348,55 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn prop_packed_decode_matches_value_at_a_time() {
+        use crate::overq::encode::pack_slots;
+        check("decode_packed == decode_rows; unpack roundtrips", 200, |rng: &mut Rng| {
+            let cfg = OverQConfig {
+                bits: 2 + rng.index(7) as u32, // 2..=8
+                cascade: 1 + rng.index(4),
+                range_overwrite: rng.bool(0.7),
+                precision_overwrite: rng.bool(0.5),
+            };
+            let rows = 1 + rng.index(5);
+            let c = 1 + rng.index(70);
+            let scale = 0.1 + rng.f32() * 0.4;
+            let mut x = TensorF::zeros(&[rows, c]);
+            for v in x.data.iter_mut() {
+                *v = if rng.bool(0.45) {
+                    0.0
+                } else {
+                    rng.normal().abs() * (if rng.bool(0.15) { 10.0 } else { 1.0 })
+                };
+            }
+            let enc = encode_tensor(&x, scale, &cfg);
+            let p = pack_slots(&enc.codes, &enc.state, cfg.bits);
+            // lossless pack → unpack round-trip
+            let (codes2, state2) = unpack_slots(&p);
+            assert_eq!(codes2.data, enc.codes.data, "codes roundtrip cfg={cfg:?}");
+            assert_eq!(state2.data, enc.state.data, "state roundtrip cfg={cfg:?}");
+            // streaming packed decode is bit-identical to the value-at-a-
+            // time path
+            let want = decode_rows(&enc.codes, &enc.state, scale, &cfg);
+            let got = decode_packed(&p, scale, &cfg);
+            assert_eq!(got.data, want.data, "decode parity cfg={cfg:?}");
+        });
+    }
+
+    #[test]
+    fn packed_decode_empty_plane() {
+        use crate::overq::encode::pack_slots;
+        let cfg = OverQConfig::full(4, 2);
+        let codes = TensorI::zeros(&[0, 7]);
+        let state = Tensor::<SlotState>::zeros(&[0, 7]);
+        let p = pack_slots(&codes, &state, cfg.bits);
+        let dec = decode_packed(&p, 0.1, &cfg);
+        assert_eq!(dec.numel(), 0);
+        let (c2, s2) = unpack_slots(&p);
+        assert_eq!(c2.numel(), 0);
+        assert_eq!(s2.numel(), 0);
     }
 
     #[test]

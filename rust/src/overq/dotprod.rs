@@ -11,8 +11,17 @@
 //! `out = A0 @ W + A1 @ Wroll`.
 
 use crate::tensor::{Tensor, TensorI};
+use crate::util::threadpool;
 
+use super::encode::PackedSlots;
 use super::state::{OverQConfig, SlotState, NORM};
+
+/// Below this many slot×column multiply-adds the packed GEMM stays
+/// sequential (thread spawn would dominate).
+const PAR_MIN_MACS: usize = 1 << 18;
+
+/// Output rows per unit of parallel work in [`gemm_overq_packed`].
+const ROW_CHUNK: usize = 64;
 
 /// Slot-wise dot product against one weight column (reference form).
 pub fn dot_fixed_point(
@@ -88,6 +97,95 @@ pub fn gemm_overq(
     }
 }
 
+/// [`gemm_overq`] over the bit-packed activation plane, parallel over
+/// row chunks. Bit-identical to the value-at-a-time kernel (integer
+/// accumulation is associative): `tests/kernel_diff.rs` pins the parity.
+///
+/// The word loop gives two skip levels the struct-of-arrays kernel does
+/// not have: a whole u64 of zero slots (common under ReLU sparsity) is
+/// one compare, and each live word is loaded once with the (code, state)
+/// fields shifted out of a register — no second lane to stream.
+/// Non-NORM slots always carry a non-zero code (MSB ≥ 1, SHIFT copies a
+/// non-zero, LSB requires lo > 0), so skipping on `code == 0` alone is
+/// exact regardless of the state bits; zero padding in the last word of
+/// a row is inert for the same reason.
+pub fn gemm_overq_packed(
+    p: &PackedSlots,
+    w: &TensorI,
+    wroll: &TensorI,
+    cfg: &OverQConfig,
+    out: &mut TensorI,
+) {
+    let macs = p
+        .rows
+        .saturating_mul(p.cols)
+        .saturating_mul(w.dims()[1]);
+    let threads = if macs < PAR_MIN_MACS {
+        1
+    } else {
+        threadpool::configured_threads()
+    };
+    gemm_overq_packed_threads(p, w, wroll, cfg, out, threads);
+}
+
+/// [`gemm_overq_packed`] with an explicit worker count (1 = sequential).
+pub fn gemm_overq_packed_threads(
+    p: &PackedSlots,
+    w: &TensorI,
+    wroll: &TensorI,
+    cfg: &OverQConfig,
+    out: &mut TensorI,
+    threads: usize,
+) {
+    let (m, k) = (p.rows, p.cols);
+    let n = w.dims()[1];
+    assert_eq!(w.dims()[0], k, "inner dims");
+    assert_eq!(p.bits, cfg.bits, "packed bits != config bits");
+    assert_eq!(out.dims(), &[m, n]);
+    out.data.fill(0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let sw = p.slot_width();
+    let spw = p.slots_per_word();
+    let wpr = p.words_per_row();
+    let cmask = (1u64 << p.bits) - 1;
+    let b = cfg.b();
+    let ftab = [b, b * b, b, 1i32];
+    let words = &p.words[..];
+    threadpool::parallel_chunks_mut(&mut out.data, ROW_CHUNK * n, threads, |ci, ochunk| {
+        let i0 = ci * ROW_CHUNK;
+        for (ri, orow) in ochunk.chunks_mut(n).enumerate() {
+            let i = i0 + ri;
+            for (wi, &w0) in words[i * wpr..(i + 1) * wpr].iter().enumerate() {
+                if w0 == 0 {
+                    continue; // whole word of (0, NORM) slots
+                }
+                let mut word = w0;
+                let base = wi * spw;
+                for s in 0..(k - base).min(spw) {
+                    let code = (word & cmask) as i32;
+                    let st = ((word >> p.bits) & 3) as usize;
+                    word >>= sw;
+                    if code == 0 {
+                        continue;
+                    }
+                    let kk = base + s;
+                    let v = code * ftab[st];
+                    let wrow = if st == NORM as usize {
+                        &w.data[kk * n..(kk + 1) * n]
+                    } else {
+                        &wroll.data[kk * n..(kk + 1) * n]
+                    };
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o += v * wv;
+                    }
+                }
+            }
+        }
+    });
+}
+
 /// MAC-lane slot occupancy of a state tensor: counts indexed by state
 /// value, i.e. `[NORM, MSB, SHIFT, LSB]`. Telemetry only — the engine
 /// feeds the im2col'd state lane through this so the serving counters
@@ -97,6 +195,32 @@ pub fn slot_histogram(state: &Tensor<SlotState>) -> [u64; 4] {
     let mut h = [0u64; 4];
     for &s in &state.data {
         h[(s & 3) as usize] += 1;
+    }
+    h
+}
+
+/// [`slot_histogram`] over a packed plane. The padding slots in the
+/// last word of each row are *excluded* (they would otherwise inflate
+/// the NORM bucket), so the counts match the unpacked histogram exactly
+/// — the serving counters must not change meaning when the engine swaps
+/// in the packed kernels.
+pub fn slot_histogram_packed(p: &PackedSlots) -> [u64; 4] {
+    let mut h = [0u64; 4];
+    if p.rows == 0 || p.cols == 0 {
+        return h;
+    }
+    let sw = p.slot_width();
+    let spw = p.slots_per_word();
+    let wpr = p.words_per_row();
+    for r in 0..p.rows {
+        for (wi, &w0) in p.words[r * wpr..(r + 1) * wpr].iter().enumerate() {
+            let mut word = w0;
+            let base = wi * spw;
+            for _ in 0..(p.cols - base).min(spw) {
+                h[((word >> p.bits) & 3) as usize] += 1;
+                word >>= sw;
+            }
+        }
     }
     h
 }
@@ -197,6 +321,58 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn prop_packed_gemm_matches_value_at_a_time() {
+        use crate::overq::encode::pack_slots;
+        check("packed gemm == gemm_overq, all bit widths", 120, |rng: &mut Rng| {
+            let cfg = OverQConfig {
+                bits: 2 + rng.index(7) as u32, // 2..=8
+                cascade: 1 + rng.index(4),
+                range_overwrite: rng.bool(0.7),
+                precision_overwrite: rng.bool(0.5),
+            };
+            let (m, k, n) = (1 + rng.index(8), 1 + rng.index(70), 1 + rng.index(9));
+            let x = rand_acts(rng, m, k);
+            let enc = encode_tensor(&x, 0.2, &cfg);
+            let mut w = TensorI::zeros(&[k, n]);
+            for v in w.data.iter_mut() {
+                *v = rng.range(-127, 128) as i32;
+            }
+            let wroll = roll_weights(&w);
+            let mut want = TensorI::zeros(&[m, n]);
+            gemm_overq(&enc.codes, &enc.state, &w, &wroll, &cfg, &mut want);
+            let p = pack_slots(&enc.codes, &enc.state, cfg.bits);
+            for threads in [1usize, 3] {
+                let mut got = TensorI::zeros(&[m, n]);
+                gemm_overq_packed_threads(&p, &w, &wroll, &cfg, &mut got, threads);
+                assert_eq!(got.data, want.data, "threads={threads} cfg={cfg:?}");
+            }
+            // histogram over the packed plane matches the unpacked lane
+            // (padding excluded)
+            assert_eq!(
+                slot_histogram_packed(&p),
+                slot_histogram(&enc.state),
+                "histogram parity cfg={cfg:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn packed_gemm_empty_plane() {
+        // pack_slots collapses any empty tensor to a (0, 0) plane; the
+        // packed GEMM must treat it as a no-op against 0-row weights
+        let cfg = OverQConfig::full(4, 2);
+        let codes = TensorI::zeros(&[0, 8]);
+        let state = Tensor::<SlotState>::zeros(&[0, 8]);
+        let p = crate::overq::encode::pack_slots(&codes, &state, cfg.bits);
+        assert_eq!((p.rows, p.cols), (0, 0));
+        let w = TensorI::zeros(&[0, 3]);
+        let wroll = TensorI::zeros(&[0, 3]);
+        let mut out = TensorI::zeros(&[0, 3]);
+        gemm_overq_packed(&p, &w, &wroll, &cfg, &mut out);
+        assert!(out.data.is_empty());
     }
 
     #[test]

@@ -149,6 +149,129 @@ pub fn encode_tensor(x: &TensorF, scale: f32, cfg: &OverQConfig) -> Encoded {
     }
 }
 
+/// Bit-packed (codes, state) plane: the wire format the packed kernels
+/// consume in place of the per-value `(i32 code, u8 state)` struct-of-
+/// arrays pair.
+///
+/// Layout (see `docs/runtime.md` for the diagram): each slot occupies
+/// `bits + 2` bits of a little-endian u64 word — the b-bit code in the
+/// low bits, the 2-bit [`SlotState`] above it:
+///
+/// ```text
+/// word: | slotN | ... | slot2 | slot1 | slot0 |   (slot0 = lowest bits)
+/// slot: | state (2 bits) | code (b bits) |
+/// ```
+///
+/// Rows are word-aligned: every row starts on a fresh word and the final
+/// word's unused high slots are zero (code 0, state NORM), so a
+/// whole-word zero test skips `slots_per_word` slots at once and padding
+/// slots are inert in the dot product. Zero padding must however be
+/// *excluded* from slot-occupancy telemetry — [`super::dotprod::slot_histogram_packed`]
+/// masks it off.
+#[derive(Clone, Debug)]
+pub struct PackedSlots {
+    /// `rows * words_per_row` little-endian words.
+    pub words: Vec<u64>,
+    /// Number of (im2col) rows.
+    pub rows: usize,
+    /// Slots per row (the GEMM K dimension).
+    pub cols: usize,
+    /// Code width b; slot width is `bits + 2`.
+    pub bits: u32,
+}
+
+impl PackedSlots {
+    /// Bits per slot (`bits` code + 2 state).
+    #[inline]
+    pub fn slot_width(&self) -> u32 {
+        self.bits + 2
+    }
+
+    /// Slots stored per u64 word.
+    #[inline]
+    pub fn slots_per_word(&self) -> usize {
+        (64 / self.slot_width()) as usize
+    }
+
+    /// Words per (word-aligned) row.
+    #[inline]
+    pub fn words_per_row(&self) -> usize {
+        if self.cols == 0 {
+            0
+        } else {
+            self.cols.div_ceil(self.slots_per_word())
+        }
+    }
+}
+
+/// Number of u64 words needed to pack an (rows, cols) plane at `bits`.
+pub fn packed_len(rows: usize, cols: usize, bits: u32) -> usize {
+    let spw = (64 / (bits + 2)) as usize;
+    if cols == 0 {
+        0
+    } else {
+        rows * cols.div_ceil(spw)
+    }
+}
+
+/// Pack flat row-major (codes, state) lanes into `words`, which must
+/// hold exactly [`packed_len`] words. Word-at-a-time: each output word
+/// is assembled in a register and stored once.
+pub fn pack_slots_into(
+    codes: &[i32],
+    state: &[SlotState],
+    rows: usize,
+    cols: usize,
+    bits: u32,
+    words: &mut [u64],
+) {
+    assert_eq!(codes.len(), rows * cols, "codes len");
+    assert_eq!(state.len(), rows * cols, "state len");
+    assert_eq!(words.len(), packed_len(rows, cols, bits), "words len");
+    let sw = bits + 2;
+    let spw = (64 / sw) as usize;
+    let mut wi = 0;
+    for r in 0..rows {
+        let crow = &codes[r * cols..(r + 1) * cols];
+        let srow = &state[r * cols..(r + 1) * cols];
+        let mut c0 = 0;
+        while c0 < cols {
+            let nslots = (cols - c0).min(spw);
+            let mut word = 0u64;
+            for s in (0..nslots).rev() {
+                let code = crow[c0 + s];
+                let st = srow[c0 + s];
+                debug_assert!(code >= 0 && (code as u64) < (1u64 << bits), "code fits b bits");
+                debug_assert!(st < 4, "state fits 2 bits");
+                word = (word << sw) | ((st as u64) << bits) | code as u64;
+            }
+            words[wi] = word;
+            wi += 1;
+            c0 += nslots;
+        }
+    }
+}
+
+/// Pack an encoded (codes, state) tensor pair into a [`PackedSlots`]
+/// plane. The tensors are flattened to (num_rows, last-dim) rows — for
+/// the engine these are already the im2col'd (M, K) matrices.
+pub fn pack_slots(codes: &TensorI, state: &Tensor<SlotState>, bits: u32) -> PackedSlots {
+    assert_eq!(codes.dims(), state.dims(), "codes/state dims");
+    let (rows, cols) = if codes.numel() == 0 {
+        (0, 0)
+    } else {
+        (codes.num_rows(), *codes.dims().last().unwrap())
+    };
+    let mut words = vec![0u64; packed_len(rows, cols, bits)];
+    pack_slots_into(&codes.data, &state.data, rows, cols, bits, &mut words);
+    PackedSlots {
+        words,
+        rows,
+        cols,
+        bits,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -289,5 +412,42 @@ mod tests {
                 assert!(state.iter().all(|&s| s == NORM));
             }
         });
+    }
+
+    #[test]
+    fn pack_layout_known_values() {
+        // bits=4 → slot width 6, 10 slots per word; row of 3 slots packs
+        // into one word with the padding slots zero
+        let codes = TensorI::from_vec(&[1, 3], vec![0x5, 0x3, 0xF]);
+        let state = Tensor::<SlotState>::from_vec(&[1, 3], vec![NORM, MSB, SHIFT]);
+        let p = pack_slots(&codes, &state, 4);
+        assert_eq!((p.slot_width(), p.slots_per_word(), p.words_per_row()), (6, 10, 1));
+        let want = 0x5u64 | ((0x3 | (MSB as u64) << 4) << 6) | ((0xF | (SHIFT as u64) << 4) << 12);
+        assert_eq!(p.words, vec![want]);
+    }
+
+    #[test]
+    fn pack_rows_are_word_aligned() {
+        // bits=6 → slot width 8 → 8 slots/word; 9 cols → 2 words per row
+        let codes = TensorI::full(&[3, 9], 1);
+        let state = Tensor::<SlotState>::zeros(&[3, 9]);
+        let p = pack_slots(&codes, &state, 6);
+        assert_eq!(p.words_per_row(), 2);
+        assert_eq!(p.words.len(), 6);
+        // second word of each row holds exactly one live slot
+        for r in 0..3 {
+            assert_eq!(p.words[r * 2 + 1], 1);
+        }
+        assert_eq!(packed_len(3, 9, 6), 6);
+    }
+
+    #[test]
+    fn pack_empty_plane() {
+        let codes = TensorI::zeros(&[0, 5]);
+        let state = Tensor::<SlotState>::zeros(&[0, 5]);
+        let p = pack_slots(&codes, &state, 4);
+        assert!(p.words.is_empty());
+        assert_eq!(packed_len(0, 5, 4), 0);
+        assert_eq!(packed_len(4, 0, 4), 0);
     }
 }

@@ -24,8 +24,14 @@ pub mod dotprod;
 pub mod encode;
 pub mod state;
 
-pub use coverage::{coverage_stats, theory_coverage, CoverageStats};
-pub use decode::{decode_rows, fakequant_from_codes};
-pub use dotprod::{dot_fixed_point, gemm_overq};
-pub use encode::{encode_rows, encode_tensor, int_codes, Encoded};
+pub use coverage::{coverage_stats, coverage_stats_packed, theory_coverage, CoverageStats};
+pub use decode::{decode_packed, decode_rows, fakequant_from_codes, unpack_slots};
+pub use dotprod::{
+    dot_fixed_point, gemm_overq, gemm_overq_packed, gemm_overq_packed_threads, slot_histogram,
+    slot_histogram_packed,
+};
+pub use encode::{
+    encode_rows, encode_tensor, int_codes, pack_slots, pack_slots_into, packed_len, Encoded,
+    PackedSlots,
+};
 pub use state::{OverQConfig, SlotState, LSB, MSB, NORM, SHIFT};

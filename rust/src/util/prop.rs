@@ -46,6 +46,59 @@ where
     }
 }
 
+/// Seeded generators for OverQ kernel properties — hardware configs,
+/// ReLU-shaped activation planes, encoder state and weight matrices.
+/// Shared by the in-crate property tests and `tests/kernel_diff.rs` so
+/// every differential harness draws from the same distributions.
+pub mod gen {
+    use super::Rng;
+    use crate::overq::{encode_tensor, Encoded, OverQConfig};
+    use crate::tensor::{TensorF, TensorI};
+
+    /// Random hardware mode: bits 2..=8, cascade 1..=4, any RO/PR strap
+    /// combination (baseline, RO-only, PR-only and full all reachable).
+    pub fn overq_config(rng: &mut Rng) -> OverQConfig {
+        OverQConfig {
+            bits: 2 + rng.index(7) as u32,
+            cascade: 1 + rng.index(4),
+            range_overwrite: rng.bool(0.7),
+            precision_overwrite: rng.bool(0.5),
+        }
+    }
+
+    /// ReLU-shaped activation plane: ~half exact zeros (claimable
+    /// slots) and a heavy tail of outliers, so range overwrite,
+    /// precision overwrite and cascading all trigger under encoding.
+    pub fn activations(rng: &mut Rng, rows: usize, cols: usize) -> TensorF {
+        let mut x = TensorF::zeros(&[rows, cols]);
+        for v in x.data.iter_mut() {
+            *v = if rng.bool(0.5) {
+                0.0
+            } else {
+                rng.normal().abs() * (if rng.bool(0.08) { 10.0 } else { 1.0 })
+            };
+        }
+        x
+    }
+
+    /// Encoder state over a random activation plane; returns the
+    /// encoded (codes, state) pair and the scale it was encoded at.
+    pub fn encoded(rng: &mut Rng, rows: usize, cols: usize, cfg: &OverQConfig) -> (Encoded, f32) {
+        let scale = 0.1 + rng.f32() * 0.3;
+        let x = activations(rng, rows, cols);
+        (encode_tensor(&x, scale, cfg), scale)
+    }
+
+    /// Random signed (K, N) weight matrix in int8 range.
+    pub fn weights(rng: &mut Rng, k: usize, n: usize) -> TensorI {
+        let mut w = TensorI::zeros(&[k, n]);
+        for v in w.data.iter_mut() {
+            *v = rng.range(-127, 128) as i32;
+        }
+        w
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -64,5 +117,35 @@ mod tests {
         check("always fails eventually", 10, |r| {
             assert!(r.f64() < 0.9, "unlucky draw");
         });
+    }
+
+    #[test]
+    fn gen_configs_cover_the_mode_space() {
+        let mut r = Rng::new(3);
+        let (mut bits_seen, mut modes_seen) = ([false; 9], [false; 4]);
+        for _ in 0..400 {
+            let c = gen::overq_config(&mut r);
+            assert!((2..=8).contains(&c.bits));
+            assert!((1..=4).contains(&c.cascade));
+            bits_seen[c.bits as usize] = true;
+            modes_seen[(c.range_overwrite as usize) * 2 + c.precision_overwrite as usize] = true;
+        }
+        assert!(bits_seen[2..=8].iter().all(|&b| b), "missing a bit width");
+        assert!(modes_seen.iter().all(|&m| m), "missing an RO/PR strap combo");
+    }
+
+    #[test]
+    fn gen_activations_have_zeros_and_outliers() {
+        let mut r = Rng::new(4);
+        let x = gen::activations(&mut r, 32, 64);
+        let zeros = x.data.iter().filter(|&&v| v == 0.0).count();
+        assert!(zeros > x.data.len() / 4, "too few claimable zeros");
+        assert!(x.data.iter().all(|&v| v >= 0.0), "ReLU plane went negative");
+        assert!(x.data.iter().any(|&v| v > 4.0), "no outlier tail");
+        // encoding such a plane under full OverQ populates non-NORM states
+        let cfg = crate::overq::OverQConfig::full(4, 2);
+        let (enc, _) = gen::encoded(&mut r, 32, 64, &cfg);
+        let h = crate::overq::slot_histogram(&enc.state);
+        assert!(h[1] + h[2] + h[3] > 0, "encoder never left NORM: {h:?}");
     }
 }

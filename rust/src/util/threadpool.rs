@@ -3,15 +3,47 @@
 //! On this testbed (`nproc == 1`) the pool degrades to sequential
 //! execution, but the coordinator and harness code are written against
 //! this interface so multi-core machines parallelize for free.
+//!
+//! The blocked kernels ([`crate::nn::gemm`], `overq::dotprod`) size
+//! their worker count off [`configured_threads`] — the `OVERQ_THREADS`
+//! environment variable (or [`set_threads`]) caps it, otherwise it is
+//! the machine's available parallelism. Workers are scoped threads
+//! spawned per call (~tens of µs), so the kernels only go parallel when
+//! the work comfortably amortizes the spawn cost.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Number of worker threads to use by default.
 pub fn default_parallelism() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
+}
+
+/// Cached process-wide thread budget (0 = not yet resolved).
+static CONFIGURED: AtomicUsize = AtomicUsize::new(0);
+
+/// The process-wide kernel thread budget: `OVERQ_THREADS` when set to a
+/// positive integer, else [`default_parallelism`]. Resolved once and
+/// cached; [`set_threads`] overrides it.
+pub fn configured_threads() -> usize {
+    let v = CONFIGURED.load(Ordering::Relaxed);
+    if v != 0 {
+        return v;
+    }
+    let n = std::env::var("OVERQ_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(default_parallelism);
+    CONFIGURED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Override the kernel thread budget (e.g. for benchmarking scaling).
+pub fn set_threads(n: usize) {
+    CONFIGURED.store(n.max(1), Ordering::Relaxed);
 }
 
 /// Run `f(i)` for every i in 0..n, splitting across `threads` workers.
@@ -51,13 +83,40 @@ where
 {
     let mut out = vec![T::default(); n];
     {
-        let slots: Vec<std::sync::Mutex<&mut T>> =
-            out.iter_mut().map(std::sync::Mutex::new).collect();
+        let slots: Vec<Mutex<&mut T>> = out.iter_mut().map(Mutex::new).collect();
         parallel_for(n, threads, |i| {
             **slots[i].lock().unwrap() = f(i);
         });
     }
     out
+}
+
+/// Split `data` into contiguous chunks of `chunk_len` elements (the last
+/// one may be shorter) and run `f(chunk_index, chunk)` over them on
+/// `threads` workers. Chunks are disjoint, so this is the safe way for
+/// kernels to parallelize writes into one output buffer; the per-chunk
+/// `Mutex` is uncontended (each index is claimed exactly once) and only
+/// exists to hand `&mut` access across the scoped threads.
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    if data.is_empty() {
+        return;
+    }
+    let nchunks = data.len().div_ceil(chunk_len);
+    if threads.max(1) <= 1 || nchunks <= 1 {
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let slots: Vec<Mutex<&mut [T]>> = data.chunks_mut(chunk_len).map(Mutex::new).collect();
+    parallel_for(nchunks, threads, |i| {
+        f(i, &mut **slots[i].lock().unwrap());
+    });
 }
 
 #[cfg(test)]
@@ -89,5 +148,36 @@ mod tests {
     fn sequential_fallback() {
         let v = parallel_map(10, 1, |i| i + 1);
         assert_eq!(v[9], 10);
+    }
+
+    #[test]
+    fn chunks_cover_whole_slice() {
+        for &threads in &[1usize, 2, 4, 8] {
+            for &(len, chunk) in &[(100usize, 7usize), (100, 100), (100, 1000), (5, 1), (1, 3)] {
+                let mut data = vec![0u32; len];
+                parallel_chunks_mut(&mut data, chunk, threads, |ci, c| {
+                    for (off, v) in c.iter_mut().enumerate() {
+                        *v = (ci * chunk + off) as u32 + 1;
+                    }
+                });
+                for (i, &v) in data.iter().enumerate() {
+                    assert_eq!(v as usize, i + 1, "len={len} chunk={chunk} t={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunks_on_empty_slice() {
+        let mut data: Vec<u32> = vec![];
+        parallel_chunks_mut(&mut data, 4, 4, |_, _| panic!("no chunks expected"));
+    }
+
+    #[test]
+    fn configured_threads_positive() {
+        assert!(configured_threads() >= 1);
+        set_threads(3);
+        assert_eq!(configured_threads(), 3);
+        set_threads(default_parallelism());
     }
 }

@@ -1,0 +1,382 @@
+//! Differential kernel-test harness for the hot-path rewrite.
+//!
+//! Pins every fast kernel against its scalar reference oracle:
+//!
+//! * blocked/parallel [`overq::nn::gemm::gemm_f32_threads`] vs the old
+//!   scalar `reference::gemm_f32` — **bit-exact** on a seeded shape
+//!   matrix (block-edge sizes, K=1, M=1, empty planes) across 1/2/4/8
+//!   worker threads;
+//! * the im2col + blocked-GEMM conv lowering vs the direct
+//!   `conv::reference::conv2d` oracle;
+//! * the bit-packed OverQ lane: pack→unpack round-trip, packed decode,
+//!   packed integer GEMM and slot-occupancy telemetry vs the
+//!   value-at-a-time kernels, across bits 2..=8 × cascade 1..=4 × every
+//!   RO/PR strap combination;
+//! * the execution planner on every `models::synth` graph (and every
+//!   artifact zoo model when `make artifacts` has run): valid topo
+//!   order, flush-after-last-reader, arena peak ≤ the naive per-layer
+//!   allocation, and planned == unplanned logits, exactly.
+//!
+//! CI runs this suite both under `RUST_TEST_THREADS=1` and at the
+//! default parallelism, plus under ThreadSanitizer in the nightly job.
+
+use overq::harness::calibrate::scales_from_stats;
+use overq::models::{synth_model, Artifacts, LoadedModel};
+use overq::nn::conv;
+use overq::nn::engine::QuantConfig;
+use overq::nn::gemm;
+use overq::nn::Arena;
+use overq::overq::dotprod::roll_weights;
+use overq::overq::{
+    coverage_stats, coverage_stats_packed, decode_packed, decode_rows, dot_fixed_point,
+    encode_tensor, gemm_overq, gemm_overq_packed_threads, pack_slots, slot_histogram,
+    slot_histogram_packed, unpack_slots, OverQConfig,
+};
+use overq::tensor::{TensorF, TensorI};
+use overq::util::prop::{check, gen};
+use overq::util::rng::Rng;
+
+/// Worker counts every parallel kernel is diffed across.
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn fill_sparse_normal(t: &mut TensorF, rng: &mut Rng, zero_p: f64) {
+    for v in t.data.iter_mut() {
+        *v = if rng.bool(zero_p) { 0.0 } else { rng.normal() };
+    }
+}
+
+// ---------------------------------------------------------------- GEMM
+
+/// The fixed shape matrix: exact-tile shapes, every block-edge
+/// remainder case, degenerate K=1 / M=1 / N=1, and empty planes.
+const GEMM_SHAPES: [(usize, usize, usize); 16] = [
+    (1, 1, 1),
+    (1, 7, 5),     // single row
+    (33, 1, 17),   // K = 1
+    (9, 5, 1),     // single column
+    (0, 8, 8),     // empty M
+    (8, 0, 8),     // empty K
+    (8, 8, 0),     // empty N
+    (6, 8, 8),     // exactly one MR × NR tile
+    (96, 64, 8),   // exactly one MC row block
+    (97, 65, 9),   // one past every block edge
+    (95, 63, 7),   // one short of every block edge
+    (67, 259, 19), // deep K, ragged everything
+    (97, 300, 33),
+    (192, 256, 16), // two full MC blocks
+    (13, 511, 3),
+    (1, 300, 33), // single row, deep K
+];
+
+#[test]
+fn gemm_shape_matrix_bitexact_across_threads() {
+    let mut rng = Rng::new(0xD1FF);
+    for &(m, k, n) in &GEMM_SHAPES {
+        let mut a = TensorF::zeros(&[m, k]);
+        let mut w = TensorF::zeros(&[k, n]);
+        fill_sparse_normal(&mut a, &mut rng, 0.4); // ReLU-like zeros
+        fill_sparse_normal(&mut w, &mut rng, 0.0);
+        let mut want = TensorF::zeros(&[m, n]);
+        gemm::reference::gemm_f32(&a, &w, &mut want);
+        for &t in &THREADS {
+            let mut got = TensorF::zeros(&[m, n]);
+            gemm::gemm_f32_threads(&a, &w, &mut got, t);
+            assert_eq!(
+                got.data, want.data,
+                "blocked GEMM diverged: m={m} k={k} n={n} threads={t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_gemm_random_shapes_bitexact() {
+    check("blocked gemm == reference on random shapes", 60, |rng: &mut Rng| {
+        let (m, k, n) = (1 + rng.index(150), 1 + rng.index(400), 1 + rng.index(40));
+        let mut a = TensorF::zeros(&[m, k]);
+        let mut w = TensorF::zeros(&[k, n]);
+        fill_sparse_normal(&mut a, rng, 0.5);
+        fill_sparse_normal(&mut w, rng, 0.0);
+        let mut want = TensorF::zeros(&[m, n]);
+        gemm::reference::gemm_f32(&a, &w, &mut want);
+        let t = THREADS[rng.index(THREADS.len())];
+        let mut got = TensorF::zeros(&[m, n]);
+        gemm::gemm_f32_threads(&a, &w, &mut got, t);
+        assert_eq!(got.data, want.data, "m={m} k={k} n={n} threads={t}");
+    });
+}
+
+// ---------------------------------------------------------------- conv
+
+#[test]
+fn conv_im2col_lowering_matches_direct_reference() {
+    // (n, h, cin, kh, stride, cout) — SAME padding edge cases: 1×1 and
+    // 3×3 kernels, stride 2 on even and odd sizes, single-pixel input
+    let cases = [
+        (1usize, 1usize, 1usize, 1usize, 1usize, 1usize),
+        (1, 1, 3, 3, 1, 4), // kernel larger than the image: all padding
+        (2, 8, 5, 3, 1, 4),
+        (2, 8, 5, 3, 2, 4),
+        (2, 7, 5, 3, 2, 4), // odd size, stride 2: asymmetric pad
+        (1, 8, 3, 1, 1, 6),
+        (1, 9, 3, 1, 2, 2),
+        (3, 5, 2, 3, 1, 3),
+    ];
+    let mut rng = Rng::new(0xC0DE);
+    for &(n, h, cin, kh, stride, cout) in &cases {
+        let mut x = TensorF::zeros(&[n, h, h, cin]);
+        fill_sparse_normal(&mut x, &mut rng, 0.3);
+        let mut w = vec![0f32; kh * kh * cin * cout];
+        for v in w.iter_mut() {
+            *v = rng.normal();
+        }
+        let want = conv::reference::conv2d(&x, &w, kh, kh, cin, cout, stride);
+        let (cols, oh, ow) = conv::im2col(&x, kh, kh, stride);
+        let wt = TensorF::from_vec(&[kh * kh * cin, cout], w);
+        for &t in &THREADS {
+            let mut got = TensorF::zeros(&[n * oh * ow, cout]);
+            gemm::gemm_f32_threads(&cols, &wt, &mut got, t);
+            // same ascending (dy, dx, ic) summation order on both sides
+            // (padding contributes exact zeros) → bit-exact, well inside
+            // the 1e-5 budget
+            assert_eq!(
+                got.data, want.data,
+                "conv lowering diverged: n={n} h={h} cin={cin} kh={kh} stride={stride} threads={t}"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------- bit-packed OverQ lane
+
+/// Every hardware strap combination at the given bits/cascade.
+fn strap_matrix(bits: u32, cascade: usize) -> [OverQConfig; 4] {
+    [
+        OverQConfig::baseline(bits),
+        OverQConfig::ro(bits, cascade),
+        OverQConfig {
+            bits,
+            cascade,
+            range_overwrite: false,
+            precision_overwrite: true,
+        },
+        OverQConfig::full(bits, cascade),
+    ]
+}
+
+#[test]
+fn packed_lane_full_mode_sweep() {
+    // exhaustive bits × cascade × strap sweep: pack→unpack round-trip,
+    // packed decode, packed GEMM and slot histogram all agree with the
+    // value-at-a-time kernels, bit for bit
+    let mut rng = Rng::new(0xBEEF);
+    for bits in 2..=8u32 {
+        for cascade in 1..=4usize {
+            for cfg in strap_matrix(bits, cascade) {
+                let (m, k, n) = (2 + rng.index(6), 1 + rng.index(60), 1 + rng.index(8));
+                let x = gen::activations(&mut rng, m, k);
+                let scale = 0.2f32;
+                let enc = encode_tensor(&x, scale, &cfg);
+                let p = pack_slots(&enc.codes, &enc.state, cfg.bits);
+
+                // lossless round-trip through the u64 wire format
+                let (codes2, state2) = unpack_slots(&p);
+                assert_eq!(codes2.data, enc.codes.data, "codes cfg={cfg:?}");
+                assert_eq!(state2.data, enc.state.data, "state cfg={cfg:?}");
+
+                // streaming packed decode == value-at-a-time decode
+                let want_dec = decode_rows(&enc.codes, &enc.state, scale, &cfg);
+                let got_dec = decode_packed(&p, scale, &cfg);
+                assert_eq!(got_dec.data, want_dec.data, "decode cfg={cfg:?}");
+
+                // telemetry parity (padding slots must not count)
+                assert_eq!(
+                    slot_histogram_packed(&p),
+                    slot_histogram(&enc.state),
+                    "histogram cfg={cfg:?}"
+                );
+
+                // packed integer GEMM across thread counts
+                let w = gen::weights(&mut rng, k, n);
+                let wroll = roll_weights(&w);
+                let mut want = TensorI::zeros(&[m, n]);
+                gemm_overq(&enc.codes, &enc.state, &w, &wroll, &cfg, &mut want);
+                for &t in &THREADS {
+                    let mut got = TensorI::zeros(&[m, n]);
+                    gemm_overq_packed_threads(&p, &w, &wroll, &cfg, &mut got, t);
+                    assert_eq!(got.data, want.data, "gemm cfg={cfg:?} threads={t}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_packed_lane_random_configs() {
+    check("packed lane parity, random configs", 120, |rng: &mut Rng| {
+        let cfg = gen::overq_config(rng);
+        let (m, k) = (1 + rng.index(10), 1 + rng.index(80));
+        let (enc, scale) = gen::encoded(rng, m, k, &cfg);
+        let p = pack_slots(&enc.codes, &enc.state, cfg.bits);
+        let (codes2, state2) = unpack_slots(&p);
+        assert_eq!(codes2.data, enc.codes.data);
+        assert_eq!(state2.data, enc.state.data);
+        assert_eq!(
+            decode_packed(&p, scale, &cfg).data,
+            decode_rows(&enc.codes, &enc.state, scale, &cfg).data
+        );
+        // packed single-row dot == the fixed-point scalar reference
+        let n = 1 + rng.index(6);
+        let w = gen::weights(rng, k, n);
+        let wroll = roll_weights(&w);
+        let mut out = TensorI::zeros(&[m, n]);
+        gemm_overq_packed_threads(&p, &w, &wroll, &cfg, &mut out, 1 + rng.index(4));
+        let mut wcol = vec![0i32; k];
+        for j in 0..n {
+            for (kk, wc) in wcol.iter_mut().enumerate() {
+                *wc = w.data[kk * n + j];
+            }
+            for i in 0..m {
+                let want = dot_fixed_point(enc.codes.row(i), enc.state.row(i), &wcol, &cfg);
+                assert_eq!(out.data[i * n + j] as i64, want, "cfg={cfg:?} ({i},{j})");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_packed_coverage_counters_agree() {
+    check("coverage counters packed == unpacked", 80, |rng: &mut Rng| {
+        let cfg = gen::overq_config(rng);
+        let x = gen::activations(rng, 1 + rng.index(16), 1 + rng.index(48));
+        let a = coverage_stats(&x, 0.25, &cfg);
+        let b = coverage_stats_packed(&x, 0.25, &cfg);
+        assert_eq!(
+            (a.total, a.outliers, a.covered, a.zeros, a.pr_slots),
+            (b.total, b.outliers, b.covered, b.zeros, b.pr_slots),
+            "cfg={cfg:?}"
+        );
+    });
+}
+
+// ------------------------------------------------------ execution plans
+
+/// Structural plan checks + planned-vs-unplanned equality for one model.
+fn check_model_plan(m: &LoadedModel, x: &TensorF) {
+    let g = &m.engine.graph;
+    let nn = g.nodes.len();
+    let plan = m.engine.plan_for(x.dims()).unwrap();
+
+    // valid topological order over exactly the graph's nodes
+    let mut sorted = plan.order.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, (0..nn).collect::<Vec<_>>(), "{}: not a permutation", m.name);
+    let mut pos = vec![0usize; nn];
+    for (s, &nid) in plan.order.iter().enumerate() {
+        pos[nid] = s;
+    }
+    for node in &g.nodes {
+        for &src in &node.inputs {
+            assert!(
+                pos[src] < pos[node.id],
+                "{}: node {} runs before its input {}",
+                m.name,
+                node.id,
+                src
+            );
+        }
+    }
+
+    // every buffer flushes exactly once, at its last reader's step; the
+    // logits buffer never flushes
+    let logits = *plan.order.last().unwrap();
+    let mut flushed = vec![0usize; nn];
+    for (step, fl) in plan.flush.iter().enumerate() {
+        for &v in fl {
+            flushed[v] += 1;
+            assert_ne!(v, logits, "{}: logits flushed", m.name);
+            let last_reader = g
+                .nodes
+                .iter()
+                .filter(|n| n.inputs.contains(&v))
+                .map(|n| pos[n.id])
+                .max()
+                .unwrap_or(pos[v]);
+            assert_eq!(step, last_reader, "{}: node {v} flushed early/late", m.name);
+        }
+    }
+    assert!(flushed.iter().enumerate().all(|(v, &c)| c == usize::from(v != logits)));
+
+    // planned == unplanned, exactly (f32 logits + taps)
+    let taps = g.enc_point_sources();
+    let (f1, t1) = m.engine.forward_f32(x, &taps).unwrap();
+    let (f2, t2) = m.engine.forward_f32_unplanned(x, &taps).unwrap();
+    assert_eq!(f1.data, f2.data, "{}: planned f32 logits diverged", m.name);
+    for (a, b) in t1.iter().zip(&t2) {
+        assert_eq!(a.data, b.data, "{}: planned f32 tap diverged", m.name);
+    }
+
+    // quant path, on calibrated scales
+    let scales = scales_from_stats(&m.enc_stats, 6.0, 4);
+    let qc = QuantConfig::uniform(OverQConfig::full(4, 3), scales);
+    let q1 = m.engine.forward_quant(x, &qc).unwrap();
+    let q2 = m.engine.forward_quant_unplanned(x, &qc).unwrap();
+    assert_eq!(q1.data, q2.data, "{}: planned quant logits diverged", m.name);
+
+    // arena high-water mark stays within the naive per-layer footprint
+    let mut arena = Arena::new();
+    let (f3, _) = m
+        .engine
+        .forward_f32_planned(x, &[], &plan, &mut arena)
+        .unwrap();
+    assert_eq!(f3.data, f1.data);
+    assert_eq!(arena.live_bytes(), 0, "{}: arena leaked buffers", m.name);
+    assert!(
+        arena.peak_bytes() <= plan.naive_bytes,
+        "{}: arena peak {} exceeds naive {}",
+        m.name,
+        arena.peak_bytes(),
+        plan.naive_bytes
+    );
+}
+
+#[test]
+fn plans_are_sound_on_every_synth_model() {
+    for name in overq::models::synth::names() {
+        let m = synth_model(name, 7).unwrap();
+        let (x, _) = overq::data::shapes::gen_batch(3, 0, 4);
+        check_model_plan(&m, &x);
+    }
+}
+
+#[test]
+fn plans_are_sound_on_every_zoo_model() {
+    let Ok(a) = Artifacts::locate() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let ev = a.load_dataset("evalset").unwrap();
+    let (x, _) = overq::harness::calibrate::subset(&ev, 4);
+    for name in a.model_names() {
+        let m = a.load_model(&name).unwrap();
+        check_model_plan(&m, &x);
+    }
+}
+
+#[test]
+fn plan_cache_and_arena_pool_are_stable_across_requests() {
+    // repeated planned runs (recycled arenas, cached plans) must stay
+    // bit-identical to the first — no state can leak between requests
+    let m = synth_model("synth-tiny", 11).unwrap();
+    let (x, _) = overq::data::shapes::gen_batch(5, 0, 3);
+    let scales = scales_from_stats(&m.enc_stats, 6.0, 4);
+    let qc = QuantConfig::uniform(OverQConfig::full(4, 2), scales);
+    let (f0, _) = m.engine.forward_f32(&x, &[]).unwrap();
+    let q0 = m.engine.forward_quant(&x, &qc).unwrap();
+    for _ in 0..3 {
+        let (f, _) = m.engine.forward_f32(&x, &[]).unwrap();
+        let q = m.engine.forward_quant(&x, &qc).unwrap();
+        assert_eq!(f.data, f0.data);
+        assert_eq!(q.data, q0.data);
+    }
+}
