@@ -4,12 +4,25 @@
 //! perf trajectory, plus a bandit-vs-fixed routing scenario recording
 //! how fast outcome-aware routing converges on the better plan arm
 //! (docs/operations.md). Runs artifact-free on the synthetic zoo.
+//!
+//! Fleet-scale additions (docs/serving.md, "Fleet scaling"):
+//!
+//! * **sustained load** — an open-loop generator fires at 2× the
+//!   measured closed-loop capacity against a small bounded queue with
+//!   per-request deadlines, recording target/offered/admitted qps, the
+//!   shed rate and the p50/p99 of *admitted* requests under overload.
+//! * **replica scaling** — closed-loop throughput of the tuned plan at
+//!   1, 2 and 4 replicas (the curve is flat on single-core runners;
+//!   `tests/integration_load.rs` asserts the ≥1.5× speedup only where
+//!   the hardware can show it).
 
 use std::collections::BTreeMap;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use overq::coordinator::batcher::BatchPolicy;
-use overq::coordinator::{BanditConfig, Coordinator, RoutingPolicy, VariantSpec};
+use overq::coordinator::{
+    BanditConfig, Coordinator, ModelHandle, RoutingPolicy, ServeError, SubmitOpts, VariantSpec,
+};
 use overq::data::shapes;
 use overq::harness::policy::baseline_plan;
 use overq::models::synth_model;
@@ -208,6 +221,177 @@ fn bandit_convergence(n: usize) -> anyhow::Result<Value> {
     Ok(Value::Obj(m))
 }
 
+/// Build a coordinator hosting `model` with the tuned plan registered,
+/// a replica fleet of the given size and a bounded submission queue.
+fn fleet(
+    model: &str,
+    replicas: usize,
+    max_queue: usize,
+) -> anyhow::Result<(Coordinator, ModelHandle)> {
+    let loaded = synth_model(model, 42)?;
+    let (images, _) = shapes::gen_batch(4242, 0, 16);
+    let cfg = AutotuneConfig {
+        plan_name: Some("tuned".into()),
+        ..AutotuneConfig::default()
+    };
+    let plan = autotune(&loaded, &images, &cfg)?.plan;
+    let coord = Coordinator::builder()
+        .policy(BatchPolicy::default())
+        .seed(7)
+        .max_queue(max_queue)
+        .model_local(loaded)
+        .replicas(replicas)
+        .build()?;
+    let handle = coord.model(model)?;
+    handle.register_plan(plan)?;
+    Ok((coord, handle))
+}
+
+/// Closed-loop throughput (req/s) of `plan:tuned` at a replica count.
+fn replica_point(model: &str, replicas: usize, n: usize) -> anyhow::Result<f64> {
+    let (coord, handle) = fleet(model, replicas, 4096)?;
+    let img_sz = 16 * 16 * 3;
+    let (load, _) = shapes::gen_batch(77, 0, n);
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        let img = TensorF::from_vec(
+            &[16, 16, 3],
+            load.data[i * img_sz..(i + 1) * img_sz].to_vec(),
+        );
+        pending.push(handle.submit_variant(img, "plan:tuned")?);
+    }
+    for rx in pending {
+        rx.recv()?.map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    let qps = n as f64 / t0.elapsed().as_secs_f64();
+    coord.shutdown();
+    Ok(qps)
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx]
+}
+
+/// Open-loop overload: fire at 2× the measured capacity against a
+/// 64-deep queue with 25 ms deadlines; record what the backpressure
+/// machinery did (shed rate, deadline sweeps, p99 of admitted work).
+fn sustained_load(model: &str, capacity_qps: f64) -> anyhow::Result<Value> {
+    let target_qps = (capacity_qps * 2.0).max(50.0);
+    // ~1 s of overload traffic, bounded so the bench stays CI-fast
+    let total = (target_qps as usize).clamp(200, 4000);
+    let deadline = Duration::from_millis(25);
+    let (coord, handle) = fleet(model, 1, 64)?;
+    let spec: VariantSpec = "plan:tuned".parse()?;
+    let opts = SubmitOpts {
+        tenant: None,
+        deadline: Some(deadline),
+    };
+    let img_sz = 16 * 16 * 3;
+    let n_imgs = total.min(512);
+    let (load, _) = shapes::gen_batch(78, 0, n_imgs);
+    let period = Duration::from_secs_f64(1.0 / target_qps);
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut shed = 0u64;
+    for i in 0..total {
+        // open loop: fire at the scheduled instant whether or not
+        // earlier requests completed
+        let due = t0 + period.mul_f64(i as f64);
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let k = i % n_imgs;
+        let img = TensorF::from_vec(
+            &[16, 16, 3],
+            load.data[k * img_sz..(k + 1) * img_sz].to_vec(),
+        );
+        match handle.submit_opts(img, &spec, &opts) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => match e.downcast_ref::<ServeError>() {
+                Some(ServeError::Shed(_)) => shed += 1,
+                _ => return Err(e),
+            },
+        }
+    }
+    let admitted = pending.len();
+    let mut e2e_us: Vec<f64> = Vec::new();
+    let mut deadline_exceeded = 0u64;
+    for rx in pending {
+        match rx.recv()? {
+            Ok(resp) => e2e_us.push(resp.e2e.as_secs_f64() * 1e6),
+            Err(ServeError::DeadlineExceeded { .. }) => deadline_exceeded += 1,
+            Err(e) => anyhow::bail!("sustained-load request failed: {e}"),
+        }
+    }
+    let wall = t0.elapsed();
+    let m = handle.metrics();
+    coord.shutdown();
+    e2e_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let shed_rate = shed as f64 / total as f64;
+    println!(
+        "{:<40} target {:>7.0} qps  offered {:>7.0}  admitted {:>7.0}  shed {:>5.1}%  expired {}  p99(admitted) {:>8.1} µs",
+        "sustained load synth-tiny 2x overload",
+        target_qps,
+        total as f64 / wall.as_secs_f64(),
+        e2e_us.len() as f64 / wall.as_secs_f64(),
+        shed_rate * 100.0,
+        deadline_exceeded,
+        percentile(&e2e_us, 0.99),
+    );
+
+    let mut o = BTreeMap::new();
+    o.insert("name".into(), Value::Str("sustained load synth-tiny 2x overload".into()));
+    o.insert("target_qps".into(), Value::Num(target_qps));
+    o.insert("offered_qps".into(), Value::Num(total as f64 / wall.as_secs_f64()));
+    o.insert("admitted_qps".into(), Value::Num(e2e_us.len() as f64 / wall.as_secs_f64()));
+    o.insert("requests".into(), Value::Num(total as f64));
+    o.insert("admitted".into(), Value::Num(admitted as f64));
+    o.insert("completed".into(), Value::Num(e2e_us.len() as f64));
+    o.insert("shed".into(), Value::Num(shed as f64));
+    o.insert("shed_rate".into(), Value::Num(shed_rate));
+    o.insert("deadline_exceeded".into(), Value::Num(deadline_exceeded as f64));
+    o.insert("p50_admitted_us".into(), Value::Num(percentile(&e2e_us, 0.5)));
+    o.insert("p99_admitted_us".into(), Value::Num(percentile(&e2e_us, 0.99)));
+    o.insert("queue_peak_depth".into(), Value::Num(m.queue_peak_depth as f64));
+    o.insert("wall_ms".into(), Value::Num(wall.as_secs_f64() * 1e3));
+    Ok(Value::Obj(o))
+}
+
+/// Closed-loop throughput curve at 1, 2 and 4 replicas. Kernel threads
+/// are pinned to 1 from here on (this also covers [`sustained_load`],
+/// whose capacity input comes from this curve) so the scaling signal is
+/// replica-level parallelism, not the in-kernel parallel GEMM.
+fn replica_scaling(model: &str, n: usize) -> anyhow::Result<(f64, Value)> {
+    overq::util::threadpool::set_threads(1);
+    let mut counts = Vec::new();
+    let mut qps = Vec::new();
+    for replicas in [1usize, 2, 4] {
+        let point = replica_point(model, replicas, n)?;
+        println!(
+            "{:<40} {} replica(s)  {:>8.1} req/s",
+            "replica scaling synth-tiny plan:tuned", replicas, point
+        );
+        counts.push(Value::Num(replicas as f64));
+        qps.push(point);
+    }
+    let capacity = qps[0];
+    let mut o = BTreeMap::new();
+    o.insert("name".into(), Value::Str("replica scaling synth-tiny plan:tuned".into()));
+    o.insert("requests_per_point".into(), Value::Num(n as f64));
+    o.insert("replicas".into(), Value::Arr(counts));
+    o.insert(
+        "req_per_s".into(),
+        Value::Arr(qps.into_iter().map(Value::Num).collect()),
+    );
+    Ok((capacity, Value::Obj(o)))
+}
+
 fn main() {
     let n = 256usize;
     let cases = [
@@ -237,10 +421,15 @@ fn main() {
     let mut all: Vec<Value> = results.iter().map(case_json).collect();
     all.push(bandit_convergence(1000).expect("bandit convergence case failed"));
 
+    let (capacity_qps, scaling) =
+        replica_scaling("synth-tiny", n).expect("replica scaling case failed");
+    all.push(scaling);
+    all.push(sustained_load("synth-tiny", capacity_qps).expect("sustained load case failed"));
+
     let mut top = BTreeMap::new();
     top.insert("bench".into(), Value::Str("serving".into()));
     top.insert("results".into(), Value::Arr(all));
     let json = Value::Obj(top).to_json();
     std::fs::write("BENCH_serving.json", &json).expect("write BENCH_serving.json");
-    println!("wrote BENCH_serving.json ({} cases)", results.len() + 1);
+    println!("wrote BENCH_serving.json ({} cases)", results.len() + 3);
 }

@@ -1,11 +1,44 @@
-//! Dynamic batcher: greedy size/deadline batching over an mpsc queue.
+//! Cross-request dynamic batching: a bounded, deadline-aware submission
+//! queue shared by every replica of a model shard.
 //!
-//! Policy: block until the first request arrives, then keep draining
-//! until either `max_batch` requests are in hand or `max_wait` has
-//! elapsed since the first one. FIFO order is preserved.
+//! PR 3's batcher collected from a per-worker mpsc channel — one
+//! consumer, unbounded, no admission control. This module replaces it
+//! with [`SubmitQueue`]: a single queue per shard that any number of
+//! replica workers pull batches from ([`SubmitQueue::next_batch`]),
+//! with three serving-layer guarantees on top:
+//!
+//! * **Bounded admission** — [`SubmitQueue::push`] sheds instead of
+//!   queueing once `max_depth` requests wait ([`ShedReason::QueueFull`])
+//!   or a single tenant exceeds its quota
+//!   ([`ShedReason::TenantQuota`]). Shedding is synchronous: the caller
+//!   gets the request back and replies immediately, so overload never
+//!   grows the queue without bound.
+//! * **Deadline awareness** — requests carry an optional deadline. A
+//!   batch closes at `max_batch`, at `max_wait` after its oldest
+//!   member, or at the earliest deadline of its members, whichever
+//!   comes first; requests already past their deadline are never
+//!   batched but handed back as `expired` for an explicit
+//!   `DeadlineExceeded` reply.
+//! * **Tenant fairness** — within a batch's variant group, members are
+//!   drawn round-robin across tenants
+//!   ([`super::router::round_robin_merge`]), FIFO within each tenant,
+//!   so one flooding tenant cannot starve the others even below the
+//!   shed threshold.
+//!
+//! Batches are homogeneous: every member shares the variant-group key
+//! of the oldest waiting request, mirroring the old worker-side
+//! group-by-spec step. The queue is the shutdown point too:
+//! [`SubmitQueue::close`] wakes all workers, later pushes fail, and
+//! `next_batch` keeps handing out batches until the admitted backlog is
+//! drained — the model-checked shutdown-drain protocol
+//! (`rust/tests/model_check.rs`).
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
+
+use crate::util::sync::{cv_wait, cv_wait_timeout, lock, Condvar, Mutex};
+
+use super::router::round_robin_merge;
 
 /// Batching policy knobs.
 #[derive(Clone, Copy, Debug)]
@@ -25,94 +58,699 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Collect one batch. Returns `None` when the channel has disconnected
-/// and no requests remain.
-pub fn collect<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
-    let first = rx.recv().ok()?;
-    let mut batch = vec![first];
-    let deadline = Instant::now() + policy.max_wait;
-    while batch.len() < policy.max_batch {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
-        }
-        match rx.recv_timeout(deadline - now) {
-            Ok(item) => batch.push(item),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break,
+/// Admission-control knobs for a [`SubmitQueue`].
+#[derive(Clone, Copy, Debug)]
+pub struct QueueConfig {
+    /// Most requests allowed to wait; pushes beyond it shed
+    /// ([`ShedReason::QueueFull`]).
+    pub max_depth: usize,
+    /// Most *waiting* requests one tenant may hold; pushes beyond it
+    /// shed ([`ShedReason::TenantQuota`]). `None` = no per-tenant cap.
+    pub tenant_quota: Option<usize>,
+}
+
+impl Default for QueueConfig {
+    fn default() -> Self {
+        QueueConfig {
+            max_depth: 4096,
+            tenant_quota: None,
         }
     }
-    Some(batch)
+}
+
+/// Why a push was shed at admission.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The queue held `max_depth` waiting requests.
+    QueueFull {
+        /// Queue depth observed at the shed.
+        depth: usize,
+    },
+    /// The request's tenant already held its full quota of waiting
+    /// requests.
+    TenantQuota {
+        /// The over-quota tenant.
+        tenant: String,
+        /// The configured per-tenant quota.
+        quota: usize,
+    },
+}
+
+impl std::fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShedReason::QueueFull { depth } => write!(f, "queue full (depth {depth})"),
+            ShedReason::TenantQuota { tenant, quota } => {
+                write!(f, "tenant {tenant:?} over quota ({quota} waiting)")
+            }
+        }
+    }
+}
+
+/// A rejected [`SubmitQueue::push`]; the item comes back so the caller
+/// can reply to it.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// Shed at admission (queue full or tenant over quota).
+    Shed {
+        /// The rejected request.
+        item: T,
+        /// Why it was shed.
+        reason: ShedReason,
+    },
+    /// The queue was closed ([`SubmitQueue::close`]).
+    Closed {
+        /// The rejected request.
+        item: T,
+    },
+}
+
+/// What a worker gets from [`SubmitQueue::next_batch`].
+#[derive(Debug)]
+pub enum Drained<T> {
+    /// Work to do: a single-group batch (possibly empty) plus requests
+    /// whose deadline passed while they waited — the caller must reply
+    /// `DeadlineExceeded` to those, never drop them.
+    Work {
+        /// Batch to execute; all members share one group key.
+        batch: Vec<T>,
+        /// Admitted requests that expired in the queue.
+        expired: Vec<T>,
+    },
+    /// Woken by [`SubmitQueue::kick`] with nothing to hand out; the
+    /// caller re-checks its own lifecycle conditions (e.g. replica
+    /// retirement) and calls again.
+    Idle,
+    /// Closed and fully drained: the worker can exit.
+    Done,
+}
+
+/// What the queue needs to know about a queued request. Implemented by
+/// `coordinator::server::InferRequest`; tests use lightweight stand-ins.
+pub trait BatchItem {
+    /// Batch-compatibility key — only same-group items share a batch
+    /// (the resolved variant key in the coordinator).
+    fn group(&self) -> &str;
+    /// Admission-control tenant.
+    fn tenant(&self) -> &str;
+    /// Absolute deadline, if the request carries one.
+    fn deadline(&self) -> Option<Instant>;
+}
+
+struct Pending<T> {
+    item: T,
+    seq: u64,
+    enqueued: Instant,
+}
+
+struct QState<T> {
+    items: Vec<Pending<T>>,
+    /// Waiting-request count per tenant (admission view).
+    per_tenant: BTreeMap<String, usize>,
+    closed: bool,
+    seq: u64,
+    /// Bumped by [`SubmitQueue::kick`]; sleepers return `Idle` when it
+    /// moves so lifecycle changes (retirement, scale-down) are seen
+    /// promptly.
+    generation: u64,
+    peak: usize,
+}
+
+/// The bounded, deadline-aware, tenant-fair submission queue (module
+/// docs have the full contract).
+pub struct SubmitQueue<T> {
+    cfg: QueueConfig,
+    state: Mutex<QState<T>>,
+    cv: Condvar,
+}
+
+impl<T: BatchItem> SubmitQueue<T> {
+    /// Empty open queue with the given admission config.
+    pub fn new(cfg: QueueConfig) -> SubmitQueue<T> {
+        SubmitQueue {
+            cfg,
+            state: Mutex::new(QState {
+                items: Vec::new(),
+                per_tenant: BTreeMap::new(),
+                closed: false,
+                seq: 0,
+                generation: 0,
+                peak: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Admit one request or shed it. On success returns the queue depth
+    /// *after* the push (for depth metrics); the emptiness check a
+    /// worker sleeps on and this insert happen under one lock, so a
+    /// wakeup is never lost (model-checked: `bounded_queue_no_lost_wakeup`).
+    pub fn push(&self, item: T) -> Result<usize, PushError<T>> {
+        let mut st = lock(&self.state);
+        if st.closed {
+            return Err(PushError::Closed { item });
+        }
+        let depth = st.items.len();
+        if depth >= self.cfg.max_depth {
+            return Err(PushError::Shed {
+                item,
+                reason: ShedReason::QueueFull { depth },
+            });
+        }
+        if let Some(quota) = self.cfg.tenant_quota {
+            let waiting = st.per_tenant.get(item.tenant()).copied().unwrap_or(0);
+            if waiting >= quota {
+                let tenant = item.tenant().to_string();
+                return Err(PushError::Shed {
+                    item,
+                    reason: ShedReason::TenantQuota { tenant, quota },
+                });
+            }
+        }
+        *st.per_tenant.entry(item.tenant().to_string()).or_insert(0) += 1;
+        st.seq += 1;
+        let seq = st.seq;
+        st.items.push(Pending {
+            item,
+            seq,
+            enqueued: Instant::now(),
+        });
+        let depth = st.items.len();
+        st.peak = st.peak.max(depth);
+        self.cv.notify_one();
+        Ok(depth)
+    }
+
+    /// Current number of waiting requests.
+    pub fn depth(&self) -> usize {
+        lock(&self.state).items.len()
+    }
+
+    /// High-water mark of the waiting-request count.
+    pub fn peak_depth(&self) -> usize {
+        lock(&self.state).peak
+    }
+
+    /// Close the queue: later pushes fail, sleeping workers wake, and
+    /// `next_batch` drains the admitted backlog before reporting
+    /// [`Drained::Done`].
+    pub fn close(&self) {
+        let mut st = lock(&self.state);
+        st.closed = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Wake every worker without handing out work — sleepers return
+    /// [`Drained::Idle`], workers mid-assembly close their batch early.
+    /// Used when lifecycle state changed (replica retirement targets).
+    pub fn kick(&self) {
+        let mut st = lock(&self.state);
+        st.generation += 1;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Pull the next batch (blocking). See [`Drained`] for the three
+    /// outcomes. The batch: all waiting requests sharing the oldest
+    /// request's group key, up to `policy.max_batch`, tenant-fair,
+    /// closed early at the earliest member deadline; requests already
+    /// past their deadline come back in `expired` instead.
+    pub fn next_batch(&self, policy: &BatchPolicy) -> Drained<T> {
+        self.batch_inner(policy, true)
+    }
+
+    /// Non-blocking [`SubmitQueue::next_batch`]: when the queue is open
+    /// but empty, returns [`Drained::Idle`] immediately instead of
+    /// sleeping. For drains that may race each other (orphaned-backlog
+    /// cleanup after total replica death), where a loser blocking on
+    /// the condvar would hang its thread.
+    pub fn try_next_batch(&self, policy: &BatchPolicy) -> Drained<T> {
+        self.batch_inner(policy, false)
+    }
+
+    fn batch_inner(&self, policy: &BatchPolicy, block: bool) -> Drained<T> {
+        let max_batch = policy.max_batch.max(1);
+        let mut st = lock(&self.state);
+        let entry_gen = st.generation;
+        // Phase 1: wait for work (or close / kick).
+        loop {
+            if !st.items.is_empty() {
+                break;
+            }
+            if st.closed {
+                return Drained::Done;
+            }
+            if !block || st.generation != entry_gen {
+                return Drained::Idle;
+            }
+            st = cv_wait(&self.cv, st);
+        }
+        // Phase 2: assemble. Taken items leave the queue (and the
+        // admission counts) immediately, so concurrent workers never
+        // select the same request twice.
+        let mut expired: Vec<T> = Vec::new();
+        let mut batch: Vec<Pending<T>> = Vec::new();
+        let mut anchor: Option<Instant> = None; // enqueue time of oldest member
+        loop {
+            let now = Instant::now();
+            // sweep expired requests of every group so they get their
+            // DeadlineExceeded reply promptly, not at their group's turn
+            let mut i = 0;
+            while i < st.items.len() {
+                match st.items[i].item.deadline() {
+                    Some(d) if d <= now => {
+                        let p = st.items.remove(i);
+                        take_tenant_slot(&mut st.per_tenant, p.item.tenant());
+                        expired.push(p.item);
+                    }
+                    _ => i += 1,
+                }
+            }
+            // fill from the oldest request's group, tenant-fair
+            if batch.len() < max_batch {
+                if let Some(oldest) = st.items.iter().min_by_key(|p| p.seq) {
+                    let group_ok = batch
+                        .first()
+                        .map(|b| b.item.group() == oldest.item.group())
+                        .unwrap_or(true);
+                    if group_ok {
+                        let key = oldest.item.group().to_string();
+                        let room = max_batch - batch.len();
+                        batch.extend(take_group(&mut st, &key, room));
+                        if anchor.is_none() {
+                            // take_group returns seq-sorted, so [0] is oldest
+                            anchor = batch.first().map(|p| p.enqueued);
+                        }
+                    }
+                }
+            }
+            if batch.is_empty() {
+                // every waiting request expired: hand them back now
+                break;
+            }
+            if batch.len() >= max_batch || st.closed || st.generation != entry_gen {
+                break;
+            }
+            // close time: max_wait after the oldest member, clamped to
+            // the earliest member deadline so nobody expires in-batch
+            let mut close_at = match anchor {
+                Some(a) => a + policy.max_wait,
+                None => Instant::now(),
+            };
+            for p in &batch {
+                if let Some(d) = p.item.deadline() {
+                    close_at = close_at.min(d);
+                }
+            }
+            let now = Instant::now();
+            if close_at <= now {
+                break;
+            }
+            let (g, timed_out) = cv_wait_timeout(&self.cv, st, close_at - now);
+            st = g;
+            if timed_out {
+                break;
+            }
+        }
+        // tenant-fair order inside the batch: FIFO lanes per tenant,
+        // interleaved round-robin starting from the oldest lane
+        let mut lanes: Vec<(String, Vec<Pending<T>>)> = Vec::new();
+        let mut by_seq = batch;
+        by_seq.sort_by_key(|p| p.seq);
+        for p in by_seq {
+            match lanes.iter_mut().find(|(t, _)| t == p.item.tenant()) {
+                Some((_, lane)) => lane.push(p),
+                None => lanes.push((p.item.tenant().to_string(), vec![p])),
+            }
+        }
+        let batch = round_robin_merge(lanes).into_iter().map(|p| p.item).collect();
+        Drained::Work { batch, expired }
+    }
+}
+
+/// Decrement (and clean up) one tenant's waiting count.
+fn take_tenant_slot(per_tenant: &mut BTreeMap<String, usize>, tenant: &str) {
+    if let Some(n) = per_tenant.get_mut(tenant) {
+        *n -= 1;
+        if *n == 0 {
+            per_tenant.remove(tenant);
+        }
+    }
+}
+
+/// Remove up to `room` unexpired items of `group` from the queue, in
+/// seq order, keeping the admission counts in step.
+fn take_group<T: BatchItem>(st: &mut QState<T>, group: &str, room: usize) -> Vec<Pending<T>> {
+    let mut order: Vec<usize> = (0..st.items.len())
+        .filter(|&i| st.items[i].item.group() == group)
+        .collect();
+    order.sort_by_key(|&i| st.items[i].seq);
+    order.truncate(room);
+    // remove from the back so earlier indices stay valid
+    order.sort_unstable_by(|a, b| b.cmp(a));
+    let mut taken: Vec<Pending<T>> = order
+        .into_iter()
+        .map(|i| {
+            let p = st.items.remove(i);
+            take_tenant_slot(&mut st.per_tenant, p.item.tenant());
+            p
+        })
+        .collect();
+    taken.sort_by_key(|p| p.seq);
+    taken
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
+    use crate::util::prop::{check, gen};
+    use std::sync::Arc;
+
+    /// Minimal [`BatchItem`] for queue tests.
+    #[derive(Clone, Debug, PartialEq)]
+    struct Item {
+        id: usize,
+        group: String,
+        tenant: String,
+        deadline: Option<Instant>,
+    }
+
+    impl Item {
+        fn new(id: usize) -> Item {
+            Item {
+                id,
+                group: "g".into(),
+                tenant: "default".into(),
+                deadline: None,
+            }
+        }
+        fn tenant(mut self, t: &str) -> Item {
+            self.tenant = t.into();
+            self
+        }
+        fn group(mut self, g: &str) -> Item {
+            self.group = g.into();
+            self
+        }
+        fn deadline(mut self, d: Instant) -> Item {
+            self.deadline = Some(d);
+            self
+        }
+    }
+
+    impl BatchItem for Item {
+        fn group(&self) -> &str {
+            &self.group
+        }
+        fn tenant(&self) -> &str {
+            &self.tenant
+        }
+        fn deadline(&self) -> Option<Instant> {
+            self.deadline
+        }
+    }
+
+    /// `max_wait: 0` drains whatever is queued without waiting — the
+    /// deterministic setting every non-timing test uses.
+    fn eager() -> BatchPolicy {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::ZERO,
+        }
+    }
+
+    fn drain(q: &SubmitQueue<Item>, policy: &BatchPolicy) -> (Vec<Vec<Item>>, Vec<Item>) {
+        q.close();
+        let (mut batches, mut expired) = (Vec::new(), Vec::new());
+        loop {
+            match q.next_batch(policy) {
+                Drained::Work { batch, expired: e } => {
+                    if !batch.is_empty() {
+                        batches.push(batch);
+                    }
+                    expired.extend(e);
+                }
+                Drained::Idle => continue,
+                Drained::Done => return (batches, expired),
+            }
+        }
+    }
 
     #[test]
     fn batches_up_to_max() {
-        let (tx, rx) = channel();
+        let q = SubmitQueue::new(QueueConfig::default());
         for i in 0..20 {
-            tx.send(i).unwrap();
+            q.push(Item::new(i)).unwrap();
         }
-        let policy = BatchPolicy {
-            max_batch: 8,
-            max_wait: Duration::from_millis(1),
-        };
-        let b1 = collect(&rx, &policy).unwrap();
-        assert_eq!(b1, (0..8).collect::<Vec<_>>());
-        let b2 = collect(&rx, &policy).unwrap();
-        assert_eq!(b2, (8..16).collect::<Vec<_>>());
+        let (batches, expired) = drain(&q, &eager());
+        assert!(expired.is_empty());
+        let sizes: Vec<usize> = batches.iter().map(|b| b.len()).collect();
+        assert_eq!(sizes, vec![8, 8, 4]);
+        let ids: Vec<usize> = batches.concat().iter().map(|i| i.id).collect();
+        assert_eq!(ids, (0..20).collect::<Vec<_>>());
     }
 
     #[test]
-    fn none_after_disconnect() {
-        let (tx, rx) = channel::<u32>();
-        tx.send(1).unwrap();
-        drop(tx);
-        assert_eq!(collect(&rx, &BatchPolicy::default()), Some(vec![1]));
-        assert_eq!(collect(&rx, &BatchPolicy::default()), None);
+    fn sheds_at_max_depth() {
+        let q = SubmitQueue::new(QueueConfig {
+            max_depth: 3,
+            tenant_quota: None,
+        });
+        for i in 0..3 {
+            q.push(Item::new(i)).unwrap();
+        }
+        match q.push(Item::new(3)) {
+            Err(PushError::Shed { item, reason }) => {
+                assert_eq!(item.id, 3);
+                assert_eq!(reason, ShedReason::QueueFull { depth: 3 });
+            }
+            other => panic!("expected QueueFull shed, got {other:?}"),
+        }
+        // draining frees capacity again
+        let (batches, _) = drain(&q, &eager());
+        assert_eq!(batches[0].len(), 3);
     }
 
     #[test]
-    fn respects_deadline() {
-        let (tx, rx) = channel();
-        tx.send(0u32).unwrap();
+    fn tenant_quota_sheds_only_the_flooder() {
+        let q = SubmitQueue::new(QueueConfig {
+            max_depth: 100,
+            tenant_quota: Some(2),
+        });
+        q.push(Item::new(0).tenant("a")).unwrap();
+        q.push(Item::new(1).tenant("a")).unwrap();
+        match q.push(Item::new(2).tenant("a")) {
+            Err(PushError::Shed { reason, .. }) => assert_eq!(
+                reason,
+                ShedReason::TenantQuota {
+                    tenant: "a".into(),
+                    quota: 2
+                }
+            ),
+            other => panic!("expected TenantQuota shed, got {other:?}"),
+        }
+        // another tenant is unaffected
+        q.push(Item::new(3).tenant("b")).unwrap();
+        assert_eq!(q.depth(), 3);
+        assert_eq!(q.peak_depth(), 3);
+    }
+
+    #[test]
+    fn closed_queue_rejects_and_drains() {
+        let q = SubmitQueue::new(QueueConfig::default());
+        q.push(Item::new(0)).unwrap();
+        q.close();
+        assert!(matches!(q.push(Item::new(1)), Err(PushError::Closed { .. })));
+        match q.next_batch(&eager()) {
+            Drained::Work { batch, .. } => assert_eq!(batch.len(), 1),
+            other => panic!("expected the admitted request, got {other:?}"),
+        }
+        assert!(matches!(q.next_batch(&eager()), Drained::Done));
+    }
+
+    #[test]
+    fn batches_are_single_group() {
+        let q = SubmitQueue::new(QueueConfig::default());
+        q.push(Item::new(0).group("g1")).unwrap();
+        q.push(Item::new(1).group("g2")).unwrap();
+        q.push(Item::new(2).group("g1")).unwrap();
+        let (batches, _) = drain(&q, &eager());
+        // oldest request anchors the first batch to g1
+        let g: Vec<Vec<usize>> = batches
+            .iter()
+            .map(|b| b.iter().map(|i| i.id).collect())
+            .collect();
+        assert_eq!(g, vec![vec![0, 2], vec![1]]);
+    }
+
+    #[test]
+    fn expired_requests_never_batch() {
+        let q = SubmitQueue::new(QueueConfig::default());
+        let past = Instant::now() - Duration::from_millis(50);
+        let future = Instant::now() + Duration::from_secs(60);
+        q.push(Item::new(0).deadline(past)).unwrap();
+        q.push(Item::new(1).deadline(future)).unwrap();
+        q.push(Item::new(2)).unwrap();
+        let (batches, expired) = drain(&q, &eager());
+        assert_eq!(expired.iter().map(|i| i.id).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(
+            batches.concat().iter().map(|i| i.id).collect::<Vec<_>>(),
+            vec![1, 2]
+        );
+    }
+
+    #[test]
+    fn waits_for_stragglers_up_to_max_wait() {
+        let q = Arc::new(SubmitQueue::new(QueueConfig::default()));
+        q.push(Item::new(0)).unwrap();
+        let q2 = q.clone();
         let t = std::thread::spawn(move || {
-            std::thread::sleep(Duration::from_millis(50));
-            let _ = tx.send(1);
+            std::thread::sleep(Duration::from_millis(10));
+            q2.push(Item::new(1)).unwrap();
         });
         let policy = BatchPolicy {
             max_batch: 8,
-            max_wait: Duration::from_millis(5),
+            max_wait: Duration::from_millis(300),
         };
-        let b = collect(&rx, &policy).unwrap();
-        assert_eq!(b, vec![0]); // did not wait for the late request
+        match q.next_batch(&policy) {
+            Drained::Work { batch, .. } => {
+                assert_eq!(batch.iter().map(|i| i.id).collect::<Vec<_>>(), vec![0, 1]);
+            }
+            other => panic!("expected a 2-batch, got {other:?}"),
+        }
         t.join().unwrap();
     }
 
     #[test]
-    fn prop_no_loss_no_dup_fifo() {
-        use crate::util::prop::check;
-        check("batcher preserves the stream", 30, |rng| {
-            let n = 1 + rng.index(100);
-            let max_batch = 1 + rng.index(16);
-            let (tx, rx) = channel();
-            for i in 0..n {
-                tx.send(i).unwrap();
+    fn kick_wakes_idle_workers() {
+        let q: Arc<SubmitQueue<Item>> = Arc::new(SubmitQueue::new(QueueConfig::default()));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.next_batch(&eager()));
+        std::thread::sleep(Duration::from_millis(20));
+        q.kick();
+        assert!(matches!(t.join().unwrap(), Drained::Idle));
+    }
+
+    // ---- property tests over random arrival streams (prop::gen) ----
+
+    /// Map one generated [`gen::Arrival`] to a queue item. Deadline
+    /// offsets are widened to ±50 ms/+50 s so wall-clock jitter between
+    /// generation and batching cannot flip expired/live.
+    fn arrival_item(id: usize, a: &gen::Arrival) -> Item {
+        let mut it = Item::new(id)
+            .tenant(&format!("t{}", a.tenant))
+            .group(&format!("g{}", a.group));
+        it.deadline = a.deadline_us.map(|d| {
+            if d < 0 {
+                Instant::now() - Duration::from_millis(50)
+            } else {
+                Instant::now() + Duration::from_secs(50)
             }
-            drop(tx);
+        });
+        it
+    }
+
+    #[test]
+    fn prop_no_expired_in_batch_no_oversize_single_group() {
+        check("deadline batcher invariants", 40, |rng| {
+            let stream = gen::arrivals(rng, 60);
+            let max_batch = 1 + rng.index(9);
+            let q = SubmitQueue::new(QueueConfig::default());
+            for (i, a) in stream.iter().enumerate() {
+                q.push(arrival_item(i, a)).unwrap();
+            }
             let policy = BatchPolicy {
                 max_batch,
-                max_wait: Duration::from_millis(1),
+                max_wait: Duration::ZERO,
             };
-            let mut seen = Vec::new();
-            while let Some(batch) = collect(&rx, &policy) {
-                assert!(batch.len() <= max_batch);
-                seen.extend(batch);
+            let (batches, expired) = drain(&q, &policy);
+            let mut seen = 0;
+            for b in &batches {
+                assert!(!b.is_empty() && b.len() <= max_batch, "batch size {}", b.len());
+                // single group per batch
+                assert!(b.iter().all(|i| i.group == b[0].group), "mixed groups: {b:?}");
+                // no already-expired member
+                for i in b {
+                    assert!(
+                        stream[i.id].deadline_us.map(|d| d >= 0).unwrap_or(true),
+                        "expired request {} reached a batch",
+                        i.id
+                    );
+                }
+                seen += b.len();
             }
-            assert_eq!(seen, (0..n).collect::<Vec<_>>());
+            // every expired stream entry is handed back, none executed
+            for i in &expired {
+                assert!(stream[i.id].deadline_us.unwrap() < 0);
+            }
+            assert_eq!(seen + expired.len(), stream.len(), "requests lost or duplicated");
+        });
+    }
+
+    #[test]
+    fn prop_fifo_holds_within_tenant() {
+        check("tenant FIFO under fair dequeue", 40, |rng| {
+            let stream: Vec<gen::Arrival> = gen::arrivals(rng, 60)
+                .into_iter()
+                .map(|mut a| {
+                    a.deadline_us = None; // FIFO property wants no expiry holes
+                    a
+                })
+                .collect();
+            let q = SubmitQueue::new(QueueConfig::default());
+            for (i, a) in stream.iter().enumerate() {
+                q.push(arrival_item(i, a)).unwrap();
+            }
+            let policy = BatchPolicy {
+                max_batch: 1 + rng.index(9),
+                max_wait: Duration::ZERO,
+            };
+            let (batches, _) = drain(&q, &policy);
+            let mut last: BTreeMap<String, usize> = BTreeMap::new();
+            for item in batches.concat() {
+                if let Some(&prev) = last.get(&item.tenant) {
+                    assert!(
+                        item.id > prev,
+                        "tenant {} served {} after {}",
+                        item.tenant,
+                        item.id,
+                        prev
+                    );
+                }
+                last.insert(item.tenant.clone(), item.id);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_admission_never_exceeds_bounds() {
+        check("bounded admission", 40, |rng| {
+            let depth = 1 + rng.index(8);
+            let quota = 1 + rng.index(4);
+            let q = SubmitQueue::new(QueueConfig {
+                max_depth: depth,
+                tenant_quota: Some(quota),
+            });
+            let stream = gen::arrivals(rng, 40);
+            let mut admitted = 0usize;
+            for (i, a) in stream.iter().enumerate() {
+                let mut it = arrival_item(i, a);
+                it.deadline = None;
+                match q.push(it) {
+                    Ok(d) => {
+                        admitted += 1;
+                        assert!(d <= depth, "depth {d} exceeded bound {depth}");
+                    }
+                    Err(PushError::Shed { .. }) => {}
+                    Err(PushError::Closed { .. }) => unreachable!(),
+                }
+                assert!(q.depth() <= depth);
+            }
+            let (batches, expired) = drain(&q, &eager());
+            assert!(expired.is_empty());
+            let drained: usize = batches.iter().map(|b| b.len()).sum();
+            assert_eq!(drained, admitted, "admitted requests dropped");
         });
     }
 }

@@ -15,9 +15,19 @@ use std::time::Duration;
 
 use crate::util::sync::{Arc, Mutex};
 
+use super::batcher::ShedReason;
 use crate::obs::counters::{EncSnapshot, VariantObsSnapshot};
 use crate::util::json::Value;
 use crate::util::stats::Summary;
+
+/// Per-tenant admission accounting.
+#[derive(Default, Clone, Debug)]
+pub struct TenantMetrics {
+    /// Requests this tenant got past admission control.
+    pub admitted: u64,
+    /// Requests shed at admission (queue full or over quota).
+    pub shed: u64,
+}
 
 /// Per-variant latency accounting.
 #[derive(Default)]
@@ -53,6 +63,24 @@ pub struct Metrics {
     pub batch_size: Summary,
     /// Per-variant accounting, keyed by the resolved variant string.
     pub per_variant: BTreeMap<String, VariantMetrics>,
+    /// Requests admitted past the bounded submission queue.
+    pub admitted: u64,
+    /// Requests shed because the queue was at `max_depth`.
+    pub shed_queue_full: u64,
+    /// Requests shed because their tenant was over quota.
+    pub shed_tenant_quota: u64,
+    /// Admitted requests whose deadline expired while queued (they got
+    /// an explicit `DeadlineExceeded` reply, never a silent drop).
+    pub deadline_exceeded: u64,
+    /// Batches executed per replica (index = replica id; grows as
+    /// replicas are added). A frozen entry while others grow is the
+    /// signature of a dead replica no longer pulling work.
+    pub replica_batches: Vec<u64>,
+    /// Replica workers that died mid-batch (panic isolation). Lifecycle
+    /// health, not traffic: survives [`Metrics::reset`].
+    pub replica_failures: u64,
+    /// Per-tenant admission accounting.
+    pub per_tenant: BTreeMap<String, TenantMetrics>,
     /// Variant key of the bandit's pinned control arm, when outcome-
     /// aware routing is installed. Configuration, not measurement: it
     /// survives [`Metrics::reset`].
@@ -117,6 +145,31 @@ pub struct MetricsSnapshot {
     pub e2e_sum_us: f64,
     /// Keyed by the resolved variant string (e.g. `plan:a`, `fp32`).
     pub per_variant: BTreeMap<String, VariantSnapshot>,
+    /// Requests admitted past the bounded submission queue.
+    pub admitted: u64,
+    /// Requests shed at admission: queue at `max_depth`.
+    pub shed_queue_full: u64,
+    /// Requests shed at admission: tenant over quota.
+    pub shed_tenant_quota: u64,
+    /// Shed fraction of all admission decisions:
+    /// `shed / (shed + admitted)`, 0.0 before any traffic.
+    pub shed_rate: f64,
+    /// Admitted requests expired in the queue (explicit error reply).
+    pub deadline_exceeded: u64,
+    /// Live waiting-request count (filled by `ModelHandle::metrics`).
+    pub queue_depth: usize,
+    /// High-water mark of the waiting-request count.
+    pub queue_peak_depth: usize,
+    /// Configured replica count (filled by `ModelHandle::metrics`).
+    pub replicas_target: usize,
+    /// Replicas currently alive (target minus dead/retired).
+    pub replicas_alive: usize,
+    /// Replica workers that died mid-batch so far.
+    pub replica_failures: u64,
+    /// Batches executed per replica (index = replica id).
+    pub replica_batches: Vec<u64>,
+    /// Per-tenant admitted/shed counts.
+    pub per_tenant: BTreeMap<String, TenantMetrics>,
     /// The bandit's pinned control arm, when outcome-aware routing is
     /// installed.
     pub control_arm: Option<String>,
@@ -170,6 +223,39 @@ impl Metrics {
         v.reward_sum += reward;
     }
 
+    /// Account one request admitted past the submission queue.
+    pub fn record_admitted(&mut self, tenant: &str) {
+        self.admitted += 1;
+        self.per_tenant.entry(tenant.to_string()).or_default().admitted += 1;
+    }
+
+    /// Account one request shed at admission.
+    pub fn record_shed(&mut self, tenant: &str, reason: &ShedReason) {
+        match reason {
+            ShedReason::QueueFull { .. } => self.shed_queue_full += 1,
+            ShedReason::TenantQuota { .. } => self.shed_tenant_quota += 1,
+        }
+        self.per_tenant.entry(tenant.to_string()).or_default().shed += 1;
+    }
+
+    /// Account admitted requests that expired while queued.
+    pub fn record_deadline_exceeded(&mut self, n: usize) {
+        self.deadline_exceeded += n as u64;
+    }
+
+    /// Account one batch executed by replica `id`.
+    pub fn record_replica_batch(&mut self, id: usize) {
+        if self.replica_batches.len() <= id {
+            self.replica_batches.resize(id + 1, 0);
+        }
+        self.replica_batches[id] += 1;
+    }
+
+    /// Account one replica worker dying mid-batch.
+    pub fn record_replica_failure(&mut self) {
+        self.replica_failures += 1;
+    }
+
     /// Account one plan swap applied by the plan watcher.
     pub fn record_plan_swap(&mut self) {
         self.plan_swaps += 1;
@@ -193,11 +279,15 @@ impl Metrics {
         let control = self.control_arm.take();
         let (swaps, werrs) = (self.plan_swaps, self.watch_errors);
         let last = self.last_watch_error.take();
+        let failures = self.replica_failures;
         *self = Metrics::default();
         self.control_arm = control;
         self.plan_swaps = swaps;
         self.watch_errors = werrs;
         self.last_watch_error = last;
+        // replica deaths are lifecycle health like the watch counters:
+        // a measurement window must not hide an earlier crash
+        self.replica_failures = failures;
     }
 
     /// Point-in-time copy with derived means/percentiles.
@@ -262,6 +352,27 @@ impl Metrics {
             plan_swaps: self.plan_swaps,
             watch_errors: self.watch_errors,
             last_watch_error: self.last_watch_error.clone(),
+            admitted: self.admitted,
+            shed_queue_full: self.shed_queue_full,
+            shed_tenant_quota: self.shed_tenant_quota,
+            shed_rate: {
+                let shed = self.shed_queue_full + self.shed_tenant_quota;
+                let total = shed + self.admitted;
+                if total > 0 {
+                    shed as f64 / total as f64
+                } else {
+                    0.0
+                }
+            },
+            deadline_exceeded: self.deadline_exceeded,
+            // live queue/replica gauges are injected by ModelHandle::metrics
+            queue_depth: 0,
+            queue_peak_depth: 0,
+            replicas_target: 0,
+            replicas_alive: 0,
+            replica_failures: self.replica_failures,
+            replica_batches: self.replica_batches.clone(),
+            per_tenant: self.per_tenant.clone(),
         }
     }
 }
@@ -349,6 +460,117 @@ impl MetricsSnapshot {
             "Trace events dropped by the ring",
         );
         o.push_str(&format!("overq_trace_dropped_total {trace_dropped}\n"));
+        head(
+            &mut o,
+            "overq_admitted_total",
+            "counter",
+            "Requests admitted past the bounded submission queue",
+        );
+        o.push_str(&format!("overq_admitted_total {}\n", self.admitted));
+        head(
+            &mut o,
+            "overq_shed_total",
+            "counter",
+            "Requests shed at admission, by reason",
+        );
+        o.push_str(&format!(
+            "overq_shed_total{{reason=\"queue_full\"}} {}\n",
+            self.shed_queue_full
+        ));
+        o.push_str(&format!(
+            "overq_shed_total{{reason=\"tenant_quota\"}} {}\n",
+            self.shed_tenant_quota
+        ));
+        head(
+            &mut o,
+            "overq_shed_rate",
+            "gauge",
+            "Shed fraction of admission decisions",
+        );
+        o.push_str(&format!("overq_shed_rate {}\n", pnum(self.shed_rate)));
+        head(
+            &mut o,
+            "overq_deadline_exceeded_total",
+            "counter",
+            "Admitted requests expired in the queue",
+        );
+        o.push_str(&format!(
+            "overq_deadline_exceeded_total {}\n",
+            self.deadline_exceeded
+        ));
+        head(
+            &mut o,
+            "overq_queue_depth",
+            "gauge",
+            "Requests waiting in the submission queue",
+        );
+        o.push_str(&format!("overq_queue_depth {}\n", self.queue_depth));
+        head(
+            &mut o,
+            "overq_queue_peak_depth",
+            "gauge",
+            "High-water mark of the submission queue",
+        );
+        o.push_str(&format!("overq_queue_peak_depth {}\n", self.queue_peak_depth));
+        head(
+            &mut o,
+            "overq_replicas",
+            "gauge",
+            "Replica workers for this model, by state",
+        );
+        o.push_str(&format!(
+            "overq_replicas{{state=\"target\"}} {}\n",
+            self.replicas_target
+        ));
+        o.push_str(&format!(
+            "overq_replicas{{state=\"alive\"}} {}\n",
+            self.replicas_alive
+        ));
+        head(
+            &mut o,
+            "overq_replica_failures_total",
+            "counter",
+            "Replica workers that died mid-batch",
+        );
+        o.push_str(&format!(
+            "overq_replica_failures_total {}\n",
+            self.replica_failures
+        ));
+        head(
+            &mut o,
+            "overq_replica_batches_total",
+            "counter",
+            "Batches executed per replica",
+        );
+        for (id, n) in self.replica_batches.iter().enumerate() {
+            o.push_str(&format!(
+                "overq_replica_batches_total{{replica=\"{id}\"}} {n}\n"
+            ));
+        }
+        head(
+            &mut o,
+            "overq_tenant_admitted_total",
+            "counter",
+            "Requests admitted per tenant",
+        );
+        for (t, v) in &self.per_tenant {
+            o.push_str(&format!(
+                "overq_tenant_admitted_total{{tenant=\"{t}\"}} {}\n",
+                v.admitted
+            ));
+        }
+        head(
+            &mut o,
+            "overq_tenant_shed_total",
+            "counter",
+            "Requests shed per tenant",
+        );
+        for (t, v) in &self.per_tenant {
+            o.push_str(&format!(
+                "overq_tenant_shed_total{{tenant=\"{t}\"}} {}\n",
+                v.shed
+            ));
+        }
 
         head(
             &mut o,
@@ -604,6 +826,60 @@ impl MetricsSnapshot {
             "trace_dropped".to_string(),
             Value::Num(trace_dropped as f64),
         );
+        m.insert("admitted".to_string(), Value::Num(self.admitted as f64));
+        m.insert(
+            "shed_queue_full".to_string(),
+            Value::Num(self.shed_queue_full as f64),
+        );
+        m.insert(
+            "shed_tenant_quota".to_string(),
+            Value::Num(self.shed_tenant_quota as f64),
+        );
+        m.insert("shed_rate".to_string(), Value::Num(self.shed_rate));
+        m.insert(
+            "deadline_exceeded".to_string(),
+            Value::Num(self.deadline_exceeded as f64),
+        );
+        m.insert(
+            "queue_depth".to_string(),
+            Value::Num(self.queue_depth as f64),
+        );
+        m.insert(
+            "queue_peak_depth".to_string(),
+            Value::Num(self.queue_peak_depth as f64),
+        );
+        m.insert(
+            "replicas_target".to_string(),
+            Value::Num(self.replicas_target as f64),
+        );
+        m.insert(
+            "replicas_alive".to_string(),
+            Value::Num(self.replicas_alive as f64),
+        );
+        m.insert(
+            "replica_failures".to_string(),
+            Value::Num(self.replica_failures as f64),
+        );
+        m.insert(
+            "replica_batches".to_string(),
+            Value::Arr(
+                self.replica_batches
+                    .iter()
+                    .map(|&n| Value::Num(n as f64))
+                    .collect(),
+            ),
+        );
+        let tenants: BTreeMap<String, Value> = self
+            .per_tenant
+            .iter()
+            .map(|(t, v)| {
+                let mut tm = BTreeMap::new();
+                tm.insert("admitted".to_string(), Value::Num(v.admitted as f64));
+                tm.insert("shed".to_string(), Value::Num(v.shed as f64));
+                (t.clone(), Value::Obj(tm))
+            })
+            .collect();
+        m.insert("per_tenant".to_string(), Value::Obj(tenants));
         if let Some(c) = &self.control_arm {
             m.insert("control_arm".to_string(), Value::Str(c.clone()));
         }
@@ -821,6 +1097,56 @@ mod tests {
         assert_eq!(s.plan_swaps, 1);
         assert_eq!(s.watch_errors, 1);
         assert_eq!(s.last_watch_error.as_deref(), Some("plans/bad.plan.json: parse error"));
+    }
+
+    #[test]
+    fn admission_shed_and_replica_accounting() {
+        let m = shared();
+        {
+            let mut g = m.lock().unwrap();
+            for _ in 0..6 {
+                g.record_admitted("acme");
+            }
+            g.record_admitted("beta");
+            g.record_shed("acme", &ShedReason::QueueFull { depth: 8 });
+            g.record_shed(
+                "acme",
+                &ShedReason::TenantQuota {
+                    tenant: "acme".into(),
+                    quota: 4,
+                },
+            );
+            g.record_deadline_exceeded(3);
+            g.record_replica_batch(0);
+            g.record_replica_batch(2); // replica 1 never executed
+            g.record_replica_failure();
+        }
+        let s = m.lock().unwrap().snapshot();
+        assert_eq!(s.admitted, 7);
+        assert_eq!(s.shed_queue_full, 1);
+        assert_eq!(s.shed_tenant_quota, 1);
+        assert!((s.shed_rate - 2.0 / 9.0).abs() < 1e-12, "{}", s.shed_rate);
+        assert_eq!(s.deadline_exceeded, 3);
+        assert_eq!(s.replica_batches, vec![1, 0, 1]);
+        assert_eq!(s.replica_failures, 1);
+        assert_eq!(s.per_tenant["acme"].admitted, 6);
+        assert_eq!(s.per_tenant["acme"].shed, 2);
+        assert_eq!(s.per_tenant["beta"].shed, 0);
+
+        // shed/admission counters are traffic (reset), replica deaths
+        // are lifecycle health (survive)
+        m.lock().unwrap().reset();
+        let s = m.lock().unwrap().snapshot();
+        assert_eq!(s.admitted, 0);
+        assert_eq!(s.shed_rate, 0.0);
+        assert!(s.per_tenant.is_empty());
+        assert_eq!(s.replica_failures, 1);
+
+        // the new families render under the exposition grammar
+        let text = m.lock().unwrap().snapshot().render_prometheus(&[], 0);
+        assert!(text.contains("overq_shed_total{reason=\"queue_full\"} 0"));
+        assert!(text.contains("overq_replica_failures_total 1"));
+        assert!(text.contains("overq_queue_depth 0"));
     }
 
     /// 50 requests on `plan:p` plus one enc point's OverQ counters

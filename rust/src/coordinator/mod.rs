@@ -1,17 +1,20 @@
 //! Serving coordinator — the L3 request path.
 //!
 //! Architecture: a [`Coordinator`] hosts N model shards; each shard is
-//! a single worker thread (an actor owning the non-`Send` PJRT state)
-//! that drains its queue through the [`batcher`], routes each group to
+//! a bounded, deadline-aware submission queue ([`batcher`]) drained by
+//! a fleet of replica worker threads. Replicas pull cross-request
+//! batches (single variant group, tenant-fair), route each batch to
 //! the best-fitting compiled executable ([`router`]) or to the native
 //! engine backend (deployment-plan variants `plan:<name>` and the fp32
-//! reference paths), executes, and replies per-request. Clients hold a
-//! cheap [`ModelHandle`] and submit typed [`VariantSpec`]s ([`variant`])
-//! that are validated at `submit` time; weighted A/B traffic splits
-//! resolve through a deterministic seeded router so experiments
-//! reproduce exactly. Python never appears on this path — the
-//! executables were AOT-compiled by `make artifacts`, and plan variants
-//! run the in-process engine.
+//! reference paths), execute, and reply per-request. Overload sheds at
+//! admission with typed errors instead of queueing unboundedly, and a
+//! panicking replica fail-stops without taking the shard down. Clients
+//! hold a cheap [`ModelHandle`] and submit typed [`VariantSpec`]s
+//! ([`variant`]) that are validated at `submit` time; weighted A/B
+//! traffic splits resolve through a deterministic seeded router so
+//! experiments reproduce exactly. Python never appears on this path —
+//! the executables were AOT-compiled by `make artifacts`, and plan
+//! variants run the in-process engine.
 //!
 //! Day-2 operation is closed-loop: [`router::BanditRouter`] learns
 //! outcome-aware split weights from live per-variant rewards (with a
@@ -35,11 +38,14 @@ pub mod telemetry;
 pub mod variant;
 pub mod watch;
 
-pub use metrics::{MetricsSnapshot, VariantSnapshot};
-pub use router::{ArmStats, BanditConfig, BanditRouter, BanditStrategy};
+pub use batcher::{
+    BatchItem, BatchPolicy, Drained, PushError, QueueConfig, ShedReason, SubmitQueue,
+};
+pub use metrics::{MetricsSnapshot, TenantMetrics, VariantSnapshot};
+pub use router::{round_robin_merge, ArmStats, BanditConfig, BanditRouter, BanditStrategy};
 pub use server::{
-    Coordinator, InferRequest, InferResponse, InferResult, ModelHandle, RoutingPolicy,
-    ServerBuilder,
+    Coordinator, InferRequest, InferResponse, InferResult, ModelHandle, ReplicaFault,
+    RoutingPolicy, ServeError, ServerBuilder, SubmitOpts,
 };
 pub use telemetry::TelemetryServer;
 pub use variant::{Backend, VariantSpec};

@@ -34,6 +34,34 @@ pub fn chunks(pending: usize, exe_batch: usize) -> Vec<usize> {
     out
 }
 
+/// Tenant-fair dequeue order: interleave per-tenant FIFO lanes round-
+/// robin, one item per lane per round, starting from the lane holding
+/// the globally oldest item. Within a lane the input order is
+/// preserved, so FIFO holds per tenant while no tenant can monopolise a
+/// batch just by flooding the queue. `lanes` are (lane, items) pairs
+/// sorted so that `lanes[0]` holds the oldest item; returns the merged
+/// item sequence.
+///
+/// ```
+/// use overq::coordinator::router::round_robin_merge;
+/// let lanes = vec![("a", vec![1, 2, 3]), ("b", vec![10])];
+/// assert_eq!(round_robin_merge(lanes), vec![1, 10, 2, 3]);
+/// ```
+pub fn round_robin_merge<L, T>(lanes: Vec<(L, Vec<T>)>) -> Vec<T> {
+    let total: usize = lanes.iter().map(|(_, v)| v.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    let mut iters: Vec<std::vec::IntoIter<T>> =
+        lanes.into_iter().map(|(_, v)| v.into_iter()).collect();
+    while out.len() < total {
+        for it in iters.iter_mut() {
+            if let Some(x) = it.next() {
+                out.push(x);
+            }
+        }
+    }
+    out
+}
+
 /// Pick an arm index proportionally to `weights` with one uniform draw
 /// from `rng`. Weights must be positive; the caller validates. Because
 /// the RNG is owned by the shard and seeded at build time, the arm

@@ -1,13 +1,16 @@
 //! The multi-model serving coordinator: typed requests → per-model
-//! shards → batcher → execution backends.
+//! shards → shared submission queue → replica workers → execution
+//! backends.
 //!
-//! A [`Coordinator`] owns N model shards. Each shard is one worker
-//! thread owning all execution state for its model — the actor pattern —
-//! with its own engine, [`ExecutableCache`] and registered deployment
-//! plans. Clients resolve a cheap, cloneable [`ModelHandle`] once
+//! A [`Coordinator`] owns N model shards. Each shard is a bounded
+//! [`SubmitQueue`] pulled by a *fleet* of replica worker threads
+//! ([`ServerBuilder::replicas`]); every replica owns its own execution
+//! state (engine handle, [`ExecutableCache`]) while the queue, the
+//! published plan map, metrics and telemetry are shared. Clients
+//! resolve a cheap, cloneable [`ModelHandle`] once
 //! (`coordinator.model("resnet18m")?`) and submit typed
 //! [`VariantSpec`]s; unknown variants fail at `submit` time, not inside
-//! the worker. Two backends hang off the same batching/metrics pipeline:
+//! a worker. Two backends hang off the same batching/metrics pipeline:
 //!
 //! * **PJRT** — AOT-compiled HLO executables from `make artifacts`
 //!   (requires the `pjrt` feature), keyed (model, variant, batch).
@@ -18,6 +21,25 @@
 //!   artifacts are needed when the model is handed over in-process
 //!   ([`ServerBuilder::model_local`]).
 //!
+//! The serving layer is load-safe by construction (docs/serving.md,
+//! "Fleet scaling"):
+//!
+//! * **Backpressure** — the queue is bounded ([`ServerBuilder::max_queue`])
+//!   with optional per-tenant admission quotas
+//!   ([`ServerBuilder::tenant_quota`]); overload sheds synchronously
+//!   with a typed [`ServeError::Shed`] instead of queueing unboundedly.
+//! * **Deadlines** — [`SubmitOpts::deadline`] bounds queue residency;
+//!   expired requests get [`ServeError::DeadlineExceeded`], never a
+//!   stale execution.
+//! * **Fail-stop replicas** — a panicking replica errors out its
+//!   in-flight batch ([`ServeError::ReplicaFailed`]), marks itself
+//!   dead and stops pulling work; the surviving replicas keep serving.
+//!   [`ModelHandle::set_replicas`] respawns capacity.
+//! * **Cross-shard placement** — co-hosted models share one PE-area
+//!   budget ([`ServerBuilder::area_budget`]); `install_plan` charges
+//!   `plan.total_area × replicas` against it and either shrinks the
+//!   fleet to fit or refuses the plan.
+//!
 //! The admin plane lives on the handle: [`ModelHandle::register_plan`],
 //! [`ModelHandle::swap_plan`] (hot-swap the plan behind an alias without
 //! dropping in-flight requests), [`ModelHandle::set_traffic_split`]
@@ -27,14 +49,15 @@
 //!
 //! So does the telemetry plane: each shard owns a trace ring
 //! ([`ModelHandle::set_tracing`] / [`ModelHandle::drain_events`]) and an
-//! OverQ coverage/drift counter registry fed by the worker's quantized
+//! OverQ coverage/drift counter registry fed by the workers' quantized
 //! forward passes ([`ModelHandle::obs_snapshot`]); both export through
 //! [`ModelHandle::prometheus`] / [`ModelHandle::stats_json`]
 //! (docs/observability.md).
 
-use std::collections::{HashMap, HashSet};
-use std::path::Path;
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -52,15 +75,26 @@ use crate::runtime::pjrt::Input;
 use crate::tensor::TensorF;
 use crate::util::rng::Rng;
 
-use super::batcher::{collect, BatchPolicy};
+use super::batcher::{BatchItem, BatchPolicy, Drained, PushError, QueueConfig, ShedReason,
+                     SubmitQueue};
 use super::metrics::{shared, MetricsSnapshot, SharedMetrics};
 use super::router::{chunks, pick_batch, pick_weighted, ArmStats, BanditConfig, BanditRouter};
 use super::variant::{Backend, VariantSpec};
 use super::watch;
 
 /// The outcome-aware router shared between the submit path (picks) and
-/// the shard worker (reward feedback); `None` = fixed-weight routing.
+/// the shard workers (reward feedback); `None` = fixed-weight routing.
 type SharedBandit = Arc<Mutex<Option<BanditRouter>>>;
+
+/// Published plans, shared between the admin plane (writes) and every
+/// replica (reads at batch execution). A plan body is inserted here
+/// *before* its alias becomes submit-visible, so any request passing
+/// the fail-fast check finds its plan.
+type SharedPlans = Arc<Mutex<HashMap<String, Arc<DeploymentPlan>>>>;
+
+/// The armed test-only replica fault, if any (see
+/// [`ModelHandle::inject_replica_fault`]).
+type SharedFault = Arc<Mutex<Option<ReplicaFault>>>;
 
 /// Per-shard trace ring capacity (events). Beyond it the oldest events
 /// are dropped and counted ([`ModelHandle::trace_dropped`]), never
@@ -81,6 +115,99 @@ pub enum RoutingPolicy {
     Bandit(BanditConfig),
 }
 
+/// Typed per-request failure. Reaches clients through [`InferResult`];
+/// the blocking helpers ([`ModelHandle::infer`]) wrap it in `anyhow`
+/// so callers can `downcast_ref::<ServeError>()` to branch on the kind.
+#[derive(Clone, Debug)]
+pub enum ServeError {
+    /// Shed at admission — queue full or tenant over quota. The request
+    /// never entered the queue.
+    Shed(ShedReason),
+    /// The request's deadline passed while it waited in the queue.
+    DeadlineExceeded {
+        /// How long the request had been queued when it was swept.
+        queued: Duration,
+    },
+    /// The replica executing this request's batch died mid-batch
+    /// (fail-stop); retry is safe, surviving replicas keep serving.
+    ReplicaFailed(String),
+    /// The execution backend failed (missing artifact, engine error).
+    Backend(String),
+    /// The coordinator is shut down or this shard has no live replica.
+    Stopped,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Shed(r) => write!(f, "request shed: {r}"),
+            ServeError::DeadlineExceeded { queued } => {
+                write!(f, "deadline exceeded after {queued:?} queued")
+            }
+            ServeError::ReplicaFailed(m) => write!(f, "replica died mid-batch: {m}"),
+            // backend failures render bare: they carry their own context
+            ServeError::Backend(m) => write!(f, "{m}"),
+            ServeError::Stopped => write!(f, "coordinator stopped"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl ServeError {
+    /// The shed reason, when this is an admission-control rejection.
+    pub fn shed_reason(&self) -> Option<&ShedReason> {
+        match self {
+            ServeError::Shed(r) => Some(r),
+            _ => None,
+        }
+    }
+}
+
+/// Per-submit options: tenant attribution for admission control and an
+/// optional queue-residency deadline.
+#[derive(Clone, Debug, Default)]
+pub struct SubmitOpts {
+    /// Admission-control tenant (default `"default"`). Quotas
+    /// ([`ServerBuilder::tenant_quota`]) and the fair-dequeue order are
+    /// keyed by this.
+    pub tenant: Option<String>,
+    /// Longest this request may wait in the queue, measured from
+    /// submit. Past it the request is swept with
+    /// [`ServeError::DeadlineExceeded`] instead of executing stale.
+    pub deadline: Option<Duration>,
+}
+
+impl SubmitOpts {
+    /// Options for `tenant`, no deadline.
+    pub fn tenant(t: &str) -> SubmitOpts {
+        SubmitOpts {
+            tenant: Some(t.to_string()),
+            deadline: None,
+        }
+    }
+
+    /// Options with a queue-residency `deadline`, default tenant.
+    pub fn deadline(d: Duration) -> SubmitOpts {
+        SubmitOpts {
+            tenant: None,
+            deadline: Some(d),
+        }
+    }
+}
+
+/// Test-only fault injection (see [`ModelHandle::inject_replica_fault`]):
+/// the *next* replica to pick up a batch trips the armed fault.
+#[derive(Clone, Debug)]
+pub enum ReplicaFault {
+    /// Panic mid-batch: the replica fail-stops, its batch gets
+    /// [`ServeError::ReplicaFailed`] replies.
+    PanicNextBatch,
+    /// Stall for the duration before executing the batch (a wedged
+    /// replica; it stays alive).
+    StallNextBatch(Duration),
+}
+
 /// A single inference request (one image), already resolved to a
 /// non-split variant.
 pub struct InferRequest {
@@ -88,10 +215,29 @@ pub struct InferRequest {
     pub image: TensorF,
     /// Resolved (non-split) variant to execute.
     pub spec: VariantSpec,
+    /// Batch-compatibility key (the resolved variant key); cached so
+    /// the queue never re-derives it under its lock.
+    pub group: String,
+    /// Admission-control tenant.
+    pub tenant: String,
+    /// Absolute queue-residency deadline, if any.
+    pub deadline: Option<Instant>,
     /// When the client submitted (for queue/e2e latency accounting).
     pub submitted: Instant,
-    /// Where the worker sends this request's [`InferResult`].
+    /// Where the executing replica sends this request's [`InferResult`].
     pub resp: SyncSender<InferResult>,
+}
+
+impl BatchItem for InferRequest {
+    fn group(&self) -> &str {
+        &self.group
+    }
+    fn tenant(&self) -> &str {
+        &self.tenant
+    }
+    fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
 }
 
 /// Reply for one request.
@@ -107,16 +253,9 @@ pub struct InferResponse {
     pub e2e: Duration,
 }
 
-/// Per-request outcome: backend failures reach the client instead of
-/// killing the worker.
-pub type InferResult = std::result::Result<InferResponse, String>;
-
-/// Messages into a shard worker.
-enum Msg {
-    Infer(InferRequest),
-    /// Install `plan` so that requests for `plan:<alias>` run it.
-    InstallPlan { alias: String, plan: DeploymentPlan },
-}
+/// Per-request outcome: typed failures ([`ServeError`]) reach the
+/// client instead of killing the worker.
+pub type InferResult = std::result::Result<InferResponse, ServeError>;
 
 /// One model registration inside [`ServerBuilder`].
 struct ModelSpec {
@@ -124,6 +263,7 @@ struct ModelSpec {
     local: Option<LoadedModel>,
     act_scales: Vec<f32>,
     input_dims: Vec<usize>,
+    replicas: usize,
 }
 
 /// Builder for a [`Coordinator`] — replaces the old bare `ServerConfig`.
@@ -133,8 +273,11 @@ struct ModelSpec {
 /// # fn main() -> anyhow::Result<()> {
 /// let coord = Coordinator::builder()
 ///     .model("resnet18m")
+///     .replicas(2)
 ///     .model("resnet50m")
 ///     .seed(7)
+///     .max_queue(512)
+///     .tenant_quota(128)
 ///     .build()?;
 /// let handle = coord.model("resnet18m")?;
 /// # Ok(())
@@ -144,6 +287,8 @@ pub struct ServerBuilder {
     policy: BatchPolicy,
     seed: u64,
     models: Vec<ModelSpec>,
+    queue_cfg: QueueConfig,
+    area_budget: Option<f64>,
     /// A builder-misuse message (e.g. per-model setter before any
     /// model); surfaced as an error from [`ServerBuilder::build`].
     misuse: Option<String>,
@@ -163,6 +308,8 @@ impl ServerBuilder {
             policy: BatchPolicy::default(),
             seed: 0x0A0B_5EED,
             models: Vec::new(),
+            queue_cfg: QueueConfig::default(),
+            area_budget: None,
             misuse: None,
         }
     }
@@ -179,6 +326,32 @@ impl ServerBuilder {
         self
     }
 
+    /// Bound every shard's submission queue: pushes beyond `depth`
+    /// waiting requests shed with [`ServeError::Shed`] instead of
+    /// queueing (default 4096).
+    pub fn max_queue(mut self, depth: usize) -> Self {
+        self.queue_cfg.max_depth = depth.max(1);
+        self
+    }
+
+    /// Per-tenant admission quota: one tenant may hold at most `quota`
+    /// waiting requests per shard; beyond it that tenant (and only that
+    /// tenant) sheds. Default: no per-tenant cap.
+    pub fn tenant_quota(mut self, quota: usize) -> Self {
+        self.queue_cfg.tenant_quota = Some(quota.max(1));
+        self
+    }
+
+    /// Shared PE-area budget across *all* hosted models: each model is
+    /// charged its largest installed plan's `total_area` times its
+    /// replica count, and `install_plan` shrinks the fleet to fit or
+    /// refuses plans that cannot (docs/operations.md). Default: no
+    /// budget.
+    pub fn area_budget(mut self, budget: f64) -> Self {
+        self.area_budget = Some(budget);
+        self
+    }
+
     /// Add an artifact-backed model shard (requires `make artifacts`).
     pub fn model(mut self, name: &str) -> Self {
         self.models.push(ModelSpec {
@@ -186,6 +359,7 @@ impl ServerBuilder {
             local: None,
             act_scales: Vec::new(),
             input_dims: vec![16, 16, 3],
+            replicas: 1,
         });
         self
     }
@@ -199,7 +373,28 @@ impl ServerBuilder {
             local: Some(model),
             act_scales: Vec::new(),
             input_dims: vec![16, 16, 3],
+            replicas: 1,
         });
+        self
+    }
+
+    /// Replica count for the most recently added model (default 1):
+    /// that many worker threads pull batches from the shard's queue.
+    /// Calling this before any `model`/`model_local`, or with 0, is a
+    /// build-time error, not a silent no-op.
+    pub fn replicas(mut self, n: usize) -> Self {
+        if n == 0 {
+            self.misuse
+                .get_or_insert_with(|| "replicas(0): a model needs at least one".to_string());
+            return self;
+        }
+        match self.models.last_mut() {
+            Some(m) => m.replicas = n,
+            None => {
+                self.misuse
+                    .get_or_insert_with(|| "replicas() called before any model".to_string());
+            }
+        }
         self
     }
 
@@ -232,12 +427,14 @@ impl ServerBuilder {
         self
     }
 
-    /// Spawn one worker per registered model.
+    /// Spawn the replica fleet for every registered model.
     pub fn build(self) -> Result<Coordinator> {
         let ServerBuilder {
             policy,
             seed,
             models,
+            queue_cfg,
+            area_budget,
             misuse,
         } = self;
         if let Some(m) = misuse {
@@ -247,7 +444,7 @@ impl ServerBuilder {
         let arts_root = Artifacts::locate().ok().map(|a| a.root);
 
         // validate every spec BEFORE spawning any worker, so a failed
-        // build never leaves orphaned shard threads behind
+        // build never leaves orphaned replica threads behind
         let probe = match &arts_root {
             Some(r) => Some(Artifacts::open(r)?),
             None => None,
@@ -268,13 +465,15 @@ impl ServerBuilder {
             );
         }
 
+        // one PE-area ledger shared by every shard (cross-shard placement)
+        let area = Arc::new(Mutex::new(AreaLedger {
+            budget: area_budget,
+            usage: BTreeMap::new(),
+        }));
+
         let mut shards: Vec<Arc<Shard>> = Vec::with_capacity(models.len());
         for (i, spec) in models.into_iter().enumerate() {
-            let arts = match &arts_root {
-                Some(r) => Some(Artifacts::open(r)?),
-                None => None,
-            };
-            let compiled: HashSet<String> = arts
+            let compiled: HashSet<String> = probe
                 .as_ref()
                 .map(|a| {
                     a.hlo_entries()
@@ -284,56 +483,115 @@ impl ServerBuilder {
                         .collect()
                 })
                 .unwrap_or_default();
-            let (tx, rx) = std::sync::mpsc::channel::<Msg>();
+            let queue = Arc::new(SubmitQueue::new(queue_cfg));
             let metrics = shared();
             let bandit: SharedBandit = Arc::new(Mutex::new(None));
             let ring = Ring::new(TRACE_RING_CAPACITY);
             let obs = Registry::new();
-            let telemetry = WorkerShared {
-                metrics: metrics.clone(),
-                bandit: bandit.clone(),
-                ring: ring.clone(),
-                obs: obs.clone(),
-            };
-            let worker_name = spec.name.clone();
-            let scales = spec.act_scales.clone();
+            let plan_map: SharedPlans = Arc::new(Mutex::new(HashMap::new()));
+            let replicas = Arc::new(ReplicaSet {
+                target: AtomicUsize::new(spec.replicas),
+                alive: AtomicUsize::new(0),
+                next_id: AtomicUsize::new(0),
+            });
             // plan-independent abstract weight bounds for the static
-            // certification gate, extracted before the model moves into
-            // the worker (artifact-backed shards have no in-process
-            // engine and skip that gate)
+            // certification gate, extracted before the model is shared
+            // out to the replicas (artifact-backed shards have no
+            // in-process engine and skip that gate)
             let bounds = spec
                 .local
                 .as_ref()
                 .and_then(|m| crate::analysis::absint::GraphBounds::from_model(m).ok())
                 .map(Arc::new);
-            let local = spec.local;
-            let worker = std::thread::Builder::new()
-                .name(format!("overq-shard-{}", spec.name))
-                .spawn(move || {
-                    if let Err(e) =
-                        worker_loop(arts, worker_name, policy, scales, local, rx, telemetry)
-                    {
-                        eprintln!("[coordinator] shard worker exited with error: {e:#}");
-                    }
-                })
-                .context("spawn shard worker")?;
+            let ctx = ReplicaCtx {
+                model_name: spec.name.clone(),
+                policy,
+                arts_root: arts_root.clone(),
+                act_scales: spec.act_scales.clone(),
+                local: spec.local.map(Arc::new),
+                queue: queue.clone(),
+                plan_map: plan_map.clone(),
+                metrics: metrics.clone(),
+                bandit: bandit.clone(),
+                ring: ring.clone(),
+                obs: obs.clone(),
+                replicas: replicas.clone(),
+                fault: Arc::new(Mutex::new(None)),
+            };
+            let workers = Mutex::new(Vec::new());
+            for _ in 0..spec.replicas {
+                spawn_replica(ctx.clone(), &workers)?;
+            }
             shards.push(Arc::new(Shard {
                 name: spec.name,
                 input_dims: spec.input_dims,
                 compiled,
-                tx: Mutex::new(Some(tx)),
-                worker: Mutex::new(Some(worker)),
+                queue,
+                ctx,
+                workers,
+                replicas,
                 metrics,
                 ring,
                 obs,
-                plans: Mutex::new(HashSet::new()),
+                plan_map,
+                plans: Mutex::new(HashMap::new()),
                 split: Mutex::new(None),
                 bandit,
                 rng: Mutex::new(Rng::new(seed ^ (0x51AB_D001u64 + i as u64))),
                 bounds,
+                area: area.clone(),
             }));
         }
         Ok(Coordinator { shards })
+    }
+}
+
+/// Replica fleet bookkeeping for one shard. `target` is what the
+/// operator asked for; `alive` is what is actually pulling work (a
+/// panicked replica decrements it and is *not* auto-respawned —
+/// fail-stop; [`ModelHandle::set_replicas`] relaunches capacity).
+struct ReplicaSet {
+    target: AtomicUsize,
+    alive: AtomicUsize,
+    next_id: AtomicUsize,
+}
+
+/// Everything a new replica thread needs — cloneable so
+/// [`ModelHandle::set_replicas`] can spawn more after build.
+#[derive(Clone)]
+struct ReplicaCtx {
+    model_name: String,
+    policy: BatchPolicy,
+    arts_root: Option<PathBuf>,
+    act_scales: Vec<f32>,
+    /// In-process model, shared by every replica of the shard (the
+    /// engine's internal caches are mutex-guarded).
+    local: Option<Arc<LoadedModel>>,
+    queue: Arc<SubmitQueue<InferRequest>>,
+    plan_map: SharedPlans,
+    metrics: SharedMetrics,
+    bandit: SharedBandit,
+    ring: Arc<Ring>,
+    obs: Arc<Registry>,
+    replicas: Arc<ReplicaSet>,
+    fault: SharedFault,
+}
+
+/// Cross-shard PE-area ledger: each model's charge is its largest
+/// installed plan's `total_area` times its replica count.
+struct AreaLedger {
+    budget: Option<f64>,
+    usage: BTreeMap<String, f64>,
+}
+
+impl AreaLedger {
+    /// Area charged by every model except `name`.
+    fn others(&self, name: &str) -> f64 {
+        self.usage
+            .iter()
+            .filter(|(m, _)| m.as_str() != name)
+            .map(|(_, c)| *c)
+            .sum()
     }
 }
 
@@ -345,23 +603,30 @@ struct Shard {
     input_dims: Vec<usize>,
     /// HLO variant names present in the artifact manifest for this model.
     compiled: HashSet<String>,
-    tx: Mutex<Option<Sender<Msg>>>,
-    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// The bounded submission queue every replica pulls from.
+    queue: Arc<SubmitQueue<InferRequest>>,
+    /// Template for spawning more replicas after build.
+    ctx: ReplicaCtx,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    replicas: Arc<ReplicaSet>,
     metrics: SharedMetrics,
     /// Per-shard trace ring; disabled (one relaxed atomic load per span
     /// site) until [`ModelHandle::set_tracing`] turns it on.
     ring: Arc<Ring>,
-    /// Per-shard OverQ coverage/drift counters, fed by the worker's
+    /// Per-shard OverQ coverage/drift counters, fed by the workers'
     /// quantized forward passes and the plans' stored drift baselines.
     obs: Arc<Registry>,
-    /// Registered plan aliases — the submit-time fail-fast view of the
-    /// worker's plan map. Kept in step with `install_plan` (inserted
-    /// before the control message is sent), so a client's own
-    /// registrations are always visible to its later submits.
-    plans: Mutex<HashSet<String>>,
+    /// Published plan bodies, read by replicas at batch execution.
+    plan_map: SharedPlans,
+    /// Registered plan aliases → plan `total_area` — the submit-time
+    /// fail-fast view. An alias lands here strictly *after* its body
+    /// lands in `plan_map`, so any submit passing the fail-fast check
+    /// finds the plan (model-checked publication protocol,
+    /// `rust/tests/model_check.rs`).
+    plans: Mutex<HashMap<String, f64>>,
     /// Installed A/B traffic split, if any.
     split: Mutex<Option<Vec<(VariantSpec, f64)>>>,
-    /// Outcome-aware router, if installed; shared with the worker for
+    /// Outcome-aware router, if installed; shared with the workers for
     /// reward feedback. Takes precedence over `split` for routed
     /// submits.
     bandit: SharedBandit,
@@ -371,11 +636,15 @@ struct Shard {
     /// certification gate on `install_plan` (`None` for artifact-backed
     /// shards, which skip that gate).
     bounds: Option<Arc<crate::analysis::absint::GraphBounds>>,
+    /// Cross-shard PE-area ledger (shared by all shards of the
+    /// coordinator).
+    area: Arc<Mutex<AreaLedger>>,
 }
 
-/// Handle to a running multi-model coordinator. Owns one worker thread
-/// per model shard; dropping it (or calling [`Coordinator::shutdown`])
-/// drains the queues and joins the workers.
+/// Handle to a running multi-model coordinator. Owns the replica
+/// threads of every model shard; dropping it (or calling
+/// [`Coordinator::shutdown`]) closes the queues, drains the admitted
+/// backlog and joins the workers.
 pub struct Coordinator {
     shards: Vec<Arc<Shard>>,
 }
@@ -415,20 +684,44 @@ impl Coordinator {
 impl Drop for Coordinator {
     fn drop(&mut self) {
         for s in &self.shards {
-            drop(lock(&s.tx).take());
+            s.queue.close();
         }
         for s in &self.shards {
-            let handle = lock(&s.worker).take();
-            if let Some(w) = handle {
+            let handles = std::mem::take(&mut *lock(&s.workers));
+            for w in handles {
                 let _ = w.join();
             }
         }
     }
 }
 
+/// Register one more replica thread pulling from the shard queue.
+fn spawn_replica(
+    ctx: ReplicaCtx,
+    workers: &Mutex<Vec<std::thread::JoinHandle<()>>>,
+) -> Result<()> {
+    let id = ctx.replicas.next_id.fetch_add(1, Ordering::SeqCst);
+    ctx.replicas.alive.fetch_add(1, Ordering::SeqCst);
+    let name = format!("overq-{}-r{id}", ctx.model_name);
+    let replicas = ctx.replicas.clone();
+    match std::thread::Builder::new()
+        .name(name)
+        .spawn(move || replica_loop(id, ctx))
+    {
+        Ok(h) => {
+            lock(workers).push(h);
+            Ok(())
+        }
+        Err(e) => {
+            replicas.alive.fetch_sub(1, Ordering::SeqCst);
+            Err(e).context("spawn shard replica")
+        }
+    }
+}
+
 /// Cheap, cloneable per-model handle: the request plane (`submit`,
 /// `infer`, `infer_routed`) plus the admin plane (`register_plan`,
-/// `swap_plan`, `set_traffic_split`, `metrics`).
+/// `swap_plan`, `set_traffic_split`, `set_replicas`, `metrics`).
 #[derive(Clone)]
 pub struct ModelHandle {
     shard: Arc<Shard>,
@@ -448,7 +741,7 @@ impl ModelHandle {
             }
             VariantSpec::Plan(name) => {
                 anyhow::ensure!(
-                    lock(&self.shard.plans).contains(name),
+                    lock(&self.shard.plans).contains_key(name),
                     "no registered plan {name:?} on model {:?}",
                     self.shard.name
                 );
@@ -492,13 +785,17 @@ impl ModelHandle {
         arms[i].0.clone()
     }
 
-    /// Validate shape + leaf and enqueue one request. The leaf check
-    /// runs under the queue lock so it is atomic with a concurrent
-    /// [`ModelHandle::register_plan`] from another handle clone (which
-    /// inserts its alias and sends the control message under the same
-    /// lock): if this check sees a plan alias, the worker-side install
-    /// is already ahead of this request in the FIFO channel.
-    fn submit_leaf(&self, image: TensorF, leaf: VariantSpec) -> Result<Receiver<InferResult>> {
+    /// Validate shape + leaf, then run admission control: push into the
+    /// bounded shard queue or shed. A shed comes back as a typed
+    /// [`ServeError`] inside the `anyhow` error
+    /// (`err.downcast_ref::<ServeError>()`), and is counted in the
+    /// shard metrics before this returns.
+    fn submit_leaf(
+        &self,
+        image: TensorF,
+        leaf: VariantSpec,
+        opts: &SubmitOpts,
+    ) -> Result<Receiver<InferResult>> {
         anyhow::ensure!(
             image.dims() == &self.shard.input_dims[..],
             "request image shape {:?} != model {:?} input shape {:?}",
@@ -506,25 +803,65 @@ impl ModelHandle {
             self.shard.name,
             self.shard.input_dims
         );
-        let (rtx, rrx) = sync_channel(1);
-        let guard = lock(&self.shard.tx);
-        let tx = guard.as_ref().context("coordinator stopped")?;
         self.check_leaf(&leaf)?;
-        tx.send(Msg::Infer(InferRequest {
+        if self.shard.replicas.alive.load(Ordering::SeqCst) == 0 {
+            // all replicas fail-stopped (or never started); refuse
+            // rather than queue a request no one will execute
+            return Err(anyhow::Error::new(ServeError::Stopped))
+                .with_context(|| format!("model {:?} has no live replica", self.shard.name));
+        }
+        let tenant = opts.tenant.clone().unwrap_or_else(|| "default".to_string());
+        let (rtx, rrx) = sync_channel(1);
+        let req = InferRequest {
             image,
+            group: leaf.key(),
             spec: leaf,
+            tenant,
+            deadline: opts.deadline.map(|d| Instant::now() + d),
             submitted: Instant::now(),
             resp: rtx,
-        }))
-        .ok()
-        .context("worker gone")?;
-        Ok(rrx)
+        };
+        match self.shard.queue.push(req) {
+            Ok(_depth) => {
+                lock(&self.shard.metrics).record_admitted(
+                    opts.tenant.as_deref().unwrap_or("default"),
+                );
+                // fail-stop race: the last replica may have died (and
+                // finished its orphan drain) between the alive check
+                // above and this push — re-check and drain the backlog
+                // ourselves so no admitted request is left in a queue
+                // nobody reads. Both drains may run; each request still
+                // gets exactly one reply because the queue pops once.
+                if self.shard.replicas.alive.load(Ordering::SeqCst) == 0 {
+                    drain_orphaned(&self.shard.ctx);
+                }
+                Ok(rrx)
+            }
+            Err(PushError::Shed { item, reason }) => {
+                lock(&self.shard.metrics).record_shed(&item.tenant, &reason);
+                self.shard
+                    .ring
+                    .record_now("shed", format!("tenant={} reason={reason}", item.tenant));
+                Err(anyhow::Error::new(ServeError::Shed(reason)))
+            }
+            Err(PushError::Closed { .. }) => Err(anyhow::Error::new(ServeError::Stopped)),
+        }
     }
 
     /// Submit one request without blocking; returns the response channel.
     /// Splits take one deterministic weighted draw from the shard
     /// router; unknown variants and wrong image shapes fail fast.
     pub fn submit(&self, image: TensorF, spec: &VariantSpec) -> Result<Receiver<InferResult>> {
+        self.submit_opts(image, spec, &SubmitOpts::default())
+    }
+
+    /// [`ModelHandle::submit`] with per-request tenant/deadline options.
+    pub fn submit_opts(
+        &self,
+        image: TensorF,
+        spec: &VariantSpec,
+        opts: &SubmitOpts,
+    ) -> Result<Receiver<InferResult>> {
         let leaf = match spec {
             VariantSpec::Split(arms) => {
                 // hand-built Split values bypass the parse/split
@@ -534,7 +871,7 @@ impl ModelHandle {
             }
             other => other.clone(),
         };
-        self.submit_leaf(image, leaf)
+        self.submit_leaf(image, leaf, opts)
     }
 
     /// [`ModelHandle::submit`] with a string variant (parsed first).
@@ -547,7 +884,7 @@ impl ModelHandle {
         let rx = self.submit(image, spec)?;
         rx.recv()
             .context("worker dropped the response")?
-            .map_err(|e| anyhow::anyhow!("{e}"))
+            .map_err(anyhow::Error::new)
     }
 
     /// [`ModelHandle::infer`] with a string variant (parsed first).
@@ -560,6 +897,16 @@ impl ModelHandle {
     /// the fixed traffic split ([`ModelHandle::set_traffic_split`]),
     /// else `fp32`.
     pub fn submit_routed(&self, image: TensorF) -> Result<Receiver<InferResult>> {
+        self.submit_routed_opts(image, &SubmitOpts::default())
+    }
+
+    /// [`ModelHandle::submit_routed`] with per-request tenant/deadline
+    /// options.
+    pub fn submit_routed_opts(
+        &self,
+        image: TensorF,
+        opts: &SubmitOpts,
+    ) -> Result<Receiver<InferResult>> {
         let t0 = self.shard.ring.enabled().then(Instant::now);
         let bandit_leaf = lock(&self.shard.bandit).as_mut().map(|b| b.pick());
         let leaf = match bandit_leaf {
@@ -579,7 +926,7 @@ impl ModelHandle {
             let d = format!("variant={}", leaf.key());
             self.shard.ring.record("route", d, t0, Instant::now());
         }
-        self.submit_leaf(image, leaf)
+        self.submit_leaf(image, leaf, opts)
     }
 
     /// Blocking version of [`ModelHandle::submit_routed`].
@@ -587,7 +934,64 @@ impl ModelHandle {
         let rx = self.submit_routed(image)?;
         rx.recv()
             .context("worker dropped the response")?
-            .map_err(|e| anyhow::anyhow!("{e}"))
+            .map_err(anyhow::Error::new)
+    }
+
+    /// Scale this model's replica fleet to `n` worker threads. Scaling
+    /// up spawns enough replicas to bring the *live* count to `n` (so
+    /// it also replaces fail-stopped replicas); scaling down retires
+    /// the excess as soon as they finish their current batch. Checked
+    /// against the PE-area budget when one is set.
+    pub fn set_replicas(&self, n: usize) -> Result<()> {
+        anyhow::ensure!(n >= 1, "model {:?} needs at least one replica", self.shard.name);
+        // area-budget re-check: the fleet's charge scales with n
+        let max_area = lock(&self.shard.plans)
+            .values()
+            .fold(0.0f64, |m, &a| m.max(a));
+        {
+            let mut ledger = lock(&self.shard.area);
+            let need = max_area * n as f64;
+            if let Some(budget) = ledger.budget {
+                let others = ledger.others(&self.shard.name);
+                anyhow::ensure!(
+                    others + need <= budget + 1e-9,
+                    "cannot scale model {:?} to {n} replicas: needs {:.0} PE-area but \
+                     only {:.0} of budget {:.0} is free",
+                    self.shard.name,
+                    need,
+                    (budget - others).max(0.0),
+                    budget
+                );
+            }
+            ledger.usage.insert(self.shard.name.clone(), need);
+        }
+        let before = self.shard.replicas.target.swap(n, Ordering::SeqCst);
+        let alive = self.shard.replicas.alive.load(Ordering::SeqCst);
+        if alive < n {
+            for _ in 0..(n - alive) {
+                spawn_replica(self.shard.ctx.clone(), &self.shard.workers)?;
+            }
+        } else if n < before {
+            // excess replicas see the new target on their next wake
+            self.shard.queue.kick();
+        }
+        Ok(())
+    }
+
+    /// (target, alive) replica counts for this model's fleet.
+    pub fn replica_counts(&self) -> (usize, usize) {
+        (
+            self.shard.replicas.target.load(Ordering::SeqCst),
+            self.shard.replicas.alive.load(Ordering::SeqCst),
+        )
+    }
+
+    /// Arm a test-only replica fault: the next replica to pick up a
+    /// batch trips it (see [`ReplicaFault`]). Used by the
+    /// fault-injection tests to prove failure isolation; never called
+    /// in production paths.
+    pub fn inject_replica_fault(&self, fault: ReplicaFault) {
+        *lock(&self.shard.ctx.fault) = Some(fault);
     }
 
     /// Install (or replace) a deployment plan under its own name;
@@ -601,7 +1005,7 @@ impl ModelHandle {
     /// Hot-swap: requests targeting `plan:<alias>` switch to `plan`
     /// without clients changing their variant strings and without
     /// dropping in-flight requests (they run on whichever plan the
-    /// worker holds when their batch executes).
+    /// shard publishes when their batch executes).
     pub fn swap_plan(&self, alias: &str, plan: DeploymentPlan) -> Result<()> {
         anyhow::ensure!(!alias.is_empty(), "plan alias must be non-empty");
         self.install_plan(alias.to_string(), plan)
@@ -639,21 +1043,73 @@ impl ModelHandle {
                 anyhow::bail!("plan {:?} failed static certification: {d}", plan.name);
             }
         }
-        // alias-insert + control-message send happen under the queue
-        // lock (same lock as submit_leaf's validate + send), so ANY
-        // handle that passes the fail-fast check is guaranteed the
-        // worker-side install is ahead of its request in the channel
-        let guard = lock(&self.shard.tx);
-        let tx = guard.as_ref().context("coordinator stopped")?;
+        // placement gate: charge this model's fleet (its largest plan ×
+        // replica count) against the shared PE-area budget; shrink the
+        // fleet to fit, or refuse the plan when even one replica won't
+        let area = plan.total_area;
+        {
+            let max_area = lock(&self.shard.plans)
+                .values()
+                .fold(area, |m, &a| m.max(a));
+            let mut ledger = lock(&self.shard.area);
+            let target = self.shard.replicas.target.load(Ordering::SeqCst).max(1);
+            if let Some(budget) = ledger.budget {
+                let others = ledger.others(&self.shard.name);
+                let need = max_area * target as f64;
+                if others + need > budget + 1e-9 {
+                    let headroom = (budget - others).max(0.0);
+                    let fit = if max_area > 0.0 {
+                        ((headroom + 1e-9) / max_area) as usize
+                    } else {
+                        target
+                    };
+                    anyhow::ensure!(
+                        fit >= 1,
+                        "plan {:?} refused: needs {:.0} PE-area but only {:.0} of \
+                         budget {:.0} is free (co-hosted models hold the rest); \
+                         raise the budget or retire a model",
+                        alias,
+                        max_area,
+                        headroom,
+                        budget
+                    );
+                    // relocate: shrink this model's fleet so the
+                    // co-hosted set stays under budget
+                    self.shard.replicas.target.store(fit, Ordering::SeqCst);
+                    self.shard.queue.kick();
+                    ledger
+                        .usage
+                        .insert(self.shard.name.clone(), max_area * fit as f64);
+                    self.shard.ring.record_now(
+                        "area_relocate",
+                        format!("plan={alias} replicas={fit} area={max_area:.0}"),
+                    );
+                    eprintln!(
+                        "[coordinator] area budget {budget:.0}: model {:?} scaled to \
+                         {fit} replica(s) to fit plan {:?} ({max_area:.0} PE-area each)",
+                        self.shard.name, alias
+                    );
+                } else {
+                    ledger.usage.insert(self.shard.name.clone(), need);
+                }
+            } else {
+                ledger
+                    .usage
+                    .insert(self.shard.name.clone(), max_area * target as f64);
+            }
+        }
         // publish the plan's profile-time drift baselines before the
         // install becomes visible, so coverage snapshots can compare
         // live activation stats from the first request onward
         let drift = plan.layers.iter().map(|l| l.drift).collect();
         self.shard.obs.set_baselines(&format!("plan:{alias}"), drift);
-        lock(&self.shard.plans).insert(alias.clone());
-        tx.send(Msg::InstallPlan { alias, plan })
-            .ok()
-            .context("worker gone")?;
+        // publication order is the correctness invariant here: the plan
+        // body lands in the shared plan map FIRST, the alias becomes
+        // submit-visible SECOND. Any submit that passes the fail-fast
+        // alias check therefore finds the body when its batch executes
+        // (model-checked: rust/tests/model_check.rs).
+        lock(&self.shard.plan_map).insert(alias.clone(), Arc::new(plan));
+        lock(&self.shard.plans).insert(alias, area);
         Ok(())
     }
 
@@ -750,9 +1206,15 @@ impl ModelHandle {
         lock(&self.shard.metrics).record_watch_error(msg);
     }
 
-    /// Point-in-time metrics for this shard (global + per-variant).
+    /// Point-in-time metrics for this shard (global + per-variant),
+    /// with the live queue/replica gauges filled in.
     pub fn metrics(&self) -> MetricsSnapshot {
-        lock(&self.shard.metrics).snapshot()
+        let mut snap = lock(&self.shard.metrics).snapshot();
+        snap.queue_depth = self.shard.queue.depth();
+        snap.queue_peak_depth = self.shard.queue.peak_depth();
+        snap.replicas_target = self.shard.replicas.target.load(Ordering::SeqCst);
+        snap.replicas_alive = self.shard.replicas.alive.load(Ordering::SeqCst);
+        snap
     }
 
     /// Zero this shard's metrics and OverQ coverage counters — e.g. to
@@ -760,8 +1222,8 @@ impl ModelHandle {
     /// experiment epochs. Requests already in the queue still count
     /// when they execute. Configuration and lifecycle state survive:
     /// the control-arm pin, the plan-watcher health counters
-    /// (`plan_swaps` / `watch_errors` / `last_watch_error`), and the
-    /// plans' stored drift baselines.
+    /// (`plan_swaps` / `watch_errors` / `last_watch_error`), the
+    /// replica-failure count, and the plans' stored drift baselines.
     pub fn reset_metrics(&self) {
         lock(&self.shard.metrics).reset();
         self.shard.obs.reset();
@@ -824,29 +1286,20 @@ impl ModelHandle {
         for rx in burst {
             rx.recv()
                 .context("warmup response lost")?
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
+                .map_err(anyhow::Error::new)?;
         }
         Ok(t0.elapsed())
     }
 }
 
-/// The shared state a shard worker and its client-side [`Shard`] both
-/// hold: metrics, the bandit router, and the telemetry sinks.
-struct WorkerShared {
-    metrics: SharedMetrics,
-    bandit: SharedBandit,
-    ring: Arc<Ring>,
-    obs: Arc<Registry>,
-}
-
-/// Worker-side state shared across batches of one shard.
+/// Replica-local execution state (engine handle, executable cache).
+/// Everything shared lives in [`ReplicaCtx`].
 struct WorkerState {
     model_name: String,
-    policy: BatchPolicy,
     arts: Option<Artifacts>,
     cache: ExecutableCache,
-    native: Option<LoadedModel>,
-    plans: HashMap<String, DeploymentPlan>,
+    native: Option<Arc<LoadedModel>>,
+    plan_map: SharedPlans,
     scales: TensorF,
     metrics: SharedMetrics,
     bandit: SharedBandit,
@@ -854,79 +1307,181 @@ struct WorkerState {
     obs: Arc<Registry>,
 }
 
-fn worker_loop(
-    arts: Option<Artifacts>,
-    model_name: String,
-    policy: BatchPolicy,
-    act_scales: Vec<f32>,
-    native: Option<LoadedModel>,
-    rx: std::sync::mpsc::Receiver<Msg>,
-    telemetry: WorkerShared,
-) -> Result<()> {
-    let cache = match &arts {
-        Some(a) => ExecutableCache::new(a)?,
-        None => ExecutableCache::empty(),
-    };
-    let scales = TensorF::from_vec(&[act_scales.len()], act_scales);
-    let WorkerShared {
-        metrics,
-        bandit,
-        ring,
-        obs,
-    } = telemetry;
-    let mut st = WorkerState {
-        model_name,
-        policy,
-        arts,
-        cache,
-        native,
-        plans: HashMap::new(),
-        scales,
-        metrics,
-        bandit,
-        ring,
-        obs,
-    };
-    while let Some(batch) = collect(&rx, &st.policy) {
-        // apply control messages, then group inference FIFO by variant
-        let mut infers: Vec<InferRequest> = Vec::with_capacity(batch.len());
-        for msg in batch {
-            match msg {
-                Msg::InstallPlan { alias, plan } => {
-                    st.plans.insert(alias, plan);
-                }
-                Msg::Infer(req) => infers.push(req),
-            }
+impl WorkerState {
+    fn new(ctx: &ReplicaCtx) -> Result<WorkerState> {
+        let arts = match &ctx.arts_root {
+            Some(r) => Some(Artifacts::open(r)?),
+            None => None,
+        };
+        let cache = match &arts {
+            Some(a) => ExecutableCache::new(a)?,
+            None => ExecutableCache::empty(),
+        };
+        Ok(WorkerState {
+            model_name: ctx.model_name.clone(),
+            arts,
+            cache,
+            native: ctx.local.clone(),
+            plan_map: ctx.plan_map.clone(),
+            scales: TensorF::from_vec(&[ctx.act_scales.len()], ctx.act_scales.clone()),
+            metrics: ctx.metrics.clone(),
+            bandit: ctx.bandit.clone(),
+            ring: ctx.ring.clone(),
+            obs: ctx.obs.clone(),
+        })
+    }
+}
+
+/// One replica worker: pull batches from the shard queue until the
+/// queue closes, the replica is retired (scale-down), or it fail-stops
+/// on a panic.
+fn replica_loop(id: usize, ctx: ReplicaCtx) {
+    let mut st = match WorkerState::new(&ctx) {
+        Ok(st) => st,
+        Err(e) => {
+            eprintln!("[coordinator] replica {id} of {:?} failed to start: {e:#}", ctx.model_name);
+            ctx.replicas.alive.fetch_sub(1, Ordering::SeqCst);
+            return;
         }
-        // stable, allocation-free grouping by variant (FIFO within)
-        infers.sort_by(|a, b| a.spec.group_key().cmp(&b.spec.group_key()));
-        let mut i = 0;
-        while i < infers.len() {
-            let mut j = i + 1;
-            while j < infers.len() && infers[j].spec == infers[i].spec {
-                j += 1;
+    };
+    loop {
+        if try_retire(&ctx.replicas) {
+            return; // scale-down: excess replica exits cleanly
+        }
+        match ctx.queue.next_batch(&ctx.policy) {
+            Drained::Done => {
+                ctx.replicas.alive.fetch_sub(1, Ordering::SeqCst);
+                return;
             }
-            let group = &infers[i..j];
-            if let Err(e) = run_group(&mut st, group) {
-                // per-group failure (missing artifact, backend error):
-                // reply to every request and keep serving
-                let msg = format!("{e:#}");
-                for req in group {
-                    let _ = req.resp.send(Err(msg.clone()));
+            Drained::Idle => continue,
+            Drained::Work { batch, expired } => {
+                reply_expired(&ctx, expired);
+                if batch.is_empty() {
+                    continue;
+                }
+                // test-only fault hook: the armed fault trips on the
+                // next batch pickup, whichever replica that is
+                let fault = lock(&ctx.fault).take();
+                if let Some(ReplicaFault::StallNextBatch(d)) = &fault {
+                    std::thread::sleep(*d);
+                }
+                let panic_now = matches!(fault, Some(ReplicaFault::PanicNextBatch));
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    if panic_now {
+                        panic!("injected replica fault (test hook)");
+                    }
+                    run_group(&mut st, &batch)
+                }));
+                match outcome {
+                    Ok(Ok(())) => {
+                        lock(&ctx.metrics).record_replica_batch(id);
+                    }
+                    Ok(Err(e)) => {
+                        // per-batch failure (missing artifact, backend
+                        // error): reply to every request and keep serving
+                        let msg = format!("{e:#}");
+                        for req in &batch {
+                            let _ = req.resp.try_send(Err(ServeError::Backend(msg.clone())));
+                        }
+                    }
+                    Err(p) => {
+                        // fail-stop: error out the in-flight batch, mark
+                        // this replica dead and stop pulling work. The
+                        // surviving replicas keep draining the queue.
+                        let msg = p
+                            .downcast_ref::<String>()
+                            .cloned()
+                            .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                            .unwrap_or_else(|| "replica panicked".to_string());
+                        for req in &batch {
+                            let _ = req.resp.try_send(Err(ServeError::ReplicaFailed(msg.clone())));
+                        }
+                        lock(&ctx.metrics).record_replica_failure();
+                        ctx.ring
+                            .record_now("replica_death", format!("replica={id} msg={msg}"));
+                        eprintln!(
+                            "[coordinator] replica {id} of {:?} fail-stopped: {msg}",
+                            ctx.model_name
+                        );
+                        let left = ctx.replicas.alive.fetch_sub(1, Ordering::SeqCst) - 1;
+                        if left == 0 {
+                            drain_orphaned(&ctx);
+                        }
+                        return;
+                    }
                 }
             }
-            i = j;
         }
     }
-    Ok(())
+}
+
+/// CAS-retire this replica if the fleet is over its target (scale-down
+/// or area relocation). Returns true when the caller should exit.
+fn try_retire(replicas: &ReplicaSet) -> bool {
+    loop {
+        let alive = replicas.alive.load(Ordering::SeqCst);
+        let target = replicas.target.load(Ordering::SeqCst);
+        if alive <= target {
+            return false;
+        }
+        if replicas
+            .alive
+            .compare_exchange(alive, alive - 1, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+        {
+            return true;
+        }
+    }
+}
+
+/// Reply `DeadlineExceeded` to requests swept from the queue.
+fn reply_expired(ctx: &ReplicaCtx, expired: Vec<InferRequest>) {
+    if expired.is_empty() {
+        return;
+    }
+    lock(&ctx.metrics).record_deadline_exceeded(expired.len());
+    for req in expired {
+        ctx.ring.record_now(
+            "expire",
+            format!("variant={} tenant={}", req.group, req.tenant),
+        );
+        let queued = req.submitted.elapsed();
+        let _ = req.resp.try_send(Err(ServeError::DeadlineExceeded { queued }));
+    }
+}
+
+/// The last live replica just died: fail the whole queued backlog with
+/// `ReplicaFailed` rather than leaving clients blocked on a queue no
+/// one drains. Admitted work is never silently dropped.
+fn drain_orphaned(ctx: &ReplicaCtx) {
+    // non-blocking pulls: a submitter's race-recovery drain can run
+    // concurrently with the dying replica's, and whichever loses the
+    // last pop must return, not sleep on the condvar
+    let eager = BatchPolicy {
+        max_batch: usize::MAX,
+        max_wait: Duration::ZERO,
+    };
+    loop {
+        match ctx.queue.try_next_batch(&eager) {
+            Drained::Work { batch, expired } => {
+                reply_expired(ctx, expired);
+                for req in batch {
+                    let _ = req.resp.try_send(Err(ServeError::ReplicaFailed(
+                        "no live replica".to_string(),
+                    )));
+                }
+            }
+            Drained::Idle | Drained::Done => return,
+        }
+    }
 }
 
 fn run_group(st: &mut WorkerState, group: &[InferRequest]) -> Result<()> {
     match &group[0].spec {
         VariantSpec::Plan(name) => {
-            let plan = st
-                .plans
+            let plan = lock(&st.plan_map)
                 .get(name)
+                .cloned()
                 .with_context(|| format!("no registered plan {name:?}"))?;
             anyhow::ensure!(
                 plan.model == st.model_name,
@@ -988,7 +1543,7 @@ fn account_chunk(
         .map(|r| (queue_start - r.submitted, r.submitted.elapsed()))
         .collect();
     let rewards: Vec<Option<f64>> = {
-        let mut guard = lock(&bandit);
+        let mut guard = lock(bandit);
         match guard.as_mut() {
             Some(b) => lats
                 .iter()
@@ -997,7 +1552,7 @@ fn account_chunk(
             None => vec![None; lats.len()],
         }
     };
-    let mut m = lock(&metrics);
+    let mut m = lock(metrics);
     m.record_batch(reqs.len(), padded, exec);
     for ((queue, e2e), reward) in lats.iter().zip(&rewards) {
         m.record_request(key, *queue, *e2e);
@@ -1008,15 +1563,15 @@ fn account_chunk(
 }
 
 /// Ensure the native model is loaded (in-process handoff or artifacts).
-fn native_model(st: &mut WorkerState) -> Result<&LoadedModel> {
+fn native_model(st: &mut WorkerState) -> Result<Arc<LoadedModel>> {
     if st.native.is_none() {
         let arts = st
             .arts
             .as_ref()
             .context("native backend needs an in-process model or artifacts")?;
-        st.native = Some(arts.load_model(&st.model_name)?);
+        st.native = Some(Arc::new(arts.load_model(&st.model_name)?));
     }
-    Ok(st.native.as_ref().unwrap())
+    Ok(st.native.as_ref().unwrap().clone())
 }
 
 fn run_group_native(
@@ -1024,7 +1579,7 @@ fn run_group_native(
     group: &[InferRequest],
     qc: Option<&QuantConfig>,
 ) -> Result<()> {
-    let max_batch = st.policy.max_batch.max(1);
+    let max_batch = group.len().max(1);
     let key = group[0].spec.key();
     let metrics = st.metrics.clone();
     let bandit = st.bandit.clone();

@@ -193,26 +193,8 @@ impl VariantSpec {
         matches!(self, VariantSpec::Split(_))
     }
 
-    /// Cheap ordering key for grouping resolved (non-split) specs —
-    /// discriminant + borrowed inner name, no allocation. Orders
-    /// consistently with equality; `Split` sorts last (the worker never
-    /// sees one).
-    pub(crate) fn group_key(&self) -> (u8, &str) {
-        match self {
-            VariantSpec::Fp32 {
-                backend: Backend::Auto,
-            } => (0, ""),
-            VariantSpec::Fp32 {
-                backend: Backend::Native,
-            } => (1, ""),
-            VariantSpec::Fp32 {
-                backend: Backend::Pjrt,
-            } => (2, ""),
-            VariantSpec::Compiled(name) => (3, name.as_str()),
-            VariantSpec::Plan(name) => (4, name.as_str()),
-            VariantSpec::Split(_) => (5, ""),
-        }
-    }
+    // (the old worker-side grouping key is gone: batches are grouped
+    // by the cached `InferRequest::group` string in the submit queue)
 
     /// The metrics key for a resolved (non-split) spec — its canonical
     /// string form.

@@ -51,6 +51,8 @@ COMMANDS (system):
              [--split plan:a@0.9,plan:b@0.1] [--requests 64 --seed 4242]
              [--routing fixed|bandit --explore 0.05 --strategy thompson|ucb]
              [--watch-plans plans/ --watch-interval-ms 500]
+             [--replicas 1] [--max-queue 4096] [--tenant-quota N]
+             [--area-budget <µm²>]
              [--telemetry-addr 127.0.0.1:9185 --telemetry-linger-ms 0]
              [--tracing] [--trace-out trace.jsonl]
              each plan is registered on its model's shard; --split
@@ -64,7 +66,11 @@ COMMANDS (system):
              /snapshot.json and /trace over HTTP for the run (linger
              keeps it up after the traffic drains), and --tracing
              records queue/route/batch/execute/encode/decode spans
-             (docs/observability.md)
+             (docs/observability.md); --replicas runs that many worker
+             threads per model, --max-queue/--tenant-quota bound
+             admission (overload sheds with typed errors), and
+             --area-budget caps the summed PE area of all hosted
+             models' plans (docs/serving.md "Fleet scaling")
   stats      one-screen serving + coverage summary from a live
              --telemetry-addr endpoint or a saved snapshot.json
              [overq stats <host:port | snapshot.json> [--drift]]
@@ -659,9 +665,18 @@ fn serve(args: &Args) -> Result<()> {
     }
     anyhow::ensure!(!names.is_empty(), "--models gave no model names");
 
+    // fleet knobs: defaults never shed the synthetic CI traffic
+    let replicas = args.get_usize("replicas", 1).max(1);
     let mut builder = Coordinator::builder()
         .policy(BatchPolicy::default())
-        .seed(seed);
+        .seed(seed)
+        .max_queue(args.get_usize("max-queue", 4096));
+    if let Some(q) = args.get("tenant-quota") {
+        builder = builder.tenant_quota(q.parse().context("--tenant-quota expects a count")?);
+    }
+    if let Some(b) = args.get("area-budget") {
+        builder = builder.area_budget(b.parse().context("--area-budget expects µm²")?);
+    }
     for name in &names {
         if name.starts_with("synth") {
             builder = builder.model_local(synth_model(name, 42)?);
@@ -674,6 +689,7 @@ fn serve(args: &Args) -> Result<()> {
                 }
             }
         }
+        builder = builder.replicas(replicas);
     }
     let coord = builder.build()?;
     for plan in &plans {
@@ -851,6 +867,20 @@ fn serve(args: &Args) -> Result<()> {
         ms.p50_e2e_us / 1e3,
         ms.p95_e2e_us / 1e3,
     );
+    let shed = ms.shed_queue_full + ms.shed_tenant_quota;
+    if replicas > 1 || shed > 0 || ms.deadline_exceeded > 0 || ms.replica_failures > 0 {
+        println!(
+            "  fleet: {}/{} replicas alive | queue peak {} | admitted {} shed {} ({:.2}% rate) | deadline-exceeded {} | replica failures {}",
+            ms.replicas_alive,
+            ms.replicas_target,
+            ms.queue_peak_depth,
+            ms.admitted,
+            shed,
+            ms.shed_rate * 100.0,
+            ms.deadline_exceeded,
+            ms.replica_failures,
+        );
+    }
     for (variant, vs) in &ms.per_variant {
         println!(
             "  {variant:<28} {:>6} reqs | e2e {:.2} ms p50, {:.2} ms p95",

@@ -266,7 +266,7 @@ impl Engine {
     /// The cached [`ExecPlan`] for this graph at input shape `in_dims`
     /// (built on first use).
     pub fn plan_for(&self, in_dims: &[usize]) -> Result<Arc<ExecPlan>> {
-        let mut cache = self.plan_cache.lock().unwrap();
+        let mut cache = crate::util::sync::lock(&self.plan_cache);
         if let Some(p) = cache.get(in_dims) {
             return Ok(p.clone());
         }
@@ -276,11 +276,11 @@ impl Engine {
     }
 
     fn arena_take(&self) -> Arena {
-        self.arena_pool.lock().unwrap().pop().unwrap_or_default()
+        crate::util::sync::lock(&self.arena_pool).pop().unwrap_or_default()
     }
 
     fn arena_put(&self, arena: Arena) {
-        self.arena_pool.lock().unwrap().push(arena);
+        crate::util::sync::lock(&self.arena_pool).push(arena);
     }
 
     /// Apply OCS channel splitting to every quantized conv: duplicate the
@@ -337,7 +337,7 @@ impl Engine {
             pc.wf_ocs = Some(wexp);
         }
         // the fp32 source of every quantized weight changed shape
-        self.wq_cache.lock().unwrap().clear();
+        crate::util::sync::lock(&self.wq_cache).clear();
     }
 
     /// Re-quantize every conv's *prepared* weights natively at `wbits`
@@ -363,7 +363,7 @@ impl Engine {
             (2..=8).contains(&wbits),
             "weight bitwidth {wbits} outside the supported 2..=8 range"
         );
-        let mut cache = self.wq_cache.lock().unwrap();
+        let mut cache = crate::util::sync::lock(&self.wq_cache);
         if let Some(p) = cache.get(&(id, wbits)) {
             return Ok(p.clone());
         }

@@ -129,6 +129,16 @@ impl Ring {
     /// [`Ring::span`]; this is the low-level entry for spans whose
     /// start predates the call site (e.g. queue time measured from a
     /// request's enqueue timestamp).
+    /// Record a zero-duration point event (shed, expiry, replica
+    /// death): timestamped now, no span to measure.
+    pub fn record_now(&self, name: &str, detail: String) {
+        if !self.enabled() {
+            return;
+        }
+        let now = Instant::now();
+        self.record(name, detail, now, now);
+    }
+
     pub fn record(&self, name: &str, detail: String, start: Instant, end: Instant) {
         if !self.enabled() {
             return;

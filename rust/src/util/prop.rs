@@ -97,6 +97,41 @@ pub mod gen {
         }
         w
     }
+
+    /// One request arrival for serving-layer properties (the deadline
+    /// batcher in `coordinator::batcher`).
+    #[derive(Clone, Debug)]
+    pub struct Arrival {
+        /// Admission-control tenant id (small so tenants collide).
+        pub tenant: usize,
+        /// Variant-group id (batches must stay single-group).
+        pub group: usize,
+        /// Deadline offset from enqueue in µs; negative = already
+        /// expired at enqueue, `None` = no deadline.
+        pub deadline_us: Option<i64>,
+    }
+
+    /// Random request-arrival stream: a handful of tenants and variant
+    /// groups with a mix of expired, tight and absent deadlines, so
+    /// admission, fairness and expiry paths all trigger.
+    pub fn arrivals(rng: &mut Rng, max_len: usize) -> Vec<Arrival> {
+        let n = 1 + rng.index(max_len.max(1));
+        (0..n)
+            .map(|_| Arrival {
+                tenant: rng.index(4),
+                group: rng.index(3),
+                deadline_us: if rng.bool(0.4) {
+                    Some(if rng.bool(0.3) {
+                        -(1 + rng.index(1000) as i64)
+                    } else {
+                        1_000_000 + rng.index(1_000_000) as i64
+                    })
+                } else {
+                    None
+                },
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]

@@ -29,10 +29,10 @@
 //!   methodology next to the `overq lint` rules.
 
 #[cfg(not(loom))]
-pub use std::sync::{Arc, Mutex, MutexGuard};
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 #[cfg(loom)]
-pub use loom::sync::{Arc, Mutex, MutexGuard};
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 /// Take a mutex, recovering from poisoning: if a previous holder
 /// panicked, the data is returned anyway (`into_inner` on the poison
@@ -42,6 +42,28 @@ pub use loom::sync::{Arc, Mutex, MutexGuard};
 /// (none in this crate) can still call `Mutex::lock` directly.
 pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// [`Condvar::wait`] with the same poison-recovery contract as
+/// [`lock`]: a panicked peer never wedges a waiter.
+pub fn cv_wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// [`Condvar::wait_timeout`] with poison recovery; returns the guard
+/// and whether the wait timed out.
+pub fn cv_wait_timeout<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    dur: std::time::Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    match cv.wait_timeout(g, dur) {
+        Ok((g, t)) => (g, t.timed_out()),
+        Err(poisoned) => {
+            let (g, t) = poisoned.into_inner();
+            (g, t.timed_out())
+        }
+    }
 }
 
 /// Bounded exhaustive-interleaving model checker.

@@ -171,7 +171,7 @@ fn variant_errors_fail_fast_and_worker_survives() {
         .submit(good(3), &"plan:short".parse().unwrap())
         .unwrap();
     let err = rx.recv().expect("response lost").unwrap_err();
-    assert!(err.contains("enc points"), "{err}");
+    assert!(err.to_string().contains("enc points"), "{err}");
 
     // ...and both shards are still alive afterwards
     tiny.register_plan(plan).unwrap();

@@ -4,143 +4,285 @@
 //! interleaving of these small protocol models (DFS over scheduling
 //! decisions at each lock/channel/atomic operation), so the properties
 //! below are checked exhaustively, not probabilistically. Each model
-//! mirrors one protocol of `coordinator::server`:
+//! mirrors one protocol of `coordinator::server` / `coordinator::batcher`:
 //!
-//! * **swap/submit publication** — `install_plan` inserts the alias
-//!   into the fail-fast set AND sends the worker's control message
-//!   under the shard queue lock; `submit_leaf` checks + sends under the
-//!   same lock. The FIFO channel then guarantees the worker sees the
-//!   install before any request that passed the check. The `_races`
-//!   twin drops the shared lock and must be caught by the checker —
-//!   that is the regression test for the checker itself.
-//! * **shutdown drain** — `Coordinator::drop` closes the queue under
-//!   the same lock that submits take, so every accepted request is
-//!   still in the channel for the worker to drain: none are lost.
+//! * **plan publication** — `install_plan` writes the plan body into
+//!   the shared plan map FIRST and makes the alias submit-visible
+//!   SECOND; `submit_leaf` fail-fast-checks the alias and the replica
+//!   reads the body strictly later. The `_races` twin publishes in the
+//!   reverse order and must be caught by the checker — that is the
+//!   regression test for the checker itself.
+//! * **sleep registration (no lost wakeup)** — `SubmitQueue::next_batch`
+//!   decides to sleep *while holding the state lock* (the condvar wait
+//!   hands the lock back atomically), so a concurrent `push` always
+//!   either sees the sleeper and wakes it or the sleeper-to-be sees the
+//!   item. The twin re-checks emptiness after dropping the lock and the
+//!   checker finds the classic lost wakeup.
+//! * **shed-vs-enqueue** — admission (depth check) and enqueue happen
+//!   under one critical section, so the bound holds exactly under
+//!   racing producers; the check-then-push twin overshoots it.
+//! * **shutdown drain** — `close()` flips the closed flag under the
+//!   same lock pushes take, so a push either sheds (`Closed`) or its
+//!   item is in the queue for the post-close drain: admitted work is
+//!   never lost.
 //! * **bandit/metrics ordering** — `account_chunk` and
 //!   `set_routing_policy` take the bandit and metrics locks
 //!   sequentially in the same order, never nested in reverse.
 //!
 //! The nightly ThreadSanitizer CI job runs the real coordinator tests
-//! under TSan for the complementary dynamic check (docs/static_analysis.md).
+//! (including `integration_load`) under TSan for the complementary
+//! dynamic check (docs/static_analysis.md).
 
 use overq::util::sync::model;
 
-#[derive(Clone, Copy, PartialEq, Debug)]
-enum Msg {
-    Install,
-    Infer,
-}
-
-/// The real protocol: alias publication and the control-message send
-/// share one critical section with the submit-side check + send.
+/// The real publication protocol: plan body lands in the plan map
+/// before the alias becomes submit-visible, so a request that passed
+/// the fail-fast alias check always finds its plan body at execution.
 #[test]
-fn swap_submit_publication_protocol_holds() {
+fn plan_publication_order_holds() {
     model::check(|| {
-        let tx_lock = model::Arc::new(model::Mutex::new(()));
-        let plans = model::Arc::new(model::Mutex::new(false));
-        let chan = model::Arc::new(model::Channel::new());
+        let plan_map = model::Arc::new(model::Mutex::new(false)); // body present
+        let aliases = model::Arc::new(model::Mutex::new(false)); // submit-visible
 
-        let (tl, pl, ch) = (tx_lock.clone(), plans.clone(), chan.clone());
+        let (pm, al) = (plan_map.clone(), aliases.clone());
         let admin = model::thread::spawn(move || {
-            // install_plan: insert alias + send InstallPlan under tx lock
-            let _g = tl.lock();
-            *pl.lock() = true;
-            ch.send(Msg::Install);
+            // install_plan: body FIRST, alias SECOND
+            *pm.lock() = true;
+            *al.lock() = true;
         });
-        let (tl, pl, ch) = (tx_lock.clone(), plans.clone(), chan.clone());
+        let (pm, al) = (plan_map.clone(), aliases.clone());
         let client = model::thread::spawn(move || {
-            // submit_leaf: fail-fast check + send under the same lock
-            let _g = tl.lock();
-            if *pl.lock() {
-                ch.send(Msg::Infer);
+            // submit_leaf checks the alias; the replica reads the plan
+            // body strictly after that check (the queue sits between)
+            let visible = { *al.lock() };
+            if visible {
+                assert!(*pm.lock(), "executed request missed its plan body");
             }
         });
         admin.join().unwrap();
         client.join().unwrap();
-
-        // worker: drains the FIFO; a request that passed the fail-fast
-        // check must find its plan already installed
-        let mut installed = false;
-        while let Some(m) = chan.try_recv() {
-            match m {
-                Msg::Install => installed = true,
-                Msg::Infer => assert!(installed, "worker saw infer before install"),
-            }
-        }
     });
 }
 
-/// The buggy variant: the client checks + sends WITHOUT the shared
-/// queue lock. There is an interleaving where the check passes (alias
-/// already inserted) but the request overtakes the control message in
-/// the channel — the checker must find it.
+/// The buggy variant: publishing the alias before the body. There is an
+/// interleaving where the check passes but execution reads an absent
+/// plan — the checker must find it.
 #[test]
 #[should_panic(expected = "model check failed")]
-fn swap_submit_without_the_shared_lock_races() {
+fn plan_publication_reversed_races() {
     model::check(|| {
-        let tx_lock = model::Arc::new(model::Mutex::new(()));
-        let plans = model::Arc::new(model::Mutex::new(false));
-        let chan = model::Arc::new(model::Channel::new());
+        let plan_map = model::Arc::new(model::Mutex::new(false));
+        let aliases = model::Arc::new(model::Mutex::new(false));
 
-        let (tl, pl, ch) = (tx_lock.clone(), plans.clone(), chan.clone());
+        let (pm, al) = (plan_map.clone(), aliases.clone());
         let admin = model::thread::spawn(move || {
-            let _g = tl.lock();
-            *pl.lock() = true;
-            ch.send(Msg::Install);
+            // BUG under test: alias first, body second
+            *al.lock() = true;
+            *pm.lock() = true;
         });
-        let (pl, ch) = (plans.clone(), chan.clone());
+        let (pm, al) = (plan_map.clone(), aliases.clone());
         let client = model::thread::spawn(move || {
-            // BUG under test: no tx_lock around check + send
-            if *pl.lock() {
-                ch.send(Msg::Infer);
+            let visible = { *al.lock() };
+            if visible {
+                assert!(*pm.lock(), "executed request missed its plan body");
             }
         });
         admin.join().unwrap();
         client.join().unwrap();
-
-        let mut installed = false;
-        while let Some(m) = chan.try_recv() {
-            match m {
-                Msg::Install => installed = true,
-                Msg::Infer => assert!(installed, "worker saw infer before install"),
-            }
-        }
     });
 }
 
-/// Shutdown protocol: `Coordinator::drop` takes the queue sender out
-/// under the same lock submits use, so a submit either fails fast
-/// ("coordinator stopped") or its request is in the channel before the
-/// close — the drain then sees every accepted request.
-#[test]
-fn shutdown_never_loses_accepted_requests() {
-    model::check(|| {
-        let chan = model::Arc::new(model::Channel::new());
-        let open = model::Arc::new(model::Mutex::new(true));
-        let sent = model::Arc::new(model::Mutex::new(0usize));
+/// Queue state shared by the bounded-queue models: a miniature
+/// `batcher::QState`.
+#[derive(Default)]
+struct QState {
+    items: usize,
+    sleeping: bool,
+    wake_token: bool,
+}
 
-        let (op, ch, se) = (open.clone(), chan.clone(), sent.clone());
-        let client = model::thread::spawn(move || {
-            // submit_leaf: check the queue is open and send under one lock
-            let g = op.lock();
-            if *g {
-                ch.send(Msg::Infer);
-                *se.lock() += 1;
+/// The real sleep protocol: `next_batch` sees the queue empty and
+/// registers as a sleeper in the SAME critical section (the condvar
+/// wait atomically releases the state lock), so `push` either finds
+/// the sleeper and wakes it, or the worker saw the item and never
+/// slept. In no interleaving does a worker sleep on a non-empty queue
+/// without a pending wake.
+#[test]
+fn queue_sleep_registration_never_loses_a_wakeup() {
+    model::check(|| {
+        let q = model::Arc::new(model::Mutex::new(QState::default()));
+
+        let qw = q.clone();
+        let worker = model::thread::spawn(move || {
+            // Phase 1 of next_batch: emptiness check and sleep
+            // registration under one lock hold
+            let mut g = qw.lock();
+            if g.items == 0 {
+                g.sleeping = true;
             }
         });
-        // Coordinator::drop: close the queue under the same lock
-        {
-            let mut g = open.lock();
-            *g = false;
-        }
-        client.join().unwrap();
+        let qp = q.clone();
+        let producer = model::thread::spawn(move || {
+            // push: enqueue and notify under the same lock
+            let mut g = qp.lock();
+            g.items += 1;
+            if g.sleeping {
+                g.sleeping = false;
+                g.wake_token = true;
+            }
+        });
+        worker.join().unwrap();
+        producer.join().unwrap();
 
-        // worker drain after close: everything accepted is still there
-        let mut got = 0usize;
-        while chan.try_recv().is_some() {
-            got += 1;
+        let g = q.lock();
+        assert!(
+            !(g.sleeping && g.items > 0 && !g.wake_token),
+            "lost wakeup: worker asleep on a non-empty queue with no wake pending"
+        );
+    });
+}
+
+/// The buggy variant: the worker re-checks emptiness, drops the lock,
+/// then registers as a sleeper in a second critical section. The push
+/// can land in the gap — its notify sees no sleeper, the worker then
+/// sleeps forever on a non-empty queue. The checker must find it.
+#[test]
+#[should_panic(expected = "model check failed")]
+fn queue_sleep_registration_outside_the_lock_races() {
+    model::check(|| {
+        let q = model::Arc::new(model::Mutex::new(QState::default()));
+
+        let qw = q.clone();
+        let worker = model::thread::spawn(move || {
+            // BUG under test: check and sleep in separate critical
+            // sections
+            let empty = { qw.lock().items == 0 };
+            if empty {
+                qw.lock().sleeping = true;
+            }
+        });
+        let qp = q.clone();
+        let producer = model::thread::spawn(move || {
+            let mut g = qp.lock();
+            g.items += 1;
+            if g.sleeping {
+                g.sleeping = false;
+                g.wake_token = true;
+            }
+        });
+        worker.join().unwrap();
+        producer.join().unwrap();
+
+        let g = q.lock();
+        assert!(
+            !(g.sleeping && g.items > 0 && !g.wake_token),
+            "lost wakeup: worker asleep on a non-empty queue with no wake pending"
+        );
+    });
+}
+
+/// The real admission protocol: `push` checks the depth bound and
+/// enqueues in one critical section, so racing producers against a
+/// 1-deep queue admit exactly one request and shed the other — the
+/// bound holds exactly, never approximately.
+#[test]
+fn queue_bound_holds_exactly_under_racing_producers() {
+    model::check(|| {
+        let q = model::Arc::new(model::Mutex::new(0usize)); // depth
+        let shed = model::Arc::new(model::Mutex::new(0usize));
+
+        let mk = |q: model::Arc<model::Mutex<usize>>, s: model::Arc<model::Mutex<usize>>| {
+            model::thread::spawn(move || {
+                // push: admission check + enqueue under one lock
+                let mut depth = q.lock();
+                if *depth < 1 {
+                    *depth += 1;
+                } else {
+                    *s.lock() += 1;
+                }
+            })
+        };
+        let a = mk(q.clone(), shed.clone());
+        let b = mk(q.clone(), shed.clone());
+        a.join().unwrap();
+        b.join().unwrap();
+
+        let depth = *q.lock();
+        let shed = *shed.lock();
+        assert!(depth <= 1, "bounded queue overshot its depth: {depth}");
+        assert_eq!(depth + shed, 2, "a push neither enqueued nor shed");
+        assert_eq!(depth, 1, "one of the two pushes must win the slot");
+    });
+}
+
+/// The buggy variant: check the bound in one critical section, enqueue
+/// in another. Both producers pass the check before either enqueues and
+/// the 1-deep queue ends up holding 2 — the checker must find it.
+#[test]
+#[should_panic(expected = "model check failed")]
+fn queue_bound_check_then_push_races() {
+    model::check(|| {
+        let q = model::Arc::new(model::Mutex::new(0usize));
+        let shed = model::Arc::new(model::Mutex::new(0usize));
+
+        let mk = |q: model::Arc<model::Mutex<usize>>, s: model::Arc<model::Mutex<usize>>| {
+            model::thread::spawn(move || {
+                // BUG under test: TOCTOU between the check and the push
+                let ok = { *q.lock() < 1 };
+                if ok {
+                    *q.lock() += 1;
+                } else {
+                    *s.lock() += 1;
+                }
+            })
+        };
+        let a = mk(q.clone(), shed.clone());
+        let b = mk(q.clone(), shed.clone());
+        a.join().unwrap();
+        b.join().unwrap();
+
+        let depth = *q.lock();
+        assert!(depth <= 1, "bounded queue overshot its depth: {depth}");
+    });
+}
+
+/// Shutdown protocol: `close()` flips the closed flag under the same
+/// lock `push` takes, so a racing submit either sheds with `Closed` or
+/// its request is in the queue when the post-close drain runs — every
+/// admitted request is drained, none are lost.
+#[test]
+fn shutdown_drains_every_admitted_request() {
+    model::check(|| {
+        #[derive(Default)]
+        struct S {
+            closed: bool,
+            items: usize,
+            admitted: usize,
         }
-        assert_eq!(got, *sent.lock(), "accepted request lost at shutdown");
+        let q = model::Arc::new(model::Mutex::new(S::default()));
+
+        let qc = q.clone();
+        let client = model::thread::spawn(move || {
+            // push: closed check and enqueue under one lock; admission
+            // is counted the instant the enqueue succeeds
+            let mut g = qc.lock();
+            if !g.closed {
+                g.items += 1;
+                g.admitted += 1;
+            }
+        });
+        let qs = q.clone();
+        let closer = model::thread::spawn(move || {
+            qs.lock().closed = true;
+        });
+        client.join().unwrap();
+        closer.join().unwrap();
+
+        // worker drain after close: everything admitted is still there
+        let mut g = q.lock();
+        let drained = g.items;
+        g.items = 0;
+        assert_eq!(drained, g.admitted, "admitted request lost at shutdown");
     });
 }
 
